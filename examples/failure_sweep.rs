@@ -1,0 +1,88 @@
+//! Regenerates Fig. 2: reconstruction-failure probability vs node
+//! failure probability for all six schemes — analytically (eqs. (9)/(10)
+//! + computed FC(k)) and by Monte Carlo — plus the paper's headline
+//! comparison (16-node S+W+2PSMM vs 21-node 3-copy Strassen) and the
+//! shifted-exponential straggler extension (`--latency`).
+//!
+//! Run: `cargo run --release --example failure_sweep [-- --trials 200000 --latency]`
+
+use ft_strassen::bench::plot::{ascii_loglog, Series};
+use ft_strassen::cli::Args;
+use ft_strassen::coding::fc::{fc_table, DecodeOracle};
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coding::theory::failure_probability;
+use ft_strassen::sim::latency::LatencyModel;
+use ft_strassen::sim::montecarlo::MonteCarlo;
+
+fn pe_grid(points: usize) -> Vec<f64> {
+    let (lo, hi) = (5e-3f64.ln(), 0.5f64.ln());
+    (0..points)
+        .map(|i| (lo + (hi - lo) * i as f64 / (points - 1) as f64).exp())
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env(&["latency"]).expect("args");
+    let trials = args.get_parsed_or("trials", 200_000u64).expect("trials");
+    let points = args.get_parsed_or("points", 9usize).expect("points");
+    let seed = args.get_parsed_or("seed", 1u64).expect("seed");
+
+    let schemes = TaskSet::fig2_schemes();
+    let grid = pe_grid(points);
+
+    println!("=== Fig. 2: P_f vs p_e (theory | Monte Carlo, {trials} trials) ===\n");
+    let mut series = Vec::new();
+    for ts in &schemes {
+        let fc = fc_table(ts);
+        let oracle = DecodeOracle::build(ts);
+        println!("{} (M = {} nodes):", ts.name, ts.num_tasks());
+        let mut pts = Vec::new();
+        for &p in &grid {
+            let theory = failure_probability(&fc, p);
+            let mc = MonteCarlo::new(trials, seed)
+                .failure_probability(p, ts.num_tasks(), |m| oracle.is_decodable(m));
+            let sigmas = if mc.std_err > 0.0 {
+                (mc.mean - theory).abs() / mc.std_err
+            } else {
+                0.0
+            };
+            println!(
+                "  p_e={p:7.4}  theory={theory:.4e}  mc={:.4e} (±{:.1e}, {:.1}σ)",
+                mc.mean, mc.std_err, sigmas
+            );
+            pts.push((p, theory));
+        }
+        series.push(Series::new(ts.name.clone(), pts));
+        println!();
+    }
+    println!("{}", ascii_loglog(&series, 72, 24));
+
+    // Headline: proposed 16-node vs 21-node 3-copy.
+    let sw2 = fc_table(&TaskSet::strassen_winograd(2));
+    let s3 = fc_table(&schemes[5]);
+    println!("=== headline (paper §IV) ===");
+    println!("nodes: S+W+2PSMM = {}, Strassen x3 = {} (-24%)", sw2.m, s3.m);
+    for p in [0.01, 0.05, 0.1, 0.2] {
+        let a = failure_probability(&sw2, p);
+        let b = failure_probability(&s3, p);
+        println!("  p_e={p:5.2}: P_f(S+W+2) = {a:.3e}, P_f(Sx3) = {b:.3e}, ratio {:.2}", a / b);
+    }
+
+    if args.flag("latency") {
+        println!("\n=== straggler extension (paper §V future work) ===");
+        println!("shifted-exponential completion times (shift 1.0, rate 1.0):");
+        let model = LatencyModel::ShiftedExp { shift: 1.0, rate: 1.0 };
+        let mc = MonteCarlo::new(trials.min(50_000), seed);
+        for ts in &schemes {
+            let oracle = DecodeOracle::build(ts);
+            let est = mc.mean_completion_time(&model, ts.num_tasks(), |finished| {
+                let failed = !finished & ((1u64 << ts.num_tasks()) - 1);
+                oracle.is_decodable(failed)
+            });
+            println!(
+                "  {:16} mean time-to-decode = {:.4} (±{:.4}) over {} nodes",
+                ts.name, est.mean, est.std_err, ts.num_tasks()
+            );
+        }
+    }
+}

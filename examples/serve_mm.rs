@@ -1,0 +1,135 @@
+//! End-to-end driver (the EXPERIMENTS.md e2e run): serve a stream of
+//! batched matrix-multiply requests through the full stack — rust
+//! coordinator dispatching encoded block products to 16 workers running
+//! the AOT Pallas kernel through PJRT — with stragglers injected, and
+//! compare latency/throughput against 2-copy replication.
+//!
+//! Run (PJRT, needs `make artifacts`):
+//!   cargo run --release --example serve_mm
+//! Native fallback (no artifacts needed):
+//!   cargo run --release --example serve_mm -- --backend native
+//! Options: --jobs N --n N --p-straggle P --straggle-ms MS --p-e P
+
+use std::path::Path;
+use std::time::Duration;
+
+use ft_strassen::cli::Args;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::config::BackendKind;
+use ft_strassen::coordinator::master::MasterConfig;
+use ft_strassen::coordinator::server::{MmServer, ServerConfig, ServerReport};
+use ft_strassen::coordinator::worker::{Backend, FaultPlan};
+use ft_strassen::runtime::service::ComputeService;
+
+fn run_scheme(
+    name: &str,
+    set: TaskSet,
+    backend: Backend,
+    jobs: usize,
+    n: usize,
+    fault: FaultPlan,
+    seed: u64,
+) -> ServerReport {
+    let mut server = MmServer::new(
+        set,
+        backend,
+        ServerConfig {
+            master: MasterConfig {
+                deadline: Duration::from_secs(10),
+                fault,
+                seed,
+                fallback_local: true,
+            },
+            queue_cap: 4096,
+        },
+    );
+    let report = server.run_workload(jobs, n, seed).expect("workload");
+    println!(
+        "{:18} {:7.2} jobs/s   mean {:9.3?}  p95 {:9.3?}   decoded {}  fallback {}  mean-workers {:.1}",
+        name,
+        report.throughput_jobs_per_s,
+        report.mean_latency,
+        report.p95_latency,
+        report.decoded,
+        report.fell_back,
+        report.mean_finished_workers
+    );
+    server.shutdown();
+    report
+}
+
+fn main() {
+    let args = Args::from_env(&[]).expect("args");
+    let jobs = args.get_parsed_or("jobs", 64usize).expect("jobs");
+    let n = args.get_parsed_or("n", 256usize).expect("n");
+    let p_straggle = args.get_parsed_or("p-straggle", 0.15f64).expect("p-straggle");
+    let straggle_ms = args.get_parsed_or("straggle-ms", 40u64).expect("straggle-ms");
+    let p_e = args.get_parsed_or("p-e", 0.02f64).expect("p-e");
+    let seed = args.get_parsed_or("seed", 1u64).expect("seed");
+    let backend_kind = BackendKind::parse(args.get_or("backend", "pjrt")).expect("backend");
+
+    let (backend, _svc) = match backend_kind {
+        BackendKind::Native => (Backend::Native, None),
+        BackendKind::Pjrt => {
+            let dir = args.get_or("artifacts", "artifacts");
+            match ComputeService::spawn(Path::new(dir), &[n / 2]) {
+                Ok(svc) => {
+                    println!("pjrt backend: {}", svc.handle().platform().unwrap());
+                    (Backend::Pjrt(svc.handle()), Some(svc))
+                }
+                Err(e) => {
+                    println!("pjrt unavailable ({e}); falling back to native backend");
+                    (Backend::Native, None)
+                }
+            }
+        }
+    };
+
+    let fault = FaultPlan {
+        p_fail: p_e,
+        p_straggle,
+        delay: Duration::from_millis(straggle_ms),
+    };
+    println!(
+        "serving {jobs} jobs of {n}x{n} f32 multiply; faults: p_fail={p_e}, \
+         p_straggle={p_straggle} ({straggle_ms}ms)\n"
+    );
+
+    let r_sw2 = run_scheme(
+        "S+W + 2 PSMM (16)",
+        TaskSet::strassen_winograd(2),
+        backend.clone(),
+        jobs,
+        n,
+        fault,
+        seed,
+    );
+    let r_rep2 = run_scheme(
+        "Strassen x2 (14)",
+        TaskSet::replication(&ft_strassen::algorithms::strassen(), 2),
+        backend.clone(),
+        jobs,
+        n,
+        fault,
+        seed,
+    );
+    let r_rep3 = run_scheme(
+        "Strassen x3 (21)",
+        TaskSet::replication(&ft_strassen::algorithms::strassen(), 3),
+        backend,
+        jobs,
+        n,
+        fault,
+        seed,
+    );
+
+    println!("\nsummary:");
+    println!(
+        "  decode success: S+W+2PSMM {}/{jobs}, x2 {}/{jobs}, x3 {}/{jobs}",
+        r_sw2.decoded, r_rep2.decoded, r_rep3.decoded
+    );
+    println!(
+        "  S+W+2PSMM achieves x3-class decode rates with 16 vs 21 nodes (-24%),\n  \
+         and beats x2 at equal node count class (paper's claim)."
+    );
+}

@@ -1,0 +1,126 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); the rust binary is then
+self-contained. A manifest (artifacts/manifest.tsv) records, per artifact:
+name, entry function, input shapes/dtypes, output shapes/dtypes, so the
+rust runtime can discover and validate executables without parsing HLO.
+
+Usage: python -m compile.aot --outdir ../artifacts [--sizes 32,64,128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Worker-product slots in the decode executable: 14 algorithm products +
+# 2 PSMMs (the paper's full 16-node configuration).
+DECODE_SLOTS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_spec(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def graphs_for_size(bs: int):
+    """(name, fn, arg_specs) for every artifact at block size bs."""
+    f32 = jnp.float32
+    n = 2 * bs
+    return [
+        (
+            f"worker_task_bs{bs}",
+            lambda ca, a4, cb, b4: (model.worker_task(ca, a4, cb, b4),),
+            [_spec((4,), f32), _spec((4, bs, bs), f32),
+             _spec((4,), f32), _spec((4, bs, bs), f32)],
+        ),
+        (
+            f"decode_combine_bs{bs}",
+            lambda w, p: (model.decode_combine(w, p),),
+            [_spec((DECODE_SLOTS,), f32),
+             _spec((DECODE_SLOTS, bs, bs), f32)],
+        ),
+        (
+            f"strassen_once_bs{bs}",
+            lambda a4, b4: (model.strassen_once(a4, b4),),
+            [_spec((4, bs, bs), f32), _spec((4, bs, bs), f32)],
+        ),
+        (
+            f"winograd_once_bs{bs}",
+            lambda a4, b4: (model.winograd_once(a4, b4),),
+            [_spec((4, bs, bs), f32), _spec((4, bs, bs), f32)],
+        ),
+        (
+            f"matmul_n{n}",
+            lambda a, b: (model.matmul(a, b),),
+            [_spec((n, n), f32), _spec((n, n), f32)],
+        ),
+    ]
+
+
+def lower_all(outdir: str, sizes: list[int]) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    manifest_rows = []
+    written = []
+    for bs in sizes:
+        for name, fn, specs in graphs_for_size(bs):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            path = os.path.join(outdir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            outs = jax.eval_shape(fn, *specs)
+            manifest_rows.append(
+                "\t".join([
+                    name,
+                    f"{name}.hlo.txt",
+                    ";".join(_fmt_spec(s) for s in specs),
+                    ";".join(_fmt_spec(s) for s in outs),
+                ])
+            )
+            written.append(path)
+            print(f"  wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(outdir, "manifest.tsv")
+    with open(mpath, "w") as f:
+        f.write("# name\tfile\tinputs\toutputs\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    written.append(mpath)
+    print(f"  wrote {mpath} ({len(manifest_rows)} artifacts)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--sizes", default="32,64,128",
+                    help="comma-separated block sizes")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    lower_all(args.outdir, sizes)
+
+
+if __name__ == "__main__":
+    main()

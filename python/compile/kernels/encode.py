@@ -1,0 +1,123 @@
+"""L1 Pallas kernels: encoder / decoder linear combinations.
+
+The paper's master node *encodes* each worker task as a signed sum of the
+four sub-blocks of an operand (e.g. S1's left operand is A11 + A22), and
+*decodes* the result matrix C as a rational combination of finished worker
+products (eqs. (1)-(8) and the 52 searched local relations).
+
+Both are bandwidth-bound elementwise reductions over a stacked operand,
+fused into a single Pallas kernel so no intermediate (bs, bs) temporaries
+are materialized: one pass over HBM, coefficients resident in SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(c_ref, x_ref, o_ref, *, terms: int):
+    """o = sum_t c[t] * x[t] over a (tm, tn) tile; the t-loop is unrolled
+    (terms is static), which XLA fuses into a single vectorized expression."""
+    acc = c_ref[0] * x_ref[0]
+    for t in range(1, terms):
+        acc = acc + c_ref[t] * x_ref[t]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def combine(c, x, *, tm: int | None = None, tn: int | None = None):
+    """Weighted sum over the leading axis: sum_t c[t] * x[t].
+
+    c: (T,) coefficients; x: (T, m, n) stacked blocks -> (m, n).
+    Serves both the encoder (T=4, c in {-1,0,1}) and the decoder
+    (T=#tasks, c rational, cast to the compute dtype).
+    """
+    (terms,) = c.shape
+    t2, m, n = x.shape
+    if terms != t2:
+        raise ValueError(f"coeff/operand mismatch: {c.shape} vs {x.shape}")
+    from .matmul import default_tile
+
+    tm = tm or default_tile(m)
+    tn = tn or default_tile(n)
+    if m % tm or n % tn:
+        raise ValueError(f"tiles ({tm},{tn}) must divide ({m},{n})")
+    c = c.astype(x.dtype)
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, terms=terms),
+        grid=(m // tm, n // tn),
+        in_specs=[
+            # Coefficients: one tiny vector broadcast to every program.
+            pl.BlockSpec((terms,), lambda i, j: (0,)),
+            # Full stack of blocks, tiled over the trailing dims.
+            pl.BlockSpec((terms, tm, tn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(c, x)
+
+
+def _encode_mm_kernel(ca_ref, a_ref, cb_ref, b_ref, o_ref, *, nk: int,
+                      terms: int):
+    """Fused encode+matmul tile: (sum ca[t] A[t]) @ (sum cb[t] B[t]).
+
+    Encoding happens on the VMEM-resident tiles right before they are fed
+    to the MXU, so the signed sums are never written back to HBM.
+    """
+    xa = ca_ref[0] * a_ref[0]
+    for t in range(1, terms):
+        xa = xa + ca_ref[t] * a_ref[t]
+    xb = cb_ref[0] * b_ref[0]
+    for t in range(1, terms):
+        xb = xb + cb_ref[t] * b_ref[t]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(xa, xb, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def encoded_matmul(ca, a4, cb, b4, *, tm: int | None = None,
+                   tn: int | None = None, tk: int | None = None):
+    """The generic worker task, fused: (sum_i ca[i] A_i) @ (sum_j cb[j] B_j).
+
+    ca, cb: (4,) signed coefficients; a4, b4: (4, bs, bs) stacked blocks.
+    Every one of the paper's 16 sub-computations (S1..S7, W1..W7, the two
+    PSMMs) is this executable with different runtime coefficients.
+    """
+    ta, m, k = a4.shape
+    tb, k2, n = b4.shape
+    if k != k2 or ca.shape != (ta,) or cb.shape != (tb,):
+        raise ValueError(
+            f"bad shapes: ca{ca.shape} a4{a4.shape} cb{cb.shape} b4{b4.shape}")
+    from .matmul import default_tile
+
+    tm = tm or default_tile(m)
+    tn = tn or default_tile(n)
+    tk = tk or default_tile(k)
+    if m % tm or n % tn or k % tk:
+        raise ValueError(f"tiles ({tm},{tn},{tk}) must divide ({m},{n},{k})")
+    nk = k // tk
+    dtype = jnp.promote_types(a4.dtype, b4.dtype)
+    ca = ca.astype(dtype)
+    cb = cb.astype(dtype)
+    return pl.pallas_call(
+        functools.partial(_encode_mm_kernel, nk=nk, terms=ta),
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((ta,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((ta, tm, tk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((tb,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((tb, tk, tn), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        interpret=True,
+    )(ca, a4, cb, b4)

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: tiled block matrix multiplication.
+
+This is the compute hot-spot of the paper's system: every worker node
+executes exactly one sub-matrix multiplication of shape (bs, bs) x (bs, bs).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is
+(m-tiles, n-tiles, k-tiles); each (i, j) program owns an output tile that
+stays resident while program_id(2) sweeps the contraction dimension —
+the classic MXU-friendly schedule, with the HBM -> VMEM movement expressed
+through BlockSpec index maps rather than CUDA threadblocks.
+
+All pallas_call sites use interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the rust
+runtime executes unmodified.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (tm, tn) output tile; program_id(2) sweeps the k dimension.
+
+    The output BlockSpec maps every k step to the same (i, j) tile, so the
+    tile acts as the accumulator (VMEM-resident on real hardware).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def default_tile(dim: int, cap: int = 128) -> int:
+    """Largest power-of-two tile <= cap that divides dim (>= 1)."""
+    t = 1
+    while t * 2 <= cap and dim % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul(x, y, *, tm: int | None = None, tn: int | None = None,
+           tk: int | None = None):
+    """Tiled Pallas matmul: x @ y.
+
+    x: (m, k), y: (k, n). Tile sizes must divide the respective dims;
+    defaults pick the largest power-of-two divisor capped at 128 (the MXU
+    systolic array edge).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    tm = tm or default_tile(m)
+    tn = tn or default_tile(n)
+    tk = tk or default_tile(k)
+    if m % tm or n % tn or k % tk:
+        raise ValueError(f"tiles ({tm},{tn},{tk}) must divide ({m},{n},{k})")
+    nk = k // tk
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(tm: int, tn: int, tk: int, itemsize: int = 4) -> int:
+    """Estimated VMEM footprint of one program instance (double-buffered
+    operand tiles + output/accumulator tile), for the §Perf roofline table."""
+    operands = 2 * (tm * tk + tk * tn) * itemsize  # double buffering
+    out = tm * tn * max(itemsize, 4)  # accumulate at >= f32
+    return operands + out
+
+
+def mxu_utilization_estimate(tm: int, tn: int, tk: int) -> float:
+    """Fraction of the 128x128 MXU a (tm, tn, tk) tile keeps busy.
+
+    The systolic array processes 128x128 output stationary tiles; smaller
+    tiles under-fill the array in each dimension.
+    """
+    return min(tm, 128) * min(tn, 128) / (128.0 * 128.0)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and oracle across a hypothesis-driven
+sweep of shapes, tiles and dtypes (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Reference for kernels.matmul.matmul."""
+    return jnp.matmul(x, y)
+
+
+def combine_ref(c, x):
+    """Reference for kernels.encode.combine: sum_t c[t] * x[t]."""
+    return jnp.tensordot(c.astype(x.dtype), x, axes=1)
+
+
+def encoded_matmul_ref(ca, a4, cb, b4):
+    """Reference for kernels.encode.encoded_matmul."""
+    dtype = jnp.promote_types(a4.dtype, b4.dtype)
+    left = jnp.tensordot(ca.astype(dtype), a4.astype(dtype), axes=1)
+    right = jnp.tensordot(cb.astype(dtype), b4.astype(dtype), axes=1)
+    return jnp.matmul(left, right)

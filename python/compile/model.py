@@ -1,0 +1,105 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+Everything here is build-time only. `aot.py` lowers these functions to HLO
+text once per block size; the rust coordinator loads and runs the
+artifacts via PJRT and never imports Python.
+
+Graphs
+------
+worker_task(ca, a4, cb, b4)    the generic worker executable: one encoded
+                               sub-matrix multiplication. All 16 of the
+                               paper's tasks (S1..S7, W1..W7, P1, P2) are
+                               this graph with different coefficients.
+decode_combine(w, p)           master-side decode: rational combination of
+                               up to 16 finished worker products -> one C
+                               block.
+strassen_once / winograd_once  single-node one-level Strassen-like MM
+                               (7 Pallas products + block assembly) —
+                               baselines and cross-checks.
+matmul(a, b)                   plain Pallas matmul (naive baseline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import schemes
+from .kernels.encode import combine, encoded_matmul
+from .kernels.matmul import matmul as pallas_matmul
+
+
+def worker_task(ca, a4, cb, b4):
+    """(sum_i ca[i] M_i) @ (sum_j cb[j] B_j), fused encode+matmul kernel.
+
+    ca, cb: (4,) f32; a4, b4: (4, bs, bs) f32. Returns (bs, bs).
+    """
+    return encoded_matmul(ca, a4, cb, b4)
+
+
+def decode_combine(w, p):
+    """sum_t w[t] * p[t]: stack of worker products -> one C block.
+
+    w: (T,) f32 decode weights (zero for unfinished workers);
+    p: (T, bs, bs) f32 products (zero-filled rows for unfinished workers).
+    """
+    return combine(w, p)
+
+
+def matmul(a, b):
+    """Plain tiled Pallas matmul (the naive single-node baseline)."""
+    return pallas_matmul(a, b)
+
+
+def _one_level(products_tbl, output_tbl, a4, b4):
+    """Generic one-level Strassen-like MM from a coefficient table.
+
+    a4, b4: (4, bs, bs) blocks [X11, X12, X21, X22] of M (= A^T) and B.
+    Returns (4, bs, bs) blocks of C. Each of the 7 products uses the fused
+    encoded-matmul kernel; block assembly uses the combine kernel.
+    """
+    prods = []
+    for ca, cb in products_tbl:
+        prods.append(worker_task(jnp.asarray(ca, a4.dtype), a4,
+                                 jnp.asarray(cb, b4.dtype), b4))
+    pstack = jnp.stack(prods)  # (7, bs, bs)
+    cblocks = [combine(jnp.asarray(row, pstack.dtype), pstack)
+               for row in output_tbl]
+    return jnp.stack(cblocks)  # (4, bs, bs)
+
+
+def strassen_once(a4, b4):
+    """One level of Strassen (paper's S1..S7, eqs. (1)-(4))."""
+    return _one_level(schemes.STRASSEN_PRODUCTS, schemes.STRASSEN_OUTPUT,
+                      a4, b4)
+
+
+def winograd_once(a4, b4):
+    """One level of Winograd (paper's W1..W7)."""
+    return _one_level(schemes.WINOGRAD_PRODUCTS, schemes.WINOGRAD_OUTPUT,
+                      a4, b4)
+
+
+def split_blocks(x):
+    """(n, n) -> (4, n/2, n/2) blocks [X11, X12, X21, X22]."""
+    n = x.shape[0]
+    h = n // 2
+    return jnp.stack([x[:h, :h], x[:h, h:], x[h:, :h], x[h:, h:]])
+
+
+def join_blocks(b):
+    """(4, h, h) -> (2h, 2h)."""
+    return jnp.concatenate([
+        jnp.concatenate([b[0], b[1]], axis=1),
+        jnp.concatenate([b[2], b[3]], axis=1),
+    ], axis=0)
+
+
+def strassen_mm(a, b):
+    """Full one-level Strassen multiply of square matrices via Pallas."""
+    return join_blocks(strassen_once(split_blocks(a), split_blocks(b)))
+
+
+def winograd_mm(a, b):
+    """Full one-level Winograd multiply of square matrices via Pallas."""
+    return join_blocks(winograd_once(split_blocks(a), split_blocks(b)))

@@ -1,0 +1,90 @@
+"""The paper's two Strassen-like algorithms as coefficient tables.
+
+Block convention: the paper writes C = A^T B and labels the blocks of A^T.
+We call the left operand M (= A^T), with blocks in row-major order
+[M11, M12, M21, M22]; likewise B and C. So C11 = M11 B11 + M12 B21 etc.
+
+Each sub-matrix multiplication (one worker task) is a pair of signed
+coefficient 4-vectors (ca, cb):  product = (sum ca_i M_i)(sum cb_j B_j).
+Each output block is a signed integer combination of the 7 products.
+
+These tables are the single Python-side source of truth; the rust side
+(rust/src/algorithms/) defines the same tables and both are independently
+validated against dense matmul, which anchors them to the paper's eqs.
+(1)-(4).
+"""
+
+from __future__ import annotations
+
+# Block index order: 11, 12, 21, 22.
+M11, M12, M21, M22 = range(4)
+B11, B12, B21, B22 = range(4)
+
+
+def _vec(**kw) -> list[int]:
+    v = [0, 0, 0, 0]
+    names = {"m11": 0, "m12": 1, "m21": 2, "m22": 3,
+             "b11": 0, "b12": 1, "b21": 2, "b22": 3}
+    for k, s in kw.items():
+        v[names[k]] = s
+    return v
+
+
+# --- Strassen (paper's S1..S7) -------------------------------------------
+# S1 = (M11+M22)(B11+B22)          S5 = (M11+M12) B22
+# S2 = (M21+M22) B11               S6 = (M21-M11)(B11+B12)
+# S3 = M11 (B12-B22)               S7 = (M12-M22)(B21+B22)
+# S4 = M22 (B21-B11)
+STRASSEN_PRODUCTS = [
+    (_vec(m11=1, m22=1), _vec(b11=1, b22=1)),   # S1
+    (_vec(m21=1, m22=1), _vec(b11=1)),          # S2
+    (_vec(m11=1), _vec(b12=1, b22=-1)),         # S3
+    (_vec(m22=1), _vec(b21=1, b11=-1)),         # S4
+    (_vec(m11=1, m12=1), _vec(b22=1)),          # S5
+    (_vec(m21=1, m11=-1), _vec(b11=1, b12=1)),  # S6
+    (_vec(m12=1, m22=-1), _vec(b21=1, b22=1)),  # S7
+]
+
+# C blocks from S products, paper eqs. (1)-(4):
+# C11 = S1+S4-S5+S7; C12 = S3+S5; C21 = S2+S4; C22 = S1-S2+S3+S6
+STRASSEN_OUTPUT = [
+    [1, 0, 0, 1, -1, 0, 1],   # C11
+    [0, 0, 1, 0, 1, 0, 0],    # C12
+    [0, 1, 0, 1, 0, 0, 0],    # C21
+    [1, -1, 1, 0, 0, 1, 0],   # C22
+]
+
+# --- Winograd (paper's W1..W7) -------------------------------------------
+# W1 = M11 B11                     W5 = (M21+M22)(B12-B11)
+# W2 = M12 B21                     W6 = (M11+M12-M21-M22) B22
+# W3 = M22 (B11-B12-B21+B22)       W7 = (M11-M21-M22)(B11-B12+B22)
+# W4 = (M11-M21)(B22-B12)
+WINOGRAD_PRODUCTS = [
+    (_vec(m11=1), _vec(b11=1)),                              # W1
+    (_vec(m12=1), _vec(b21=1)),                              # W2
+    (_vec(m22=1), _vec(b11=1, b12=-1, b21=-1, b22=1)),       # W3
+    (_vec(m11=1, m21=-1), _vec(b22=1, b12=-1)),              # W4
+    (_vec(m21=1, m22=1), _vec(b12=1, b11=-1)),               # W5
+    (_vec(m11=1, m12=1, m21=-1, m22=-1), _vec(b22=1)),       # W6
+    (_vec(m11=1, m21=-1, m22=-1), _vec(b11=1, b12=-1, b22=1)),  # W7
+]
+
+# C11 = W1+W2; C12 = W1+W5+W6-W7; C21 = W1-W3+W4-W7; C22 = W1+W4+W5-W7
+WINOGRAD_OUTPUT = [
+    [1, 1, 0, 0, 0, 0, 0],     # C11
+    [1, 0, 0, 0, 1, 1, -1],    # C12
+    [1, 0, -1, 1, 0, 0, -1],   # C21
+    [1, 0, 0, 1, 1, 0, -1],    # C22
+]
+
+# --- PSMMs (paper §IV) ----------------------------------------------------
+# PSMM-1 = S3 + W4 = M21 (B12 - B22); PSMM-2 = copy of W2.
+PSMM_PRODUCTS = [
+    (_vec(m21=1), _vec(b12=1, b22=-1)),  # PSMM-1
+    (_vec(m12=1), _vec(b21=1)),          # PSMM-2 (= W2)
+]
+
+# The combined 16-task set, in dispatch order S1..S7, W1..W7, P1, P2.
+ALL_PRODUCTS = STRASSEN_PRODUCTS + WINOGRAD_PRODUCTS + PSMM_PRODUCTS
+TASK_NAMES = [f"S{i}" for i in range(1, 8)] + \
+             [f"W{i}" for i in range(1, 8)] + ["P1", "P2"]

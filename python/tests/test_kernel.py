@@ -1,0 +1,177 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, tile sizes and dtypes; every case asserts
+allclose against compile/kernels/ref.py. This is the CORE correctness
+signal for the compute layer — the rust runtime executes exactly these
+kernels (lowered to HLO) on its hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.encode import combine, encoded_matmul
+from compile.kernels.matmul import default_tile, matmul, vmem_bytes
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24, 32, 48]),
+    k=st.sampled_from([8, 16, 24, 40]),
+    n=st.sampled_from([8, 16, 24, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shapes(m, k, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    y = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    got = matmul(x, y)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-5,
+                               atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tm=st.sampled_from([4, 8, 16]),
+    tn=st.sampled_from([4, 8, 16]),
+    tk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tile_sweep(tm, tn, tk, seed):
+    m, k, n = 32, 32, 32
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    y = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    got = matmul(x, y, tm=tm, tn=tn, tk=tk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    r = _rng(7)
+    x = jnp.asarray(r.standard_normal((16, 16)), dtype)
+    y = jnp.asarray(r.standard_normal((16, 16)), dtype)
+    got = matmul(x, y)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64),
+        np.asarray(ref.matmul_ref(x, y), np.float64), **_tol(dtype))
+
+
+def test_matmul_rejects_bad_contraction():
+    x = jnp.zeros((4, 5))
+    y = jnp.zeros((6, 4))
+    with pytest.raises(ValueError, match="contraction"):
+        matmul(x, y)
+
+
+def test_matmul_rejects_nondividing_tiles():
+    x = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="divide"):
+        matmul(x, x, tm=3)
+
+
+def test_default_tile():
+    assert default_tile(128) == 128
+    assert default_tile(96) == 32
+    assert default_tile(24) == 8
+    assert default_tile(7) == 1
+    assert default_tile(256, cap=128) == 128
+
+
+def test_vmem_estimate_fits_16mb_for_default_tiles():
+    # The §Perf roofline sanity check: a (128,128,128) f32 schedule uses
+    # ~0.25 MiB VMEM per program — far below the ~16 MiB budget.
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- combine
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(1, 16),
+    m=st.sampled_from([8, 16, 24]),
+    n=st.sampled_from([8, 16, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_matches_ref(t, m, n, seed):
+    r = _rng(seed)
+    c = jnp.asarray(r.integers(-2, 3, t), jnp.float32)
+    x = jnp.asarray(r.standard_normal((t, m, n)), jnp.float32)
+    np.testing.assert_allclose(combine(c, x), ref.combine_ref(c, x),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_combine_zero_coeffs_is_zero():
+    x = jnp.ones((4, 8, 8), jnp.float32)
+    c = jnp.zeros((4,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(combine(c, x)),
+                                  np.zeros((8, 8), np.float32))
+
+
+def test_combine_mismatched_raises():
+    with pytest.raises(ValueError, match="mismatch"):
+        combine(jnp.zeros((3,)), jnp.zeros((4, 8, 8)))
+
+
+# --------------------------------------------------------- encoded_matmul
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bs=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encoded_matmul_matches_ref(bs, seed):
+    r = _rng(seed)
+    ca = jnp.asarray(r.integers(-1, 2, 4), jnp.float32)
+    cb = jnp.asarray(r.integers(-1, 2, 4), jnp.float32)
+    a4 = jnp.asarray(r.standard_normal((4, bs, bs)), jnp.float32)
+    b4 = jnp.asarray(r.standard_normal((4, bs, bs)), jnp.float32)
+    got = encoded_matmul(ca, a4, cb, b4)
+    np.testing.assert_allclose(got, ref.encoded_matmul_ref(ca, a4, cb, b4),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_encoded_matmul_tiled_grid(seed):
+    # Force a non-trivial (2, 2, 2) grid so the k-accumulation and block
+    # index maps are actually exercised.
+    r = _rng(seed)
+    bs = 16
+    ca = jnp.asarray(r.integers(-1, 2, 4), jnp.float32)
+    cb = jnp.asarray(r.integers(-1, 2, 4), jnp.float32)
+    a4 = jnp.asarray(r.standard_normal((4, bs, bs)), jnp.float32)
+    b4 = jnp.asarray(r.standard_normal((4, bs, bs)), jnp.float32)
+    got = encoded_matmul(ca, a4, cb, b4, tm=8, tn=8, tk=8)
+    np.testing.assert_allclose(got, ref.encoded_matmul_ref(ca, a4, cb, b4),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_encoded_matmul_is_fused_equivalent_of_two_step():
+    # encode-then-matmul == fused kernel (the L2/L1 contract).
+    r = _rng(3)
+    ca = jnp.asarray([1, 0, 0, 1], jnp.float32)
+    cb = jnp.asarray([1, 0, 0, 1], jnp.float32)
+    a4 = jnp.asarray(r.standard_normal((4, 16, 16)), jnp.float32)
+    b4 = jnp.asarray(r.standard_normal((4, 16, 16)), jnp.float32)
+    two_step = matmul(combine(ca, a4), combine(cb, b4))
+    fused = encoded_matmul(ca, a4, cb, b4)
+    np.testing.assert_allclose(fused, two_step, rtol=2e-5, atol=2e-5)

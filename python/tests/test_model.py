@@ -1,0 +1,157 @@
+"""L2 model correctness: Strassen/Winograd graphs vs dense matmul.
+
+These tests anchor the coefficient tables in compile/schemes.py to the
+ground truth (jnp.matmul): if either the products or the output
+combinations deviated from the paper's eqs. (1)-(4), these would fail.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model, schemes
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(seed, shape, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       dtype)
+
+
+def _dense_from_blocks(b4):
+    return np.asarray(model.join_blocks(b4))
+
+
+# ------------------------------------------------------------- one level
+
+@settings(max_examples=20, deadline=None)
+@given(bs=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_strassen_once_matches_dense(bs, seed):
+    a4 = _rand(seed, (4, bs, bs))
+    b4 = _rand(seed + 1, (4, bs, bs))
+    c4 = model.strassen_once(a4, b4)
+    want = _dense_from_blocks(a4) @ _dense_from_blocks(b4)
+    np.testing.assert_allclose(_dense_from_blocks(c4), want, rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bs=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_winograd_once_matches_dense(bs, seed):
+    a4 = _rand(seed, (4, bs, bs))
+    b4 = _rand(seed + 1, (4, bs, bs))
+    c4 = model.winograd_once(a4, b4)
+    want = _dense_from_blocks(a4) @ _dense_from_blocks(b4)
+    np.testing.assert_allclose(_dense_from_blocks(c4), want, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_strassen_and_winograd_agree():
+    a4 = _rand(11, (4, 8, 8))
+    b4 = _rand(12, (4, 8, 8))
+    np.testing.assert_allclose(model.strassen_once(a4, b4),
+                               model.winograd_once(a4, b4),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+def test_full_mm_wrappers(n, seed):
+    a = _rand(seed, (n, n))
+    b = _rand(seed + 1, (n, n))
+    want = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(model.strassen_mm(a, b), want, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(model.winograd_mm(a, b), want, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_split_join_roundtrip():
+    x = _rand(5, (16, 16))
+    np.testing.assert_array_equal(
+        np.asarray(model.join_blocks(model.split_blocks(x))), np.asarray(x))
+
+
+# ----------------------------------------------------------- worker task
+
+@settings(max_examples=15, deadline=None)
+@given(task=st.integers(0, 15), seed=st.integers(0, 2**31 - 1))
+def test_every_paper_task_via_worker_executable(task, seed):
+    """Each of the 16 tasks (S1..S7, W1..W7, P1, P2) through the generic
+    worker graph equals its bilinear-form expansion."""
+    bs = 8
+    a4 = _rand(seed, (4, bs, bs))
+    b4 = _rand(seed + 1, (4, bs, bs))
+    ca, cb = schemes.ALL_PRODUCTS[task]
+    got = model.worker_task(jnp.asarray(ca, jnp.float32), a4,
+                            jnp.asarray(cb, jnp.float32), b4)
+    left = sum(ca[i] * np.asarray(a4[i]) for i in range(4))
+    right = sum(cb[j] * np.asarray(b4[j]) for j in range(4))
+    np.testing.assert_allclose(got, left @ right, rtol=2e-4, atol=2e-4)
+
+
+def test_psmm1_identity():
+    """PSMM-1 == S3 + W4 == M21 (B12 - B22) (paper §IV)."""
+    bs = 8
+    a4 = _rand(21, (4, bs, bs))
+    b4 = _rand(22, (4, bs, bs))
+
+    def run(idx):
+        ca, cb = schemes.ALL_PRODUCTS[idx]
+        return np.asarray(model.worker_task(
+            jnp.asarray(ca, jnp.float32), a4, jnp.asarray(cb, jnp.float32),
+            b4))
+
+    s3, w4, p1 = run(2), run(10), run(14)
+    np.testing.assert_allclose(p1, s3 + w4, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        p1, np.asarray(a4[2]) @ (np.asarray(b4[1]) - np.asarray(b4[3])),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_psmm2_is_w2():
+    bs = 8
+    a4 = _rand(31, (4, bs, bs))
+    b4 = _rand(32, (4, bs, bs))
+    assert schemes.ALL_PRODUCTS[15] == schemes.ALL_PRODUCTS[8]  # P2 == W2
+
+
+# ---------------------------------------------------------------- decode
+
+def test_decode_combine_recovers_c11_from_strassen():
+    """C11 = S1 + S4 - S5 + S7 through the decode executable graph."""
+    bs = 8
+    a4 = _rand(41, (4, bs, bs))
+    b4 = _rand(42, (4, bs, bs))
+    prods = []
+    for ca, cb in schemes.ALL_PRODUCTS:
+        prods.append(model.worker_task(jnp.asarray(ca, jnp.float32), a4,
+                                       jnp.asarray(cb, jnp.float32), b4))
+    p = jnp.stack(prods)  # (16, bs, bs)
+    w = np.zeros(16, np.float32)
+    for i, coef in enumerate(schemes.STRASSEN_OUTPUT[0]):
+        w[i] = coef
+    c11 = model.decode_combine(jnp.asarray(w), p)
+    want = (np.asarray(a4[0]) @ np.asarray(b4[0])
+            + np.asarray(a4[1]) @ np.asarray(b4[2]))
+    np.testing.assert_allclose(c11, want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_combine_recovers_all_blocks_from_winograd():
+    bs = 8
+    a4 = _rand(51, (4, bs, bs))
+    b4 = _rand(52, (4, bs, bs))
+    prods = [model.worker_task(jnp.asarray(ca, jnp.float32), a4,
+                               jnp.asarray(cb, jnp.float32), b4)
+             for ca, cb in schemes.ALL_PRODUCTS]
+    p = jnp.stack(prods)
+    dense = _dense_from_blocks(a4) @ _dense_from_blocks(b4)
+    want4 = model.split_blocks(jnp.asarray(dense, jnp.float32))
+    for blk in range(4):
+        w = np.zeros(16, np.float32)
+        for i, coef in enumerate(schemes.WINOGRAD_OUTPUT[blk]):
+            w[7 + i] = coef
+        got = model.decode_combine(jnp.asarray(w), p)
+        np.testing.assert_allclose(got, want4[blk], rtol=2e-4, atol=2e-4)

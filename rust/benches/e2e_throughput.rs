@@ -1,0 +1,133 @@
+//! Bench: end-to-end serving throughput/latency under stragglers for the
+//! schemes the paper compares — the systems-level counterpart of Fig. 2.
+//! Reported per scheme: jobs/s, mean and p95 latency, decode success.
+//!
+//! Uses the native backend by default (hermetic); set FT_BENCH_PJRT=1
+//! to route worker products through the AOT Pallas artifacts.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coordinator::master::MasterConfig;
+use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::worker::{Backend, FaultPlan};
+use ft_strassen::runtime::service::ComputeService;
+
+fn main() {
+    let quick = std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1");
+    let jobs = if quick { 8 } else { 48 };
+    let n = 256usize;
+
+    let (backend, _svc);
+    if std::env::var("FT_BENCH_PJRT").as_deref() == Ok("1") {
+        let svc = ComputeService::spawn(Path::new("artifacts"), &[n / 2])
+            .expect("artifacts required for FT_BENCH_PJRT=1");
+        println!("backend: pjrt ({})", svc.handle().platform().unwrap());
+        backend = Backend::Pjrt(svc.handle());
+        _svc = Some(svc);
+    } else {
+        println!("backend: native (FT_BENCH_PJRT=1 for the artifact path)");
+        backend = Backend::Native;
+        _svc = None;
+    }
+
+    let fault = FaultPlan {
+        p_fail: 0.03,
+        p_straggle: 0.15,
+        delay: Duration::from_millis(25),
+    };
+    println!(
+        "workload: {jobs} jobs of {n}x{n}, p_fail={}, p_straggle={} ({:?})\n",
+        fault.p_fail, fault.p_straggle, fault.delay
+    );
+    println!(
+        "{:<20} {:>9} {:>12} {:>12} {:>9} {:>9} {:>8}",
+        "scheme", "jobs/s", "mean", "p95", "decoded", "fallback", "workers"
+    );
+
+    let mut rows = String::from("scheme,jobs_per_s,mean_ns,p95_ns,decoded,fell_back\n");
+    let schemes: Vec<(&str, TaskSet)> = vec![
+        ("strassen-x1 (7)", TaskSet::replication(&ft_strassen::algorithms::strassen(), 1)),
+        ("strassen-x2 (14)", TaskSet::replication(&ft_strassen::algorithms::strassen(), 2)),
+        ("sw+0psmm (14)", TaskSet::strassen_winograd(0)),
+        ("sw+1psmm (15)", TaskSet::strassen_winograd(1)),
+        ("sw+2psmm (16)", TaskSet::strassen_winograd(2)),
+        ("strassen-x3 (21)", TaskSet::replication(&ft_strassen::algorithms::strassen(), 3)),
+    ];
+    for (name, set) in schemes {
+        let mut server = MmServer::new(
+            set,
+            backend.clone(),
+            ServerConfig {
+                master: MasterConfig {
+                    deadline: Duration::from_secs(10),
+                    fault,
+                    seed: 1,
+                    fallback_local: true,
+                },
+                queue_cap: 4096,
+            },
+        );
+        let r = server.run_workload(jobs, n, 1).expect("workload");
+        println!(
+            "{:<20} {:>9.2} {:>12.3?} {:>12.3?} {:>9} {:>9} {:>8.1}",
+            name,
+            r.throughput_jobs_per_s,
+            r.mean_latency,
+            r.p95_latency,
+            r.decoded,
+            r.fell_back,
+            r.mean_finished_workers
+        );
+        rows.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            name,
+            r.throughput_jobs_per_s,
+            r.mean_latency.as_nanos(),
+            r.p95_latency.as_nanos(),
+            r.decoded,
+            r.fell_back
+        ));
+        server.shutdown();
+    }
+
+    let out = Path::new("target/bench_results");
+    std::fs::create_dir_all(out).unwrap();
+    std::fs::write(out.join("e2e_throughput.csv"), rows).unwrap();
+    println!("\nwrote target/bench_results/e2e_throughput.csv");
+
+    // --- coordinator overhead microbench (native, no faults) -------------
+    // n=16 makes worker compute negligible -> isolates dispatch + online
+    // decode + assembly; n=256 shows the realistic mix.
+    use ft_strassen::bench::harness::BenchRunner;
+    use ft_strassen::coordinator::master::Master;
+    use ft_strassen::linalg::blocked::{join_blocks, split_blocks};
+    use ft_strassen::linalg::matrix::Matrix;
+    use ft_strassen::sim::rng::Rng;
+    let mut runner = BenchRunner::from_env();
+    let mut rng = Rng::seeded(5);
+    for n in [16usize, 64, 256] {
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let mut master = Master::new(
+            TaskSet::strassen_winograd(2),
+            Backend::Native,
+            MasterConfig {
+                deadline: Duration::from_secs(10),
+                fault: FaultPlan::NONE,
+                seed: 1,
+                fallback_local: false,
+            },
+        );
+        runner.bench_value(&format!("master/multiply_n{n}"), || {
+            master.multiply(&a, &b).unwrap()
+        });
+        master.shutdown();
+    }
+    let x = Matrix::random(256, 256, &mut rng);
+    runner.bench_value("master/split_blocks_n256", || split_blocks(&x));
+    let blocks = split_blocks(&x);
+    runner.bench_value("master/join_blocks_n256", || join_blocks(&blocks));
+    runner.write_csv(&out.join("coordinator_timings.csv")).unwrap();
+}

@@ -1,0 +1,82 @@
+//! Bench: regenerate the paper's Fig. 2 (its only figure) — P_f vs p_e
+//! for all six schemes, theory + Monte Carlo — and time the analytical
+//! pipeline (FC-table computation, eq. (9) evaluation, MC trial rate).
+//!
+//! Output: the Fig.-2 table + CSV at target/bench_results/fig2.csv.
+//! `FT_BENCH_QUICK=1` shrinks budgets for smoke runs.
+
+use std::path::Path;
+
+use ft_strassen::bench::harness::BenchRunner;
+use ft_strassen::bench::plot::{ascii_loglog, Series};
+use ft_strassen::coding::fc::{fc_table, DecodeOracle};
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coding::theory::failure_probability;
+use ft_strassen::sim::montecarlo::MonteCarlo;
+
+fn pe_grid(points: usize) -> Vec<f64> {
+    let (lo, hi) = (5e-3f64.ln(), 0.5f64.ln());
+    (0..points)
+        .map(|i| (lo + (hi - lo) * i as f64 / (points - 1) as f64).exp())
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1");
+    let trials: u64 = if quick { 20_000 } else { 200_000 };
+    let mut runner = BenchRunner::from_env();
+
+    // --- the figure itself -------------------------------------------------
+    let schemes = TaskSet::fig2_schemes();
+    let grid = pe_grid(9);
+    let mut series = Vec::new();
+    let mut csv = String::from("scheme,p_e,theory_pf,mc_pf,mc_stderr\n");
+    println!("=== Fig. 2 data (theory | mc, {trials} trials) ===");
+    for ts in &schemes {
+        let fc = fc_table(ts);
+        let oracle = DecodeOracle::build(ts);
+        let mut pts = Vec::new();
+        for &p in &grid {
+            let theory = failure_probability(&fc, p);
+            let mc = MonteCarlo::new(trials, 1)
+                .failure_probability(p, ts.num_tasks(), |m| oracle.is_decodable(m));
+            csv.push_str(&format!(
+                "{},{p},{theory},{},{}\n",
+                ts.name, mc.mean, mc.std_err
+            ));
+            pts.push((p, theory));
+        }
+        series.push(Series::new(ts.name.clone(), pts));
+    }
+    println!("{}", ascii_loglog(&series, 72, 22));
+
+    // --- timings ------------------------------------------------------------
+    runner.bench_value("fc_table/sw+2psmm (2^16 patterns)", || {
+        fc_table(&TaskSet::strassen_winograd(2)).counts.len()
+    });
+    runner.bench_value("fc_table/strassen_x3 (structural)", || {
+        fc_table(&TaskSet::replication(&ft_strassen::algorithms::strassen(), 3))
+            .counts
+            .len()
+    });
+    let fc = fc_table(&TaskSet::strassen_winograd(2));
+    runner.bench_value("eq9_eval/sw+2psmm", || failure_probability(&fc, 0.1));
+    let ts = TaskSet::strassen_winograd(2);
+    runner.bench_value("mc_10k_trials/sw+2psmm (exact GE)", || {
+        MonteCarlo::new(10_000, 1)
+            .failure_probability(0.1, ts.num_tasks(), |m| ts.decodable_with_failures(m))
+            .mean
+    });
+    let oracle = DecodeOracle::build(&ts);
+    runner.bench_value("mc_10k_trials/sw+2psmm (oracle table)", || {
+        MonteCarlo::new(10_000, 1)
+            .failure_probability(0.1, ts.num_tasks(), |m| oracle.is_decodable(m))
+            .mean
+    });
+
+    let out = Path::new("target/bench_results");
+    std::fs::create_dir_all(out).unwrap();
+    std::fs::write(out.join("fig2.csv"), csv).unwrap();
+    runner.write_csv(&out.join("fig2_timings.csv")).unwrap();
+    println!("wrote target/bench_results/fig2.csv");
+}

@@ -1,0 +1,91 @@
+//! Bench: the compute hot path across backends — native blocked matmul
+//! vs the AOT Pallas artifacts through PJRT (worker task, decode
+//! combine, plain matmul, one-level Strassen) — plus the recursive
+//! Strassen complexity curve that anchors the O(n^2.81) claim.
+//!
+//! PJRT benches self-skip when `artifacts/` is missing.
+
+use std::path::Path;
+
+use ft_strassen::bench::harness::BenchRunner;
+use ft_strassen::linalg::blocked::split_blocks;
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::linalg::recursive::{multiplication_count, strassen_mm, RecursiveConfig};
+use ft_strassen::runtime::client::Runtime;
+use ft_strassen::sim::rng::Rng;
+
+fn main() {
+    let mut runner = BenchRunner::from_env();
+    let mut rng = Rng::seeded(1);
+
+    // --- native path ------------------------------------------------------
+    for n in [64usize, 128, 256] {
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        runner.bench_value(&format!("native/matmul_n{n}"), || a.matmul(&b));
+    }
+    let a = Matrix::random(256, 256, &mut rng);
+    let b = Matrix::random(256, 256, &mut rng);
+    runner.bench_value("native/strassen_rec_n256_cut64", || {
+        strassen_mm(&a, &b, &RecursiveConfig { cutoff: 64, max_depth: 8 })
+    });
+    let a4 = split_blocks(&a);
+    let b4 = split_blocks(&b);
+    runner.bench_value("native/worker_product_bs128", || {
+        let left = &a4[0] + &a4[3];
+        let right = &b4[0] + &b4[3];
+        left.matmul(&right)
+    });
+
+    // complexity model table
+    println!("\nmultiplication counts (cutoff 32):");
+    for n in [64u32, 128, 256, 512, 1024] {
+        let s = multiplication_count(7, n as usize, 32);
+        let d = multiplication_count(8, n as usize, 32);
+        println!(
+            "  n={n:5}: strassen {s:>14}  naive {d:>14}  ratio {:.3}",
+            s as f64 / d as f64
+        );
+    }
+
+    // --- PJRT path ----------------------------------------------------------
+    let dir = Path::new("artifacts");
+    match Runtime::new(dir) {
+        Err(e) => println!("\npjrt benches skipped: {e}"),
+        Ok(mut rt) => {
+            println!("\npjrt: {}", rt.platform());
+            for bs in rt.manifest().worker_block_sizes() {
+                let blk: [Matrix; 4] =
+                    std::array::from_fn(|_| Matrix::random(bs, bs, &mut rng));
+                let blk2: [Matrix; 4] =
+                    std::array::from_fn(|_| Matrix::random(bs, bs, &mut rng));
+                rt.warmup(bs).unwrap();
+                runner.bench_value(&format!("pjrt/worker_task_bs{bs}"), || {
+                    rt.worker_task(&[1.0, 0.0, 0.0, 1.0], &blk, &[1.0, 0.0, 0.0, 1.0], &blk2)
+                        .unwrap()
+                });
+                let products: Vec<Matrix> =
+                    (0..16).map(|_| Matrix::random(bs, bs, &mut rng)).collect();
+                let weights: Vec<f32> =
+                    (0..16).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+                runner.bench_value(&format!("pjrt/decode_combine_bs{bs}"), || {
+                    let refs: Vec<Option<&Matrix>> = products.iter().map(Some).collect();
+                    rt.decode_combine(&weights, &refs, bs).unwrap()
+                });
+                runner.bench_value(&format!("pjrt/strassen_once_bs{bs}"), || {
+                    rt.strassen_once(&blk, &blk2).unwrap()
+                });
+                let n = 2 * bs;
+                let a = Matrix::random(n, n, &mut rng);
+                let b = Matrix::random(n, n, &mut rng);
+                runner.bench_value(&format!("pjrt/matmul_n{n}"), || {
+                    rt.matmul(&a, &b).unwrap()
+                });
+            }
+        }
+    }
+
+    let out = Path::new("target/bench_results");
+    std::fs::create_dir_all(out).unwrap();
+    runner.write_csv(&out.join("kernel_timings.csv")).unwrap();
+}

@@ -1,0 +1,96 @@
+//! Bench: regenerate the paper's Tables I & II and the §IV search
+//! outputs (relation counts, PSMM selection), timing Algorithm 1 at
+//! increasing K and the two decoders across all failure patterns —
+//! the span-vs-peeling ablation called out in DESIGN.md.
+
+use std::path::Path;
+
+use ft_strassen::algebra::form::{BilinearForm, Target};
+use ft_strassen::bench::harness::BenchRunner;
+use ft_strassen::coding::decoder::PeelingDecoder;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::search::psmm::select_psmms;
+use ft_strassen::search::relations::relations_for_target;
+use ft_strassen::search::searchlp::{search_lp, SearchOptions};
+
+fn main() {
+    let mut runner = BenchRunner::from_env();
+    let ts = TaskSet::strassen_winograd(0);
+    let names = ts.names();
+    let forms = ts.forms();
+
+    // --- Table I: the elementary-product table --------------------------
+    println!("=== Table I: elementary products M_p · B_q ===");
+    for q in 0..4 {
+        let row: Vec<String> = (0..4)
+            .map(|p| format!("{}", BilinearForm::elementary(p, q)))
+            .collect();
+        println!("  {}", row.join("  "));
+    }
+
+    // --- Table II: local relations for C11 -------------------------------
+    let res = search_lp(&forms, &SearchOptions::default());
+    println!("\n=== Table II: local relations involving C11 (K <= 8) ===");
+    for r in relations_for_target(&res, Target::C11) {
+        println!("  {}", r.render(&names));
+    }
+    println!(
+        "\ntotal local relations (all targets): {}  parity candidates: {}",
+        res.num_relations(),
+        res.parities.len()
+    );
+
+    // --- search timings at increasing K ----------------------------------
+    for k in [4usize, 6, 8] {
+        runner.bench_value(&format!("search_lp/K={k}"), || {
+            search_lp(&forms, &SearchOptions { max_k: k, ..Default::default() }).num_relations()
+        });
+    }
+    runner.bench_value("select_psmms/2", || {
+        select_psmms(&forms, 2, &SearchOptions::default()).len()
+    });
+
+    // --- decoder ablation: peeling vs span over all 2^14 patterns --------
+    // Three peeling relation sets of increasing size vs the exact span
+    // decoder: minimal K<=8, unfiltered K<=8, unfiltered K<=10.
+    let m = ts.num_tasks();
+    let oracle = ft_strassen::coding::fc::DecodeOracle::build(&ts);
+    let span_ok: u64 = (0u64..(1 << m))
+        .filter(|&f| oracle.is_decodable(f))
+        .count() as u64;
+    println!();
+    let mut last_peeler = None;
+    for (tag, opts) in [
+        ("minimal K<=8", SearchOptions { max_k: 8, minimal_only: true, collect_parities: false }),
+        ("unfiltered K<=8", SearchOptions { max_k: 8, minimal_only: false, collect_parities: false }),
+        ("unfiltered K<=10", SearchOptions { max_k: 10, minimal_only: false, collect_parities: false }),
+    ] {
+        let peeler = PeelingDecoder::new(&ts, &opts);
+        let mut peel_ok = 0u64;
+        let mut gap = 0u64;
+        for failed in 0u64..(1 << m) {
+            let finished = !failed & ((1 << m) - 1);
+            let p = peeler.run(finished).decoded;
+            peel_ok += p as u64;
+            gap += (oracle.is_decodable(failed) && !p) as u64;
+        }
+        println!(
+            "decoder ablation [{tag}, {} relations] over {} patterns: \
+             span={span_ok} peel={peel_ok} gap={gap}",
+            peeler.num_relations(),
+            1u64 << m
+        );
+        last_peeler = Some(peeler);
+    }
+    let peeler = last_peeler.unwrap();
+    runner.bench_value("peeling_decode/full_pattern", || {
+        peeler.run((1 << m) - 1).steps
+    });
+    runner.bench_value("span_decode/full_pattern", || {
+        ts.decodable_with_failures(0)
+    });
+
+    let out = Path::new("target/bench_results");
+    std::fs::create_dir_all(out).unwrap();
+    runner.write_csv(&out.join("table2_timings.csv")).unwrap();
+}

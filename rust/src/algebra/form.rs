@@ -1,0 +1,422 @@
+//! Bilinear forms over the 16 elementary block products (paper Table I).
+//!
+//! The left operand `M` and right operand `B` are each split into four
+//! blocks indexed `11, 12, 21, 22` (row-major order `0..4`). An
+//! elementary product is `M_p · B_q`; a *bilinear form* assigns an integer
+//! coefficient to each of the 16 elementary products. Every worker task
+//! and every output block of the paper is such a form:
+//!
+//! * `S1 = (M11 + M22)(B11 + B22)` has coefficient +1 on the four
+//!   products `{M11,M22} × {B11,B22}`,
+//! * the target `C11 = M11·B11 + M12·B21`.
+//!
+//! Forms that factor as `u(M) · v(B)` (rank-1 coefficient matrices) are
+//! exactly the ones a single worker can compute with one block
+//! multiplication — this is the membership test of Algorithm 1's parity
+//! (PSMM) branch.
+
+use std::fmt;
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Number of elementary block products: 4 M-blocks × 4 B-blocks.
+pub const ELEM_DIM: usize = 16;
+
+/// Human-readable block labels in index order.
+pub const BLOCK_NAMES: [&str; 4] = ["11", "12", "21", "22"];
+
+/// Flat index of the elementary product `M_p · B_q`.
+#[inline]
+pub const fn elem_index(p: usize, q: usize) -> usize {
+    p * 4 + q
+}
+
+/// An integer-coefficient bilinear form over the 16 elementary products.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BilinearForm {
+    /// Coefficient of `M_p · B_q` at `[p * 4 + q]`.
+    pub coeffs: [i32; ELEM_DIM],
+}
+
+impl BilinearForm {
+    /// The zero form.
+    pub const ZERO: BilinearForm = BilinearForm { coeffs: [0; ELEM_DIM] };
+
+    /// The single elementary product `M_p · B_q`.
+    pub fn elementary(p: usize, q: usize) -> Self {
+        let mut coeffs = [0; ELEM_DIM];
+        coeffs[elem_index(p, q)] = 1;
+        BilinearForm { coeffs }
+    }
+
+    /// The rank-1 form `(Σ_p u[p] M_p) · (Σ_q v[q] B_q)` — i.e. what one
+    /// worker node computes from encoded operands.
+    pub fn from_uv(u: &[i32; 4], v: &[i32; 4]) -> Self {
+        let mut coeffs = [0; ELEM_DIM];
+        for p in 0..4 {
+            for q in 0..4 {
+                coeffs[elem_index(p, q)] = u[p] * v[q];
+            }
+        }
+        BilinearForm { coeffs }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0)
+    }
+
+    /// Number of non-zero coefficients.
+    pub fn support_size(&self) -> usize {
+        self.coeffs.iter().filter(|&&c| c != 0).count()
+    }
+
+    /// If this form is a *single* elementary product with coefficient ±1,
+    /// return `(p, q, sign)`.
+    pub fn as_elementary(&self) -> Option<(usize, usize, i32)> {
+        let mut found = None;
+        for p in 0..4 {
+            for q in 0..4 {
+                let c = self.coeffs[elem_index(p, q)];
+                if c != 0 {
+                    if found.is_some() || c.abs() != 1 {
+                        return None;
+                    }
+                    found = Some((p, q, c));
+                }
+            }
+        }
+        found
+    }
+
+    /// Rank-1 factorization over ℤ: if the 4×4 coefficient matrix equals
+    /// an outer product `u vᵀ` with integer vectors (gcd-normalized, the
+    /// leading nonzero of `u` positive), return `(u, v)`.
+    ///
+    /// Exactly the forms with such a factorization can be *computed by a
+    /// single worker* as one encoded block multiplication, so this is the
+    /// validity test for PSMM candidates found by Algorithm 1.
+    pub fn rank_one_factor(&self) -> Option<([i32; 4], [i32; 4])> {
+        if self.is_zero() {
+            return None;
+        }
+        // Find the first row with a nonzero entry; it must be proportional
+        // to every other nonzero row.
+        let row = |p: usize| -> [i32; 4] {
+            [
+                self.coeffs[elem_index(p, 0)],
+                self.coeffs[elem_index(p, 1)],
+                self.coeffs[elem_index(p, 2)],
+                self.coeffs[elem_index(p, 3)],
+            ]
+        };
+        let pivot = (0..4).find(|&p| row(p).iter().any(|&c| c != 0))?;
+        let v_raw = row(pivot);
+        // gcd-normalize v.
+        let g = v_raw.iter().fold(0i32, |a, &b| gcd_i32(a, b)).max(1);
+        let mut v = [0i32; 4];
+        for q in 0..4 {
+            v[q] = v_raw[q] / g;
+        }
+        // Make the first nonzero of v positive (canonical sign).
+        let lead = v.iter().find(|&&c| c != 0).copied().unwrap();
+        if lead < 0 {
+            for q in 0..4 {
+                v[q] = -v[q];
+            }
+        }
+        // Solve u[p] * v = row(p) for each p.
+        let vq = v.iter().position(|&c| c != 0).unwrap();
+        let mut u = [0i32; 4];
+        for p in 0..4 {
+            let r = row(p);
+            if r[vq] % v[vq] != 0 {
+                return None;
+            }
+            u[p] = r[vq] / v[vq];
+            for q in 0..4 {
+                if u[p] * v[q] != r[q] {
+                    return None;
+                }
+            }
+        }
+        Some((u, v))
+    }
+
+    /// The paper's hexadecimal support notation: one nibble per M-block
+    /// (M11, M12, M21, M22), bit 3..0 = B11, B12, B21, B22. Only the
+    /// support (presence of a term) is encoded, as in the paper's
+    /// `C11 = 0x8040` example (which uses the transposed labeling; see
+    /// DESIGN.md §3.1 — the codec itself is identical).
+    pub fn hex_support(&self) -> String {
+        let mut s = String::with_capacity(6);
+        s.push_str("0x");
+        for p in 0..4 {
+            let mut nib = 0u8;
+            for q in 0..4 {
+                if self.coeffs[elem_index(p, q)] != 0 {
+                    nib |= 1 << (3 - q);
+                }
+            }
+            s.push(char::from_digit(nib as u32, 16).unwrap());
+        }
+        s
+    }
+
+    /// All 16 coefficients as `f64` (runtime decode weights etc.).
+    pub fn to_f64(&self) -> [f64; ELEM_DIM] {
+        let mut out = [0.0; ELEM_DIM];
+        for (o, &c) in out.iter_mut().zip(self.coeffs.iter()) {
+            *o = c as f64;
+        }
+        out
+    }
+}
+
+fn gcd_i32(a: i32, b: i32) -> i32 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Add for BilinearForm {
+    type Output = BilinearForm;
+    fn add(self, rhs: BilinearForm) -> BilinearForm {
+        let mut coeffs = [0; ELEM_DIM];
+        for i in 0..ELEM_DIM {
+            coeffs[i] = self.coeffs[i] + rhs.coeffs[i];
+        }
+        BilinearForm { coeffs }
+    }
+}
+
+impl Sub for BilinearForm {
+    type Output = BilinearForm;
+    fn sub(self, rhs: BilinearForm) -> BilinearForm {
+        let mut coeffs = [0; ELEM_DIM];
+        for i in 0..ELEM_DIM {
+            coeffs[i] = self.coeffs[i] - rhs.coeffs[i];
+        }
+        BilinearForm { coeffs }
+    }
+}
+
+impl Neg for BilinearForm {
+    type Output = BilinearForm;
+    fn neg(self) -> BilinearForm {
+        let mut coeffs = [0; ELEM_DIM];
+        for i in 0..ELEM_DIM {
+            coeffs[i] = -self.coeffs[i];
+        }
+        BilinearForm { coeffs }
+    }
+}
+
+impl Mul<i32> for BilinearForm {
+    type Output = BilinearForm;
+    fn mul(self, s: i32) -> BilinearForm {
+        let mut coeffs = [0; ELEM_DIM];
+        for i in 0..ELEM_DIM {
+            coeffs[i] = self.coeffs[i] * s;
+        }
+        BilinearForm { coeffs }
+    }
+}
+
+impl fmt::Debug for BilinearForm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl fmt::Display for BilinearForm {
+    /// Render like `M11*B11 + M12*B21 - M22*B22`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        let mut first = true;
+        for p in 0..4 {
+            for q in 0..4 {
+                let c = self.coeffs[elem_index(p, q)];
+                if c == 0 {
+                    continue;
+                }
+                if first {
+                    if c < 0 {
+                        write!(f, "-")?;
+                    }
+                    first = false;
+                } else {
+                    write!(f, " {} ", if c < 0 { "-" } else { "+" })?;
+                }
+                if c.abs() != 1 {
+                    write!(f, "{}*", c.abs())?;
+                }
+                write!(f, "M{}B{}", BLOCK_NAMES[p], BLOCK_NAMES[q])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The four output blocks of `C = M · B`, as bilinear-form targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Target {
+    C11,
+    C12,
+    C21,
+    C22,
+}
+
+impl Target {
+    pub const ALL: [Target; 4] = [Target::C11, Target::C12, Target::C21, Target::C22];
+
+    /// Row-major index 0..4.
+    pub fn index(&self) -> usize {
+        match self {
+            Target::C11 => 0,
+            Target::C12 => 1,
+            Target::C21 => 2,
+            Target::C22 => 3,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Target {
+        Target::ALL[i]
+    }
+
+    /// The target's bilinear form: `C_ij = Σ_k M_ik · B_kj`.
+    pub fn form(&self) -> BilinearForm {
+        let (i, j) = match self {
+            Target::C11 => (0, 0),
+            Target::C12 => (0, 1),
+            Target::C21 => (1, 0),
+            Target::C22 => (1, 1),
+        };
+        // M block (i,k) has index 2i + k; B block (k,j) has index 2k + j.
+        let mut form = BilinearForm::ZERO;
+        for k in 0..2 {
+            form = form + BilinearForm::elementary(2 * i + k, 2 * k + j);
+        }
+        form
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::C11 => "C11",
+            Target::C12 => "C12",
+            Target::C21 => "C21",
+            Target::C22 => "C22",
+        }
+    }
+}
+
+impl fmt::Display for Target {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementary_and_support() {
+        let e = BilinearForm::elementary(2, 1); // M21 * B12
+        assert_eq!(e.support_size(), 1);
+        assert_eq!(e.as_elementary(), Some((2, 1, 1)));
+        assert_eq!((-e).as_elementary(), Some((2, 1, -1)));
+        assert_eq!((e * 2).as_elementary(), None);
+    }
+
+    #[test]
+    fn from_uv_expands_outer_product() {
+        // S1 = (M11 + M22)(B11 + B22)
+        let s1 = BilinearForm::from_uv(&[1, 0, 0, 1], &[1, 0, 0, 1]);
+        assert_eq!(s1.support_size(), 4);
+        assert_eq!(s1.coeffs[elem_index(0, 0)], 1);
+        assert_eq!(s1.coeffs[elem_index(0, 3)], 1);
+        assert_eq!(s1.coeffs[elem_index(3, 0)], 1);
+        assert_eq!(s1.coeffs[elem_index(3, 3)], 1);
+    }
+
+    #[test]
+    fn target_forms_match_block_matmul() {
+        // C11 = M11 B11 + M12 B21
+        let c11 = Target::C11.form();
+        assert_eq!(c11.coeffs[elem_index(0, 0)], 1);
+        assert_eq!(c11.coeffs[elem_index(1, 2)], 1);
+        assert_eq!(c11.support_size(), 2);
+        // C22 = M21 B12 + M22 B22
+        let c22 = Target::C22.form();
+        assert_eq!(c22.coeffs[elem_index(2, 1)], 1);
+        assert_eq!(c22.coeffs[elem_index(3, 3)], 1);
+    }
+
+    #[test]
+    fn hex_support_codec() {
+        // Our convention: C11 = M11B11 + M12B21 -> nibbles [8, 2, 0, 0].
+        assert_eq!(Target::C11.form().hex_support(), "0x8200");
+        assert_eq!(Target::C12.form().hex_support(), "0x4100");
+        assert_eq!(Target::C21.form().hex_support(), "0x0082");
+        assert_eq!(Target::C22.form().hex_support(), "0x0041");
+    }
+
+    #[test]
+    fn rank_one_factorization_roundtrip() {
+        let u = [1, 0, -1, 1];
+        let v = [0, 1, 0, -1];
+        let f = BilinearForm::from_uv(&u, &v);
+        let (fu, fv) = f.rank_one_factor().expect("rank one");
+        assert_eq!(BilinearForm::from_uv(&fu, &fv), f);
+    }
+
+    #[test]
+    fn rank_one_rejects_rank_two() {
+        // C11 = M11B11 + M12B21 is rank 2 and NOT one-worker computable.
+        assert!(Target::C11.form().rank_one_factor().is_none());
+    }
+
+    #[test]
+    fn rank_one_detects_psmm1() {
+        // PSMM-1 = S3 + W4 = M21 (B12 - B22) (paper §IV).
+        let s3 = BilinearForm::from_uv(&[1, 0, 0, 0], &[0, 1, 0, -1]);
+        let w4 = BilinearForm::from_uv(&[1, 0, -1, 0], &[0, -1, 0, 1]);
+        let p1 = s3 + w4;
+        let (u, v) = p1.rank_one_factor().expect("PSMM-1 is one product");
+        // Canonical factor: leading nonzero of v positive -> v = B12 - B22.
+        assert_eq!(u, [0, 0, 1, 0]);
+        assert_eq!(v, [0, 1, 0, -1]);
+        assert_eq!(p1, BilinearForm::from_uv(&[0, 0, 1, 0], &[0, 1, 0, -1]));
+    }
+
+    #[test]
+    fn arithmetic_and_display() {
+        let a = BilinearForm::elementary(0, 0);
+        let b = BilinearForm::elementary(1, 2);
+        let f = a + b - b;
+        assert_eq!(f, a);
+        assert_eq!(a.to_string(), "M11B11");
+        assert_eq!((a - b).to_string(), "M11B11 - M12B21");
+        assert_eq!(((a + b) * 2).to_string(), "2*M11B11 + 2*M12B21");
+        assert_eq!(BilinearForm::ZERO.to_string(), "0");
+    }
+
+    #[test]
+    fn zero_has_no_factor() {
+        assert!(BilinearForm::ZERO.rank_one_factor().is_none());
+    }
+
+    #[test]
+    fn to_f64_roundtrip() {
+        let f = BilinearForm::from_uv(&[1, -1, 0, 0], &[1, 1, 0, 0]);
+        let v = f.to_f64();
+        for i in 0..ELEM_DIM {
+            assert_eq!(v[i], f.coeffs[i] as f64);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Exact rational arithmetic on `i128` numerator/denominator pairs.
+//!
+//! The Gaussian elimination in [`crate::algebra::gauss`] runs over ℚ; the
+//! matrices involved are at most 20×16 with entries that start in
+//! {-1, 0, 1}, so `i128` with eager gcd reduction never overflows in
+//! practice (debug builds additionally check every operation).
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// An exact rational number `num / den`, always in reduced form with
+/// `den > 0`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Frac {
+    num: i128,
+    den: i128,
+}
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Frac {
+    /// Construct `num / den`, reducing to canonical form.
+    ///
+    /// Panics if `den == 0`.
+    pub fn new(num: i128, den: i128) -> Self {
+        assert!(den != 0, "Frac with zero denominator");
+        let g = gcd(num, den).max(1);
+        let sign = if den < 0 { -1 } else { 1 };
+        Frac { num: sign * num / g, den: sign * den / g }
+    }
+
+    /// The integer `n` as a fraction.
+    pub const fn int(n: i128) -> Self {
+        Frac { num: n, den: 1 }
+    }
+
+    pub const ZERO: Frac = Frac { num: 0, den: 1 };
+    pub const ONE: Frac = Frac { num: 1, den: 1 };
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn numerator(&self) -> i128 {
+        self.num
+    }
+
+    pub fn denominator(&self) -> i128 {
+        self.den
+    }
+
+    /// Multiplicative inverse. Panics on zero.
+    pub fn recip(&self) -> Self {
+        assert!(self.num != 0, "reciprocal of zero");
+        Frac::new(self.den, self.num)
+    }
+
+    /// Nearest `f64` value (for handing decode weights to the runtime).
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// True if the value is an integer.
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+}
+
+impl fmt::Debug for Frac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl fmt::Display for Frac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl From<i32> for Frac {
+    fn from(n: i32) -> Self {
+        Frac::int(n as i128)
+    }
+}
+
+impl From<i64> for Frac {
+    fn from(n: i64) -> Self {
+        Frac::int(n as i128)
+    }
+}
+
+impl Add for Frac {
+    type Output = Frac;
+    fn add(self, rhs: Frac) -> Frac {
+        // Reduce cross terms first to keep magnitudes small.
+        let g = gcd(self.den, rhs.den).max(1);
+        let lcm = self.den / g * rhs.den;
+        Frac::new(
+            self.num * (rhs.den / g) + rhs.num * (self.den / g),
+            lcm,
+        )
+    }
+}
+
+impl AddAssign for Frac {
+    fn add_assign(&mut self, rhs: Frac) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for Frac {
+    type Output = Frac;
+    fn sub(self, rhs: Frac) -> Frac {
+        self + (-rhs)
+    }
+}
+
+impl Neg for Frac {
+    type Output = Frac;
+    fn neg(self) -> Frac {
+        Frac { num: -self.num, den: self.den }
+    }
+}
+
+impl Mul for Frac {
+    type Output = Frac;
+    fn mul(self, rhs: Frac) -> Frac {
+        // Cross-reduce before multiplying to avoid overflow.
+        let g1 = gcd(self.num, rhs.den).max(1);
+        let g2 = gcd(rhs.num, self.den).max(1);
+        Frac::new(
+            (self.num / g1) * (rhs.num / g2),
+            (self.den / g2) * (rhs.den / g1),
+        )
+    }
+}
+
+impl Div for Frac {
+    type Output = Frac;
+    fn div(self, rhs: Frac) -> Frac {
+        self * rhs.recip()
+    }
+}
+
+impl PartialOrd for Frac {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Frac {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // den > 0 invariant makes cross-multiplication order-preserving.
+        (self.num * other.den).cmp(&(other.num * self.den))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_reduces() {
+        assert_eq!(Frac::new(2, 4), Frac::new(1, 2));
+        assert_eq!(Frac::new(-2, -4), Frac::new(1, 2));
+        assert_eq!(Frac::new(2, -4), Frac::new(-1, 2));
+        assert_eq!(Frac::new(0, 5), Frac::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero denominator")]
+    fn zero_denominator_panics() {
+        let _ = Frac::new(1, 0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Frac::new(1, 2);
+        let b = Frac::new(1, 3);
+        assert_eq!(a + b, Frac::new(5, 6));
+        assert_eq!(a - b, Frac::new(1, 6));
+        assert_eq!(a * b, Frac::new(1, 6));
+        assert_eq!(a / b, Frac::new(3, 2));
+        assert_eq!(-a, Frac::new(-1, 2));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Frac::new(1, 3) < Frac::new(1, 2));
+        assert!(Frac::new(-1, 2) < Frac::ZERO);
+        assert!(Frac::new(7, 7) == Frac::ONE);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Frac::new(3, 6).to_string(), "1/2");
+        assert_eq!(Frac::int(-4).to_string(), "-4");
+    }
+
+    #[test]
+    fn recip_and_f64() {
+        assert_eq!(Frac::new(2, 3).recip(), Frac::new(3, 2));
+        assert!((Frac::new(1, 4).to_f64() - 0.25).abs() < 1e-15);
+        assert!(Frac::int(5).is_integer());
+        assert!(!Frac::new(5, 2).is_integer());
+    }
+
+    #[test]
+    fn addition_keeps_magnitudes_reduced() {
+        // Harmonic partial sum H_30 ≈ 3.9950 (lcm(1..30) ≈ 2.3e12 stays
+        // comfortably inside i128 with eager reduction).
+        let mut x = Frac::ZERO;
+        for i in 1..=30i128 {
+            x += Frac::new(1, i);
+        }
+        assert!(x > Frac::new(39, 10) && x < Frac::int(4));
+    }
+}

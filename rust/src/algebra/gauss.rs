@@ -1,0 +1,309 @@
+//! Exact Gaussian elimination over ℚ on bilinear forms.
+//!
+//! The decodability oracle of the coding layer: a set of finished worker
+//! products spans the output iff every `C_ij` target lies in the ℚ-span
+//! of their bilinear forms. [`SpanBasis`] maintains a row-reduced basis
+//! *incrementally* so the coordinator can re-check decodability in
+//! O(dim²) as each worker finishes (the L3 hot path — see
+//! EXPERIMENTS.md §Perf).
+
+use super::form::{BilinearForm, ELEM_DIM};
+use super::frac::Frac;
+
+/// A row-echelon basis of a subspace of ℚ^16, maintained incrementally.
+///
+/// Each stored row is normalized to a leading 1 at its pivot column, and
+/// rows are kept mutually reduced (reduced row-echelon form), so
+/// membership tests are a single elimination pass.
+#[derive(Clone, Debug, Default)]
+pub struct SpanBasis {
+    /// `(pivot_column, row)` sorted by pivot column.
+    rows: Vec<(usize, [Frac; ELEM_DIM])>,
+}
+
+fn to_frac_row(form: &BilinearForm) -> [Frac; ELEM_DIM] {
+    let mut row = [Frac::ZERO; ELEM_DIM];
+    for (r, &c) in row.iter_mut().zip(form.coeffs.iter()) {
+        *r = Frac::int(c as i128);
+    }
+    row
+}
+
+impl SpanBasis {
+    pub fn new() -> Self {
+        SpanBasis { rows: Vec::with_capacity(ELEM_DIM) }
+    }
+
+    /// Current dimension of the spanned subspace.
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Reduce `row` against the basis in place; returns the column of the
+    /// first surviving nonzero entry, if any.
+    fn reduce(&self, row: &mut [Frac; ELEM_DIM]) -> Option<usize> {
+        for (pivot, basis_row) in &self.rows {
+            let factor = row[*pivot];
+            if !factor.is_zero() {
+                for i in *pivot..ELEM_DIM {
+                    row[i] = row[i] - factor * basis_row[i];
+                }
+            }
+        }
+        row.iter().position(|c| !c.is_zero())
+    }
+
+    /// Insert a form into the basis. Returns `true` if it increased the
+    /// rank (i.e. was not already in the span).
+    pub fn insert(&mut self, form: &BilinearForm) -> bool {
+        let mut row = to_frac_row(form);
+        let Some(pivot) = self.reduce(&mut row) else {
+            return false;
+        };
+        // Normalize to leading 1.
+        let lead = row[pivot];
+        for c in row.iter_mut() {
+            *c = *c / lead;
+        }
+        // Back-substitute into existing rows to keep RREF.
+        for (_, existing) in self.rows.iter_mut() {
+            let factor = existing[pivot];
+            if !factor.is_zero() {
+                for i in 0..ELEM_DIM {
+                    existing[i] = existing[i] - factor * row[i];
+                }
+            }
+        }
+        let at = self.rows.partition_point(|(p, _)| *p < pivot);
+        self.rows.insert(at, (pivot, row));
+        true
+    }
+
+    /// Is `form` in the span of the inserted forms?
+    pub fn contains(&self, form: &BilinearForm) -> bool {
+        let mut row = to_frac_row(form);
+        self.reduce(&mut row).is_none()
+    }
+}
+
+/// Does `target` lie in the ℚ-span of `forms`?
+pub fn span_contains(forms: &[BilinearForm], target: &BilinearForm) -> bool {
+    let mut basis = SpanBasis::new();
+    for f in forms {
+        basis.insert(f);
+    }
+    basis.contains(target)
+}
+
+/// Rank of a set of forms.
+pub fn rank(forms: &[BilinearForm]) -> usize {
+    let mut basis = SpanBasis::new();
+    for f in forms {
+        basis.insert(f);
+    }
+    basis.rank()
+}
+
+/// Express `target` as a rational combination of `forms`:
+/// returns `w` with `Σ w[i] · forms[i] = target`, or `None` if `target`
+/// is not in the span. Uses full Gaussian elimination on the augmented
+/// system (columns = forms, rows = the 16 elementary products).
+pub fn solve_in_span(forms: &[BilinearForm], target: &BilinearForm) -> Option<Vec<Frac>> {
+    solve_in_span_multi(forms, std::slice::from_ref(target))
+        .pop()
+        .flatten()
+}
+
+/// Multi-RHS variant: ONE elimination shared by all targets (the decode
+/// hot path solves all four C blocks at once — see EXPERIMENTS.md §Perf).
+/// Returns per-target weights; a target outside the span yields `None`
+/// in its slot (the single-target wrapper maps that to `None` overall).
+pub fn solve_in_span_multi(
+    forms: &[BilinearForm],
+    targets: &[BilinearForm],
+) -> Vec<Option<Vec<Frac>>> {
+    let n = forms.len();
+    let t = targets.len();
+    let width = n + t;
+    // Augmented matrix: ELEM_DIM rows, n form columns + t RHS columns.
+    let mut m: Vec<Vec<Frac>> = (0..ELEM_DIM)
+        .map(|r| {
+            let mut row: Vec<Frac> = (0..n)
+                .map(|c| Frac::int(forms[c].coeffs[r] as i128))
+                .collect();
+            row.extend(targets.iter().map(|tg| Frac::int(tg.coeffs[r] as i128)));
+            row
+        })
+        .collect();
+
+    let rows = ELEM_DIM;
+    let mut pivots: Vec<(usize, usize)> = Vec::new(); // (row, col)
+    let mut rank_row = 0;
+    for col in 0..n {
+        let Some(p) = (rank_row..rows).find(|&r| !m[r][col].is_zero()) else {
+            continue;
+        };
+        m.swap(rank_row, p);
+        let lead = m[rank_row][col];
+        for c in col..width {
+            m[rank_row][c] = m[rank_row][c] / lead;
+        }
+        for r in 0..rows {
+            if r != rank_row && !m[r][col].is_zero() {
+                let f = m[r][col];
+                for c in col..width {
+                    m[r][c] = m[r][c] - f * m[rank_row][c];
+                }
+            }
+        }
+        pivots.push((rank_row, col));
+        rank_row += 1;
+        if rank_row == rows {
+            break;
+        }
+    }
+    let mut out = Vec::with_capacity(t);
+    'target: for ti in 0..t {
+        // Inconsistent if any zero-row has a nonzero RHS for this target.
+        for r in rank_row..rows {
+            if !m[r][n + ti].is_zero() {
+                out.push(None);
+                continue 'target;
+            }
+        }
+        let mut w = vec![Frac::ZERO; n];
+        for &(r, c) in &pivots {
+            w[c] = m[r][n + ti];
+        }
+        out.push(Some(w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::form::Target;
+
+    fn s(u: [i32; 4], v: [i32; 4]) -> BilinearForm {
+        BilinearForm::from_uv(&u, &v)
+    }
+
+    /// Strassen's seven products.
+    fn strassen() -> Vec<BilinearForm> {
+        vec![
+            s([1, 0, 0, 1], [1, 0, 0, 1]),  // S1
+            s([0, 0, 1, 1], [1, 0, 0, 0]),  // S2
+            s([1, 0, 0, 0], [0, 1, 0, -1]), // S3
+            s([0, 0, 0, 1], [-1, 0, 1, 0]), // S4
+            s([1, 1, 0, 0], [0, 0, 0, 1]),  // S5
+            s([-1, 0, 1, 0], [1, 1, 0, 0]), // S6
+            s([0, 1, 0, -1], [0, 0, 1, 1]), // S7
+        ]
+    }
+
+    #[test]
+    fn strassen_has_rank_seven_and_spans_all_targets() {
+        let forms = strassen();
+        assert_eq!(rank(&forms), 7);
+        for t in Target::ALL {
+            assert!(span_contains(&forms, &t.form()), "{t} not spanned");
+        }
+    }
+
+    #[test]
+    fn six_products_cannot_span() {
+        let mut forms = strassen();
+        forms.pop();
+        // With S7 missing, C11 = S1+S4-S5+S7 is unrecoverable.
+        assert!(!span_contains(&forms, &Target::C11.form()));
+    }
+
+    #[test]
+    fn solve_recovers_paper_eq1() {
+        // C11 = S1 + S4 - S5 + S7 (paper eq. (1)).
+        let forms = strassen();
+        let w = solve_in_span(&forms, &Target::C11.form()).unwrap();
+        let expect = [1, 0, 0, 1, -1, 0, 1];
+        for (i, e) in expect.iter().enumerate() {
+            assert_eq!(w[i], Frac::int(*e as i128), "weight {i}");
+        }
+    }
+
+    #[test]
+    fn solve_detects_unsolvable() {
+        let forms = vec![s([1, 0, 0, 0], [1, 0, 0, 0])];
+        assert!(solve_in_span(&forms, &Target::C11.form()).is_none());
+    }
+
+    #[test]
+    fn solve_verifies_combination() {
+        let forms = strassen();
+        for t in Target::ALL {
+            let w = solve_in_span(&forms, &t.form()).unwrap();
+            let mut acc = BilinearForm::ZERO;
+            for (wi, f) in w.iter().zip(forms.iter()) {
+                assert!(wi.is_integer(), "Strassen weights are integers");
+                acc = acc + *f * (wi.numerator() as i32);
+            }
+            assert_eq!(acc, t.form());
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_single_solves() {
+        use crate::algebra::gauss::solve_in_span_multi;
+        let forms = strassen();
+        let targets: Vec<BilinearForm> = Target::ALL.iter().map(|t| t.form()).collect();
+        let multi = solve_in_span_multi(&forms, &targets);
+        for (t, sol) in Target::ALL.iter().zip(multi.iter()) {
+            assert_eq!(sol.as_ref(), solve_in_span(&forms, &t.form()).as_ref());
+        }
+        // unsolvable slot is None while solvable ones stay Some
+        let partial = vec![forms[0], forms[1]];
+        let mixed = solve_in_span_multi(
+            &partial,
+            &[forms[0], Target::C11.form()],
+        );
+        assert!(mixed[0].is_some());
+        assert!(mixed[1].is_none());
+    }
+
+    #[test]
+    fn incremental_insert_matches_batch_rank() {
+        let forms = strassen();
+        let mut basis = SpanBasis::new();
+        let mut inserted = 0;
+        for f in &forms {
+            if basis.insert(f) {
+                inserted += 1;
+            }
+        }
+        assert_eq!(inserted, 7);
+        assert_eq!(basis.rank(), 7);
+        // Re-inserting changes nothing.
+        assert!(!basis.insert(&forms[0]));
+    }
+
+    #[test]
+    fn contains_rejects_outside_vector() {
+        let mut basis = SpanBasis::new();
+        basis.insert(&s([1, 0, 0, 0], [1, 0, 0, 0]));
+        assert!(basis.contains(&s([1, 0, 0, 0], [1, 0, 0, 0])));
+        assert!(!basis.contains(&s([0, 1, 0, 0], [1, 0, 0, 0])));
+    }
+
+    #[test]
+    fn full_elementary_basis_spans_everything() {
+        let mut basis = SpanBasis::new();
+        for p in 0..4 {
+            for q in 0..4 {
+                basis.insert(&BilinearForm::elementary(p, q));
+            }
+        }
+        assert_eq!(basis.rank(), ELEM_DIM);
+        for t in Target::ALL {
+            assert!(basis.contains(&t.form()));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Exact bilinear-form algebra — the substrate under the search and
+//! coding layers.
+//!
+//! Every sub-matrix multiplication of the paper (S1..S7, W1..W7, the
+//! PSMMs) and every output target (C11..C22) is a *bilinear form*: an
+//! integer coefficient vector over the 16 elementary block products
+//! `M_p · B_q` (Table I of the paper). Decodability questions ("can C be
+//! reconstructed from this subset of finished workers?") are exact linear
+//! algebra over ℚ on these vectors; no floating point is involved, so
+//! the FC(k) tables and the Fig. 2 curves are bit-reproducible.
+
+pub mod form;
+pub mod frac;
+pub mod gauss;
+
+pub use form::{BilinearForm, Target};
+pub use frac::Frac;
+pub use gauss::{solve_in_span, span_contains, SpanBasis};

@@ -1,0 +1,25 @@
+//! Strassen-like bilinear algorithms (⟨2,2,2;t⟩ schemes).
+//!
+//! A *Strassen-like algorithm* computes the 2×2 block product with `t`
+//! block multiplications: `t` rank-1 bilinear products
+//! `P_i = u_i(M) · v_i(B)` plus an integer output table expressing each
+//! `C_jk` as a combination of the `P_i`. The paper uses Strassen's and
+//! Winograd's `t = 7` schemes; the naive `t = 8` scheme is included as
+//! the classical baseline substrate.
+//!
+//! Validity is checked two independent ways: symbolically (the output
+//! combinations expand to exactly `C_jk = Σ M·B` — see
+//! [`scheme::BilinearScheme::verify`]) and via Brent's triple-product
+//! equations ([`triple_product`]).
+
+pub mod naive8;
+pub mod scheme;
+pub mod strassen;
+pub mod transform;
+pub mod triple_product;
+pub mod winograd;
+
+pub use naive8::naive8;
+pub use scheme::BilinearScheme;
+pub use strassen::strassen;
+pub use winograd::winograd;

@@ -1,0 +1,51 @@
+//! The standard 8-multiplication block algorithm (classical baseline).
+
+use super::scheme::{BilinearScheme, Product};
+
+/// Naive ⟨2,2,2;8⟩: `P_{ikj} = M_ik · B_kj`, `C_ij = Σ_k P_{ikj}`.
+/// Product order: (C11,k=1), (C11,k=2), (C12,k=1), (C12,k=2),
+/// (C21,k=1), (C21,k=2), (C22,k=1), (C22,k=2).
+pub fn naive8() -> BilinearScheme {
+    let e = |p: usize, q: usize| {
+        let mut u = [0; 4];
+        let mut v = [0; 4];
+        u[p] = 1;
+        v[q] = 1;
+        Product::new(u, v)
+    };
+    BilinearScheme {
+        name: "naive8",
+        products: vec![
+            e(0, 0), // M11 B11
+            e(1, 2), // M12 B21
+            e(0, 1), // M11 B12
+            e(1, 3), // M12 B22
+            e(2, 0), // M21 B11
+            e(3, 2), // M22 B21
+            e(2, 1), // M21 B12
+            e(3, 3), // M22 B22
+        ],
+        output: [
+            vec![1, 1, 0, 0, 0, 0, 0, 0],
+            vec![0, 0, 1, 1, 0, 0, 0, 0],
+            vec![0, 0, 0, 0, 1, 1, 0, 0],
+            vec![0, 0, 0, 0, 0, 0, 1, 1],
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::gauss::rank;
+
+    #[test]
+    fn is_valid() {
+        naive8().verify().unwrap();
+    }
+
+    #[test]
+    fn rank_eight() {
+        assert_eq!(rank(&naive8().forms()), 8);
+    }
+}

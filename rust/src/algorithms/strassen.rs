@@ -1,0 +1,68 @@
+//! Strassen's original ⟨2,2,2;7⟩ algorithm (paper's S1..S7).
+
+use super::scheme::{BilinearScheme, Product};
+
+/// Strassen's algorithm exactly as printed in the paper:
+///
+/// ```text
+/// S1 = (M11 + M22)(B11 + B22)      S5 = (M11 + M12) B22
+/// S2 = (M21 + M22) B11             S6 = (M21 - M11)(B11 + B12)
+/// S3 = M11 (B12 - B22)             S7 = (M12 - M22)(B21 + B22)
+/// S4 = M22 (B21 - B11)
+///
+/// C11 = S1 + S4 - S5 + S7          C21 = S2 + S4
+/// C12 = S3 + S5                    C22 = S1 - S2 + S3 + S6
+/// ```
+pub fn strassen() -> BilinearScheme {
+    BilinearScheme {
+        name: "strassen",
+        products: vec![
+            Product::new([1, 0, 0, 1], [1, 0, 0, 1]),   // S1
+            Product::new([0, 0, 1, 1], [1, 0, 0, 0]),   // S2
+            Product::new([1, 0, 0, 0], [0, 1, 0, -1]),  // S3
+            Product::new([0, 0, 0, 1], [-1, 0, 1, 0]),  // S4
+            Product::new([1, 1, 0, 0], [0, 0, 0, 1]),   // S5
+            Product::new([-1, 0, 1, 0], [1, 1, 0, 0]),  // S6
+            Product::new([0, 1, 0, -1], [0, 0, 1, 1]),  // S7
+        ],
+        output: [
+            vec![1, 0, 0, 1, -1, 0, 1], // C11 (paper eq. (1))
+            vec![0, 0, 1, 0, 1, 0, 0],  // C12 (paper eq. (2))
+            vec![0, 1, 0, 1, 0, 0, 0],  // C21 (paper eq. (3))
+            vec![1, -1, 1, 0, 0, 1, 0], // C22 (paper eq. (4))
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::form::Target;
+    use crate::algebra::gauss::{rank, solve_in_span};
+
+    #[test]
+    fn is_valid() {
+        strassen().verify().unwrap();
+    }
+
+    #[test]
+    fn has_full_rank_seven() {
+        assert_eq!(rank(&strassen().forms()), 7);
+    }
+
+    #[test]
+    fn output_rows_are_the_unique_solution() {
+        // Rank 7 => the decode weights over the 7 products are unique, so
+        // eqs. (1)-(4) are THE decode combination for a complete set.
+        let forms = strassen().forms();
+        for t in Target::ALL {
+            let w = solve_in_span(&forms, &t.form()).unwrap();
+            for (i, wi) in w.iter().enumerate() {
+                assert_eq!(
+                    wi.numerator() as i32,
+                    strassen().output[t.index()][i] * wi.denominator() as i32
+                );
+            }
+        }
+    }
+}

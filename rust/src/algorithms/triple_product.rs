@@ -1,0 +1,105 @@
+//! Brent's triple-product condition for ⟨2,2,2;t⟩ schemes.
+//!
+//! A set of products `P_r = (Σ u_r[ij] M_ij)(Σ v_r[kl] B_kl)` with output
+//! coefficients `w_r[mn]` computes `C = M · B` iff for every index tuple
+//!
+//! ```text
+//! Σ_r u_r[i,j] · v_r[k,l] · w_r[m,n]  =  δ_{j,k} · δ_{m,i} · δ_{n,l}
+//! ```
+//!
+//! (the Brent equations). The paper points to this condition — via
+//! Karstadt–Schwartz — as the efficient way to enumerate alternative
+//! Strassen-like algorithms to pair; we use it both as an independent
+//! validator of the scheme tables and as the acceptance test for
+//! externally supplied schemes in the config layer.
+
+use super::scheme::BilinearScheme;
+
+/// Block index (0..4, row-major) -> (row, col) in the 2×2 block grid.
+#[inline]
+fn rc(idx: usize) -> (usize, usize) {
+    (idx / 2, idx % 2)
+}
+
+/// Check the Brent equations for a scheme. Returns the list of violated
+/// index tuples `(i, j, k, l, m, n)` (empty = valid).
+pub fn brent_violations(s: &BilinearScheme) -> Vec<(usize, usize, usize, usize, usize, usize)> {
+    let mut bad = Vec::new();
+    let t = s.num_products();
+    for mj in 0..4 {
+        let (i, j) = rc(mj);
+        for bk in 0..4 {
+            let (k, l) = rc(bk);
+            for cm in 0..4 {
+                let (m, n) = rc(cm);
+                let mut sum: i64 = 0;
+                for r in 0..t {
+                    sum += s.products[r].u[mj] as i64
+                        * s.products[r].v[bk] as i64
+                        * s.output[cm][r] as i64;
+                }
+                let want = if j == k && m == i && n == l { 1 } else { 0 };
+                if sum != want {
+                    bad.push((i, j, k, l, m, n));
+                }
+            }
+        }
+    }
+    bad
+}
+
+/// True iff the scheme satisfies all 64 Brent equations.
+pub fn satisfies_triple_product(s: &BilinearScheme) -> bool {
+    brent_violations(s).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{naive8, strassen, winograd};
+
+    #[test]
+    fn builtin_schemes_satisfy_brent() {
+        for s in [strassen(), winograd(), naive8()] {
+            let v = brent_violations(&s);
+            assert!(v.is_empty(), "{}: {} violations, first {:?}", s.name, v.len(), v.first());
+        }
+    }
+
+    #[test]
+    fn corrupted_scheme_fails_brent() {
+        let mut s = strassen();
+        s.products[3].v = [1, 0, 1, 0]; // break S4
+        assert!(!satisfies_triple_product(&s));
+    }
+
+    #[test]
+    fn brent_agrees_with_symbolic_verify() {
+        // Property: for a batch of random corruptions, the two validators
+        // agree (both accept or both reject).
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for _ in 0..200 {
+            let mut s = winograd();
+            // Randomly perturb one coefficient by ±1.
+            let r = (next() % 7) as usize;
+            let p = (next() % 4) as usize;
+            let delta = if next() % 2 == 0 { 1 } else { -1 };
+            if next() % 2 == 0 {
+                s.products[r].u[p] += delta;
+            } else {
+                s.products[r].v[p] += delta;
+            }
+            assert_eq!(
+                satisfies_triple_product(&s),
+                s.verify().is_ok(),
+                "validators disagree"
+            );
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Winograd's ⟨2,2,2;7⟩ variant (paper's W1..W7) — optimal at 15
+//! additions (Probert's lower bound).
+
+use super::scheme::{BilinearScheme, Product};
+
+/// Winograd's algorithm exactly as printed in the paper:
+///
+/// ```text
+/// W1 = M11 B11                         W5 = (M21 + M22)(B12 - B11)
+/// W2 = M12 B21                         W6 = (M11 + M12 - M21 - M22) B22
+/// W3 = M22 (B11 - B12 - B21 + B22)     W7 = (M11 - M21 - M22)(B11 - B12 + B22)
+/// W4 = (M11 - M21)(B22 - B12)
+///
+/// C11 = W1 + W2                        C21 = W1 - W3 + W4 - W7
+/// C12 = W1 + W5 + W6 - W7              C22 = W1 + W4 + W5 - W7
+/// ```
+pub fn winograd() -> BilinearScheme {
+    BilinearScheme {
+        name: "winograd",
+        products: vec![
+            Product::new([1, 0, 0, 0], [1, 0, 0, 0]),             // W1
+            Product::new([0, 1, 0, 0], [0, 0, 1, 0]),             // W2
+            Product::new([0, 0, 0, 1], [1, -1, -1, 1]),           // W3
+            Product::new([1, 0, -1, 0], [0, -1, 0, 1]),           // W4
+            Product::new([0, 0, 1, 1], [-1, 1, 0, 0]),            // W5
+            Product::new([1, 1, -1, -1], [0, 0, 0, 1]),           // W6
+            Product::new([1, 0, -1, -1], [1, -1, 0, 1]),          // W7
+        ],
+        output: [
+            vec![1, 1, 0, 0, 0, 0, 0],    // C11
+            vec![1, 0, 0, 0, 1, 1, -1],   // C12
+            vec![1, 0, -1, 1, 0, 0, -1],  // C21
+            vec![1, 0, 0, 1, 1, 0, -1],   // C22
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::gauss::rank;
+    use crate::algorithms::strassen::strassen;
+
+    #[test]
+    fn is_valid() {
+        winograd().verify().unwrap();
+    }
+
+    #[test]
+    fn has_full_rank_seven() {
+        assert_eq!(rank(&winograd().forms()), 7);
+    }
+
+    #[test]
+    fn distinct_from_strassen_as_forms() {
+        // The fault-tolerance of the paper comes precisely from the two
+        // algorithms having different product forms: only W1/W2-style
+        // overlaps are allowed to coincide. Check no S_i duplicates any
+        // W_j up to sign.
+        let s = strassen().forms();
+        let w = winograd().forms();
+        let mut overlaps = 0;
+        for sf in &s {
+            for wf in &w {
+                if sf == wf || *sf == -*wf {
+                    overlaps += 1;
+                }
+            }
+        }
+        assert_eq!(overlaps, 0, "paper's S and W sets share no product");
+    }
+
+    #[test]
+    fn joint_rank_is_ten() {
+        // dim span(S1..S7, W1..W7) = 10: the 14 joint products carry
+        // 14 - 10 = 4 independent product-space dependencies, and with
+        // the 4 output targets adjoined the relation space has dimension
+        // 18 - 10 = 8 (see search::relations). These check relations are
+        // exactly where the paper's fault tolerance comes from.
+        let mut forms = strassen().forms();
+        forms.extend(winograd().forms());
+        assert_eq!(rank(&forms), 10);
+    }
+}

@@ -1,0 +1,178 @@
+//! The measurement loop: warmup, auto-tuned batch size, per-sample
+//! timing, CSV emission — criterion-style discipline without the crate.
+
+use std::hint::black_box;
+use std::io::Write;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use super::stats::Stats;
+
+/// What to measure and how hard.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSpec {
+    /// Wall-clock budget for warmup.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub measure: Duration,
+    /// Number of recorded samples (iterations are batched to fill
+    /// `measure` across exactly this many samples).
+    pub samples: usize,
+}
+
+impl Default for BenchSpec {
+    fn default() -> Self {
+        BenchSpec {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            samples: 30,
+        }
+    }
+}
+
+impl BenchSpec {
+    /// A faster profile for CI/smoke runs.
+    pub fn quick() -> Self {
+        BenchSpec {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            samples: 10,
+        }
+    }
+}
+
+/// One benchmark result row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+    /// Iterations per sample (after auto-tuning).
+    pub iters_per_sample: u64,
+}
+
+/// Collects results and renders a report.
+#[derive(Debug, Default)]
+pub struct BenchRunner {
+    pub results: Vec<BenchResult>,
+    spec: BenchSpec,
+}
+
+impl BenchRunner {
+    pub fn new(spec: BenchSpec) -> Self {
+        BenchRunner { results: Vec::new(), spec }
+    }
+
+    /// Honor `FT_BENCH_QUICK=1` for smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1") {
+            BenchRunner::new(BenchSpec::quick())
+        } else {
+            BenchRunner::new(BenchSpec::default())
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical operation per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // Warmup + estimate cost.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.spec.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+        // Pick batch so samples * batch * per_iter ≈ measure budget.
+        let budget_per_sample = self.spec.measure / self.spec.samples as u32;
+        let batch = (budget_per_sample.as_nanos() / per_iter.as_nanos().max(1))
+            .clamp(1, 1_000_000) as u64;
+        let mut samples = Vec::with_capacity(self.spec.samples);
+        for _ in 0..self.spec.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed() / batch as u32);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            stats: Stats::from_samples(&samples),
+            iters_per_sample: batch,
+        };
+        println!("bench {:40} {}", result.name, result.stats);
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Measure `f` and prevent its result from being optimized away.
+    pub fn bench_value<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench(name, || {
+            black_box(f());
+        })
+    }
+
+    /// Write `name,mean_ns,std_ns,min_ns,p50_ns,p95_ns,max_ns,iters` CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,mean_ns,std_ns,min_ns,p50_ns,p95_ns,max_ns,iters_per_sample")?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                r.name,
+                r.stats.mean.as_nanos(),
+                r.stats.std_dev.as_nanos(),
+                r.stats.min.as_nanos(),
+                r.stats.p50.as_nanos(),
+                r.stats.p95.as_nanos(),
+                r.stats.max.as_nanos(),
+                r.iters_per_sample,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_runner() -> BenchRunner {
+        BenchRunner::new(BenchSpec {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 5,
+        })
+    }
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut r = quick_runner();
+        let res = r.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(res.stats.mean < Duration::from_micros(100));
+        assert_eq!(res.stats.n, 5);
+    }
+
+    #[test]
+    fn bench_value_keeps_result_alive() {
+        let mut r = quick_runner();
+        let res = r.bench_value("sum", || (0..100u64).sum::<u64>());
+        assert!(res.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut r = quick_runner();
+        r.bench("a", || {});
+        let path = std::env::temp_dir().join("ft_strassen_bench_test.csv");
+        r.write_csv(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("name,mean_ns"));
+        assert!(content.contains("a,"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

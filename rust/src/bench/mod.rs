@@ -1,0 +1,11 @@
+//! Benchmark harness (offline substitute for `criterion`): auto-tuned
+//! iteration counts, warmup, robust statistics, CSV output and ASCII
+//! plots for the paper-figure benches.
+
+pub mod harness;
+pub mod plot;
+pub mod stats;
+
+pub use harness::{BenchRunner, BenchSpec};
+pub use plot::{ascii_loglog, Series};
+pub use stats::Stats;

@@ -1,0 +1,109 @@
+//! ASCII log-log plotting for terminal rendering of the paper's Fig. 2
+//! (P_f vs p_e curves) and other sweeps.
+
+/// One named curve.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    /// (x, y) points; non-positive values are dropped in log scale.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Series { name: name.into(), points }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render series on a log-log grid of `width` x `height` characters.
+pub fn ascii_loglog(series: &[Series], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|&(x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return "(no positive data to plot)\n".to_string();
+    }
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    let (lx0, lx1) = (x0.log10(), x1.log10());
+    let (ly0, ly1) = (y0.log10(), y1.log10());
+    let sx = if lx1 > lx0 { (width - 1) as f64 / (lx1 - lx0) } else { 0.0 };
+    let sy = if ly1 > ly0 { (height - 1) as f64 / (ly1 - ly0) } else { 0.0 };
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.log10() - lx0) * sx).round() as usize;
+            let cy = ((y.log10() - ly0) * sy).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("y: {y0:.2e} .. {y1:.2e} (log)\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: {x0:.2e} .. {x1:.2e} (log)\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_marks_and_legend() {
+        let s = vec![
+            Series::new("a", vec![(0.01, 0.1), (0.1, 0.5)]),
+            Series::new("b", vec![(0.01, 0.001), (0.1, 0.01)]),
+        ];
+        let plot = ascii_loglog(&s, 40, 10);
+        assert!(plot.contains('*'));
+        assert!(plot.contains('o'));
+        assert!(plot.contains("a\n"));
+        assert!(plot.contains("b\n"));
+    }
+
+    #[test]
+    fn empty_data_is_graceful() {
+        let s = vec![Series::new("empty", vec![(0.0, 0.0)])];
+        assert!(ascii_loglog(&s, 20, 5).contains("no positive data"));
+    }
+
+    #[test]
+    fn monotone_curve_renders_monotone() {
+        // Visual invariant: for a strictly increasing curve, the topmost
+        // mark is at the rightmost column.
+        let pts: Vec<(f64, f64)> = (1..=10).map(|i| (i as f64, (i * i) as f64)).collect();
+        let plot = ascii_loglog(&[Series::new("sq", pts)], 30, 12);
+        let lines: Vec<&str> = plot.lines().collect();
+        // first grid line (top) should contain the mark near the right edge
+        let top = lines[1];
+        let pos = top.rfind('*').expect("top row should contain a point");
+        assert!(pos > 20, "top point at col {pos}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Robust summary statistics over timing samples.
+
+use std::time::Duration;
+
+/// Summary of a sample of durations.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    /// Compute from raw samples (sorted internally).
+    pub fn from_samples(samples: &[Duration]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        s.sort_by(f64::total_cmp);
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| -> Duration {
+            let idx = ((n - 1) as f64 * p).floor() as usize;
+            Duration::from_secs_f64(s[idx])
+        };
+        Stats {
+            n,
+            mean: Duration::from_secs_f64(mean),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(s[0]),
+            p50: q(0.5),
+            p95: q(0.95),
+            max: Duration::from_secs_f64(s[n - 1]),
+        }
+    }
+
+    /// Throughput in ops/sec given ops per iteration.
+    pub fn throughput(&self, ops_per_iter: f64) -> f64 {
+        ops_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3?} ±{:.3?} min={:.3?} p50={:.3?} p95={:.3?} max={:.3?}",
+            self.n, self.mean, self.std_dev, self.min, self.p50, self.p95, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(&[Duration::from_millis(5); 10]);
+        assert_eq!(s.n, 10);
+        assert_eq!(s.mean, Duration::from_millis(5));
+        assert_eq!(s.min, s.max);
+        assert_eq!(s.std_dev, Duration::ZERO);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<Duration> =
+            (1..=100).map(|i| Duration::from_micros(i)).collect();
+        let s = Stats::from_samples(&samples);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.p50, Duration::from_micros(50));
+        assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Stats::from_samples(&[Duration::from_secs(1)]);
+        assert!((s.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn empty_panics() {
+        let _ = Stats::from_samples(&[]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Tiny command-line parser (offline substitute for `clap`):
+//! `binary <subcommand> [--flag] [--key value] ...` with typed accessors
+//! and generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments: a subcommand, `--key value` options, `--flag`
+/// booleans and bare positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+/// Parse error with a message suitable for printing next to usage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError(pub String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    ///
+    /// `known_flags` lists options that take NO value; everything else
+    /// starting with `--` consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, ParseError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(ParseError("empty option name '--'".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        ParseError(format!("option --{name} expects a value"))
+                    })?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, ParseError> {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed accessor with a default; errors mention the offending value.
+    pub fn get_parsed_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, ParseError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| {
+                ParseError(format!("--{name} {s}: {e}"))
+            }),
+        }
+    }
+
+    /// Comma-separated list accessor.
+    pub fn get_list_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, ParseError>
+    where
+        T: Clone,
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.parse::<T>()
+                        .map_err(|e| ParseError(format!("--{name} {p}: {e}")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags_positionals() {
+        let a = parse(
+            &["sim", "--p-e", "0.1", "--verbose", "extra1", "extra2"],
+            &["verbose"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("sim"));
+        assert_eq!(a.get("p-e"), Some("0.1"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["run", "--n=256"], &[]);
+        assert_eq!(a.get("n"), Some("256"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--trials", "5000", "--sizes", "32,64,128"], &[]);
+        assert_eq!(a.get_parsed_or("trials", 0u64).unwrap(), 5000);
+        assert_eq!(a.get_parsed_or("missing", 7i32).unwrap(), 7);
+        assert_eq!(
+            a.get_list_parsed::<usize>("sizes", &[]).unwrap(),
+            vec![32, 64, 128]
+        );
+        assert_eq!(
+            a.get_list_parsed::<usize>("absent", &[1, 2]).unwrap(),
+            vec![1, 2]
+        );
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(["--p".to_string()], &[]).unwrap_err();
+        assert!(e.0.contains("expects a value"));
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["x", "--n", "abc"], &[]);
+        assert!(a.get_parsed_or("n", 0u32).is_err());
+    }
+}

@@ -1,0 +1,426 @@
+//! Exhaustive FC(k) computation: for every failure cardinality `k`, the
+//! number of k-failure node combinations from which C cannot be
+//! recovered (the input to eq. (9)).
+//!
+//! The paper computes these "with the aid of a computer" for the proposed
+//! schemes; we enumerate all `2^M` failure patterns with an exact
+//! fraction-free integer rank test (entries are ±1, minors are bounded
+//! far below i128 range, so no overflow and no floating point).
+//! Replication task sets short-circuit to the structural test (a pattern
+//! is undecodable iff it wipes out all copies of some product), which is
+//! also how eq. (10) is cross-validated.
+
+use crate::algebra::form::{BilinearForm, Target, ELEM_DIM};
+use crate::coding::scheme::TaskSet;
+
+/// FC(k) counts for one task set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FcTable {
+    /// Number of nodes M.
+    pub m: usize,
+    /// `counts[k]` = number of k-failure combinations that are NOT
+    /// decodable, for k = 0..=M.
+    pub counts: Vec<u64>,
+}
+
+impl FcTable {
+    /// Smallest k with FC(k) > 0 — the scheme's "minimum distance - 1"
+    /// analogue (it tolerates any k-1 ... below this).
+    pub fn first_loss(&self) -> usize {
+        self.counts
+            .iter()
+            .position(|&c| c > 0)
+            .unwrap_or(self.m + 1)
+    }
+
+    /// Fraction of k-failure patterns that are fatal.
+    pub fn fatal_fraction(&self, k: usize) -> f64 {
+        let total = binomial(self.m as u64, k as u64) as f64;
+        self.counts[k] as f64 / total
+    }
+}
+
+/// Binomial coefficient in u128 (exact for the sizes used here).
+pub fn binomial(n: u64, k: u64) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    for i in 0..k {
+        num = num * (n - i) as u128 / (i + 1) as u128;
+    }
+    num
+}
+
+/// Exact rank of integer rows via fraction-free Gaussian elimination.
+fn int_rank(rows: &mut Vec<[i128; ELEM_DIM]>) -> usize {
+    let mut rank = 0;
+    for col in 0..ELEM_DIM {
+        let Some(pivot_row) = (rank..rows.len()).find(|&r| rows[r][col] != 0) else {
+            continue;
+        };
+        rows.swap(rank, pivot_row);
+        let pivot = rows[rank][col];
+        for r in (rank + 1)..rows.len() {
+            let factor = rows[r][col];
+            if factor != 0 {
+                let mut g: i128 = 0;
+                for c in col..ELEM_DIM {
+                    rows[r][c] = rows[r][c] * pivot - rows[rank][c] * factor;
+                    g = gcd_i128(g, rows[r][c]);
+                }
+                // Normalize to keep magnitudes small across eliminations.
+                if g > 1 {
+                    for c in col..ELEM_DIM {
+                        rows[r][c] /= g;
+                    }
+                }
+            }
+        }
+        rank += 1;
+        if rank == rows.len() {
+            break;
+        }
+    }
+    rank
+}
+
+fn gcd_i128(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+fn to_row(f: &BilinearForm) -> [i128; ELEM_DIM] {
+    let mut r = [0i128; ELEM_DIM];
+    for (o, &c) in r.iter_mut().zip(f.coeffs.iter()) {
+        *o = c as i128;
+    }
+    r
+}
+
+/// Fast decodability oracle: rank(alive) == rank(alive ∪ targets).
+pub fn decodable_mask(forms: &[[i128; ELEM_DIM]], targets: &[[i128; ELEM_DIM]], failed: u64) -> bool {
+    let mut alive: Vec<[i128; ELEM_DIM]> = Vec::with_capacity(forms.len() + 4);
+    for (i, f) in forms.iter().enumerate() {
+        if failed & (1 << i) == 0 {
+            alive.push(*f);
+        }
+    }
+    let r_alive = int_rank(&mut alive.clone());
+    alive.extend_from_slice(targets);
+    let r_aug = int_rank(&mut alive);
+    r_alive == r_aug
+}
+
+/// Precomputed decodability over every failure pattern of a task set —
+/// one bit per mask. Makes the Monte-Carlo inner loop a table lookup
+/// instead of a Gaussian elimination (see EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
+pub struct DecodabilityTable {
+    m: usize,
+    bits: Vec<u64>,
+}
+
+impl DecodabilityTable {
+    /// Enumerate all 2^M patterns (M <= 24 guard).
+    pub fn build(ts: &TaskSet) -> DecodabilityTable {
+        let m = ts.num_tasks();
+        assert!(m <= 24, "exhaustive table over 2^{m} patterns is not practical");
+        let forms: Vec<[i128; ELEM_DIM]> = ts.forms().iter().map(to_row).collect();
+        let targets: Vec<[i128; ELEM_DIM]> =
+            Target::ALL.iter().map(|t| to_row(&t.form())).collect();
+        let n_masks = 1usize << m;
+        let mut bits = vec![0u64; n_masks.div_ceil(64)];
+        for failed in 0..n_masks as u64 {
+            if decodable_mask(&forms, &targets, failed) {
+                bits[(failed / 64) as usize] |= 1 << (failed % 64);
+            }
+        }
+        DecodabilityTable { m, bits }
+    }
+
+    /// Is the pattern (bit i = task i FAILED) decodable?
+    #[inline]
+    pub fn is_decodable(&self, failed_mask: u64) -> bool {
+        debug_assert!(failed_mask < (1u64 << self.m));
+        self.bits[(failed_mask / 64) as usize] & (1 << (failed_mask % 64)) != 0
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.m
+    }
+
+    /// Derive the FC(k) table.
+    pub fn fc(&self) -> FcTable {
+        let mut counts = vec![0u64; self.m + 1];
+        for failed in 0..(1u64 << self.m) {
+            if !self.is_decodable(failed) {
+                counts[failed.count_ones() as usize] += 1;
+            }
+        }
+        FcTable { m: self.m, counts }
+    }
+}
+
+/// Compute the FC table for a task set.
+///
+/// Uses the structural shortcut for pure replication sets; otherwise
+/// exhausts all `2^M` patterns (`M <= 24` guard).
+pub fn fc_table(ts: &TaskSet) -> FcTable {
+    if let Some((groups, m)) = replication_structure(ts) {
+        return fc_replication_structural(&groups, m);
+    }
+    DecodabilityTable::build(ts).fc()
+}
+
+/// A fast decodability oracle: O(1) per query after precomputation.
+///
+/// * replication sets (any node count): per-group survivor masks,
+/// * general sets: the exhaustive [`DecodabilityTable`].
+#[derive(Clone, Debug)]
+pub enum DecodeOracle {
+    Replication { group_masks: Vec<u64> },
+    Table(DecodabilityTable),
+}
+
+impl DecodeOracle {
+    pub fn build(ts: &TaskSet) -> DecodeOracle {
+        if let Some((groups, _)) = replication_structure(ts) {
+            let num_groups = groups.iter().max().unwrap() + 1;
+            let mut group_masks = vec![0u64; num_groups];
+            for (i, &g) in groups.iter().enumerate() {
+                group_masks[g] |= 1 << i;
+            }
+            DecodeOracle::Replication { group_masks }
+        } else {
+            DecodeOracle::Table(DecodabilityTable::build(ts))
+        }
+    }
+
+    /// Is the failure pattern decodable?
+    #[inline]
+    pub fn is_decodable(&self, failed_mask: u64) -> bool {
+        match self {
+            DecodeOracle::Replication { group_masks } => group_masks
+                .iter()
+                .all(|&gm| failed_mask & gm != gm),
+            DecodeOracle::Table(t) => t.is_decodable(failed_mask),
+        }
+    }
+}
+
+/// If the task set is an exact c-copy replication of a decodable base
+/// algorithm, return the per-task group ids and M.
+fn replication_structure(ts: &TaskSet) -> Option<(Vec<usize>, usize)> {
+    let forms = ts.forms();
+    let m = forms.len();
+    // Group identical forms.
+    let mut groups: Vec<usize> = vec![usize::MAX; m];
+    let mut reps: Vec<BilinearForm> = Vec::new();
+    for (i, f) in forms.iter().enumerate() {
+        let g = reps.iter().position(|r| r == f).unwrap_or_else(|| {
+            reps.push(*f);
+            reps.len() - 1
+        });
+        groups[i] = g;
+    }
+    // Replication iff: every group same size c, and the base set is
+    // exactly-decodable (full set decodes, any base-product loss fatal).
+    let c = m / reps.len();
+    if c * reps.len() != m {
+        return None;
+    }
+    let mut sizes = vec![0usize; reps.len()];
+    for &g in &groups {
+        sizes[g] += 1;
+    }
+    if !sizes.iter().all(|&s| s == c) || c == 1 {
+        // c == 1 falls through to exhaustive (cheap and fully general).
+        return None;
+    }
+    // Check the structural criterion holds for the base: losing any one
+    // base product must be fatal, full base must decode.
+    let base_rows: Vec<[i128; ELEM_DIM]> = reps.iter().map(to_row).collect();
+    let targets: Vec<[i128; ELEM_DIM]> =
+        Target::ALL.iter().map(|t| to_row(&t.form())).collect();
+    if !decodable_mask(&base_rows, &targets, 0) {
+        return None;
+    }
+    for i in 0..reps.len() {
+        if decodable_mask(&base_rows, &targets, 1 << i) {
+            return None; // redundancy inside the base: not plain replication
+        }
+    }
+    Some((groups, m))
+}
+
+/// FC(k) for replication via the structural criterion: a pattern is
+/// fatal iff some group is entirely failed. Counted by inclusion-
+/// exclusion over which groups are wiped out — the combinatorial identity
+/// behind the paper's eq. (10).
+fn fc_replication_structural(groups: &[usize], m: usize) -> FcTable {
+    let num_groups = groups.iter().max().unwrap() + 1;
+    let c = m / num_groups;
+    let mut counts = vec![0u64; m + 1];
+    for k in 0..=m {
+        let mut total: i128 = 0;
+        for n in 1..=(k / c).max(0) {
+            if n > num_groups {
+                break;
+            }
+            let sign = if n % 2 == 1 { 1i128 } else { -1 };
+            let ways = binomial(num_groups as u64, n as u64) as i128
+                * binomial((m - c * n) as u64, (k - c * n) as u64) as i128;
+            total += sign * ways;
+        }
+        counts[k] = total.max(0) as u64;
+    }
+    FcTable { m, counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::strassen;
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(7, 0), 1);
+        assert_eq!(binomial(7, 3), 35);
+        assert_eq!(binomial(21, 10), 352716);
+        assert_eq!(binomial(5, 9), 0);
+    }
+
+    #[test]
+    fn single_copy_fc_is_all_combinations() {
+        // M = 7, any failure fatal: FC(k) = C(7, k) for k >= 1.
+        let t = fc_table(&TaskSet::replication(&strassen(), 1));
+        assert_eq!(t.counts[0], 0);
+        for k in 1..=7 {
+            assert_eq!(t.counts[k], binomial(7, k as u64) as u64, "k={k}");
+        }
+        assert_eq!(t.first_loss(), 1);
+    }
+
+    #[test]
+    fn two_copy_structural_matches_exhaustive() {
+        // Force the exhaustive path by building an equivalent "anonymous"
+        // set and compare with the structural fast path.
+        let ts = TaskSet::replication(&strassen(), 2);
+        let structural = fc_table(&ts);
+        // exhaustive: bypass detection by computing directly
+        let forms: Vec<[i128; ELEM_DIM]> = ts.forms().iter().map(to_row).collect();
+        let targets: Vec<[i128; ELEM_DIM]> =
+            Target::ALL.iter().map(|t| to_row(&t.form())).collect();
+        let mut counts = vec![0u64; 15];
+        for failed in 0u64..(1 << 14) {
+            if !decodable_mask(&forms, &targets, failed) {
+                counts[failed.count_ones() as usize] += 1;
+            }
+        }
+        assert_eq!(structural.counts, counts);
+        assert_eq!(structural.first_loss(), 2);
+    }
+
+    #[test]
+    fn proposed_zero_psmm_first_loss_is_two() {
+        let t = fc_table(&TaskSet::strassen_winograd(0));
+        assert_eq!(t.counts[1], 0, "every single failure decodable");
+        assert!(t.counts[2] > 0, "paper: some pairs (S3,W5),(S7,W2) fatal");
+    }
+
+    #[test]
+    fn proposed_two_psmm_first_loss_is_three() {
+        let t = fc_table(&TaskSet::strassen_winograd(2));
+        assert_eq!(t.counts[1], 0);
+        assert_eq!(t.counts[2], 0, "2 PSMMs cover all pairs");
+        assert!(t.counts[3] > 0);
+        assert_eq!(t.first_loss(), 3);
+    }
+
+    #[test]
+    fn psmm_monotonicity() {
+        // Adding PSMMs can only reduce the fatal fraction at every k.
+        let t0 = fc_table(&TaskSet::strassen_winograd(0));
+        let t1 = fc_table(&TaskSet::strassen_winograd(1));
+        let t2 = fc_table(&TaskSet::strassen_winograd(2));
+        for k in 0..=14 {
+            assert!(t1.fatal_fraction(k) <= t0.fatal_fraction(k) + 1e-12, "k={k}");
+            assert!(t2.fatal_fraction(k) <= t1.fatal_fraction(k) + 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn extreme_ks() {
+        for ts in [TaskSet::strassen_winograd(2), TaskSet::replication(&strassen(), 2)] {
+            let t = fc_table(&ts);
+            let m = t.m;
+            assert_eq!(t.counts[0], 0, "no failures is decodable");
+            assert_eq!(t.counts[m], 1, "all failed is fatal");
+            // k = m-1, m-2: fewer than 7 products survive -> all fatal.
+            assert_eq!(t.counts[m - 1], binomial(m as u64, 1) as u64);
+            assert_eq!(t.counts[m - 2], binomial(m as u64, 2) as u64);
+        }
+    }
+
+    #[test]
+    fn oracle_matches_direct_decodability() {
+        for ts in [
+            TaskSet::strassen_winograd(2),
+            TaskSet::replication(&strassen(), 2),
+        ] {
+            let oracle = DecodeOracle::build(&ts);
+            let m = ts.num_tasks();
+            // spot-check a spread of masks against the exact GE oracle
+            let mut mask = 0x9e3779b97f4a7c15u64;
+            for _ in 0..500 {
+                mask ^= mask << 13;
+                mask ^= mask >> 7;
+                mask ^= mask << 17;
+                let failed = mask & ((1 << m) - 1);
+                assert_eq!(
+                    oracle.is_decodable(failed),
+                    ts.decodable_with_failures(failed),
+                    "{} mask {failed:#x}",
+                    ts.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_replication_path_is_structural() {
+        let ts = TaskSet::replication(&strassen(), 3);
+        let oracle = DecodeOracle::build(&ts);
+        assert!(matches!(oracle, DecodeOracle::Replication { .. }));
+        // all three copies of S1 failed -> fatal
+        let kill_s1 = 1u64 | (1 << 7) | (1 << 14);
+        assert!(!oracle.is_decodable(kill_s1));
+        // any two copies -> fine
+        assert!(oracle.is_decodable(1u64 | (1 << 7)));
+    }
+
+    #[test]
+    fn decodability_table_fc_roundtrip() {
+        let ts = TaskSet::strassen_winograd(1);
+        let t = DecodabilityTable::build(&ts);
+        assert_eq!(t.fc().counts, fc_table(&ts).counts);
+        assert_eq!(t.num_nodes(), 15);
+    }
+
+    #[test]
+    fn three_copy_structural_counts() {
+        let t = fc_table(&TaskSet::replication(&strassen(), 3));
+        assert_eq!(t.m, 21);
+        assert_eq!(t.first_loss(), 3);
+        assert_eq!(t.counts[3], 7, "one way per product to lose all 3 copies");
+        // eq. (10) at k=4: C(7,1) C(18,1) = 126.
+        assert_eq!(t.counts[4], 126);
+    }
+}

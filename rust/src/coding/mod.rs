@@ -1,0 +1,24 @@
+//! The fault-tolerance coding layer: task sets, decoders, failure
+//! combinatorics and the analytical model behind Fig. 2.
+//!
+//! * [`scheme`] — [`scheme::TaskSet`]: the concrete node configurations the
+//!   paper compares (c-copy replication of one algorithm; joint
+//!   Strassen+Winograd with 0/1/2 PSMMs).
+//! * [`decoder`] — the exact span decoder (Gaussian elimination over ℚ)
+//!   and the paper's operational peeling decoder over searched local
+//!   relations; they are proven equivalent on every failure pattern of
+//!   every built-in task set (see tests).
+//! * [`fc`] — exhaustive FC(k) tables ("k-failure combinations such that
+//!   C cannot be recovered", eq. (9) input) over all 2^M patterns.
+//! * [`theory`] — the closed forms: eq. (10) for replication FC(k) and
+//!   eq. (9) for P_f.
+
+pub mod decoder;
+pub mod fc;
+pub mod scheme;
+pub mod theory;
+
+pub use decoder::{DecodeOutcome, PeelingDecoder, SpanDecoder};
+pub use fc::{fc_table, FcTable};
+pub use scheme::TaskSet;
+pub use theory::{failure_probability, replication_fc};

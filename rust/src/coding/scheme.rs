@@ -1,0 +1,289 @@
+//! Task sets: the concrete distributed configurations the paper compares.
+//!
+//! A [`TaskSet`] is the full specification the coordinator dispatches:
+//! one task per compute node, each task a rank-1 encoded multiplication
+//! `(Σ u M)(Σ v B)` with a name and a bilinear form. Builders cover the
+//! paper's six Fig.-2 configurations:
+//!
+//! | name                | nodes | builder |
+//! |---------------------|-------|---------|
+//! | Strassen, 1 copy    | 7     | `replication(&strassen(), 1)` |
+//! | Strassen, 2 copies  | 14    | `replication(&strassen(), 2)` |
+//! | Strassen, 3 copies  | 21    | `replication(&strassen(), 3)` |
+//! | S+W, no PSMM        | 14    | `strassen_winograd(0)` |
+//! | S+W, 1 PSMM         | 15    | `strassen_winograd(1)` |
+//! | S+W, 2 PSMM         | 16    | `strassen_winograd(2)` |
+
+use crate::algebra::form::{BilinearForm, Target};
+use crate::algebra::gauss::SpanBasis;
+use crate::algorithms::scheme::BilinearScheme;
+use crate::algorithms::{strassen, winograd};
+
+/// One worker task: a named rank-1 encoded block multiplication.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub name: String,
+    /// Left encoding over [M11, M12, M21, M22].
+    pub u: [i32; 4],
+    /// Right encoding over [B11, B12, B21, B22].
+    pub v: [i32; 4],
+}
+
+impl Task {
+    pub fn form(&self) -> BilinearForm {
+        BilinearForm::from_uv(&self.u, &self.v)
+    }
+}
+
+/// A complete node configuration.
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub name: String,
+    pub tasks: Vec<Task>,
+}
+
+impl TaskSet {
+    /// `c`-copy replication of a single Strassen-like algorithm: every
+    /// product dispatched to `c` distinct nodes (the paper's baseline).
+    pub fn replication(scheme: &BilinearScheme, c: usize) -> TaskSet {
+        assert!(c >= 1);
+        let mut tasks = Vec::with_capacity(scheme.num_products() * c);
+        for copy in 0..c {
+            for (i, p) in scheme.products.iter().enumerate() {
+                let base = format!("{}{}", scheme.name[..1].to_uppercase(), i + 1);
+                let name =
+                    if c == 1 { base } else { format!("{base}#{}", copy + 1) };
+                tasks.push(Task { name, u: p.u, v: p.v });
+            }
+        }
+        TaskSet { name: format!("{} x{}", scheme.name, c), tasks }
+    }
+
+    /// The paper's proposed configuration: Strassen's and Winograd's
+    /// products side by side plus `psmms` (0, 1 or 2) parity
+    /// multiplications selected by the computer-aided search.
+    pub fn strassen_winograd(psmms: usize) -> TaskSet {
+        assert!(psmms <= 2, "paper evaluates at most 2 PSMMs");
+        let s = strassen();
+        let w = winograd();
+        let mut tasks: Vec<Task> = Vec::with_capacity(14 + psmms);
+        for (i, p) in s.products.iter().enumerate() {
+            tasks.push(Task { name: format!("S{}", i + 1), u: p.u, v: p.v });
+        }
+        for (i, p) in w.products.iter().enumerate() {
+            tasks.push(Task { name: format!("W{}", i + 1), u: p.u, v: p.v });
+        }
+        // The paper's exact parity multiplications (§IV):
+        //   PSMM-1 = S3 + W4 = M21 (B12 - B22)
+        //   PSMM-2 = copy of W2 = M12 B21
+        // The generic search (`search::psmm::select_psmms`) finds these
+        // among several equal-coverage alternatives (e.g. S2 + W5); we
+        // pin the paper's choice so the published configuration is
+        // reproduced bit-for-bit (tests assert the alternatives cover the
+        // same failure pairs).
+        const PAPER_PSMMS: [([i32; 4], [i32; 4]); 2] =
+            [([0, 0, 1, 0], [0, 1, 0, -1]), ([0, 1, 0, 0], [0, 0, 1, 0])];
+        for (i, (u, v)) in PAPER_PSMMS.iter().take(psmms).enumerate() {
+            tasks.push(Task { name: format!("P{}", i + 1), u: *u, v: *v });
+        }
+        TaskSet { name: format!("S+W +{psmms} PSMM"), tasks }
+    }
+
+    /// The paper's §V generalization: ANY pair of Strassen-like
+    /// algorithms, with PSMMs selected by the computer-aided search
+    /// (greedy max-pair-coverage over the Algorithm-1 parity list plus
+    /// replicas). `strassen_winograd` is this construction specialized
+    /// to the paper's published PSMM choices.
+    pub fn pair(
+        a: &BilinearScheme,
+        b: &BilinearScheme,
+        psmms: usize,
+    ) -> TaskSet {
+        use crate::search::psmm::{select_psmms, Psmm};
+        use crate::search::searchlp::SearchOptions;
+        let mut tasks: Vec<Task> = Vec::new();
+        let prefix = |name: &str| name[..1].to_uppercase();
+        for (i, p) in a.products.iter().enumerate() {
+            tasks.push(Task { name: format!("{}{}", prefix(a.name), i + 1), u: p.u, v: p.v });
+        }
+        for (i, p) in b.products.iter().enumerate() {
+            // Disambiguate same-letter pairs (e.g. strassen + strassen').
+            let letter = if prefix(b.name) == prefix(a.name) {
+                format!("{}'", prefix(b.name))
+            } else {
+                prefix(b.name)
+            };
+            tasks.push(Task { name: format!("{letter}{}", i + 1), u: p.u, v: p.v });
+        }
+        if psmms > 0 {
+            let forms: Vec<BilinearForm> = tasks.iter().map(|t| t.form()).collect();
+            let selected = select_psmms(&forms, psmms, &SearchOptions::default());
+            for (i, psmm) in selected.into_iter().enumerate() {
+                let (u, v) = match psmm {
+                    Psmm::Parity(p) => (p.u, p.v),
+                    Psmm::Replica(idx) => (tasks[idx].u, tasks[idx].v),
+                };
+                tasks.push(Task { name: format!("P{}", i + 1), u, v });
+            }
+        }
+        TaskSet {
+            name: format!("{}+{} +{psmms} PSMM", a.name, b.name),
+            tasks,
+        }
+    }
+
+    /// All six Fig.-2 configurations, in the paper's legend order.
+    pub fn fig2_schemes() -> Vec<TaskSet> {
+        vec![
+            TaskSet::replication(&strassen(), 1),
+            TaskSet::replication(&strassen(), 2),
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(1),
+            TaskSet::strassen_winograd(2),
+            TaskSet::replication(&strassen(), 3),
+        ]
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Bilinear forms of all tasks, in dispatch order.
+    pub fn forms(&self) -> Vec<BilinearForm> {
+        self.tasks.iter().map(|t| t.form()).collect()
+    }
+
+    /// Task names as string slices (for rendering).
+    pub fn names(&self) -> Vec<&str> {
+        self.tasks.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Is the output decodable when the nodes in `failed_mask` are lost?
+    /// (bit i = task i failed).
+    pub fn decodable_with_failures(&self, failed_mask: u64) -> bool {
+        let mut basis = SpanBasis::new();
+        for (i, t) in self.tasks.iter().enumerate() {
+            if failed_mask & (1 << i) == 0 {
+                basis.insert(&t.form());
+            }
+        }
+        Target::ALL.iter().all(|t| basis.contains(&t.form()))
+    }
+
+    /// Exhaustive FC(k) table: entry k = number of k-failure combinations
+    /// that make C unrecoverable (the quantity in the paper's eq. (9)).
+    pub fn fc_table(&self) -> Vec<u64> {
+        crate::coding::fc::fc_table(self).counts
+    }
+
+    /// Precompute decodability for every failure pattern (fast lookups
+    /// for Monte-Carlo and the e2e benches). M <= 24 only.
+    pub fn decodability_table(&self) -> crate::coding::fc::DecodabilityTable {
+        crate::coding::fc::DecodabilityTable::build(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replication_sizes() {
+        assert_eq!(TaskSet::replication(&strassen(), 1).num_tasks(), 7);
+        assert_eq!(TaskSet::replication(&strassen(), 2).num_tasks(), 14);
+        assert_eq!(TaskSet::replication(&strassen(), 3).num_tasks(), 21);
+    }
+
+    #[test]
+    fn proposed_sizes_match_paper() {
+        // "2x7 + 2 = 16 compute nodes compared to 3x7 = 21".
+        assert_eq!(TaskSet::strassen_winograd(0).num_tasks(), 14);
+        assert_eq!(TaskSet::strassen_winograd(1).num_tasks(), 15);
+        assert_eq!(TaskSet::strassen_winograd(2).num_tasks(), 16);
+    }
+
+    #[test]
+    fn no_failures_always_decodable() {
+        for ts in TaskSet::fig2_schemes() {
+            assert!(ts.decodable_with_failures(0), "{}", ts.name);
+        }
+    }
+
+    #[test]
+    fn single_copy_fails_on_any_loss() {
+        let ts = TaskSet::replication(&strassen(), 1);
+        for i in 0..7 {
+            assert!(!ts.decodable_with_failures(1 << i));
+        }
+    }
+
+    #[test]
+    fn two_copy_survives_any_single_loss() {
+        let ts = TaskSet::replication(&strassen(), 2);
+        for i in 0..14 {
+            assert!(ts.decodable_with_failures(1 << i));
+        }
+        // but not both copies of the same product
+        assert!(!ts.decodable_with_failures((1 << 0) | (1 << 7)));
+    }
+
+    #[test]
+    fn proposed_with_2psmm_survives_paper_pairs() {
+        let ts = TaskSet::strassen_winograd(2);
+        // (S3, W5) = indices (2, 11); (S7, W2) = (6, 8).
+        assert!(ts.decodable_with_failures((1 << 2) | (1 << 11)));
+        assert!(ts.decodable_with_failures((1 << 6) | (1 << 8)));
+    }
+
+    #[test]
+    fn proposed_without_psmm_fails_paper_pairs() {
+        let ts = TaskSet::strassen_winograd(0);
+        assert!(!ts.decodable_with_failures((1 << 2) | (1 << 11)));
+        assert!(!ts.decodable_with_failures((1 << 6) | (1 << 8)));
+    }
+
+    #[test]
+    fn generic_pair_builder_matches_paper_configuration_shape() {
+        // strassen + winograd through the generic §V path.
+        let ts = TaskSet::pair(&strassen(), &winograd(), 2);
+        assert_eq!(ts.num_tasks(), 16);
+        // first failures tolerated exactly like the published config
+        let fc = crate::coding::fc::fc_table(&ts);
+        assert_eq!(fc.counts[1], 0);
+        assert_eq!(fc.counts[2], 0, "2 searched PSMMs cover all pairs");
+    }
+
+    #[test]
+    fn pair_with_naive8_is_fault_tolerant_too() {
+        // A different Strassen-like pair (the paper's §V: "applicable to
+        // any pair"): strassen + naive8 = 15 products, joint rank 8+.
+        let ts = TaskSet::pair(&strassen(), &crate::algorithms::naive8(), 0);
+        assert_eq!(ts.num_tasks(), 15);
+        let fc = crate::coding::fc::fc_table(&ts);
+        assert_eq!(fc.counts[1], 0, "any single failure recoverable");
+        // strassen + naive8 is weaker than strassen + winograd at k=2 or
+        // not — whatever it is, the full set must decode:
+        assert!(ts.decodable_with_failures(0));
+    }
+
+    #[test]
+    fn pair_same_scheme_reduces_to_replication() {
+        // pair(strassen, strassen) == 2-copy replication semantically.
+        let ts = TaskSet::pair(&strassen(), &strassen(), 0);
+        let rep = TaskSet::replication(&strassen(), 2);
+        assert_eq!(ts.num_tasks(), rep.num_tasks());
+        let (a, b) = (crate::coding::fc::fc_table(&ts), crate::coding::fc::fc_table(&rep));
+        assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn task_names_unique() {
+        for ts in TaskSet::fig2_schemes() {
+            let mut names: Vec<_> = ts.names();
+            names.sort();
+            let before = names.len();
+            names.dedup();
+            assert_eq!(names.len(), before, "{}: duplicate task names", ts.name);
+        }
+    }
+}

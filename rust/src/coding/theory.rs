@@ -1,0 +1,137 @@
+//! Analytical model: the paper's eq. (9) (reconstruction-failure
+//! probability) and eq. (10) (closed-form FC(k) for replication).
+
+use crate::coding::fc::{binomial, FcTable};
+
+/// Eq. (10): FC(k) for `c`-copy replication of a 7-product algorithm —
+///
+/// ```text
+/// FC(k) = Σ_{n=1}^{⌊k/c⌋} (-1)^{n+1} C(7, n) C(7c - cn, k - cn) · 1(k ≥ c)
+/// ```
+///
+/// (inclusion–exclusion over which products lose all `c` copies).
+pub fn replication_fc(c: usize, k: usize) -> u64 {
+    let m = 7 * c;
+    if k < c || k > m {
+        return 0;
+    }
+    let mut total: i128 = 0;
+    for n in 1..=(k / c).min(7) {
+        let sign = if n % 2 == 1 { 1i128 } else { -1 };
+        total += sign
+            * binomial(7, n as u64) as i128
+            * binomial((m - c * n) as u64, (k - c * n) as u64) as i128;
+    }
+    total.max(0) as u64
+}
+
+/// Eq. (9): `P_f = Σ_k FC(k) p_e^k (1 - p_e)^(M-k)`.
+pub fn failure_probability(fc: &FcTable, p_e: f64) -> f64 {
+    let m = fc.m;
+    let mut pf = 0.0;
+    for (k, &count) in fc.counts.iter().enumerate() {
+        if count > 0 {
+            pf += count as f64
+                * p_e.powi(k as i32)
+                * (1.0 - p_e).powi((m - k) as i32);
+        }
+    }
+    pf
+}
+
+/// Closed-form P_f for c-copy replication (eqs. (9)+(10) combined).
+pub fn replication_failure_probability(c: usize, p_e: f64) -> f64 {
+    // P(some product loses all c copies) = 1 - (1 - p_e^c)^7.
+    1.0 - (1.0 - p_e.powi(c as i32)).powi(7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::strassen;
+    use crate::coding::fc::fc_table;
+    use crate::coding::scheme::TaskSet;
+
+    #[test]
+    fn eq10_matches_exhaustive_for_two_copies() {
+        let t = fc_table(&TaskSet::replication(&strassen(), 2));
+        for k in 0..=14 {
+            assert_eq!(t.counts[k], replication_fc(2, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn eq10_single_copy_reduces_to_binomial() {
+        // Paper: "FC(k) for single copy can be reduced to C(M, k)".
+        for k in 1..=7 {
+            assert_eq!(replication_fc(1, k), binomial(7, k as u64) as u64);
+        }
+        assert_eq!(replication_fc(1, 0), 0);
+    }
+
+    #[test]
+    fn eq9_sums_to_closed_form_for_replication() {
+        for c in 1..=3usize {
+            let t = fc_table(&TaskSet::replication(&strassen(), c));
+            for p_e in [0.01, 0.05, 0.1, 0.3, 0.5] {
+                let via_table = failure_probability(&t, p_e);
+                let closed = replication_failure_probability(c, p_e);
+                assert!(
+                    (via_table - closed).abs() < 1e-12,
+                    "c={c} p={p_e}: {via_table} vs {closed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pf_monotone_in_pe() {
+        let t = fc_table(&TaskSet::strassen_winograd(2));
+        let mut last = 0.0;
+        for i in 1..=20 {
+            let p = i as f64 * 0.025;
+            let pf = failure_probability(&t, p);
+            assert!(pf >= last - 1e-15, "P_f not monotone at p={p}");
+            last = pf;
+        }
+    }
+
+    #[test]
+    fn pf_bounds() {
+        let t = fc_table(&TaskSet::strassen_winograd(2));
+        assert_eq!(failure_probability(&t, 0.0), 0.0);
+        let pf1 = failure_probability(&t, 1.0);
+        assert!((pf1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_ordering_at_moderate_pe() {
+        // Fig. 2's qualitative ordering at moderate p_e:
+        // S x1 >> S x2 > S+W+0 > S+W+1 > S+W+2 > S x3,
+        // i.e. the proposed 14-node scheme already beats 14-node 2-copy
+        // replication ("outperforms a Strassen-like algorithm with two
+        // copies"), and each PSMM tightens it toward 21-node 3-copy.
+        for p in [0.05, 0.1, 0.2] {
+            let pf = |ts: &TaskSet| failure_probability(&fc_table(ts), p);
+            let s1 = replication_failure_probability(1, p);
+            let s2 = replication_failure_probability(2, p);
+            let s3 = replication_failure_probability(3, p);
+            let sw0 = pf(&TaskSet::strassen_winograd(0));
+            let sw1 = pf(&TaskSet::strassen_winograd(1));
+            let sw2 = pf(&TaskSet::strassen_winograd(2));
+            assert!(s1 > s2, "p={p}: 1-copy {s1} vs 2-copy {s2}");
+            assert!(s2 > sw0, "p={p}: 2-copy {s2} vs S+W+0 {sw0}");
+            assert!(sw0 > sw1, "p={p}: S+W+0 {sw0} vs S+W+1 {sw1}");
+            assert!(sw1 > sw2, "p={p}: S+W+1 {sw1} vs S+W+2 {sw2}");
+            assert!(sw2 > s3, "p={p}: S+W+2 {sw2} vs 3-copy {s3}");
+            // Headline: 16 nodes within one decade of 21-node 3-copy.
+            assert!(sw2 < 10.0 * s3, "S+W+2 {sw2} vs 3-copy {s3}");
+        }
+        // At very small p_e the two top curves nearly coincide (ratio
+        // ~1.3 at p=0.005), the paper's "very close performance".
+        let sw2 = fc_table(&TaskSet::strassen_winograd(2));
+        let ratio = failure_probability(&sw2, 0.005)
+            / replication_failure_probability(3, 0.005);
+        assert!(ratio < 1.5, "small-p ratio {ratio}");
+    }
+}

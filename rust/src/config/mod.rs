@@ -1,0 +1,8 @@
+//! Configuration: a TOML-subset parser (offline substitute for
+//! `toml`/`serde`) plus the typed configs the launcher consumes.
+
+pub mod toml;
+pub mod types;
+
+pub use toml::{parse_toml, TomlDoc, Value};
+pub use types::{BackendKind, RunConfig, SchemeKind};

@@ -1,0 +1,282 @@
+//! A pragmatic TOML-subset parser: `[section.sub]` tables, `key = value`
+//! with string / integer / float / bool / homogeneous-array values, `#`
+//! comments. Covers everything the launcher's config files use; rejects
+//! anything outside the subset loudly rather than guessing.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key -> value (section names joined
+/// with '.').
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, message: impl Into<String>) -> TomlError {
+    TomlError { line, message: message.into() }
+}
+
+/// Parse a document.
+pub fn parse_toml(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, format!("expected `key = value`, got `{line}`")))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let parsed = parse_value(value.trim(), lineno)?;
+        if doc.entries.insert(path.clone(), parsed).is_some() {
+            return Err(err(lineno, format!("duplicate key `{path}`")));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string (subset: no escapes)"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, TomlError> = inner
+            .split(',')
+            .map(|p| parse_value(p.trim(), lineno))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse_toml(
+            r#"
+# top comment
+name = "ft"            # trailing comment
+[run]
+block_size = 128
+p_e = 0.05
+verbose = true
+[run.worker]
+count = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "ft");
+        assert_eq!(doc.int_or("run.block_size", 0), 128);
+        assert!((doc.float_or("run.p_e", 0.0) - 0.05).abs() < 1e-12);
+        assert!(doc.bool_or("run.verbose", false));
+        assert_eq!(doc.int_or("run.worker.count", 0), 16);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse_toml("sizes = [32, 64, 128]\nnames = [\"a\", \"b\"]").unwrap();
+        let sizes: Vec<i64> = doc
+            .get("sizes")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_int().unwrap())
+            .collect();
+        assert_eq!(sizes, vec![32, 64, 128]);
+        assert_eq!(
+            doc.get("names").unwrap().as_array().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse_toml("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("b"), Some(&Value::Float(3.5)));
+        // int coerces to float on demand
+        assert_eq!(doc.float_or("a", 0.0), 3.0);
+        // but not the reverse
+        assert_eq!(doc.int_or("b", -1), -1);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_toml("x = ").unwrap_err();
+        assert!(e.message.contains("missing value"));
+        let e = parse_toml("[oops").unwrap_err();
+        assert!(e.message.contains("unterminated section"));
+        let e = parse_toml("a = 1\na = 2").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = parse_toml("").unwrap();
+        assert_eq!(doc.int_or("nope", 9), 9);
+        assert_eq!(doc.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+}

@@ -1,0 +1,296 @@
+//! Typed run configuration: what scheme to run, on which backend, with
+//! which failure model — loadable from a TOML file and overridable from
+//! the CLI (the launcher merges both).
+
+use std::path::PathBuf;
+
+use super::toml::{parse_toml, TomlDoc, TomlError};
+use crate::algorithms::{strassen, winograd};
+use crate::coding::scheme::TaskSet;
+
+/// Which task-set family to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// c-copy replication of Strassen.
+    StrassenReplicated { copies: usize },
+    /// c-copy replication of Winograd.
+    WinogradReplicated { copies: usize },
+    /// The paper's joint configuration with 0..=2 PSMMs.
+    StrassenWinograd { psmms: usize },
+}
+
+impl SchemeKind {
+    /// Parse names like `strassen-x2`, `winograd-x1`, `sw+2psmm`.
+    pub fn parse(s: &str) -> Result<SchemeKind, String> {
+        let s = s.trim().to_lowercase();
+        if let Some(rest) = s.strip_prefix("strassen-x") {
+            let c: usize = rest.parse().map_err(|_| format!("bad copies in `{s}`"))?;
+            return Ok(SchemeKind::StrassenReplicated { copies: c });
+        }
+        if let Some(rest) = s.strip_prefix("winograd-x") {
+            let c: usize = rest.parse().map_err(|_| format!("bad copies in `{s}`"))?;
+            return Ok(SchemeKind::WinogradReplicated { copies: c });
+        }
+        if let Some(rest) = s.strip_prefix("sw+") {
+            let p: usize = rest
+                .strip_suffix("psmm")
+                .ok_or_else(|| format!("expected sw+<n>psmm, got `{s}`"))?
+                .parse()
+                .map_err(|_| format!("bad psmm count in `{s}`"))?;
+            if p > 2 {
+                return Err("at most 2 PSMMs supported".into());
+            }
+            return Ok(SchemeKind::StrassenWinograd { psmms: p });
+        }
+        Err(format!(
+            "unknown scheme `{s}` (try strassen-x1/2/3, winograd-x1, sw+0psmm, sw+1psmm, sw+2psmm)"
+        ))
+    }
+
+    /// Materialize the task set.
+    pub fn task_set(&self) -> TaskSet {
+        match *self {
+            SchemeKind::StrassenReplicated { copies } => {
+                TaskSet::replication(&strassen(), copies)
+            }
+            SchemeKind::WinogradReplicated { copies } => {
+                TaskSet::replication(&winograd(), copies)
+            }
+            SchemeKind::StrassenWinograd { psmms } => TaskSet::strassen_winograd(psmms),
+        }
+    }
+
+    pub fn display_name(&self) -> String {
+        match *self {
+            SchemeKind::StrassenReplicated { copies } => format!("strassen-x{copies}"),
+            SchemeKind::WinogradReplicated { copies } => format!("winograd-x{copies}"),
+            SchemeKind::StrassenWinograd { psmms } => format!("sw+{psmms}psmm"),
+        }
+    }
+}
+
+/// Which compute backend executes block multiplications.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust blocked matmul (always available; test hermetic).
+    Native,
+    /// AOT Pallas artifacts through PJRT (the production hot path).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
+        match s.trim().to_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend `{other}` (native|pjrt)")),
+        }
+    }
+}
+
+/// Full launcher configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub scheme: SchemeKind,
+    pub backend: BackendKind,
+    /// Matrix dimension n (the multiply is n x n).
+    pub n: usize,
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Node failure probability (Bernoulli model).
+    pub p_e: f64,
+    /// Straggler injection: probability a worker sleeps `straggle_ms`.
+    pub p_straggle: f64,
+    pub straggle_ms: u64,
+    /// Master-side deadline before declaring nodes failed (ms).
+    pub deadline_ms: u64,
+    pub seed: u64,
+    /// Directory with AOT artifacts (for the PJRT backend).
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            scheme: SchemeKind::StrassenWinograd { psmms: 2 },
+            backend: BackendKind::Native,
+            n: 256,
+            workers: 16,
+            p_e: 0.0,
+            p_straggle: 0.0,
+            straggle_ms: 50,
+            deadline_ms: 1_000,
+            seed: 0,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML document (all keys optional; defaults above).
+    pub fn from_toml(doc: &TomlDoc) -> Result<RunConfig, String> {
+        let d = RunConfig::default();
+        let scheme = match doc.get("run.scheme") {
+            Some(v) => SchemeKind::parse(
+                v.as_str().ok_or("run.scheme must be a string")?,
+            )?,
+            None => d.scheme,
+        };
+        let backend = match doc.get("run.backend") {
+            Some(v) => BackendKind::parse(
+                v.as_str().ok_or("run.backend must be a string")?,
+            )?,
+            None => d.backend,
+        };
+        let cfg = RunConfig {
+            scheme,
+            backend,
+            n: doc.int_or("run.n", d.n as i64) as usize,
+            workers: doc.int_or("run.workers", d.workers as i64) as usize,
+            p_e: doc.float_or("fault.p_e", d.p_e),
+            p_straggle: doc.float_or("fault.p_straggle", d.p_straggle),
+            straggle_ms: doc.int_or("fault.straggle_ms", d.straggle_ms as i64) as u64,
+            deadline_ms: doc.int_or("run.deadline_ms", d.deadline_ms as i64) as u64,
+            seed: doc.int_or("run.seed", d.seed as i64) as u64,
+            artifacts_dir: PathBuf::from(
+                doc.str_or("run.artifacts_dir", d.artifacts_dir.to_str().unwrap()),
+            ),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let doc = parse_toml(&text).map_err(|e: TomlError| format!("{}: {e}", path.display()))?;
+        RunConfig::from_toml(&doc)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.n % 2 != 0 {
+            return Err(format!("n must be even and positive, got {}", self.n));
+        }
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.p_e) {
+            return Err(format!("p_e out of [0,1]: {}", self.p_e));
+        }
+        if !(0.0..=1.0).contains(&self.p_straggle) {
+            return Err(format!("p_straggle out of [0,1]: {}", self.p_straggle));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(
+            SchemeKind::parse("strassen-x3").unwrap(),
+            SchemeKind::StrassenReplicated { copies: 3 }
+        );
+        assert_eq!(
+            SchemeKind::parse("SW+2PSMM").unwrap(),
+            SchemeKind::StrassenWinograd { psmms: 2 }
+        );
+        assert_eq!(
+            SchemeKind::parse("winograd-x1").unwrap(),
+            SchemeKind::WinogradReplicated { copies: 1 }
+        );
+        assert!(SchemeKind::parse("sw+3psmm").is_err());
+        assert!(SchemeKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn scheme_materializes() {
+        assert_eq!(
+            SchemeKind::parse("sw+2psmm").unwrap().task_set().num_tasks(),
+            16
+        );
+        assert_eq!(
+            SchemeKind::parse("strassen-x2").unwrap().task_set().num_tasks(),
+            14
+        );
+    }
+
+    #[test]
+    fn config_from_toml_with_defaults() {
+        let doc = parse_toml(
+            r#"
+[run]
+scheme = "sw+1psmm"
+n = 128
+[fault]
+p_e = 0.2
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::StrassenWinograd { psmms: 1 });
+        assert_eq!(cfg.n, 128);
+        assert!((cfg.p_e - 0.2).abs() < 1e-12);
+        // untouched fields keep defaults
+        assert_eq!(cfg.workers, RunConfig::default().workers);
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = RunConfig::default();
+        cfg.n = 7;
+        assert!(cfg.validate().is_err());
+        cfg.n = 64;
+        cfg.p_e = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.p_e = 0.1;
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bad_scheme_in_toml_is_error() {
+        let doc = parse_toml("[run]\nscheme = \"nope\"").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ftms_cfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &path,
+            "[run]\nscheme = \"winograd-x1\"\nbackend = \"native\"\nn = 64\n\
+             deadline_ms = 250\nseed = 9\n[fault]\np_straggle = 0.25\nstraggle_ms = 10\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::WinogradReplicated { copies: 1 });
+        assert_eq!(cfg.backend, BackendKind::Native);
+        assert_eq!(cfg.n, 64);
+        assert_eq!(cfg.deadline_ms, 250);
+        assert_eq!(cfg.seed, 9);
+        assert!((cfg.p_straggle - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.straggle_ms, 10);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn from_file_missing_is_descriptive() {
+        let err = RunConfig::from_file(std::path::Path::new("/no/such.toml")).unwrap_err();
+        assert!(err.contains("/no/such.toml"), "{err}");
+    }
+
+    #[test]
+    fn example_configs_in_repo_parse() {
+        for f in ["configs/serve_pjrt.toml", "configs/sim_fig2.toml"] {
+            let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
+            let cfg = RunConfig::from_file(&p).unwrap_or_else(|e| panic!("{f}: {e}"));
+            cfg.validate().unwrap();
+        }
+    }
+}

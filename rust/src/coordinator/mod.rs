@@ -1,0 +1,23 @@
+//! The distributed coordinator — the paper's system realized on a
+//! thread-per-worker pool with fault injection.
+//!
+//! * [`task`] — the dispatchable task graph derived from a
+//!   [`crate::coding::scheme::TaskSet`].
+//! * [`worker`] — the worker pool: each node computes exactly one encoded
+//!   block product per job, on the native or PJRT backend, with
+//!   configurable fault/straggler injection.
+//! * [`master`] — encode → dispatch → collect with an online span decoder
+//!   → recover → assemble, exactly the master-node role of the paper's
+//!   Fig. 1 (plus a deadline/fallback policy the paper leaves implicit).
+//! * [`server`] — a batched request loop over the master for serving
+//!   streams of multiply jobs, with metrics.
+
+pub mod master;
+pub mod server;
+pub mod task;
+pub mod worker;
+
+pub use master::{Master, MasterConfig, MultiplyReport};
+pub use server::{MmServer, ServerConfig, ServerReport};
+pub use task::TaskGraph;
+pub use worker::{Backend, FaultPlan, WorkerPool};

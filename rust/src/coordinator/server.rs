@@ -1,0 +1,254 @@
+//! The request loop: a batched multiply server over one [`Master`].
+//!
+//! Jobs are accepted into a FIFO queue and executed by the master; the
+//! server tracks per-job latency, throughput and fault statistics and
+//! produces the report the e2e benchmark (and `ft-strassen serve`)
+//! prints. This is the moral equivalent of the router/launcher layer of
+//! a serving system: config in, metrics out, no Python anywhere.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coding::scheme::TaskSet;
+use crate::coordinator::master::{Master, MasterConfig, MultiplyReport};
+use crate::coordinator::worker::Backend;
+use crate::linalg::matrix::Matrix;
+use crate::sim::rng::Rng;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub master: MasterConfig,
+    /// Maximum queued jobs before `submit` reports backpressure.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { master: MasterConfig::default(), queue_cap: 1024 }
+    }
+}
+
+/// One queued multiply job.
+pub struct Job {
+    pub id: u64,
+    pub a: Matrix,
+    pub b: Matrix,
+}
+
+/// Completed job with its report.
+pub struct Completed {
+    pub id: u64,
+    pub c: Matrix,
+    pub report: MultiplyReport,
+    /// Queue wait + execution.
+    pub total_latency: Duration,
+}
+
+/// Aggregate statistics after a run.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub jobs: usize,
+    pub wall: Duration,
+    pub throughput_jobs_per_s: f64,
+    pub mean_latency: Duration,
+    pub p95_latency: Duration,
+    pub decoded: usize,
+    pub fell_back: usize,
+    pub mean_finished_workers: f64,
+}
+
+/// Batched multiply server.
+pub struct MmServer {
+    master: Master,
+    queue: VecDeque<(Job, Instant)>,
+    cfg: ServerConfig,
+    completed_latencies: Vec<Duration>,
+    decoded: usize,
+    fell_back: usize,
+    finished_sum: u64,
+    jobs_done: usize,
+    next_id: u64,
+}
+
+impl MmServer {
+    pub fn new(set: TaskSet, backend: Backend, cfg: ServerConfig) -> MmServer {
+        MmServer {
+            master: Master::new(set, backend, cfg.master.clone()),
+            queue: VecDeque::new(),
+            cfg,
+            completed_latencies: Vec::new(),
+            decoded: 0,
+            fell_back: 0,
+            finished_sum: 0,
+            jobs_done: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a job. Returns its id, or `Err` on backpressure.
+    pub fn submit(&mut self, a: Matrix, b: Matrix) -> Result<u64, String> {
+        if self.queue.len() >= self.cfg.queue_cap {
+            return Err(format!("queue full ({} jobs)", self.cfg.queue_cap));
+        }
+        self.next_id += 1;
+        let id = self.next_id;
+        self.queue.push_back((Job { id, a, b }, Instant::now()));
+        Ok(id)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Run at most `max_jobs` queued jobs; returns their results.
+    pub fn drain(&mut self, max_jobs: usize) -> Result<Vec<Completed>, String> {
+        let mut out = Vec::new();
+        for _ in 0..max_jobs {
+            let Some((job, enqueued)) = self.queue.pop_front() else {
+                break;
+            };
+            let (c, report) = self.master.multiply(&job.a, &job.b)?;
+            let total_latency = enqueued.elapsed();
+            if report.fell_back {
+                self.fell_back += 1;
+            } else {
+                self.decoded += 1;
+            }
+            self.finished_sum += report.finished as u64;
+            self.jobs_done += 1;
+            self.completed_latencies.push(total_latency);
+            out.push(Completed { id: job.id, c, report, total_latency });
+        }
+        Ok(out)
+    }
+
+    /// Convenience: run a synthetic workload of `jobs` random multiplies
+    /// of size `n`, draining as we go, and report aggregates.
+    pub fn run_workload(&mut self, jobs: usize, n: usize, seed: u64) -> Result<ServerReport, String> {
+        let mut rng = Rng::seeded(seed);
+        let t0 = Instant::now();
+        for _ in 0..jobs {
+            let a = Matrix::random(n, n, &mut rng);
+            let b = Matrix::random(n, n, &mut rng);
+            self.submit(a, b)?;
+            // Immediate drain keeps queue depth at 1 — the paper's
+            // one-job-at-a-time master. Larger batches are exercised by
+            // the e2e bench via submit-all-then-drain.
+            self.drain(1)?;
+        }
+        Ok(self.report(t0.elapsed()))
+    }
+
+    /// Build the aggregate report for everything completed so far.
+    pub fn report(&self, wall: Duration) -> ServerReport {
+        let n = self.completed_latencies.len().max(1);
+        let mut sorted = self.completed_latencies.clone();
+        sorted.sort();
+        let mean = sorted.iter().sum::<Duration>() / n as u32;
+        let p95 = sorted
+            .get(((n as f64 * 0.95) as usize).min(n - 1))
+            .copied()
+            .unwrap_or(Duration::ZERO);
+        ServerReport {
+            jobs: self.jobs_done,
+            wall,
+            throughput_jobs_per_s: self.jobs_done as f64 / wall.as_secs_f64().max(1e-9),
+            mean_latency: mean,
+            p95_latency: p95,
+            decoded: self.decoded,
+            fell_back: self.fell_back,
+            mean_finished_workers: self.finished_sum as f64 / self.jobs_done.max(1) as f64,
+        }
+    }
+
+    /// Metrics snapshot from the underlying master.
+    pub fn metrics(&self) -> String {
+        self.master.metrics.snapshot()
+    }
+
+    pub fn shutdown(self) {
+        self.master.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::FaultPlan;
+
+    fn server(fault: FaultPlan) -> MmServer {
+        MmServer::new(
+            TaskSet::strassen_winograd(2),
+            Backend::Native,
+            ServerConfig {
+                master: MasterConfig {
+                    deadline: Duration::from_secs(5),
+                    fault,
+                    seed: 1,
+                    fallback_local: true,
+                },
+                queue_cap: 8,
+            },
+        )
+    }
+
+    #[test]
+    fn workload_runs_and_reports() {
+        let mut s = server(FaultPlan::NONE);
+        let report = s.run_workload(5, 16, 42).unwrap();
+        assert_eq!(report.jobs, 5);
+        assert_eq!(report.decoded, 5);
+        assert_eq!(report.fell_back, 0);
+        assert!(report.throughput_jobs_per_s > 0.0);
+        assert!(report.mean_latency > Duration::ZERO);
+        // With no faults the decoder stops at rank coverage: between 7
+        // (lower bound, impossible to be lower) and 16 replies used.
+        assert!(report.mean_finished_workers >= 7.0);
+        assert!(report.mean_finished_workers <= 16.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut s = server(FaultPlan::NONE);
+        for _ in 0..8 {
+            s.submit(Matrix::zeros(4, 4), Matrix::zeros(4, 4)).unwrap();
+        }
+        let err = s.submit(Matrix::zeros(4, 4), Matrix::zeros(4, 4)).unwrap_err();
+        assert!(err.contains("queue full"));
+        // Draining frees capacity.
+        let done = s.drain(3).unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(s.queue_depth(), 5);
+        s.submit(Matrix::zeros(4, 4), Matrix::zeros(4, 4)).unwrap();
+        s.shutdown();
+    }
+
+    #[test]
+    fn results_are_correct_under_faults() {
+        let mut s = server(FaultPlan {
+            p_fail: 0.2,
+            p_straggle: 0.0,
+            delay: Duration::ZERO,
+        });
+        let mut rng = Rng::seeded(9);
+        let a = Matrix::random(16, 16, &mut rng);
+        let b = Matrix::random(16, 16, &mut rng);
+        let want = a.matmul(&b);
+        s.submit(a, b).unwrap();
+        let done = s.drain(10).unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].c.approx_eq(&want, 1e-4));
+        s.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_nonempty_after_jobs() {
+        let mut s = server(FaultPlan::NONE);
+        s.run_workload(2, 8, 1).unwrap();
+        let m = s.metrics();
+        assert!(m.contains("jobs_dispatched"), "{m}");
+        s.shutdown();
+    }
+}

@@ -1,0 +1,89 @@
+//! The dispatchable task graph: per-node encoding coefficients plus the
+//! decode machinery (relations, decoder seeds) derived once per task set
+//! and shared by every job.
+
+use std::sync::Arc;
+
+use crate::coding::decoder::SpanDecoder;
+use crate::coding::scheme::TaskSet;
+
+/// One dispatchable task (a worker's entire job description).
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub id: usize,
+    pub name: String,
+    /// Left/right encoding coefficients as f32 (what the encoder kernel
+    /// consumes).
+    pub ca: [f32; 4],
+    pub cb: [f32; 4],
+}
+
+/// The full graph for a task set.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    pub set: Arc<TaskSet>,
+    pub specs: Vec<TaskSpec>,
+}
+
+impl TaskGraph {
+    pub fn new(set: TaskSet) -> TaskGraph {
+        let specs = set
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(id, t)| {
+                let f = |c: &[i32; 4]| {
+                    let mut out = [0.0f32; 4];
+                    for (o, &x) in out.iter_mut().zip(c.iter()) {
+                        *o = x as f32;
+                    }
+                    out
+                };
+                TaskSpec { id, name: t.name.clone(), ca: f(&t.u), cb: f(&t.v) }
+            })
+            .collect();
+        TaskGraph { set: Arc::new(set), specs }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// A fresh online decoder for one job.
+    pub fn decoder(&self) -> SpanDecoder {
+        SpanDecoder::new(&self.set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_carry_scheme_coefficients() {
+        let g = TaskGraph::new(TaskSet::strassen_winograd(2));
+        assert_eq!(g.num_tasks(), 16);
+        // S1 = (M11 + M22)(B11 + B22)
+        assert_eq!(g.specs[0].ca, [1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(g.specs[0].cb, [1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(g.specs[0].name, "S1");
+        // W2 = M12 B21
+        assert_eq!(g.specs[8].ca, [0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(g.specs[8].cb, [0.0, 0.0, 1.0, 0.0]);
+        // PSMM names
+        assert_eq!(g.specs[14].name, "P1");
+        assert_eq!(g.specs[15].name, "P2");
+    }
+
+    #[test]
+    fn decoder_is_fresh_per_call() {
+        let g = TaskGraph::new(TaskSet::strassen_winograd(0));
+        let mut d1 = g.decoder();
+        for i in 0..14 {
+            d1.on_finished(i);
+        }
+        assert!(d1.is_decodable());
+        let d2 = g.decoder();
+        assert!(!d2.is_decodable());
+    }
+}

@@ -1,0 +1,313 @@
+//! The worker pool: one OS thread per simulated compute node.
+//!
+//! Each node receives `WorkItem`s (the encoded coefficients plus shared
+//! handles to the operand blocks), computes its single block product on
+//! the configured backend, and reports back. Fault injection happens at
+//! the node, exactly like the paper's model: a failed node simply never
+//! answers; a straggler answers late.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::linalg::blocked::encode_operand;
+use crate::linalg::matrix::Matrix;
+use crate::runtime::service::PjrtHandle;
+use crate::sim::rng::Rng;
+
+/// Compute backend for a worker's block product.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure-Rust encode + blocked matmul in the worker thread.
+    Native,
+    /// The AOT Pallas artifact through the PJRT compute service.
+    Pjrt(PjrtHandle),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "Native"),
+            Backend::Pjrt(_) => write!(f, "Pjrt"),
+        }
+    }
+}
+
+/// Per-dispatch fault decision (sampled by the master's fault plan).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    None,
+    /// Delay the response by this much (straggler).
+    Delay(Duration),
+    /// Never respond (the paper's node failure).
+    Fail,
+}
+
+/// Job-level fault plan: how to sample per-node actions.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// P(node fails) — the paper's p_e.
+    pub p_fail: f64,
+    /// P(node straggles by `delay`).
+    pub p_straggle: f64,
+    pub delay: Duration,
+}
+
+impl FaultPlan {
+    pub const NONE: FaultPlan =
+        FaultPlan { p_fail: 0.0, p_straggle: 0.0, delay: Duration::ZERO };
+
+    pub fn sample(&self, rng: &mut Rng) -> FaultAction {
+        if self.p_fail > 0.0 && rng.bernoulli(self.p_fail) {
+            FaultAction::Fail
+        } else if self.p_straggle > 0.0 && rng.bernoulli(self.p_straggle) {
+            FaultAction::Delay(self.delay)
+        } else {
+            FaultAction::None
+        }
+    }
+}
+
+/// One unit of work for a node.
+pub struct WorkItem {
+    pub job_id: u64,
+    pub task_id: usize,
+    pub ca: [f32; 4],
+    pub cb: [f32; 4],
+    pub a4: Arc<[Matrix; 4]>,
+    pub b4: Arc<[Matrix; 4]>,
+    pub fault: FaultAction,
+    pub reply: Sender<WorkerReply>,
+}
+
+/// A node's answer.
+#[derive(Debug)]
+pub struct WorkerReply {
+    pub job_id: u64,
+    pub task_id: usize,
+    pub product: Result<Matrix, String>,
+    pub compute_time: Duration,
+}
+
+/// Fixed pool of worker nodes.
+pub struct WorkerPool {
+    senders: Vec<Sender<WorkItem>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` nodes on the given backend.
+    pub fn spawn(n: usize, backend: Backend) -> WorkerPool {
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for node in 0..n {
+            let (tx, rx) = channel::<WorkItem>();
+            let backend = backend.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{node}"))
+                .spawn(move || node_loop(rx, backend))
+                .expect("spawn worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { senders, handles }
+    }
+
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Send one item to node `i % size`.
+    pub fn dispatch(&self, i: usize, item: WorkItem) {
+        // A dead node's channel is gone; the master treats missing
+        // replies as failures anyway, so ignore send errors.
+        let _ = self.senders[i % self.senders.len()].send(item);
+    }
+
+    /// Graceful shutdown: close all queues and join.
+    pub fn shutdown(self) {
+        drop(self.senders);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn node_loop(rx: Receiver<WorkItem>, backend: Backend) {
+    while let Ok(item) = rx.recv() {
+        match item.fault {
+            FaultAction::Fail => continue, // silently drop (paper's model)
+            FaultAction::Delay(d) => std::thread::sleep(d),
+            FaultAction::None => {}
+        }
+        let t0 = Instant::now();
+        let product = compute(&backend, &item);
+        let reply = WorkerReply {
+            job_id: item.job_id,
+            task_id: item.task_id,
+            product,
+            compute_time: t0.elapsed(),
+        };
+        let _ = item.reply.send(reply);
+    }
+}
+
+fn compute(backend: &Backend, item: &WorkItem) -> Result<Matrix, String> {
+    match backend {
+        Backend::Native => {
+            let ica = to_int(&item.ca);
+            let icb = to_int(&item.cb);
+            let left = encode_operand(&ica, &item.a4);
+            let right = encode_operand(&icb, &item.b4);
+            Ok(left.matmul(&right))
+        }
+        Backend::Pjrt(h) => h.worker_task(
+            item.ca,
+            (*item.a4).clone(),
+            item.cb,
+            (*item.b4).clone(),
+        ),
+    }
+}
+
+fn to_int(c: &[f32; 4]) -> [i32; 4] {
+    let mut out = [0i32; 4];
+    for (o, &x) in out.iter_mut().zip(c.iter()) {
+        *o = x as i32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blocked::split_blocks;
+
+    fn blocks(seed: u64, n: usize) -> (Arc<[Matrix; 4]>, Arc<[Matrix; 4]>) {
+        let mut rng = Rng::seeded(seed);
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        (Arc::new(split_blocks(&a)), Arc::new(split_blocks(&b)))
+    }
+
+    #[test]
+    fn pool_computes_products() {
+        let pool = WorkerPool::spawn(4, Backend::Native);
+        let (a4, b4) = blocks(1, 16);
+        let (tx, rx) = channel();
+        for task_id in 0..4 {
+            pool.dispatch(
+                task_id,
+                WorkItem {
+                    job_id: 7,
+                    task_id,
+                    ca: [1.0, 0.0, 0.0, 0.0],
+                    cb: [1.0, 0.0, 0.0, 0.0],
+                    a4: a4.clone(),
+                    b4: b4.clone(),
+                    fault: FaultAction::None,
+                    reply: tx.clone(),
+                },
+            );
+        }
+        drop(tx);
+        let want = a4[0].matmul(&b4[0]);
+        let mut got = 0;
+        while let Ok(reply) = rx.recv() {
+            assert_eq!(reply.job_id, 7);
+            assert!(reply.product.unwrap().approx_eq(&want, 1e-5));
+            got += 1;
+        }
+        assert_eq!(got, 4);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failed_nodes_never_reply() {
+        let pool = WorkerPool::spawn(2, Backend::Native);
+        let (a4, b4) = blocks(2, 8);
+        let (tx, rx) = channel();
+        pool.dispatch(
+            0,
+            WorkItem {
+                job_id: 1,
+                task_id: 0,
+                ca: [1.0; 4],
+                cb: [1.0; 4],
+                a4: a4.clone(),
+                b4: b4.clone(),
+                fault: FaultAction::Fail,
+                reply: tx.clone(),
+            },
+        );
+        pool.dispatch(
+            1,
+            WorkItem {
+                job_id: 1,
+                task_id: 1,
+                ca: [1.0; 4],
+                cb: [1.0; 4],
+                a4,
+                b4,
+                fault: FaultAction::None,
+                reply: tx.clone(),
+            },
+        );
+        drop(tx);
+        let replies: Vec<WorkerReply> = rx.iter().collect();
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].task_id, 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stragglers_reply_late() {
+        let pool = WorkerPool::spawn(1, Backend::Native);
+        let (a4, b4) = blocks(3, 8);
+        let (tx, rx) = channel();
+        let t0 = Instant::now();
+        pool.dispatch(
+            0,
+            WorkItem {
+                job_id: 1,
+                task_id: 0,
+                ca: [1.0, 0.0, 0.0, 0.0],
+                cb: [1.0, 0.0, 0.0, 0.0],
+                a4,
+                b4,
+                fault: FaultAction::Delay(Duration::from_millis(30)),
+                reply: tx,
+            },
+        );
+        let reply = rx.recv().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert!(reply.product.is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_sampling_frequencies() {
+        let plan = FaultPlan {
+            p_fail: 0.25,
+            p_straggle: 0.25,
+            delay: Duration::from_millis(1),
+        };
+        let mut rng = Rng::seeded(5);
+        let n = 40_000;
+        let mut fails = 0;
+        let mut delays = 0;
+        for _ in 0..n {
+            match plan.sample(&mut rng) {
+                FaultAction::Fail => fails += 1,
+                FaultAction::Delay(_) => delays += 1,
+                FaultAction::None => {}
+            }
+        }
+        let pf = fails as f64 / n as f64;
+        // delay is sampled only among non-failures: P = 0.75 * 0.25
+        let pd = delays as f64 / n as f64;
+        assert!((pf - 0.25).abs() < 0.01, "{pf}");
+        assert!((pd - 0.1875).abs() < 0.01, "{pd}");
+    }
+}

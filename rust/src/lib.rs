@@ -1,0 +1,59 @@
+//! # ft-strassen — Fault-Tolerant Strassen-Like Matrix Multiplication
+//!
+//! Production-quality reproduction of *"Fault-Tolerant Strassen-Like
+//! Matrix Multiplication"* (Güney & Arslan, CS.DC 2022): distributed
+//! 2×2-blocked matrix multiplication where each worker computes one
+//! sub-matrix product, made straggler-tolerant by running **two distinct
+//! Strassen-like algorithms** (Strassen + Winograd) plus up to two parity
+//! sub-matrix multiplications (PSMMs), and decoding the output blocks from
+//! any decodable subset of finished workers.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L1** — Pallas block-matmul / encode kernels (build-time Python),
+//! * **L2** — JAX graphs lowered AOT to HLO text in `artifacts/`,
+//! * **L3** — this crate: the coordinator, the fault-tolerance coding
+//!   layer, the computer-aided search of the paper's Algorithm 1, the
+//!   analytical + Monte-Carlo evaluation (Fig. 2), and a PJRT runtime
+//!   that executes the AOT artifacts on the request path with **no
+//!   Python anywhere at runtime**.
+//!
+//! Quick taste (pure-Rust backend, no artifacts needed):
+//! ```no_run
+//! // (no_run: doctest executables can't locate libxla_extension's rpath
+//! //  in this offline image; `cargo test` covers the same API.)
+//! use ft_strassen::prelude::*;
+//!
+//! let scheme = TaskSet::strassen_winograd(2);       // 16 tasks, 2 PSMMs
+//! assert_eq!(scheme.num_tasks(), 16);
+//! // every single-node failure is decodable:
+//! assert_eq!(scheme.fc_table()[1], 0);
+//! ```
+
+pub mod algebra;
+pub mod algorithms;
+pub mod bench;
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod testkit;
+
+/// Convenient re-exports of the main public types.
+pub mod prelude {
+    pub use crate::algebra::form::{BilinearForm, Target, ELEM_DIM};
+    pub use crate::algorithms::scheme::BilinearScheme;
+    pub use crate::coding::decoder::{DecodeOutcome, PeelingDecoder, SpanDecoder};
+    pub use crate::coding::scheme::TaskSet;
+    pub use crate::coding::theory::{failure_probability, replication_fc};
+    pub use crate::coordinator::master::{Master, MasterConfig};
+    pub use crate::coordinator::worker::{Backend, FaultPlan};
+    pub use crate::linalg::matrix::Matrix;
+    pub use crate::search::searchlp::{search_lp, SearchResult};
+    pub use crate::sim::montecarlo::MonteCarlo;
+    pub use crate::sim::rng::Rng;
+}

@@ -1,0 +1,116 @@
+//! 2×2 block partition / assembly and encoded-operand construction —
+//! the native-side mirror of the L1 `encode` kernel.
+
+use crate::linalg::matrix::Matrix;
+
+/// Split an even-dimensioned matrix into its four blocks
+/// `[X11, X12, X21, X22]`.
+pub fn split_blocks(x: &Matrix) -> [Matrix; 4] {
+    let (r, c) = x.shape();
+    assert!(r % 2 == 0 && c % 2 == 0, "odd shape {:?} cannot be 2x2-blocked", x.shape());
+    let (hr, hc) = (r / 2, c / 2);
+    let src = x.as_slice();
+    let block = |bi: usize, bj: usize| {
+        // Row-contiguous copies (two memcpys per source row pair beat a
+        // per-element closure with div/mod — see EXPERIMENTS.md §Perf).
+        let mut m = Matrix::zeros(hr, hc);
+        let dst = m.as_mut_slice();
+        for i in 0..hr {
+            let s = (bi * hr + i) * c + bj * hc;
+            dst[i * hc..(i + 1) * hc].copy_from_slice(&src[s..s + hc]);
+        }
+        m
+    };
+    [block(0, 0), block(0, 1), block(1, 0), block(1, 1)]
+}
+
+/// Reassemble four equally-shaped blocks into one matrix.
+pub fn join_blocks(b: &[Matrix; 4]) -> Matrix {
+    let (hr, hc) = b[0].shape();
+    for blk in b.iter() {
+        assert_eq!(blk.shape(), (hr, hc), "ragged blocks");
+    }
+    let mut out = Matrix::zeros(2 * hr, 2 * hc);
+    let c = 2 * hc;
+    let dst = out.as_mut_slice();
+    for (idx, blk) in b.iter().enumerate() {
+        let (bi, bj) = (idx / 2, idx % 2);
+        let src = blk.as_slice();
+        for i in 0..hr {
+            let d = (bi * hr + i) * c + bj * hc;
+            dst[d..d + hc].copy_from_slice(&src[i * hc..(i + 1) * hc]);
+        }
+    }
+    out
+}
+
+/// Encode an operand: `Σ_p coeffs[p] * blocks[p]` (the ±1 sums the
+/// master sends to a worker). Zero-coefficient blocks are skipped.
+pub fn encode_operand(coeffs: &[i32; 4], blocks: &[Matrix; 4]) -> Matrix {
+    let (r, c) = blocks[0].shape();
+    let mut out = Matrix::zeros(r, c);
+    for (p, &s) in coeffs.iter().enumerate() {
+        if s != 0 {
+            out.axpy(s as f32, &blocks[p]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn split_join_roundtrip() {
+        let mut rng = Rng::seeded(5);
+        let x = Matrix::random(8, 12, &mut rng);
+        let blocks = split_blocks(&x);
+        assert_eq!(join_blocks(&blocks), x);
+    }
+
+    #[test]
+    fn block_layout() {
+        let x = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let b = split_blocks(&x);
+        assert_eq!(b[0].as_slice(), &[0.0, 1.0, 4.0, 5.0]); // X11
+        assert_eq!(b[1].as_slice(), &[2.0, 3.0, 6.0, 7.0]); // X12
+        assert_eq!(b[2].as_slice(), &[8.0, 9.0, 12.0, 13.0]); // X21
+        assert_eq!(b[3].as_slice(), &[10.0, 11.0, 14.0, 15.0]); // X22
+    }
+
+    #[test]
+    #[should_panic(expected = "odd shape")]
+    fn odd_split_panics() {
+        let _ = split_blocks(&Matrix::zeros(3, 4));
+    }
+
+    #[test]
+    fn encode_matches_manual_sum() {
+        let mut rng = Rng::seeded(9);
+        let x = Matrix::random(8, 8, &mut rng);
+        let b = split_blocks(&x);
+        // S6's left operand: M21 - M11
+        let e = encode_operand(&[-1, 0, 1, 0], &b);
+        let want = &b[2] - &b[0];
+        assert!(e.approx_eq(&want, 1e-6));
+    }
+
+    #[test]
+    fn blockwise_matmul_identity() {
+        // C blocks via explicit block formula == dense matmul.
+        let mut rng = Rng::seeded(11);
+        let a = Matrix::random(8, 8, &mut rng);
+        let b = Matrix::random(8, 8, &mut rng);
+        let ab = split_blocks(&a);
+        let bb = split_blocks(&b);
+        let c = [
+            &ab[0].matmul(&bb[0]) + &ab[1].matmul(&bb[2]),
+            &ab[0].matmul(&bb[1]) + &ab[1].matmul(&bb[3]),
+            &ab[2].matmul(&bb[0]) + &ab[3].matmul(&bb[2]),
+            &ab[2].matmul(&bb[1]) + &ab[3].matmul(&bb[3]),
+        ];
+        assert!(join_blocks(&c).approx_eq(&a.matmul(&b), 1e-5));
+    }
+}

@@ -1,0 +1,313 @@
+//! Row-major dense `f32` matrix with the operations the coordinator
+//! needs on its hot path: add/sub/scale/AXPY-style combines and a
+//! cache-friendly (i, k, j) matmul.
+
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Neg, Sub};
+
+use crate::sim::rng::Rng;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// From a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data: data.to_vec() }
+    }
+
+    /// Uniform(-1, 1) random entries.
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix::from_fn(rows, cols, |_, _| (rng.uniform() * 2.0 - 1.0) as f32)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Naive-but-cache-friendly matmul: (i, k, j) loop order with the
+    /// inner j-loop auto-vectorizable over contiguous rows.
+    ///
+    /// §Perf note: a 4-row-blocked variant (reusing each B row across 4
+    /// accumulator streams) was tried and measured ~10% SLOWER at n =
+    /// 128/256 on this single-core box (register pressure beats the L2
+    /// traffic saving), so the simple kernel stays — see EXPERIMENTS.md.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        let n = rhs.cols;
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &rhs.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// In-place `self += s * other` (the decode/assembly primitive).
+    pub fn axpy(&mut self, s: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// `Σ w[i] * mats[i]` with preallocated output — the zero-extra-copy
+    /// decode combine on the native backend.
+    pub fn weighted_sum_into(out: &mut Matrix, weights: &[f32], mats: &[&Matrix]) {
+        assert_eq!(weights.len(), mats.len());
+        out.data.fill(0.0);
+        for (&w, m) in weights.iter().zip(mats.iter()) {
+            if w != 0.0 {
+                out.axpy(w, m);
+            }
+        }
+    }
+
+    /// Max absolute entry difference.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Relative error vs a reference (||self - ref|| / ||ref||).
+    pub fn rel_error(&self, reference: &Matrix) -> f32 {
+        let denom = reference.frobenius().max(f32::MIN_POSITIVE);
+        let mut diff = self.clone();
+        diff.axpy(-1.0, reference);
+        diff.frobenius() / denom
+    }
+
+    /// Approximate equality with relative tolerance on the Frobenius norm.
+    pub fn approx_eq(&self, other: &Matrix, rtol: f32) -> bool {
+        self.shape() == other.shape() && self.rel_error(other) <= rtol
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Matrix {
+    type Output = Matrix;
+    fn add(self, rhs: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(1.0, rhs);
+        out
+    }
+}
+
+impl Sub for &Matrix {
+    type Output = Matrix;
+    fn sub(self, rhs: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(-1.0, rhs);
+        out
+    }
+}
+
+impl Neg for &Matrix {
+    type Output = Matrix;
+    fn neg(self) -> Matrix {
+        let mut out = self.clone();
+        for x in out.data.iter_mut() {
+            *x = -*x;
+        }
+        out
+    }
+}
+
+impl Mul<f32> for &Matrix {
+    type Output = Matrix;
+    fn mul(self, s: f32) -> Matrix {
+        let mut out = self.clone();
+        for x in out.data.iter_mut() {
+            *x *= s;
+        }
+        out
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:9.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::seeded(1);
+        let a = Matrix::random(5, 5, &mut rng);
+        let i = Matrix::identity(5);
+        assert!(a.matmul(&i).approx_eq(&a, 1e-6));
+        assert!(i.matmul(&a).approx_eq(&a, 1e-6));
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Matrix::from_slice(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_slice(3, 2, &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_nonsquare_shapes() {
+        let mut rng = Rng::seeded(7);
+        let a = Matrix::random(3, 8, &mut rng);
+        let b = Matrix::random(8, 5, &mut rng);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), (3, 5));
+        // spot check one entry
+        let mut want = 0.0;
+        for k in 0..8 {
+            want += a[(2, k)] * b[(k, 4)];
+        }
+        assert!((c[(2, 4)] - want).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dims")]
+    fn matmul_dim_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn axpy_and_ops() {
+        let a = Matrix::from_slice(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_slice(2, 2, &[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!((&a + &b).as_slice(), &[5.0; 4]);
+        assert_eq!((&a - &b).as_slice(), &[-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!((&a * 2.0).as_slice(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!((-&a).as_slice(), &[-1.0, -2.0, -3.0, -4.0]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.as_slice(), &[3.0, 3.5, 4.0, 4.5]);
+    }
+
+    #[test]
+    fn weighted_sum_skips_zero_weights() {
+        let a = Matrix::from_slice(1, 2, &[1.0, 1.0]);
+        let b = Matrix::from_slice(1, 2, &[f32::NAN, f32::NAN]);
+        let mut out = Matrix::zeros(1, 2);
+        // NaN matrix must be skipped when its weight is exactly 0 — the
+        // master relies on this for unfinished worker slots.
+        Matrix::weighted_sum_into(&mut out, &[2.0, 0.0], &[&a, &b]);
+        assert_eq!(out.as_slice(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = Matrix::identity(3);
+        let mut b = a.clone();
+        b[(0, 0)] = 1.001;
+        assert!(a.rel_error(&a) == 0.0);
+        assert!(a.max_abs_diff(&b) - 0.001 < 1e-6);
+        assert!(a.approx_eq(&b, 1e-2));
+        assert!(!a.approx_eq(&b, 1e-5));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seeded(3);
+        let a = Matrix::random(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense matrix substrate: storage, blocked operations, naive and
+//! Strassen-like recursive multiplication in pure Rust.
+//!
+//! This is the numeric fallback/verification backend of the coordinator
+//! (the production hot path executes the AOT Pallas artifacts through
+//! PJRT — see [`crate::runtime`]); it also provides the 2×2 block
+//! partition/assembly used on both backends and the reference results
+//! every integration test checks against.
+
+pub mod blocked;
+pub mod matrix;
+pub mod recursive;
+
+pub use blocked::{join_blocks, split_blocks};
+pub use matrix::Matrix;
+pub use recursive::{strassen_mm, winograd_mm, RecursiveConfig};

@@ -1,0 +1,156 @@
+//! Multi-level recursive Strassen-like multiplication in pure Rust.
+//!
+//! Applies any [`BilinearScheme`] recursively with a cutoff to the naive
+//! kernel — the classical O(n^log2 7) construction the paper builds on.
+//! The distributed coordinator applies the scheme at the *top* level only
+//! (one worker per product); this module provides the single-node
+//! substrate and the ground truth for benchmarks.
+
+use crate::algorithms::scheme::BilinearScheme;
+use crate::linalg::blocked::{encode_operand, join_blocks, split_blocks};
+use crate::linalg::matrix::Matrix;
+
+/// Recursion parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RecursiveConfig {
+    /// Below this dimension, fall back to the naive matmul.
+    pub cutoff: usize,
+    /// Maximum recursion depth (levels of 2×2 splitting).
+    pub max_depth: usize,
+}
+
+impl Default for RecursiveConfig {
+    fn default() -> Self {
+        RecursiveConfig { cutoff: 64, max_depth: usize::MAX }
+    }
+}
+
+/// Multiply with a Strassen-like scheme applied recursively.
+///
+/// Requires square matrices whose dimension is divisible by 2 at every
+/// applied level (power-of-two sizes always work; otherwise recursion
+/// stops early at odd dimensions).
+pub fn scheme_mm(scheme: &BilinearScheme, a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
+    mm_rec(scheme, a, b, cfg, 0)
+}
+
+fn mm_rec(scheme: &BilinearScheme, a: &Matrix, b: &Matrix, cfg: &RecursiveConfig, depth: usize) -> Matrix {
+    let n = a.rows();
+    if n <= cfg.cutoff || n % 2 != 0 || depth >= cfg.max_depth || a.cols() % 2 != 0 || b.cols() % 2 != 0 {
+        return a.matmul(b);
+    }
+    let ab = split_blocks(a);
+    let bb = split_blocks(b);
+    let products: Vec<Matrix> = scheme
+        .products
+        .iter()
+        .map(|p| {
+            let left = encode_operand(&p.u, &ab);
+            let right = encode_operand(&p.v, &bb);
+            mm_rec(scheme, &left, &right, cfg, depth + 1)
+        })
+        .collect();
+    let (hr, hc) = (a.rows() / 2, b.cols() / 2);
+    let mut cblocks = [
+        Matrix::zeros(hr, hc),
+        Matrix::zeros(hr, hc),
+        Matrix::zeros(hr, hc),
+        Matrix::zeros(hr, hc),
+    ];
+    for (t, cblock) in cblocks.iter_mut().enumerate() {
+        for (i, &coef) in scheme.output[t].iter().enumerate() {
+            if coef != 0 {
+                cblock.axpy(coef as f32, &products[i]);
+            }
+        }
+    }
+    join_blocks(&cblocks)
+}
+
+/// Recursive Strassen multiply.
+pub fn strassen_mm(a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
+    scheme_mm(&crate::algorithms::strassen(), a, b, cfg)
+}
+
+/// Recursive Winograd multiply.
+pub fn winograd_mm(a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
+    scheme_mm(&crate::algorithms::winograd(), a, b, cfg)
+}
+
+/// Number of scalar multiplications a scheme needs at a given size and
+/// cutoff — the complexity model behind the paper's O(n^log2 7) claim.
+pub fn multiplication_count(num_products: usize, n: usize, cutoff: usize) -> u128 {
+    if n <= cutoff || n % 2 != 0 {
+        return (n as u128).pow(3);
+    }
+    num_products as u128 * multiplication_count(num_products, n / 2, cutoff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{naive8, strassen, winograd};
+    use crate::sim::rng::Rng;
+
+    fn check(scheme: &BilinearScheme, n: usize, cutoff: usize) {
+        let mut rng = Rng::seeded(n as u64 * 31 + cutoff as u64);
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let got = scheme_mm(scheme, &a, &b, &RecursiveConfig { cutoff, max_depth: usize::MAX });
+        let want = a.matmul(&b);
+        assert!(
+            got.approx_eq(&want, 1e-4),
+            "{} n={} cutoff={} rel_err={}",
+            scheme.name,
+            n,
+            cutoff,
+            got.rel_error(&want)
+        );
+    }
+
+    #[test]
+    fn strassen_recursive_matches_naive() {
+        for (n, cutoff) in [(8, 2), (16, 4), (64, 8), (128, 32)] {
+            check(&strassen(), n, cutoff);
+        }
+    }
+
+    #[test]
+    fn winograd_recursive_matches_naive() {
+        for (n, cutoff) in [(8, 2), (16, 4), (64, 8)] {
+            check(&winograd(), n, cutoff);
+        }
+    }
+
+    #[test]
+    fn naive8_recursive_matches_naive() {
+        check(&naive8(), 32, 4);
+    }
+
+    #[test]
+    fn odd_sizes_fall_back() {
+        let mut rng = Rng::seeded(77);
+        let a = Matrix::random(30, 30, &mut rng); // 30 -> 15 odd at depth 1
+        let b = Matrix::random(30, 30, &mut rng);
+        let got = strassen_mm(&a, &b, &RecursiveConfig { cutoff: 4, max_depth: 8 });
+        assert!(got.approx_eq(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let mut rng = Rng::seeded(78);
+        let a = Matrix::random(16, 16, &mut rng);
+        let b = Matrix::random(16, 16, &mut rng);
+        let got = strassen_mm(&a, &b, &RecursiveConfig { cutoff: 1, max_depth: 1 });
+        assert!(got.approx_eq(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn multiplication_count_asymptotics() {
+        // One level of Strassen on n=2m: 7 m^3 vs 8 m^3 naive.
+        assert_eq!(multiplication_count(7, 4, 2), 7 * 8);
+        assert_eq!(multiplication_count(8, 4, 2), 8 * 8);
+        // Full recursion to cutoff 1: 7^k for n = 2^k.
+        assert_eq!(multiplication_count(7, 8, 1), 343);
+    }
+}

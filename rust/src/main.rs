@@ -1,0 +1,360 @@
+//! `ft-strassen` — launcher CLI for the fault-tolerant Strassen-like
+//! matrix multiplication system.
+//!
+//! Subcommands:
+//! * `info`      — schemes, Table I, hex codec, artifact status
+//! * `search`    — run Algorithm 1; print relations (Table II) and PSMMs
+//! * `fc`        — exhaustive FC(k) tables for every Fig.-2 scheme
+//! * `theory`    — analytical P_f (eqs. (9)/(10)) over a p_e sweep
+//! * `sim`       — Monte-Carlo P_f, cross-checked against theory
+//! * `fig2`      — full Fig.-2 regeneration (theory + MC + ASCII plot + CSV)
+//! * `multiply`  — one fault-tolerant multiply (native or PJRT backend)
+//! * `serve`     — batched request loop with straggler injection
+
+use std::path::Path;
+use std::time::Duration;
+
+use ft_strassen::algebra::form::{BilinearForm, Target};
+use ft_strassen::bench::plot::{ascii_loglog, Series};
+use ft_strassen::cli::Args;
+use ft_strassen::coding::fc::fc_table;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coding::theory::failure_probability;
+use ft_strassen::config::{BackendKind, RunConfig, SchemeKind};
+use ft_strassen::coordinator::master::{Master, MasterConfig};
+use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::worker::{Backend, FaultPlan};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::runtime::service::ComputeService;
+use ft_strassen::search::relations::summarize;
+use ft_strassen::search::searchlp::{search_lp, SearchOptions};
+use ft_strassen::sim::montecarlo::MonteCarlo;
+use ft_strassen::sim::rng::Rng;
+
+const USAGE: &str = "\
+ft-strassen <subcommand> [options]
+
+subcommands:
+  info                           scheme & artifact overview
+  search   [--max-k K]           Algorithm 1: local relations + PSMMs
+  fc                             FC(k) tables for all Fig.-2 schemes
+  theory   [--points N]          analytical P_f sweep
+  sim      [--p-e P] [--trials N]  Monte-Carlo P_f vs theory
+  fig2     [--trials N] [--out D]  regenerate Fig. 2 (CSV + ASCII)
+  multiply [--n N] [--scheme S] [--backend B] [--p-e P]
+  serve    [--jobs J] [--n N] [--scheme S] [--backend B] [--p-straggle P]
+
+common options:
+  --config FILE                  TOML config (CLI overrides it)
+  --scheme S                     strassen-x1|x2|x3, winograd-x1, sw+{0,1,2}psmm
+  --backend B                    native | pjrt
+  --artifacts DIR                artifact directory (default: artifacts)
+";
+
+fn main() {
+    let args = match Args::from_env(&["verbose", "latency"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("search") => cmd_search(&args),
+        Some("fc") => cmd_fc(&args),
+        Some("theory") => cmd_theory(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("multiply") => cmd_multiply(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme = SchemeKind::parse(s)?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.into();
+    }
+    cfg.n = args.get_parsed_or("n", cfg.n).map_err(|e| e.to_string())?;
+    cfg.p_e = args.get_parsed_or("p-e", cfg.p_e).map_err(|e| e.to_string())?;
+    cfg.p_straggle = args
+        .get_parsed_or("p-straggle", cfg.p_straggle)
+        .map_err(|e| e.to_string())?;
+    cfg.seed = args.get_parsed_or("seed", cfg.seed).map_err(|e| e.to_string())?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn backend_for(cfg: &RunConfig) -> Result<(Backend, Option<ComputeService>), String> {
+    match cfg.backend {
+        BackendKind::Native => Ok((Backend::Native, None)),
+        BackendKind::Pjrt => {
+            let svc = ComputeService::spawn(&cfg.artifacts_dir, &[cfg.n / 2])?;
+            println!("pjrt: {}", svc.handle().platform()?);
+            Ok((Backend::Pjrt(svc.handle()), Some(svc)))
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    println!("Fault-Tolerant Strassen-Like Matrix Multiplication");
+    println!("(Güney & Arslan, CS.DC 2022) — rust + JAX/Pallas reproduction\n");
+    println!("schemes (Fig. 2):");
+    for ts in TaskSet::fig2_schemes() {
+        let fc = fc_table(&ts);
+        println!(
+            "  {:16} nodes={:2}  first fatal k={}  FC(2)={}",
+            ts.name,
+            ts.num_tasks(),
+            fc.first_loss(),
+            fc.counts.get(2).copied().unwrap_or(0),
+        );
+    }
+    println!("\noutput targets (hex support codec, our M·B convention):");
+    for t in Target::ALL {
+        println!("  {} = {}  {}", t.name(), t.form(), t.form().hex_support());
+    }
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    match ft_strassen::runtime::artifact::Manifest::load(dir) {
+        Ok(m) => println!(
+            "\nartifacts: {} entries in {}, worker block sizes {:?}",
+            m.entries.len(),
+            dir.display(),
+            m.worker_block_sizes()
+        ),
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<(), String> {
+    let max_k = args.get_parsed_or("max-k", 8usize).map_err(|e| e.to_string())?;
+    let ts = TaskSet::strassen_winograd(0);
+    let names = ts.names();
+    let forms = ts.forms();
+    let opts = SearchOptions { max_k, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let res = search_lp(&forms, &opts);
+    println!(
+        "Algorithm 1 over {} products, K <= {max_k}: {} local relations, {} parity candidates ({:?})\n",
+        forms.len(),
+        res.num_relations(),
+        res.parities.len(),
+        t0.elapsed()
+    );
+    println!("{}", summarize(&res, max_k));
+    println!("relations per target (paper Table II layout):");
+    for t in Target::ALL {
+        println!("-- {}", t.name());
+        for r in res.for_target(t) {
+            println!("   {}", r.render(&names));
+        }
+    }
+    println!("\nPSMM selection:");
+    let psmm_ts = TaskSet::strassen_winograd(2);
+    for task in &psmm_ts.tasks[14..] {
+        println!("  {} = {}", task.name, BilinearForm::from_uv(&task.u, &task.v));
+    }
+    Ok(())
+}
+
+fn cmd_fc(_args: &Args) -> Result<(), String> {
+    for ts in TaskSet::fig2_schemes() {
+        let fc = fc_table(&ts);
+        println!("{} (M = {}):", ts.name, fc.m);
+        print!("  FC(k): ");
+        for (k, c) in fc.counts.iter().enumerate() {
+            if *c > 0 {
+                print!("k={k}:{c} ");
+            }
+        }
+        println!("\n");
+    }
+    Ok(())
+}
+
+fn pe_grid(points: usize) -> Vec<f64> {
+    // log-spaced from 5e-3 to 0.5, like the paper's Fig. 2 x-axis.
+    let (lo, hi) = (5e-3f64.ln(), 0.5f64.ln());
+    (0..points)
+        .map(|i| (lo + (hi - lo) * i as f64 / (points - 1) as f64).exp())
+        .collect()
+}
+
+fn cmd_theory(args: &Args) -> Result<(), String> {
+    let points = args.get_parsed_or("points", 9usize).map_err(|e| e.to_string())?;
+    let schemes = TaskSet::fig2_schemes();
+    let tables: Vec<_> = schemes.iter().map(fc_table).collect();
+    print!("{:>8} |", "p_e");
+    for ts in &schemes {
+        print!(" {:>14}", ts.name);
+    }
+    println!();
+    for p in pe_grid(points) {
+        print!("{p:>8.4} |");
+        for fc in &tables {
+            print!(" {:>14.6e}", failure_probability(fc, p));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<(), String> {
+    let p_e = args.get_parsed_or("p-e", 0.1f64).map_err(|e| e.to_string())?;
+    let trials = args.get_parsed_or("trials", 200_000u64).map_err(|e| e.to_string())?;
+    let seed = args.get_parsed_or("seed", 1u64).map_err(|e| e.to_string())?;
+    println!("Monte Carlo ({trials} trials, seed {seed}) vs theory at p_e = {p_e}:\n");
+    for ts in TaskSet::fig2_schemes() {
+        let fc = fc_table(&ts);
+        let theory = failure_probability(&fc, p_e);
+        let oracle = ft_strassen::coding::fc::DecodeOracle::build(&ts);
+        let mc = MonteCarlo::new(trials, seed)
+            .failure_probability(p_e, ts.num_tasks(), |mask| oracle.is_decodable(mask));
+        println!(
+            "  {:16} theory={:.6e}  mc={:.6e} (±{:.1e})",
+            ts.name, theory, mc.mean, mc.std_err
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<(), String> {
+    let trials = args.get_parsed_or("trials", 100_000u64).map_err(|e| e.to_string())?;
+    let points = args.get_parsed_or("points", 9usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parsed_or("seed", 1u64).map_err(|e| e.to_string())?;
+    let out = args.get_or("out", "target/fig2");
+    let grid = pe_grid(points);
+    let schemes = TaskSet::fig2_schemes();
+    let mut theory_series = Vec::new();
+    let mut mc_series = Vec::new();
+    let mut csv = String::from("scheme,p_e,theory_pf,mc_pf,mc_stderr\n");
+    for ts in &schemes {
+        let fc = fc_table(ts);
+        let oracle = ft_strassen::coding::fc::DecodeOracle::build(ts);
+        let mut tpts = Vec::new();
+        let mut mpts = Vec::new();
+        for &p in &grid {
+            let t = failure_probability(&fc, p);
+            let mc = MonteCarlo::new(trials, seed)
+                .failure_probability(p, ts.num_tasks(), |m| oracle.is_decodable(m));
+            csv.push_str(&format!("{},{p},{t},{},{}\n", ts.name, mc.mean, mc.std_err));
+            tpts.push((p, t));
+            if mc.mean > 0.0 {
+                mpts.push((p, mc.mean));
+            }
+        }
+        theory_series.push(Series::new(ts.name.clone(), tpts));
+        mc_series.push(Series::new(format!("{} (mc)", ts.name), mpts));
+    }
+    println!("Fig. 2 (theory):\n{}", ascii_loglog(&theory_series, 72, 24));
+    std::fs::create_dir_all(out).map_err(|e| e.to_string())?;
+    let csv_path = Path::new(out).join("fig2.csv");
+    std::fs::write(&csv_path, csv).map_err(|e| e.to_string())?;
+    println!("wrote {}", csv_path.display());
+    Ok(())
+}
+
+fn cmd_multiply(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let (backend, _svc) = backend_for(&cfg)?;
+    let mut rng = Rng::seeded(cfg.seed);
+    let a = Matrix::random(cfg.n, cfg.n, &mut rng);
+    let b = Matrix::random(cfg.n, cfg.n, &mut rng);
+    let mut master = Master::new(
+        cfg.scheme.task_set(),
+        backend,
+        MasterConfig {
+            deadline: Duration::from_millis(cfg.deadline_ms),
+            fault: FaultPlan {
+                p_fail: cfg.p_e,
+                p_straggle: cfg.p_straggle,
+                delay: Duration::from_millis(cfg.straggle_ms),
+            },
+            seed: cfg.seed,
+            fallback_local: true,
+        },
+    );
+    let (c, report) = master.multiply(&a, &b)?;
+    let want = a.matmul(&b);
+    println!(
+        "scheme={} n={} backend={:?} workers={}",
+        master.scheme_name(),
+        cfg.n,
+        cfg.backend,
+        master.num_workers()
+    );
+    println!(
+        "elapsed={:?} decodable_after={:?} finished={}/{} injected: {} fail, {} straggle, fell_back={}",
+        report.elapsed,
+        report.time_to_decodable,
+        report.finished,
+        report.dispatched,
+        report.injected_failures,
+        report.injected_stragglers,
+        report.fell_back
+    );
+    println!("rel_error vs dense = {:.3e}", c.rel_error(&want));
+    master.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let jobs = args.get_parsed_or("jobs", 32usize).map_err(|e| e.to_string())?;
+    let (backend, _svc) = backend_for(&cfg)?;
+    let mut server = MmServer::new(
+        cfg.scheme.task_set(),
+        backend,
+        ServerConfig {
+            master: MasterConfig {
+                deadline: Duration::from_millis(cfg.deadline_ms),
+                fault: FaultPlan {
+                    p_fail: cfg.p_e,
+                    p_straggle: cfg.p_straggle,
+                    delay: Duration::from_millis(cfg.straggle_ms),
+                },
+                seed: cfg.seed,
+                fallback_local: true,
+            },
+            queue_cap: 4096,
+        },
+    );
+    let report = server.run_workload(jobs, cfg.n, cfg.seed)?;
+    println!(
+        "scheme={} n={} jobs={}: {:.2} jobs/s, mean latency {:?}, p95 {:?}",
+        cfg.scheme.display_name(),
+        cfg.n,
+        report.jobs,
+        report.throughput_jobs_per_s,
+        report.mean_latency,
+        report.p95_latency
+    );
+    println!(
+        "decoded={} fell_back={} mean workers used={:.1}",
+        report.decoded, report.fell_back, report.mean_finished_workers
+    );
+    if args.flag("verbose") {
+        println!("\nmetrics:\n{}", server.metrics());
+    }
+    server.shutdown();
+    Ok(())
+}

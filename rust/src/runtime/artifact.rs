@@ -1,0 +1,148 @@
+//! Artifact discovery: parse `artifacts/manifest.tsv` (written by
+//! `python -m compile.aot`) so the runtime knows which executables and
+//! block sizes exist without parsing HLO.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Worker-product slots in the decode executable (14 products + 2 PSMMs).
+pub const DECODE_SLOTS: usize = 16;
+
+/// One artifact row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        let mut entries = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(format!(
+                    "{}:{}: expected 4 tab-separated columns, got {}",
+                    path.display(),
+                    i + 1,
+                    cols.len()
+                ));
+            }
+            let entry = ArtifactEntry {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                inputs: cols[2].split(';').map(str::to_string).collect(),
+                outputs: cols[3].split(';').map(str::to_string).collect(),
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        if entries.is_empty() {
+            return Err(format!("{}: no artifacts listed", path.display()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Block sizes for which a `worker_task_bs{bs}` executable exists.
+    pub fn worker_block_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|n| n.strip_prefix("worker_task_bs"))
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        sizes.sort_unstable();
+        sizes
+    }
+
+    /// Does `name` exist?
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Path for an artifact name.
+    pub fn path_of(&self, name: &str) -> Option<&Path> {
+        self.entries.get(name).map(|e| e.file.as_path())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        write!(f, "{body}").unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ftms_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            "# name\tfile\tinputs\toutputs\n\
+             worker_task_bs32\tworker_task_bs32.hlo.txt\tfloat32[4];float32[4,32,32]\tfloat32[32,32]\n\
+             worker_task_bs64\tworker_task_bs64.hlo.txt\tfloat32[4];float32[4,64,64]\tfloat32[64,64]\n\
+             matmul_n64\tmatmul_n64.hlo.txt\tfloat32[64,64];float32[64,64]\tfloat32[64,64]\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.worker_block_sizes(), vec![32, 64]);
+        assert!(m.has("matmul_n64"));
+        assert!(m.path_of("matmul_n64").unwrap().ends_with("matmul_n64.hlo.txt"));
+        assert!(!m.has("nope"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent_xyz")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn malformed_row_is_error() {
+        let dir = tmpdir("bad");
+        write_manifest(&dir, "only_two\tcolumns\n");
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.contains("4 tab-separated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // Integration: if `make artifacts` has run, validate its output.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if let Ok(m) = Manifest::load(&dir) {
+            let sizes = m.worker_block_sizes();
+            assert!(!sizes.is_empty());
+            for bs in sizes {
+                assert!(m.has(&format!("decode_combine_bs{bs}")));
+                assert!(m.has(&format!("strassen_once_bs{bs}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! The PJRT client wrapper: compile HLO-text artifacts once, cache the
+//! loaded executables, execute with `Matrix` inputs/outputs.
+//!
+//! NOT `Send`: must live on one thread (see [`crate::runtime::service`]
+//! for the multi-threaded front-end).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::linalg::matrix::Matrix;
+use crate::runtime::artifact::{Manifest, DECODE_SLOTS};
+
+/// Errors from the runtime, stringly-typed at this boundary (the `xla`
+/// crate error is not `Send`, and the service layer ships errors across
+/// threads).
+pub type RtResult<T> = Result<T, String>;
+
+fn xerr<E: std::fmt::Display>(ctx: &str) -> impl FnOnce(E) -> String + '_ {
+    move |e| format!("{ctx}: {e}")
+}
+
+/// One-thread PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> RtResult<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr("PjRtClient::cpu"))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&mut self, name: &str) -> RtResult<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self
+                .manifest
+                .path_of(name)
+                .ok_or_else(|| format!("artifact `{name}` not in manifest"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(xerr("parse HLO text"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xerr("compile"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile every artifact for the given block size (avoids
+    /// first-request latency spikes).
+    pub fn warmup(&mut self, bs: usize) -> RtResult<()> {
+        for name in [
+            format!("worker_task_bs{bs}"),
+            format!("decode_combine_bs{bs}"),
+            format!("strassen_once_bs{bs}"),
+            format!("winograd_once_bs{bs}"),
+            format!("matmul_n{}", 2 * bs),
+        ] {
+            if self.manifest.has(&name) {
+                self.executable(&name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> RtResult<xla::Literal> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(xerr("execute"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(xerr("to_literal_sync"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        lit.to_tuple1().map_err(xerr("to_tuple1"))
+    }
+
+    /// The generic worker product:
+    /// `(Σ ca[i] A_i) @ (Σ cb[j] B_j)` at block size `bs`.
+    pub fn worker_task(
+        &mut self,
+        ca: &[f32; 4],
+        a4: &[Matrix; 4],
+        cb: &[f32; 4],
+        b4: &[Matrix; 4],
+    ) -> RtResult<Matrix> {
+        let bs = a4[0].rows();
+        let name = format!("worker_task_bs{bs}");
+        let inputs = [
+            vec_literal(ca),
+            stack_literal(a4)?,
+            vec_literal(cb),
+            stack_literal(b4)?,
+        ];
+        let out = self.run(&name, &inputs)?;
+        literal_to_matrix(&out, bs, bs)
+    }
+
+    /// Decode combine: `Σ w[t] products[t]` with `DECODE_SLOTS` slots;
+    /// missing products may be `None` (their weight must be 0).
+    pub fn decode_combine(
+        &mut self,
+        weights: &[f32],
+        products: &[Option<&Matrix>],
+        bs: usize,
+    ) -> RtResult<Matrix> {
+        assert_eq!(weights.len(), products.len());
+        assert!(weights.len() <= DECODE_SLOTS, "too many tasks for decode slots");
+        let name = format!("decode_combine_bs{bs}");
+        let mut w = vec![0.0f32; DECODE_SLOTS];
+        w[..weights.len()].copy_from_slice(weights);
+        let mut stacked = vec![0.0f32; DECODE_SLOTS * bs * bs];
+        for (t, p) in products.iter().enumerate() {
+            match p {
+                Some(m) => {
+                    assert_eq!(m.shape(), (bs, bs));
+                    stacked[t * bs * bs..(t + 1) * bs * bs].copy_from_slice(m.as_slice());
+                }
+                None => assert_eq!(weights[t], 0.0, "missing product with nonzero weight"),
+            }
+        }
+        let inputs = [
+            xla::Literal::vec1(&w),
+            xla::Literal::vec1(&stacked)
+                .reshape(&[DECODE_SLOTS as i64, bs as i64, bs as i64])
+                .map_err(xerr("reshape stack"))?,
+        ];
+        let out = self.run(&name, &inputs)?;
+        literal_to_matrix(&out, bs, bs)
+    }
+
+    /// Multi-target decode: same product stack, several weight vectors
+    /// (the master decodes all four C blocks per job). The stacked
+    /// literal is built ONCE — the dominant cost at bs >= 64 (§Perf).
+    pub fn decode_combine_multi(
+        &mut self,
+        weight_sets: &[Vec<f32>],
+        products: &[Option<&Matrix>],
+        bs: usize,
+    ) -> RtResult<Vec<Matrix>> {
+        assert!(products.len() <= DECODE_SLOTS);
+        let name = format!("decode_combine_bs{bs}");
+        let mut stacked = vec![0.0f32; DECODE_SLOTS * bs * bs];
+        for (t, p) in products.iter().enumerate() {
+            if let Some(m) = p {
+                assert_eq!(m.shape(), (bs, bs));
+                stacked[t * bs * bs..(t + 1) * bs * bs].copy_from_slice(m.as_slice());
+            }
+        }
+        let stack_lit = xla::Literal::vec1(&stacked)
+            .reshape(&[DECODE_SLOTS as i64, bs as i64, bs as i64])
+            .map_err(xerr("reshape stack"))?;
+        let mut out = Vec::with_capacity(weight_sets.len());
+        for weights in weight_sets {
+            assert_eq!(weights.len(), products.len());
+            for (t, p) in products.iter().enumerate() {
+                if p.is_none() {
+                    assert_eq!(weights[t], 0.0, "missing product with nonzero weight");
+                }
+            }
+            let mut w = vec![0.0f32; DECODE_SLOTS];
+            w[..weights.len()].copy_from_slice(weights);
+            let lit = self.run(&name, &[xla::Literal::vec1(&w), stack_lit.clone()])?;
+            out.push(literal_to_matrix(&lit, bs, bs)?);
+        }
+        Ok(out)
+    }
+
+    /// Plain matmul baseline (`matmul_n{n}` artifact).
+    pub fn matmul(&mut self, a: &Matrix, b: &Matrix) -> RtResult<Matrix> {
+        let n = a.rows();
+        let name = format!("matmul_n{n}");
+        let inputs = [matrix_literal(a)?, matrix_literal(b)?];
+        let out = self.run(&name, &inputs)?;
+        literal_to_matrix(&out, n, n)
+    }
+
+    /// Single-node one-level Strassen through the L2 graph.
+    pub fn strassen_once(&mut self, a4: &[Matrix; 4], b4: &[Matrix; 4]) -> RtResult<[Matrix; 4]> {
+        self.once("strassen_once", a4, b4)
+    }
+
+    /// Single-node one-level Winograd through the L2 graph.
+    pub fn winograd_once(&mut self, a4: &[Matrix; 4], b4: &[Matrix; 4]) -> RtResult<[Matrix; 4]> {
+        self.once("winograd_once", a4, b4)
+    }
+
+    fn once(&mut self, which: &str, a4: &[Matrix; 4], b4: &[Matrix; 4]) -> RtResult<[Matrix; 4]> {
+        let bs = a4[0].rows();
+        let name = format!("{which}_bs{bs}");
+        let inputs = [stack_literal(a4)?, stack_literal(b4)?];
+        let out = self.run(&name, &inputs)?;
+        let data: Vec<f32> = out.to_vec().map_err(xerr("to_vec"))?;
+        if data.len() != 4 * bs * bs {
+            return Err(format!("{name}: expected {} floats, got {}", 4 * bs * bs, data.len()));
+        }
+        let block = |i: usize| Matrix::from_slice(bs, bs, &data[i * bs * bs..(i + 1) * bs * bs]);
+        Ok([block(0), block(1), block(2), block(3)])
+    }
+}
+
+fn vec_literal(v: &[f32; 4]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn matrix_literal(m: &Matrix) -> RtResult<xla::Literal> {
+    xla::Literal::vec1(m.as_slice())
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(xerr("reshape matrix"))
+}
+
+fn stack_literal(blocks: &[Matrix; 4]) -> RtResult<xla::Literal> {
+    let (r, c) = blocks[0].shape();
+    let mut data = Vec::with_capacity(4 * r * c);
+    for b in blocks {
+        assert_eq!(b.shape(), (r, c), "ragged block stack");
+        data.extend_from_slice(b.as_slice());
+    }
+    xla::Literal::vec1(&data)
+        .reshape(&[4, r as i64, c as i64])
+        .map_err(xerr("reshape stack"))
+}
+
+fn literal_to_matrix(lit: &xla::Literal, r: usize, c: usize) -> RtResult<Matrix> {
+    let data: Vec<f32> = lit.to_vec().map_err(xerr("to_vec"))?;
+    if data.len() != r * c {
+        return Err(format!("expected {}x{} = {} floats, got {}", r, c, r * c, data.len()));
+    }
+    Ok(Matrix::from_slice(r, c, &data))
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `artifacts/` (run `make artifacts` first); they
+    //! self-skip when the manifest is missing so `cargo test` stays green
+    //! on a fresh checkout.
+    use super::*;
+    use crate::linalg::blocked::split_blocks;
+    use crate::sim::rng::Rng;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::new(&dir).ok()
+    }
+
+    #[test]
+    fn worker_task_matches_native() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::seeded(1);
+        let bs = 32;
+        let a = Matrix::random(2 * bs, 2 * bs, &mut rng);
+        let b = Matrix::random(2 * bs, 2 * bs, &mut rng);
+        let a4 = split_blocks(&a);
+        let b4 = split_blocks(&b);
+        // S6 = (M21 - M11)(B11 + B12)
+        let got = rt
+            .worker_task(&[-1.0, 0.0, 1.0, 0.0], &a4, &[1.0, 1.0, 0.0, 0.0], &b4)
+            .unwrap();
+        let left = &a4[2] - &a4[0];
+        let right = &b4[0] + &b4[1];
+        let want = left.matmul(&right);
+        assert!(got.approx_eq(&want, 1e-4), "rel err {}", got.rel_error(&want));
+    }
+
+    #[test]
+    fn decode_combine_matches_native() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::seeded(2);
+        let bs = 32;
+        let mats: Vec<Matrix> = (0..16).map(|_| Matrix::random(bs, bs, &mut rng)).collect();
+        let mut weights = vec![0.0f32; 16];
+        weights[0] = 1.0;
+        weights[3] = -1.0;
+        weights[7] = 0.5;
+        let products: Vec<Option<&Matrix>> = mats.iter().map(Some).collect();
+        let got = rt.decode_combine(&weights, &products, bs).unwrap();
+        let mut want = Matrix::zeros(bs, bs);
+        let refs: Vec<&Matrix> = mats.iter().collect();
+        Matrix::weighted_sum_into(&mut want, &weights, &refs);
+        assert!(got.approx_eq(&want, 1e-5));
+    }
+
+    #[test]
+    fn decode_combine_multi_matches_singles() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::seeded(21);
+        let bs = 32;
+        let mats: Vec<Matrix> = (0..16).map(|_| Matrix::random(bs, bs, &mut rng)).collect();
+        let mut products: Vec<Option<&Matrix>> = mats.iter().map(Some).collect();
+        products[5] = None; // a failed worker slot
+        let mut w1 = vec![0.5f32; 16];
+        w1[5] = 0.0;
+        let mut w2 = vec![0.0f32; 16];
+        w2[0] = 1.0;
+        w2[15] = -1.0;
+        let multi = rt
+            .decode_combine_multi(&[w1.clone(), w2.clone()], &products, bs)
+            .unwrap();
+        // compare against the zero-filled single-shot path
+        let zero = Matrix::zeros(bs, bs);
+        let filled: Vec<Option<&Matrix>> = products
+            .iter()
+            .map(|p| Some(p.unwrap_or(&zero)))
+            .collect();
+        for (w, got) in [(w1, &multi[0]), (w2, &multi[1])] {
+            let want = rt.decode_combine(&w, &filled, bs).unwrap();
+            assert!(got.approx_eq(&want, 1e-5));
+        }
+    }
+
+    #[test]
+    fn matmul_and_once_paths() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::seeded(3);
+        let n = 64;
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let want = a.matmul(&b);
+        let got = rt.matmul(&a, &b).unwrap();
+        assert!(got.approx_eq(&want, 1e-4), "matmul rel {}", got.rel_error(&want));
+
+        let a4 = split_blocks(&a);
+        let b4 = split_blocks(&b);
+        let cs = rt.strassen_once(&a4, &b4).unwrap();
+        let cw = rt.winograd_once(&a4, &b4).unwrap();
+        let want4 = split_blocks(&want);
+        for i in 0..4 {
+            assert!(cs[i].approx_eq(&want4[i], 1e-4), "strassen block {i}");
+            assert!(cw[i].approx_eq(&want4[i], 1e-4), "winograd block {i}");
+        }
+    }
+
+    #[test]
+    fn warmup_caches_executables() {
+        let Some(mut rt) = runtime() else { return };
+        rt.warmup(32).unwrap();
+        assert!(rt.cached() >= 4, "cached {}", rt.cached());
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        match rt.run("does_not_exist", &[]) {
+            Ok(_) => panic!("expected error"),
+            Err(err) => assert!(err.contains("not in manifest"), "{err}"),
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the request path.
+//!
+//! The `xla` crate's PJRT handles wrap raw pointers without `Send`/`Sync`,
+//! so the runtime is owned by a dedicated **compute service thread**
+//! ([`service::ComputeService`]); worker threads hold a cheap clonable
+//! [`service::PjrtHandle`] and exchange requests/replies over channels.
+//! The CPU PJRT executor parallelizes internally, so a single service
+//! thread does not serialize the actual math.
+//!
+//! Interchange is HLO *text* (jax >= 0.5 protos use 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+//! /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifact;
+pub mod client;
+pub mod service;
+
+pub use artifact::{Manifest, DECODE_SLOTS};
+pub use client::Runtime;
+pub use service::{ComputeService, PjrtHandle};

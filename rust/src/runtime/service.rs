@@ -1,0 +1,243 @@
+//! The compute service: a dedicated thread that owns the (non-`Send`)
+//! PJRT [`Runtime`] and serves block-multiply requests from the worker
+//! pool over channels. Cloning a [`PjrtHandle`] is cheap; dropping the
+//! last handle shuts the service down.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::linalg::matrix::Matrix;
+use crate::runtime::client::Runtime;
+
+enum Request {
+    WorkerTask {
+        ca: [f32; 4],
+        a4: Box<[Matrix; 4]>,
+        cb: [f32; 4],
+        b4: Box<[Matrix; 4]>,
+        reply: Sender<Result<Matrix, String>>,
+    },
+    DecodeCombine {
+        weights: Vec<f32>,
+        products: Vec<Option<Matrix>>,
+        bs: usize,
+        reply: Sender<Result<Matrix, String>>,
+    },
+    DecodeCombineMulti {
+        weight_sets: Vec<Vec<f32>>,
+        products: Vec<Option<Matrix>>,
+        bs: usize,
+        reply: Sender<Result<Vec<Matrix>, String>>,
+    },
+    Matmul {
+        a: Matrix,
+        b: Matrix,
+        reply: Sender<Result<Matrix, String>>,
+    },
+    Platform {
+        reply: Sender<Result<String, String>>,
+    },
+}
+
+/// Clonable, `Send + Sync` front-end to the service thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Request>,
+}
+
+// `Sender<T>` is `Send` but not `Sync`; the handle is cloned per thread,
+// which is how the worker pool uses it.
+
+impl PjrtHandle {
+    fn call<T>(&self, build: impl FnOnce(Sender<Result<T, String>>) -> Request) -> Result<T, String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(build(tx))
+            .map_err(|_| "compute service is down".to_string())?;
+        rx.recv().map_err(|_| "compute service dropped request".to_string())?
+    }
+
+    /// `(Σ ca A_i)(Σ cb B_j)` on the PJRT backend.
+    pub fn worker_task(
+        &self,
+        ca: [f32; 4],
+        a4: [Matrix; 4],
+        cb: [f32; 4],
+        b4: [Matrix; 4],
+    ) -> Result<Matrix, String> {
+        self.call(|reply| Request::WorkerTask {
+            ca,
+            a4: Box::new(a4),
+            cb,
+            b4: Box::new(b4),
+            reply,
+        })
+    }
+
+    /// `Σ w[t] products[t]` on the PJRT backend.
+    pub fn decode_combine(
+        &self,
+        weights: Vec<f32>,
+        products: Vec<Option<Matrix>>,
+        bs: usize,
+    ) -> Result<Matrix, String> {
+        self.call(|reply| Request::DecodeCombine { weights, products, bs, reply })
+    }
+
+    /// All four C blocks in one round-trip (product stack sent once).
+    pub fn decode_combine_multi(
+        &self,
+        weight_sets: Vec<Vec<f32>>,
+        products: Vec<Option<Matrix>>,
+        bs: usize,
+    ) -> Result<Vec<Matrix>, String> {
+        self.call(|reply| Request::DecodeCombineMulti { weight_sets, products, bs, reply })
+    }
+
+    /// Plain matmul baseline.
+    pub fn matmul(&self, a: Matrix, b: Matrix) -> Result<Matrix, String> {
+        self.call(|reply| Request::Matmul { a, b, reply })
+    }
+
+    /// Platform description (also a liveness probe).
+    pub fn platform(&self) -> Result<String, String> {
+        self.call(|reply| Request::Platform { reply })
+    }
+}
+
+/// The service thread owner.
+#[allow(missing_debug_implementations)]
+pub struct ComputeService {
+    handle: PjrtHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Spawn the service; fails fast if the artifacts/manifest are
+    /// missing or the PJRT client cannot start.
+    pub fn spawn(artifacts_dir: &Path, warmup_sizes: &[usize]) -> Result<ComputeService, String> {
+        let (tx, rx) = channel::<Request>();
+        let dir = artifacts_dir.to_path_buf();
+        let sizes = warmup_sizes.to_vec();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || serve(dir, sizes, rx, ready_tx))
+            .map_err(|e| format!("spawn compute service: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "compute service died during init".to_string())??;
+        Ok(ComputeService { handle: PjrtHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl std::fmt::Debug for ComputeService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ComputeService")
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        // Closing our handle clone isn't enough if callers hold clones;
+        // the thread exits when ALL senders drop. We only join if the
+        // channel is already closed to avoid blocking teardown.
+        let _ = self.join.take(); // detach
+    }
+}
+
+fn serve(
+    dir: std::path::PathBuf,
+    warmup_sizes: Vec<usize>,
+    rx: Receiver<Request>,
+    ready: Sender<Result<(), String>>,
+) {
+    let mut rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    for bs in &warmup_sizes {
+        if let Err(e) = rt.warmup(*bs) {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    }
+    let _ = ready.send(Ok(()));
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::WorkerTask { ca, a4, cb, b4, reply } => {
+                let _ = reply.send(rt.worker_task(&ca, &a4, &cb, &b4));
+            }
+            Request::DecodeCombine { weights, products, bs, reply } => {
+                let refs: Vec<Option<&Matrix>> = products.iter().map(|p| p.as_ref()).collect();
+                let _ = reply.send(rt.decode_combine(&weights, &refs, bs));
+            }
+            Request::DecodeCombineMulti { weight_sets, products, bs, reply } => {
+                let refs: Vec<Option<&Matrix>> = products.iter().map(|p| p.as_ref()).collect();
+                let _ = reply.send(rt.decode_combine_multi(&weight_sets, &refs, bs));
+            }
+            Request::Matmul { a, b, reply } => {
+                let _ = reply.send(rt.matmul(&a, &b));
+            }
+            Request::Platform { reply } => {
+                let _ = reply.send(Ok(rt.platform()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blocked::split_blocks;
+    use crate::sim::rng::Rng;
+
+    fn service() -> Option<ComputeService> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ComputeService::spawn(&dir, &[32]).ok()
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_without_artifacts() {
+        let err = ComputeService::spawn(Path::new("/no/such/dir"), &[]).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn concurrent_worker_tasks_from_many_threads() {
+        let Some(svc) = service() else { return };
+        let mut rng = Rng::seeded(4);
+        let a = Matrix::random(64, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let a4 = split_blocks(&a);
+        let b4 = split_blocks(&b);
+        let want = a4[0].matmul(&b4[0]);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = svc.handle();
+                let (a4, b4, want) = (a4.clone(), b4.clone(), want.clone());
+                s.spawn(move || {
+                    let got = h
+                        .worker_task([1.0, 0.0, 0.0, 0.0], a4, [1.0, 0.0, 0.0, 0.0], b4)
+                        .unwrap();
+                    assert!(got.approx_eq(&want, 1e-4));
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn platform_probe() {
+        let Some(svc) = service() else { return };
+        let p = svc.handle().platform().unwrap();
+        assert!(p.to_lowercase().contains("cpu") || !p.is_empty());
+    }
+}

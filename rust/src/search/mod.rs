@@ -1,0 +1,24 @@
+//! Computer-aided search (the paper's Algorithm 1 and §IV analysis).
+//!
+//! Given the bilinear forms of a set of sub-matrix multiplications (e.g.
+//! the 14 products S1..S7 ∪ W1..W7), [`searchlp`] exhaustively enumerates
+//! signed combinations and classifies them:
+//!
+//! * **local computations** — combinations equal to an output target
+//!   `C_ij` (the paper's eqs. (1)-(8), Table II, and the "52 independent
+//!   relations"),
+//! * **parity candidates** — combinations equal to a *single* block
+//!   multiplication `u(M)·v(B)` (rank-1 forms), i.e. PSMMs that one extra
+//!   worker can compute (the paper's `S3 + W4 = M21(B12-B22)`).
+//!
+//! [`relations`] canonicalizes/deduplicates and measures the linear
+//! structure; [`psmm`] reproduces the paper's 2-PSMM selection.
+
+pub mod pair_explorer;
+pub mod psmm;
+pub mod relations;
+pub mod searchlp;
+
+pub use psmm::select_psmms;
+pub use relations::{independent_rank, relations_for_target};
+pub use searchlp::{search_lp, LocalRelation, ParityCandidate, SearchResult};

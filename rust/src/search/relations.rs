@@ -1,0 +1,189 @@
+//! Relation-set analysis: counts, weights, linear structure.
+//!
+//! The paper reports "52 independent relations" among the 14 joint
+//! Strassen+Winograd products and lists the extra C11 relations in its
+//! Table II. The functions here compute those summaries from the raw
+//! [`search_lp`] output so the numbers in EXPERIMENTS.md are generated,
+//! not transcribed.
+
+use crate::algebra::form::{BilinearForm, Target};
+use crate::algebra::frac::Frac;
+use crate::search::searchlp::{LocalRelation, SearchResult};
+
+/// All relations for one target, sorted by weight then lexicographically —
+/// the layout of the paper's Table II.
+pub fn relations_for_target(res: &SearchResult, t: Target) -> Vec<LocalRelation> {
+    let mut v: Vec<LocalRelation> =
+        res.relations.iter().filter(|r| r.target == t).cloned().collect();
+    v.sort_by(|a, b| a.weight().cmp(&b.weight()).then_with(|| a.terms.cmp(&b.terms)));
+    v
+}
+
+/// Linear rank of a relation set.
+///
+/// Each relation `C_t = Σ s_i P_i` is the vector `Σ s_i e_i - e_{C_t}` in
+/// ℚ^(num_products + 4); the rank bounds how many relations carry
+/// linearly independent information. For the 14-product S+W system this
+/// is 8 (= 18 symbols - joint form rank 10): the paper's "52 independent
+/// relations" are 52 *distinct* local computations spanning this
+/// 8-dimensional relation space.
+pub fn independent_rank(relations: &[LocalRelation], num_products: usize) -> usize {
+    let dim = num_products + 4;
+    let mut basis: Vec<Vec<Frac>> = Vec::new();
+    let mut rank = 0;
+    for r in relations {
+        let mut v = vec![Frac::ZERO; dim];
+        for (idx, sign) in &r.terms {
+            v[*idx] = Frac::int(*sign as i128);
+        }
+        v[num_products + r.target.index()] = Frac::int(-1);
+        // Reduce against basis (plain Gauss, small dims).
+        for b in &basis {
+            let pivot = b.iter().position(|c| !c.is_zero()).unwrap();
+            let f = v[pivot];
+            if !f.is_zero() {
+                for i in 0..dim {
+                    v[i] = v[i] - f * b[i];
+                }
+            }
+        }
+        if let Some(p) = v.iter().position(|c| !c.is_zero()) {
+            let lead = v[p];
+            for c in v.iter_mut() {
+                *c = *c / lead;
+            }
+            basis.push(v);
+            rank += 1;
+        }
+    }
+    rank
+}
+
+/// Histogram of relation weights (index = number of terms).
+pub fn weight_histogram(relations: &[LocalRelation], max_k: usize) -> Vec<usize> {
+    let mut h = vec![0usize; max_k + 1];
+    for r in relations {
+        h[r.weight()] += 1;
+    }
+    h
+}
+
+/// Pretty one-line summary per target (counts by weight).
+pub fn summarize(res: &SearchResult, max_k: usize) -> String {
+    let mut s = String::new();
+    for t in Target::ALL {
+        let rels = relations_for_target(res, t);
+        let h = weight_histogram(&rels, max_k);
+        let per_weight: Vec<String> = h
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(w, c)| format!("{c}@k={w}"))
+            .collect();
+        s.push_str(&format!(
+            "{}: {} relations ({})\n",
+            t.name(),
+            rels.len(),
+            per_weight.join(", ")
+        ));
+    }
+    s
+}
+
+/// Deduplicate relations that use the same support with globally flipped
+/// signs on a zero-sum — defensive; `search_lp` with `minimal_only`
+/// should already emit unique term lists.
+pub fn dedup(relations: &mut Vec<LocalRelation>) {
+    relations.sort_by(|a, b| {
+        (a.target.index(), &a.terms).cmp(&(b.target.index(), &b.terms))
+    });
+    relations.dedup();
+}
+
+/// Verify every relation expands to its target (defense in depth for
+/// anything that constructs relations outside `search_lp`).
+pub fn verify_all(relations: &[LocalRelation], forms: &[BilinearForm]) -> Result<(), String> {
+    for r in relations {
+        let mut sum = BilinearForm::ZERO;
+        for (idx, sign) in &r.terms {
+            if *idx >= forms.len() {
+                return Err(format!("relation {r:?} references product {idx}"));
+            }
+            sum = if *sign > 0 { sum + forms[*idx] } else { sum - forms[*idx] };
+        }
+        if sum != r.target.form() {
+            return Err(format!("relation {r:?} expands to {sum}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{strassen, winograd};
+    use crate::search::searchlp::{search_lp, SearchOptions};
+
+    fn sw_forms() -> Vec<BilinearForm> {
+        let mut f = strassen().forms();
+        f.extend(winograd().forms());
+        f
+    }
+
+    #[test]
+    fn rank_of_joint_relation_space_is_eight() {
+        let forms = sw_forms();
+        let res = search_lp(&forms, &SearchOptions { max_k: 8, ..Default::default() });
+        let rank = independent_rank(&res.relations, forms.len());
+        // 18 symbols (14 products + 4 targets), joint form rank 10
+        // -> relation space has dimension 18 - 10 = 8, and the target
+        // relations found by the search span all of it.
+        assert_eq!(rank, 8);
+    }
+
+    #[test]
+    fn strassen_only_rank_is_four() {
+        let forms = strassen().forms();
+        let res = search_lp(&forms, &SearchOptions::default());
+        // 11 symbols, form rank 7 -> 4 relations (eqs. (1)-(4)) exactly.
+        assert_eq!(independent_rank(&res.relations, 7), 4);
+        assert_eq!(res.num_relations(), 4);
+    }
+
+    #[test]
+    fn weight_histogram_counts() {
+        let res = search_lp(&strassen().forms(), &SearchOptions::default());
+        let h = weight_histogram(&res.relations, 8);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        assert_eq!(h[2], 2); // C12 = S3+S5, C21 = S2+S4
+        assert_eq!(h[4], 2); // C11, C22 with 4 terms
+    }
+
+    #[test]
+    fn verify_all_detects_corruption() {
+        let forms = sw_forms();
+        let mut res = search_lp(&forms, &SearchOptions { max_k: 4, ..Default::default() });
+        verify_all(&res.relations, &forms).unwrap();
+        res.relations[0].terms[0].1 *= -1;
+        assert!(verify_all(&res.relations, &forms).is_err());
+    }
+
+    #[test]
+    fn dedup_is_stable_noop_on_clean_output() {
+        let forms = sw_forms();
+        let res = search_lp(&forms, &SearchOptions { max_k: 5, ..Default::default() });
+        let mut rels = res.relations.clone();
+        let before = rels.len();
+        dedup(&mut rels);
+        assert_eq!(rels.len(), before, "search_lp emitted duplicates");
+    }
+
+    #[test]
+    fn summary_mentions_every_target() {
+        let res = search_lp(&sw_forms(), &SearchOptions { max_k: 5, ..Default::default() });
+        let s = summarize(&res, 5);
+        for t in ["C11", "C12", "C21", "C22"] {
+            assert!(s.contains(t), "{s}");
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Algorithm 1 (SearchLP): exhaustive enumeration of local computations
+//! and local-parity calculations.
+//!
+//! The paper's procedure iterates over all `(M choose K)` combinations of
+//! sub-matrix multiplications and all `2^K` sign patterns (the Hadamard
+//! product with `(-1)^{n_1} … (-1)^{n_K}`), keeping combinations equal to
+//! an output block (`L`, local computations) or to one multiplication
+//! (`P`, parity calculations). We implement it as a depth-first search
+//! with incremental partial sums — same enumeration order and output,
+//! ~3^M visited nodes instead of re-summing every combination from
+//! scratch.
+
+use crate::algebra::form::{BilinearForm, Target};
+
+/// A local computation: `target = Σ sign_i · forms[idx_i]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LocalRelation {
+    pub target: Target,
+    /// `(product index, ±1)`, sorted by index, at most one term per index.
+    pub terms: Vec<(usize, i32)>,
+}
+
+impl LocalRelation {
+    /// Number of participating products.
+    pub fn weight(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Render like `C11 = S1 + S4 - S5 + S7` given product names.
+    pub fn render(&self, names: &[&str]) -> String {
+        let mut s = format!("{} =", self.target.name());
+        for (i, (idx, sign)) in self.terms.iter().enumerate() {
+            if i == 0 {
+                if *sign < 0 {
+                    s.push_str(" -");
+                } else {
+                    s.push(' ');
+                }
+            } else {
+                s.push_str(if *sign < 0 { " - " } else { " + " });
+            }
+            s.push_str(names[*idx]);
+        }
+        s
+    }
+}
+
+/// A parity candidate: a combination equal to ONE block multiplication
+/// `(Σ u_p M_p)(Σ v_q B_q)` — i.e. a PSMM one extra worker could compute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParityCandidate {
+    pub terms: Vec<(usize, i32)>,
+    /// Left encoding of the equivalent single multiplication.
+    pub u: [i32; 4],
+    /// Right encoding of the equivalent single multiplication.
+    pub v: [i32; 4],
+}
+
+impl ParityCandidate {
+    pub fn form(&self) -> BilinearForm {
+        BilinearForm::from_uv(&self.u, &self.v)
+    }
+
+    pub fn render(&self, names: &[&str]) -> String {
+        let terms: Vec<String> = self
+            .terms
+            .iter()
+            .enumerate()
+            .map(|(i, (idx, sign))| {
+                let prefix = if i == 0 {
+                    if *sign < 0 { "-" } else { "" }
+                } else if *sign < 0 {
+                    " - "
+                } else {
+                    " + "
+                };
+                format!("{prefix}{}", names[*idx])
+            })
+            .collect();
+        format!("{} = {}", terms.concat(), self.form())
+    }
+}
+
+/// Output of [`search_lp`].
+#[derive(Clone, Debug, Default)]
+pub struct SearchResult {
+    pub relations: Vec<LocalRelation>,
+    pub parities: Vec<ParityCandidate>,
+}
+
+impl SearchResult {
+    /// Relations for one target, sorted by weight (shortest first).
+    pub fn for_target(&self, t: Target) -> Vec<&LocalRelation> {
+        let mut v: Vec<&LocalRelation> =
+            self.relations.iter().filter(|r| r.target == t).collect();
+        v.sort_by_key(|r| r.weight());
+        v
+    }
+
+    pub fn num_relations(&self) -> usize {
+        self.relations.len()
+    }
+}
+
+/// Options for the enumeration.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOptions {
+    /// Maximum number of combined products (the paper's K).
+    pub max_k: usize,
+    /// Keep only *minimal* relations: no nonempty proper subset of the
+    /// chosen signed terms sums to the zero form. Non-minimal relations
+    /// are paddings of shorter ones with zero-sum subsets and carry no
+    /// extra decoding power.
+    pub minimal_only: bool,
+    /// Collect parity candidates (Algorithm 1's `P` output).
+    pub collect_parities: bool,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions { max_k: 8, minimal_only: true, collect_parities: true }
+    }
+}
+
+/// Run Algorithm 1 over `forms` (the available sub-matrix multiplications).
+///
+/// Returns all local computations (combinations equal to C11/C12/C21/C22)
+/// and, if enabled, all parity candidates (combinations equal to a single
+/// rank-1 multiplication that is not itself ± one of `forms`).
+pub fn search_lp(forms: &[BilinearForm], opts: &SearchOptions) -> SearchResult {
+    let targets: Vec<(Target, BilinearForm)> =
+        Target::ALL.iter().map(|t| (*t, t.form())).collect();
+    let mut result = SearchResult::default();
+    let mut terms: Vec<(usize, i32)> = Vec::with_capacity(opts.max_k);
+    dfs(
+        forms,
+        &targets,
+        opts,
+        0,
+        BilinearForm::ZERO,
+        &mut terms,
+        &mut result,
+    );
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    forms: &[BilinearForm],
+    targets: &[(Target, BilinearForm)],
+    opts: &SearchOptions,
+    start: usize,
+    sum: BilinearForm,
+    terms: &mut Vec<(usize, i32)>,
+    out: &mut SearchResult,
+) {
+    if !terms.is_empty() {
+        classify(forms, targets, opts, &sum, terms, out);
+    }
+    if terms.len() == opts.max_k {
+        return;
+    }
+    for idx in start..forms.len() {
+        for sign in [1i32, -1] {
+            terms.push((idx, sign));
+            let next = if sign > 0 { sum + forms[idx] } else { sum - forms[idx] };
+            dfs(forms, targets, opts, idx + 1, next, terms, out);
+            terms.pop();
+        }
+    }
+}
+
+fn classify(
+    forms: &[BilinearForm],
+    targets: &[(Target, BilinearForm)],
+    opts: &SearchOptions,
+    sum: &BilinearForm,
+    terms: &[(usize, i32)],
+    out: &mut SearchResult,
+) {
+    for (t, tf) in targets {
+        if sum == tf {
+            if !opts.minimal_only || is_minimal(forms, terms) {
+                out.relations.push(LocalRelation { target: *t, terms: terms.to_vec() });
+            }
+            return; // a sum equals at most one target
+        }
+    }
+    if opts.collect_parities && terms.len() >= 2 {
+        if let Some((u, v)) = sum.rank_one_factor() {
+            // Skip sums that are just ± an existing product (those are
+            // replicas, not new parity computations).
+            let dup = forms.iter().any(|f| f == sum || *f == -*sum);
+            if !dup && (!opts.minimal_only || is_minimal(forms, terms)) {
+                out.parities.push(ParityCandidate { terms: terms.to_vec(), u, v });
+            }
+        }
+    }
+}
+
+/// No nonempty proper subset of the signed terms sums to zero.
+fn is_minimal(forms: &[BilinearForm], terms: &[(usize, i32)]) -> bool {
+    let k = terms.len();
+    if k <= 1 {
+        return true;
+    }
+    // Enumerate proper nonempty subsets; by symmetry it suffices to check
+    // subsets not containing the last element OR containing it — we check
+    // all of them (k <= max_k <= 14 and relations are short in practice).
+    for mask in 1u32..((1 << k) - 1) {
+        let mut sum = BilinearForm::ZERO;
+        for (i, (idx, sign)) in terms.iter().enumerate() {
+            if mask & (1 << i) != 0 {
+                sum = if *sign > 0 { sum + forms[*idx] } else { sum - forms[*idx] };
+            }
+        }
+        if sum.is_zero() {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{strassen, winograd};
+
+    fn sw_forms() -> Vec<BilinearForm> {
+        let mut f = strassen().forms();
+        f.extend(winograd().forms());
+        f
+    }
+
+    #[test]
+    fn finds_paper_equations_1_to_4_within_strassen() {
+        let forms = strassen().forms();
+        let res = search_lp(&forms, &SearchOptions::default());
+        // Paper eq. (1): C11 = S1 + S4 - S5 + S7.
+        let want = LocalRelation {
+            target: Target::C11,
+            terms: vec![(0, 1), (3, 1), (4, -1), (6, 1)],
+        };
+        assert!(res.relations.contains(&want), "eq (1) not found");
+        // Paper eq. (3): C21 = S2 + S4.
+        let want = LocalRelation { target: Target::C21, terms: vec![(1, 1), (3, 1)] };
+        assert!(res.relations.contains(&want), "eq (3) not found");
+    }
+
+    #[test]
+    fn strassen_alone_has_unique_decode_per_target() {
+        // Rank-7 scheme: each target has exactly ONE signed combination.
+        let forms = strassen().forms();
+        let res = search_lp(&forms, &SearchOptions { max_k: 7, ..Default::default() });
+        for t in Target::ALL {
+            assert_eq!(res.for_target(t).len(), 1, "{t}");
+        }
+    }
+
+    #[test]
+    fn finds_paper_equations_5_to_8_in_joint_set() {
+        let forms = sw_forms();
+        let res = search_lp(&forms, &SearchOptions::default());
+        // Eq. (8): C22 = S3 + S5 + W4 - W6. Indices: S3=2, S5=4, W4=10, W6=12.
+        let want = LocalRelation {
+            target: Target::C22,
+            terms: vec![(2, 1), (4, 1), (10, 1), (12, -1)],
+        };
+        assert!(res.relations.contains(&want), "eq (8) not found");
+        // Eq. (5): C11 = S2 + S4 - S6 + S7 + W4 - W6.
+        let want = LocalRelation {
+            target: Target::C11,
+            terms: vec![(1, 1), (3, 1), (5, -1), (6, 1), (10, 1), (12, -1)],
+        };
+        assert!(res.relations.contains(&want), "eq (5) not found");
+        // Eq. (6): C12 = S1 + S3 + S4 + S7 - W1 - W2.
+        let want = LocalRelation {
+            target: Target::C12,
+            terms: vec![(0, 1), (2, 1), (3, 1), (6, 1), (7, -1), (8, -1)],
+        };
+        assert!(res.relations.contains(&want), "eq (6) not found");
+    }
+
+    #[test]
+    fn finds_paper_equation_7_without_minimality_filter() {
+        // Eq. (7): C21 = S2 + S3 + S4 + S5 - W1 - W5 - W6 + W7 is NOT
+        // minimal: it is eq. (3) (C21 = S2 + S4) padded with the
+        // product-space identity S3 + S5 - W1 - W5 - W6 + W7 = 0 (the
+        // joint form rank is 10, so four such identities exist). The
+        // paper lists it anyway; the unfiltered search finds it.
+        let forms = sw_forms();
+        let res = search_lp(
+            &forms,
+            &SearchOptions { max_k: 8, minimal_only: false, collect_parities: false },
+        );
+        let want = LocalRelation {
+            target: Target::C21,
+            terms: vec![(1, 1), (2, 1), (3, 1), (4, 1), (7, -1), (11, -1), (12, -1), (13, 1)],
+        };
+        assert!(res.relations.contains(&want), "eq (7) not found");
+    }
+
+    #[test]
+    fn finds_psmm1_as_parity_candidate() {
+        // S3 + W4 = M21(B12 - B22) — the paper's 1st PSMM.
+        let forms = sw_forms();
+        let res = search_lp(&forms, &SearchOptions::default());
+        let p1_form = BilinearForm::from_uv(&[0, 0, 1, 0], &[0, 1, 0, -1]);
+        let found = res.parities.iter().any(|p| {
+            (p.form() == p1_form || p.form() == -p1_form)
+                && p.terms == vec![(2, 1), (10, 1)]
+        });
+        assert!(found, "PSMM-1 (= S3 + W4) not among parity candidates");
+    }
+
+    #[test]
+    fn every_relation_verifies_symbolically() {
+        let forms = sw_forms();
+        let res = search_lp(&forms, &SearchOptions { max_k: 6, ..Default::default() });
+        assert!(!res.relations.is_empty());
+        for r in &res.relations {
+            let mut sum = BilinearForm::ZERO;
+            for (idx, sign) in &r.terms {
+                sum = if *sign > 0 { sum + forms[*idx] } else { sum - forms[*idx] };
+            }
+            assert_eq!(sum, r.target.form(), "{r:?}");
+        }
+        for p in &res.parities {
+            let mut sum = BilinearForm::ZERO;
+            for (idx, sign) in &p.terms {
+                sum = if *sign > 0 { sum + forms[*idx] } else { sum - forms[*idx] };
+            }
+            assert_eq!(sum, p.form(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn minimality_filter_drops_padded_relations() {
+        // Non-minimal search finds strictly more relations (the shortest
+        // zero-sum identity has 6 terms, so padded relations appear from
+        // 8 terms on).
+        let forms = sw_forms();
+        let minimal = search_lp(
+            &forms,
+            &SearchOptions { max_k: 8, minimal_only: true, collect_parities: false },
+        );
+        let all = search_lp(
+            &forms,
+            &SearchOptions { max_k: 8, minimal_only: false, collect_parities: false },
+        );
+        assert!(all.num_relations() > minimal.num_relations());
+        // and every minimal relation is also in the unfiltered set
+        for r in &minimal.relations {
+            assert!(all.relations.contains(r));
+        }
+    }
+
+    #[test]
+    fn render_matches_paper_style() {
+        let forms = strassen().forms();
+        let res = search_lp(&forms, &SearchOptions::default());
+        let names = ["S1", "S2", "S3", "S4", "S5", "S6", "S7"];
+        let rendered = res.for_target(Target::C11)[0].render(&names);
+        assert_eq!(rendered, "C11 = S1 + S4 - S5 + S7");
+    }
+}

@@ -1,0 +1,76 @@
+//! The paper's failure model: each compute node independently fails to
+//! deliver its result on time with probability `p_e` (Fig. 2 x-axis).
+
+use crate::sim::rng::Rng;
+
+/// i.i.d. Bernoulli failure model over `m` nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct BernoulliFailures {
+    /// Per-node failure probability.
+    pub p_e: f64,
+    /// Number of compute nodes.
+    pub m: usize,
+}
+
+impl BernoulliFailures {
+    pub fn new(p_e: f64, m: usize) -> Self {
+        assert!((0.0..=1.0).contains(&p_e), "p_e out of range: {p_e}");
+        assert!(m <= 64, "bitmask model supports up to 64 nodes");
+        BernoulliFailures { p_e, m }
+    }
+
+    /// Sample a failure pattern as a bitmask (bit i set = node i FAILED).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let mut mask = 0u64;
+        for i in 0..self.m {
+            if rng.bernoulli(self.p_e) {
+                mask |= 1 << i;
+            }
+        }
+        mask
+    }
+
+    /// Probability of a specific pattern with `k` failures.
+    pub fn pattern_probability(&self, k: u32) -> f64 {
+        self.p_e.powi(k as i32) * (1.0 - self.p_e).powi((self.m as u32 - k) as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_respects_m() {
+        let model = BernoulliFailures::new(0.5, 10);
+        let mut rng = Rng::seeded(1);
+        for _ in 0..100 {
+            assert_eq!(model.sample(&mut rng) >> 10, 0);
+        }
+    }
+
+    #[test]
+    fn empirical_failure_rate() {
+        let model = BernoulliFailures::new(0.2, 16);
+        let mut rng = Rng::seeded(2);
+        let trials = 50_000;
+        let total: u32 = (0..trials).map(|_| model.sample(&mut rng).count_ones()).sum();
+        let rate = total as f64 / (trials as f64 * 16.0);
+        assert!((rate - 0.2).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn pattern_probabilities_sum_to_one() {
+        let model = BernoulliFailures::new(0.3, 8);
+        let total: f64 = (0u64..256)
+            .map(|mask| model.pattern_probability(mask.count_ones()))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_probability() {
+        let _ = BernoulliFailures::new(1.5, 4);
+    }
+}

@@ -1,0 +1,114 @@
+//! Straggler latency models — the paper's §V future-work extension
+//! ("more sophisticated methods such as exponential work completion
+//! time"), implemented here so the coordinator and the e2e benches can
+//! inject realistic delays rather than hard failures.
+
+use crate::sim::rng::Rng;
+
+/// Work-completion-time model for a single node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// Every node finishes after exactly `t` seconds (no stragglers).
+    Deterministic { t: f64 },
+    /// Shifted exponential: `shift + Exp(rate)` — the standard coded
+    /// computation model (Lee et al. 2016, ref. [9] of the paper).
+    ShiftedExp { shift: f64, rate: f64 },
+    /// With probability `p_slow`, multiply the base time by `factor`
+    /// (bimodal straggler model).
+    Bimodal { base: f64, p_slow: f64, factor: f64 },
+}
+
+impl LatencyModel {
+    /// Sample one node's completion time (seconds).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Deterministic { t } => t,
+            LatencyModel::ShiftedExp { shift, rate } => shift + rng.exponential(rate),
+            LatencyModel::Bimodal { base, p_slow, factor } => {
+                if rng.bernoulli(p_slow) {
+                    base * factor
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Mean completion time.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LatencyModel::Deterministic { t } => t,
+            LatencyModel::ShiftedExp { shift, rate } => shift + 1.0 / rate,
+            LatencyModel::Bimodal { base, p_slow, factor } => {
+                base * (1.0 - p_slow) + base * factor * p_slow
+            }
+        }
+    }
+}
+
+/// Sample completion times for `m` nodes.
+pub fn sample_completion_times(model: &LatencyModel, m: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..m).map(|_| model.sample(rng)).collect()
+}
+
+/// Given per-node completion times and a decodability oracle over
+/// finished-node masks, return the earliest time at which the output is
+/// decodable (`None` if it never becomes decodable, which cannot happen
+/// when the full set decodes).
+pub fn completion_time(times: &[f64], decodable: impl Fn(u64) -> bool) -> Option<f64> {
+    assert!(times.len() <= 64);
+    let mut order: Vec<usize> = (0..times.len()).collect();
+    order.sort_by(|&a, &b| times[a].total_cmp(&times[b]));
+    let mut finished = 0u64;
+    for &i in &order {
+        finished |= 1 << i;
+        if decodable(finished) {
+            return Some(times[i]);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifted_exp_mean() {
+        let m = LatencyModel::ShiftedExp { shift: 1.0, rate: 2.0 };
+        let mut rng = Rng::seeded(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| m.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - m.mean()).abs() < 0.02, "mean {mean} want {}", m.mean());
+        // shift is a hard lower bound
+        let mn = (0..1000).map(|_| m.sample(&mut rng)).fold(f64::MAX, f64::min);
+        assert!(mn >= 1.0);
+    }
+
+    #[test]
+    fn bimodal_mean() {
+        let m = LatencyModel::Bimodal { base: 1.0, p_slow: 0.1, factor: 10.0 };
+        assert!((m.mean() - 1.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_time_kth_order_statistic() {
+        // Oracle: decodable when any 3 of 5 have finished -> 3rd order stat.
+        let times = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let t = completion_time(&times, |mask| mask.count_ones() >= 3).unwrap();
+        assert_eq!(t, 3.0);
+    }
+
+    #[test]
+    fn completion_time_never() {
+        let times = [1.0, 2.0];
+        assert_eq!(completion_time(&times, |_| false), None);
+    }
+
+    #[test]
+    fn completion_time_all_needed() {
+        let times = [1.0, 9.0, 4.0];
+        let t = completion_time(&times, |mask| mask == 0b111).unwrap();
+        assert_eq!(t, 9.0);
+    }
+}

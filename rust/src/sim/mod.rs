@@ -1,0 +1,15 @@
+//! Stochastic simulation substrate: RNG, failure models, Monte Carlo.
+//!
+//! The paper evaluates with i.i.d. Bernoulli node failures (Fig. 2) and
+//! leaves latency-distribution models to future work; we implement both
+//! (`bernoulli` for the paper's model, `latency` for shifted-exponential
+//! stragglers) plus the Monte-Carlo estimator that cross-validates the
+//! analytical P_f of `coding::theory`.
+
+pub mod bernoulli;
+pub mod latency;
+pub mod montecarlo;
+pub mod rng;
+
+pub use montecarlo::MonteCarlo;
+pub use rng::Rng;

@@ -1,0 +1,124 @@
+//! Monte-Carlo estimation of reconstruction-failure probability and
+//! completion-time statistics (cross-validates `coding::theory` and
+//! generates the simulation series of Fig. 2).
+
+use crate::sim::bernoulli::BernoulliFailures;
+use crate::sim::latency::{completion_time, sample_completion_times, LatencyModel};
+use crate::sim::rng::Rng;
+
+/// Monte-Carlo engine with an explicit trial budget and seed.
+#[derive(Clone, Copy, Debug)]
+pub struct MonteCarlo {
+    pub trials: u64,
+    pub seed: u64,
+}
+
+/// Estimate with its standard error.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimate {
+    pub mean: f64,
+    pub std_err: f64,
+    pub trials: u64,
+}
+
+impl MonteCarlo {
+    pub fn new(trials: u64, seed: u64) -> Self {
+        MonteCarlo { trials, seed }
+    }
+
+    /// P(reconstruction fails) under i.i.d. Bernoulli node failures, for a
+    /// decodability oracle over *failed*-node masks.
+    ///
+    /// The oracle receives the FAILED mask (bit i set = node i failed) and
+    /// must return `true` iff the output is still decodable.
+    pub fn failure_probability(
+        &self,
+        p_e: f64,
+        m: usize,
+        decodable_with_failures: impl Fn(u64) -> bool,
+    ) -> Estimate {
+        let model = BernoulliFailures::new(p_e, m);
+        let mut rng = Rng::seeded(self.seed);
+        let mut failures = 0u64;
+        for _ in 0..self.trials {
+            let mask = model.sample(&mut rng);
+            if !decodable_with_failures(mask) {
+                failures += 1;
+            }
+        }
+        let mean = failures as f64 / self.trials as f64;
+        let std_err = (mean * (1.0 - mean) / self.trials as f64).sqrt();
+        Estimate { mean, std_err, trials: self.trials }
+    }
+
+    /// Mean time-to-decode under a latency model: nodes finish at sampled
+    /// times; the oracle receives the FINISHED mask.
+    pub fn mean_completion_time(
+        &self,
+        model: &LatencyModel,
+        m: usize,
+        decodable_with_finished: impl Fn(u64) -> bool,
+    ) -> Estimate {
+        let mut rng = Rng::seeded(self.seed);
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        let mut n = 0u64;
+        for _ in 0..self.trials {
+            let times = sample_completion_times(model, m, &mut rng);
+            if let Some(t) = completion_time(&times, &decodable_with_finished) {
+                sum += t;
+                sum_sq += t * t;
+                n += 1;
+            }
+        }
+        assert!(n > 0, "never decodable");
+        let mean = sum / n as f64;
+        let var = (sum_sq / n as f64 - mean * mean).max(0.0);
+        Estimate { mean, std_err: (var / n as f64).sqrt(), trials: n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_probability_of_trivial_oracles() {
+        let mc = MonteCarlo::new(20_000, 1);
+        // Never decodable -> P_f = 1.
+        let e = mc.failure_probability(0.1, 8, |_| false);
+        assert_eq!(e.mean, 1.0);
+        // Always decodable -> P_f = 0.
+        let e = mc.failure_probability(0.1, 8, |_| true);
+        assert_eq!(e.mean, 0.0);
+    }
+
+    #[test]
+    fn matches_binomial_for_single_node_oracle() {
+        // Oracle: decodable iff node 0 did not fail -> P_f = p_e.
+        let mc = MonteCarlo::new(100_000, 2);
+        let p_e = 0.23;
+        let e = mc.failure_probability(p_e, 8, |mask| mask & 1 == 0);
+        assert!((e.mean - p_e).abs() < 4.0 * e.std_err + 1e-3, "{e:?}");
+    }
+
+    #[test]
+    fn replication_all_nodes_needed() {
+        // 7 nodes all required: P_f = 1 - (1-p)^7.
+        let mc = MonteCarlo::new(100_000, 3);
+        let p_e = 0.1;
+        let e = mc.failure_probability(p_e, 7, |mask| mask == 0);
+        let want = 1.0 - (1.0f64 - p_e).powi(7);
+        assert!((e.mean - want).abs() < 5.0 * e.std_err, "{e:?} want {want}");
+    }
+
+    #[test]
+    fn completion_time_order_statistic_mean() {
+        // m exponential(1) nodes, need all m: E[max] = H_m.
+        let mc = MonteCarlo::new(50_000, 4);
+        let model = LatencyModel::ShiftedExp { shift: 0.0, rate: 1.0 };
+        let e = mc.mean_completion_time(&model, 5, |mask| mask == 0b11111);
+        let h5 = 1.0 + 0.5 + 1.0 / 3.0 + 0.25 + 0.2;
+        assert!((e.mean - h5).abs() < 0.05, "{e:?} want {h5}");
+    }
+}

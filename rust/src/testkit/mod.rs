@@ -1,0 +1,130 @@
+//! Minimal property-testing harness (offline substitute for `proptest`).
+//!
+//! Runs a property over many seeded random cases; on failure it reports
+//! the case index and seed so the exact input can be reproduced with
+//! `Rng::seeded(seed)`. Used by the coordinator/coding test suites for
+//! randomized invariants (routing, batching, decode state machines).
+
+use crate::sim::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: u64,
+    /// Base seed; case i uses `Rng::seeded(base_seed ^ i)`.
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, base_seed: 0x5eed_f00d }
+    }
+}
+
+/// Run `property` over `cfg.cases` seeded RNGs. The property returns
+/// `Err(msg)` to fail. Panics with the failing seed for reproduction.
+pub fn check<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed ^ case;
+        let mut rng = Rng::seeded(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property panics directly (for assert!-style
+/// bodies); the harness catches nothing, it just seeds deterministically.
+pub fn check_panics<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng),
+{
+    check(name, cfg, |rng| {
+        property(rng);
+        Ok(())
+    });
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use crate::sim::rng::Rng;
+
+    /// Random subset of 0..n as a bitmask.
+    pub fn subset_mask(rng: &mut Rng, n: usize) -> u64 {
+        assert!(n <= 64);
+        if n == 64 {
+            rng.next_u64()
+        } else {
+            rng.next_u64() & ((1u64 << n) - 1)
+        }
+    }
+
+    /// Random size in [lo, hi] (inclusive).
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Random ±1/0 coefficient vector with at least one nonzero.
+    pub fn sign_coeffs(rng: &mut Rng) -> [i32; 4] {
+        loop {
+            let mut c = [0i32; 4];
+            for x in c.iter_mut() {
+                *x = match rng.below(3) {
+                    0 => -1,
+                    1 => 0,
+                    _ => 1,
+                };
+            }
+            if c.iter().any(|&x| x != 0) {
+                return c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("count", PropConfig { cases: 10, base_seed: 1 }, |_| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("boom", PropConfig::default(), |rng| {
+            if rng.uniform() < 2.0 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_in_range() {
+        let mut rng = Rng::seeded(3);
+        for _ in 0..100 {
+            let m = gen::subset_mask(&mut rng, 16);
+            assert_eq!(m >> 16, 0);
+            let s = gen::size(&mut rng, 2, 5);
+            assert!((2..=5).contains(&s));
+            let c = gen::sign_coeffs(&mut rng);
+            assert!(c.iter().any(|&x| x != 0));
+            assert!(c.iter().all(|&x| (-1..=1).contains(&x)));
+        }
+    }
+}

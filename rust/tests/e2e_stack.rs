@@ -1,0 +1,181 @@
+//! Full-stack integration: the rust coordinator driving the AOT Pallas
+//! artifacts through PJRT (when `artifacts/` exists — run
+//! `make artifacts`), cross-checked against the native backend and dense
+//! ground truth. These are the "all layers compose" tests of
+//! EXPERIMENTS.md's e2e row.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coordinator::master::{Master, MasterConfig};
+use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::worker::{Backend, FaultPlan};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::runtime::service::ComputeService;
+use ft_strassen::sim::rng::Rng;
+
+fn pjrt_backend(bs: usize) -> Option<(Backend, ComputeService)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let svc = ComputeService::spawn(&dir, &[bs]).ok()?;
+    Some((Backend::Pjrt(svc.handle()), svc))
+}
+
+#[test]
+fn pjrt_multiply_matches_dense_no_faults() {
+    let Some((backend, _svc)) = pjrt_backend(64) else { return };
+    let mut master = Master::new(
+        TaskSet::strassen_winograd(2),
+        backend,
+        MasterConfig {
+            deadline: Duration::from_secs(30),
+            fault: FaultPlan::NONE,
+            seed: 1,
+            fallback_local: false,
+        },
+    );
+    let mut rng = Rng::seeded(11);
+    let a = Matrix::random(128, 128, &mut rng);
+    let b = Matrix::random(128, 128, &mut rng);
+    let (c, report) = master.multiply(&a, &b).unwrap();
+    let want = a.matmul(&b);
+    assert!(!report.fell_back);
+    assert!(
+        c.approx_eq(&want, 1e-3),
+        "pjrt rel err {}",
+        c.rel_error(&want)
+    );
+    master.shutdown();
+}
+
+#[test]
+fn pjrt_multiply_survives_failures_and_stragglers() {
+    let Some((backend, _svc)) = pjrt_backend(32) else { return };
+    let mut master = Master::new(
+        TaskSet::strassen_winograd(2),
+        backend,
+        MasterConfig {
+            deadline: Duration::from_secs(30),
+            fault: FaultPlan {
+                p_fail: 0.12,
+                p_straggle: 0.2,
+                delay: Duration::from_millis(50),
+            },
+            seed: 5,
+            fallback_local: true,
+        },
+    );
+    let mut rng = Rng::seeded(13);
+    let a = Matrix::random(64, 64, &mut rng);
+    let b = Matrix::random(64, 64, &mut rng);
+    let want = a.matmul(&b);
+    let mut decoded = 0;
+    for _ in 0..6 {
+        let (c, report) = master.multiply(&a, &b).unwrap();
+        assert!(c.approx_eq(&want, 1e-3), "rel {}", c.rel_error(&want));
+        decoded += (!report.fell_back) as u32;
+    }
+    assert!(decoded >= 4, "only {decoded}/6 jobs decoded");
+    master.shutdown();
+}
+
+#[test]
+fn pjrt_and_native_agree_bitwise_closely() {
+    let Some((backend, _svc)) = pjrt_backend(32) else { return };
+    let mut rng = Rng::seeded(17);
+    let a = Matrix::random(64, 64, &mut rng);
+    let b = Matrix::random(64, 64, &mut rng);
+    let cfg = MasterConfig {
+        deadline: Duration::from_secs(30),
+        fault: FaultPlan::NONE,
+        seed: 2,
+        fallback_local: false,
+    };
+    let mut mp = Master::new(TaskSet::strassen_winograd(0), backend, cfg.clone());
+    let mut mn = Master::new(TaskSet::strassen_winograd(0), Backend::Native, cfg);
+    let (cp, _) = mp.multiply(&a, &b).unwrap();
+    let (cn, _) = mn.multiply(&a, &b).unwrap();
+    // Same bilinear decode, different matmul engine: f32 rounding only.
+    assert!(cp.approx_eq(&cn, 1e-4), "rel {}", cp.rel_error(&cn));
+    mp.shutdown();
+    mn.shutdown();
+}
+
+#[test]
+fn e2e_server_workload_on_pjrt() {
+    let Some((backend, _svc)) = pjrt_backend(64) else { return };
+    let mut server = MmServer::new(
+        TaskSet::strassen_winograd(2),
+        backend,
+        ServerConfig {
+            master: MasterConfig {
+                deadline: Duration::from_secs(30),
+                fault: FaultPlan {
+                    p_fail: 0.05,
+                    p_straggle: 0.1,
+                    delay: Duration::from_millis(20),
+                },
+                seed: 3,
+                fallback_local: true,
+            },
+            queue_cap: 64,
+        },
+    );
+    let report = server.run_workload(6, 128, 23).unwrap();
+    assert_eq!(report.jobs, 6);
+    assert!(report.decoded >= 4, "decoded {}/6", report.decoded);
+    assert!(report.throughput_jobs_per_s > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_missing_block_size_degrades_to_fallback() {
+    // n = 48 -> bs = 24: no artifact exists for that block size, so every
+    // worker errors out. The master must treat backend errors as node
+    // failures and produce the correct answer via local fallback.
+    let Some((backend, _svc)) = pjrt_backend(32) else { return };
+    let mut master = Master::new(
+        TaskSet::strassen_winograd(2),
+        backend,
+        MasterConfig {
+            deadline: Duration::from_secs(5),
+            fault: FaultPlan::NONE,
+            seed: 1,
+            fallback_local: true,
+        },
+    );
+    let mut rng = Rng::seeded(41);
+    let a = Matrix::random(48, 48, &mut rng);
+    let b = Matrix::random(48, 48, &mut rng);
+    let (c, report) = master.multiply(&a, &b).unwrap();
+    assert!(report.fell_back, "no artifacts for bs=24 -> fallback");
+    assert_eq!(report.finished, 0);
+    assert!(c.approx_eq(&a.matmul(&b), 1e-4));
+    master.shutdown();
+}
+
+#[test]
+fn native_full_pipeline_large() {
+    // Hermetic large-ish e2e on the native backend (always runs).
+    let mut master = Master::new(
+        TaskSet::strassen_winograd(1),
+        Backend::Native,
+        MasterConfig {
+            deadline: Duration::from_secs(30),
+            fault: FaultPlan {
+                p_fail: 0.06,
+                p_straggle: 0.0,
+                delay: Duration::ZERO,
+            },
+            seed: 9,
+            fallback_local: true,
+        },
+    );
+    let mut rng = Rng::seeded(31);
+    let a = Matrix::random(512, 512, &mut rng);
+    let b = Matrix::random(512, 512, &mut rng);
+    let (c, _) = master.multiply(&a, &b).unwrap();
+    let want = a.matmul(&b);
+    assert!(c.approx_eq(&want, 1e-3), "rel {}", c.rel_error(&want));
+    master.shutdown();
+}
