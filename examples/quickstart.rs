@@ -40,6 +40,7 @@ fn main() {
             },
             seed: 7,
             fallback_local: true,
+            collect_all: false,
         },
     );
 

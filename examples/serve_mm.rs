@@ -1,14 +1,16 @@
 //! End-to-end driver (the EXPERIMENTS.md e2e run): serve a stream of
-//! batched matrix-multiply requests through the full stack — rust
-//! coordinator dispatching encoded block products to 16 workers running
-//! the AOT Pallas kernel through PJRT — with stragglers injected, and
-//! compare latency/throughput against 2-copy replication.
+//! multiply requests through the full stack — rust coordinator
+//! dispatching encoded block products to 16 workers running the AOT
+//! Pallas kernel through PJRT — with stragglers injected, and compare
+//! latency/throughput against 2-copy replication AND against the
+//! sequential depth-1 master (the multiplexed coordinator's win).
 //!
 //! Run (PJRT, needs `make artifacts`):
 //!   cargo run --release --example serve_mm
 //! Native fallback (no artifacts needed):
 //!   cargo run --release --example serve_mm -- --backend native
 //! Options: --jobs N --n N --p-straggle P --straggle-ms MS --p-e P
+//!          --depth D (in-flight jobs, default 4)
 
 use std::path::Path;
 use std::time::Duration;
@@ -21,6 +23,7 @@ use ft_strassen::coordinator::server::{MmServer, ServerConfig, ServerReport};
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::runtime::service::ComputeService;
 
+#[allow(clippy::too_many_arguments)]
 fn run_scheme(
     name: &str,
     set: TaskSet,
@@ -29,6 +32,7 @@ fn run_scheme(
     n: usize,
     fault: FaultPlan,
     seed: u64,
+    depth: usize,
 ) -> ServerReport {
     let mut server = MmServer::new(
         set,
@@ -39,13 +43,15 @@ fn run_scheme(
                 fault,
                 seed,
                 fallback_local: true,
+                collect_all: false,
             },
             queue_cap: 4096,
+            inflight_depth: depth,
         },
     );
     let report = server.run_workload(jobs, n, seed).expect("workload");
     println!(
-        "{:18} {:7.2} jobs/s   mean {:9.3?}  p95 {:9.3?}   decoded {}  fallback {}  mean-workers {:.1}",
+        "{:22} {:7.2} jobs/s   mean {:9.3?}  p95 {:9.3?}   decoded {}  fallback {}  mean-workers {:.1}",
         name,
         report.throughput_jobs_per_s,
         report.mean_latency,
@@ -66,6 +72,7 @@ fn main() {
     let straggle_ms = args.get_parsed_or("straggle-ms", 40u64).expect("straggle-ms");
     let p_e = args.get_parsed_or("p-e", 0.02f64).expect("p-e");
     let seed = args.get_parsed_or("seed", 1u64).expect("seed");
+    let depth = args.get_parsed_or("depth", 4usize).expect("depth").max(1);
     let backend_kind = BackendKind::parse(args.get_or("backend", "pjrt")).expect("backend");
 
     let (backend, _svc) = match backend_kind {
@@ -91,8 +98,8 @@ fn main() {
         delay: Duration::from_millis(straggle_ms),
     };
     println!(
-        "serving {jobs} jobs of {n}x{n} f32 multiply; faults: p_fail={p_e}, \
-         p_straggle={p_straggle} ({straggle_ms}ms)\n"
+        "serving {jobs} jobs of {n}x{n} f32 multiply at depth {depth}; faults: \
+         p_fail={p_e}, p_straggle={p_straggle} ({straggle_ms}ms)\n"
     );
 
     let r_sw2 = run_scheme(
@@ -103,6 +110,7 @@ fn main() {
         n,
         fault,
         seed,
+        depth,
     );
     let r_rep2 = run_scheme(
         "Strassen x2 (14)",
@@ -112,16 +120,34 @@ fn main() {
         n,
         fault,
         seed,
+        depth,
     );
     let r_rep3 = run_scheme(
         "Strassen x3 (21)",
         TaskSet::replication(&ft_strassen::algorithms::strassen(), 3),
-        backend,
+        backend.clone(),
         jobs,
         n,
         fault,
         seed,
+        depth,
     );
+    // The multiplexing win: the same scheme served sequentially (only
+    // worth running when the main runs were actually multiplexed).
+    let r_seq = if depth > 1 {
+        Some(run_scheme(
+            "S+W + 2 PSMM depth=1",
+            TaskSet::strassen_winograd(2),
+            backend,
+            jobs,
+            n,
+            fault,
+            seed,
+            1,
+        ))
+    } else {
+        None
+    };
 
     println!("\nsummary:");
     println!(
@@ -132,4 +158,12 @@ fn main() {
         "  S+W+2PSMM achieves x3-class decode rates with 16 vs 21 nodes (-24%),\n  \
          and beats x2 at equal node count class (paper's claim)."
     );
+    if let Some(r_seq) = r_seq {
+        println!(
+            "  multiplexing: depth {depth} serves {:.2} jobs/s vs {:.2} sequential ({:.2}x)",
+            r_sw2.throughput_jobs_per_s,
+            r_seq.throughput_jobs_per_s,
+            r_sw2.throughput_jobs_per_s / r_seq.throughput_jobs_per_s.max(1e-9)
+        );
+    }
 }

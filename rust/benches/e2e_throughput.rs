@@ -1,18 +1,35 @@
 //! Bench: end-to-end serving throughput/latency under stragglers for the
-//! schemes the paper compares — the systems-level counterpart of Fig. 2.
-//! Reported per scheme: jobs/s, mean and p95 latency, decode success.
+//! schemes the paper compares — the systems-level counterpart of Fig. 2 —
+//! plus the **in-flight depth sweep** of the multiplexed coordinator
+//! (depth 1 = the paper's sequential master), which appends a trajectory
+//! entry to `BENCH_e2e.json` at the repo root so throughput is trackable
+//! across PRs.
 //!
 //! Uses the native backend by default (hermetic); set FT_BENCH_PJRT=1
 //! to route worker products through the AOT Pallas artifacts.
 
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use ft_strassen::coding::scheme::TaskSet;
 use ft_strassen::coordinator::master::MasterConfig;
 use ft_strassen::coordinator::server::{MmServer, ServerConfig};
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::runtime::service::ComputeService;
+
+fn server_cfg(fault: FaultPlan, depth: usize) -> ServerConfig {
+    ServerConfig {
+        master: MasterConfig {
+            deadline: Duration::from_secs(10),
+            fault,
+            seed: 1,
+            fallback_local: true,
+            collect_all: false,
+        },
+        queue_cap: 4096,
+        inflight_depth: depth,
+    }
+}
 
 fn main() {
     let quick = std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1");
@@ -56,19 +73,9 @@ fn main() {
         ("strassen-x3 (21)", TaskSet::replication(&ft_strassen::algorithms::strassen(), 3)),
     ];
     for (name, set) in schemes {
-        let mut server = MmServer::new(
-            set,
-            backend.clone(),
-            ServerConfig {
-                master: MasterConfig {
-                    deadline: Duration::from_secs(10),
-                    fault,
-                    seed: 1,
-                    fallback_local: true,
-                },
-                queue_cap: 4096,
-            },
-        );
+        // Depth 1 keeps the scheme table comparable with the paper's
+        // sequential master; the sweep below measures multiplexing.
+        let mut server = MmServer::new(set, backend.clone(), server_cfg(fault, 1));
         let r = server.run_workload(jobs, n, 1).expect("workload");
         println!(
             "{:<20} {:>9.2} {:>12.3?} {:>12.3?} {:>9} {:>9} {:>8.1}",
@@ -97,6 +104,94 @@ fn main() {
     std::fs::write(out.join("e2e_throughput.csv"), rows).unwrap();
     println!("\nwrote target/bench_results/e2e_throughput.csv");
 
+    // --- in-flight depth sweep (the multiplexed-coordinator headline) ----
+    // Small n makes worker compute cheap, so job latency is dominated by
+    // straggler waits — exactly the regime where multiplexing pays: a
+    // waiting job's slots are free for the next jobs' items.
+    let sweep_jobs = if quick { 24 } else { 120 };
+    let sweep_n = 64usize;
+    let sweep_fault = FaultPlan {
+        p_fail: 0.02,
+        p_straggle: 0.30,
+        delay: Duration::from_millis(25),
+    };
+    println!(
+        "\ndepth sweep: sw+2psmm, {sweep_jobs} jobs of {sweep_n}x{sweep_n}, \
+         p_fail={}, p_straggle={} ({:?})",
+        sweep_fault.p_fail, sweep_fault.p_straggle, sweep_fault.delay
+    );
+    println!(
+        "{:<8} {:>9} {:>12} {:>12} {:>9} {:>9}",
+        "depth", "jobs/s", "mean", "p95", "decoded", "fallback"
+    );
+    let mut sweep: Vec<(usize, f64, u128, u128)> = Vec::new();
+    for depth in [1usize, 2, 4, 8] {
+        let mut server = MmServer::new(
+            TaskSet::strassen_winograd(2),
+            backend.clone(),
+            server_cfg(sweep_fault, depth),
+        );
+        let r = server.run_workload(sweep_jobs, sweep_n, 1).expect("sweep workload");
+        println!(
+            "{:<8} {:>9.2} {:>12.3?} {:>12.3?} {:>9} {:>9}",
+            depth,
+            r.throughput_jobs_per_s,
+            r.mean_latency,
+            r.p95_latency,
+            r.decoded,
+            r.fell_back
+        );
+        sweep.push((
+            depth,
+            r.throughput_jobs_per_s,
+            r.mean_latency.as_nanos(),
+            r.p95_latency.as_nanos(),
+        ));
+        server.shutdown();
+    }
+    let base = sweep[0].1.max(1e-9);
+    let speedup4 = sweep.iter().find(|s| s.0 == 4).map(|s| s.1 / base).unwrap_or(0.0);
+    println!("depth-4 speedup over sequential: {speedup4:.2}x");
+
+    // Append one trajectory entry to BENCH_e2e.json at the repo root.
+    let unix_time = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let depth_objs: Vec<String> = sweep
+        .iter()
+        .map(|(d, jps, mean, p95)| {
+            format!(
+                "{{\"depth\": {d}, \"jobs_per_s\": {jps:.3}, \"mean_ns\": {mean}, \"p95_ns\": {p95}}}"
+            )
+        })
+        .collect();
+    let entry = format!(
+        "{{\"unix_time\": {unix_time}, \"scheme\": \"sw+2psmm\", \"n\": {sweep_n}, \
+         \"jobs\": {sweep_jobs}, \"p_fail\": {}, \"p_straggle\": {}, \"delay_ms\": {}, \
+         \"quick\": {quick}, \"speedup_depth4_vs_1\": {speedup4:.3}, \"depths\": [{}]}}",
+        sweep_fault.p_fail,
+        sweep_fault.p_straggle,
+        sweep_fault.delay.as_millis(),
+        depth_objs.join(", ")
+    );
+    let traj = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_e2e.json");
+    let body = match std::fs::read_to_string(&traj) {
+        Ok(existing) => {
+            // The file is a JSON array, one entry per recorded run:
+            // splice the new entry before the closing bracket.
+            let trimmed = existing.trim_end();
+            match trimmed.strip_suffix(']') {
+                Some(head) if head.trim_end().ends_with('[') => format!("[\n{entry}\n]\n"),
+                Some(head) => format!("{},\n{entry}\n]\n", head.trim_end()),
+                None => format!("[\n{entry}\n]\n"), // malformed: start over
+            }
+        }
+        Err(_) => format!("[\n{entry}\n]\n"),
+    };
+    std::fs::write(&traj, body).unwrap();
+    println!("appended depth-sweep trajectory to {}", traj.display());
+
     // --- coordinator overhead microbench (native, no faults) -------------
     // n=16 makes worker compute negligible -> isolates dispatch + online
     // decode + assembly; n=256 shows the realistic mix.
@@ -118,6 +213,7 @@ fn main() {
                 fault: FaultPlan::NONE,
                 seed: 1,
                 fallback_local: false,
+                collect_all: false,
             },
         );
         runner.bench_value(&format!("master/multiply_n{n}"), || {
@@ -130,4 +226,5 @@ fn main() {
     let blocks = split_blocks(&x);
     runner.bench_value("master/join_blocks_n256", || join_blocks(&blocks));
     runner.write_csv(&out.join("coordinator_timings.csv")).unwrap();
+    runner.write_json(&out.join("coordinator_timings.json")).unwrap();
 }

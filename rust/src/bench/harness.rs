@@ -110,6 +110,35 @@ impl BenchRunner {
         })
     }
 
+    /// Write the results as a JSON array (`[{"name": ..., "mean_ns":
+    /// ...}, ...]`), the machine-readable companion of
+    /// [`Self::write_csv`] for trajectory files tracked across PRs.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "[")?;
+        for (i, r) in self.results.iter().enumerate() {
+            let comma = if i + 1 == self.results.len() { "" } else { "," };
+            writeln!(
+                f,
+                "  {{\"name\": \"{}\", \"mean_ns\": {}, \"std_ns\": {}, \"min_ns\": {}, \
+                 \"p50_ns\": {}, \"p95_ns\": {}, \"max_ns\": {}, \"iters_per_sample\": {}}}{comma}",
+                r.name.replace('"', "'"),
+                r.stats.mean.as_nanos(),
+                r.stats.std_dev.as_nanos(),
+                r.stats.min.as_nanos(),
+                r.stats.p50.as_nanos(),
+                r.stats.p95.as_nanos(),
+                r.stats.max.as_nanos(),
+                r.iters_per_sample,
+            )?;
+        }
+        writeln!(f, "]")?;
+        Ok(())
+    }
+
     /// Write `name,mean_ns,std_ns,min_ns,p50_ns,p95_ns,max_ns,iters` CSV.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
@@ -162,6 +191,22 @@ mod tests {
         let mut r = quick_runner();
         let res = r.bench_value("sum", || (0..100u64).sum::<u64>());
         assert!(res.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn json_output_is_wellformed_array() {
+        let mut r = quick_runner();
+        r.bench("a", || {});
+        r.bench("b", || {});
+        let path = std::env::temp_dir().join("ft_strassen_bench_test.json");
+        r.write_json(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.trim_start().starts_with('['));
+        assert!(content.trim_end().ends_with(']'));
+        assert!(content.contains("\"name\": \"a\""));
+        assert!(content.contains("\"mean_ns\""));
+        assert_eq!(content.matches('{').count(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -70,12 +70,21 @@ impl SpanDecoder {
     /// Solve for the decode weights over ALL tasks (zeros for unfinished).
     /// `None` if not yet decodable. One shared Gaussian elimination
     /// produces all four targets' weights (§Perf).
+    ///
+    /// The finished tasks are canonicalized (sorted, deduplicated)
+    /// before solving, so the weights are a pure function of the
+    /// finished *set* — reply arrival order (thread timing) cannot
+    /// change the assembled output. The multiplexed coordinator's
+    /// bit-reproducibility guarantees rest on this.
     pub fn solve(&self) -> Option<DecodeOutcome> {
         if !self.is_decodable() {
             return None;
         }
+        let mut finished = self.finished.clone();
+        finished.sort_unstable();
+        finished.dedup();
         let finished_forms: Vec<BilinearForm> =
-            self.finished.iter().map(|&i| self.forms[i]).collect();
+            finished.iter().map(|&i| self.forms[i]).collect();
         let target_forms: Vec<BilinearForm> =
             Target::ALL.iter().map(|t| t.form()).collect();
         let sols = crate::algebra::gauss::solve_in_span_multi(&finished_forms, &target_forms);
@@ -83,7 +92,7 @@ impl SpanDecoder {
         for t in Target::ALL {
             let w = sols[t.index()].as_ref()?;
             let mut full = vec![0.0; self.forms.len()];
-            for (pos, &task_idx) in self.finished.iter().enumerate() {
+            for (pos, &task_idx) in finished.iter().enumerate() {
                 full[task_idx] += w[pos].to_f64();
             }
             weights[t.index()] = full;
@@ -244,6 +253,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn solve_is_arrival_order_independent() {
+        let ts = TaskSet::strassen_winograd(0);
+        let mut fwd = SpanDecoder::new(&ts);
+        let mut rev = SpanDecoder::new(&ts);
+        for i in 0..14 {
+            fwd.on_finished(i);
+        }
+        for i in (0..14).rev() {
+            rev.on_finished(i);
+        }
+        assert_eq!(
+            fwd.solve().unwrap(),
+            rev.solve().unwrap(),
+            "weights must depend on the finished set, not arrival order"
+        );
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Per-job decode state machine: one [`JobState`] per in-flight multiply
+//! job, keyed by `job_id`. The scheduler routes each [`WorkerReply`] to
+//! its job's state; the job tracks an incremental [`SpanDecoder`], the
+//! finished products, and its deadline, and knows how to assemble the
+//! final C matrix once (if) the four output targets are spanned.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coding::decoder::SpanDecoder;
+use crate::coordinator::task::TaskGraph;
+use crate::coordinator::worker::{Backend, WorkerReply};
+use crate::linalg::blocked::join_blocks;
+use crate::linalg::matrix::Matrix;
+use crate::runtime::artifact::DECODE_SLOTS;
+
+/// Outcome report for one multiply job.
+#[derive(Clone, Debug)]
+pub struct MultiplyReport {
+    pub job_id: u64,
+    pub n: usize,
+    pub scheme: String,
+    /// Wall time from admission (dispatch) to completion.
+    pub elapsed: Duration,
+    /// Time from dispatch until the output became decodable.
+    pub time_to_decodable: Option<Duration>,
+    pub dispatched: usize,
+    /// Successful replies incorporated into the decode state.
+    pub finished: usize,
+    /// Faults injected at dispatch time.
+    pub injected_failures: usize,
+    pub injected_stragglers: usize,
+    /// True if the deadline passed and the master computed locally.
+    pub fell_back: bool,
+}
+
+/// One in-flight job's complete decode state.
+pub struct JobState {
+    pub job_id: u64,
+    pub n: usize,
+    /// Operand blocks, shared with the dispatched work items (no second
+    /// copy per in-flight job); the local-fallback path reassembles the
+    /// operands from these.
+    pub a4: Arc<[Matrix; 4]>,
+    pub b4: Arc<[Matrix; 4]>,
+    /// When the job was submitted (queue wait starts here).
+    pub enqueued: Instant,
+    /// When the job was admitted and its items dispatched.
+    pub started: Instant,
+    pub deadline: Instant,
+    decoder: SpanDecoder,
+    products: Vec<Option<Matrix>>,
+    pub finished: usize,
+    /// Backend errors (count as node failures for decoding).
+    pub errors: usize,
+    pub dispatched: usize,
+    pub injected_failures: usize,
+    pub injected_stragglers: usize,
+    pub time_to_decodable: Option<Duration>,
+}
+
+impl JobState {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        graph: &TaskGraph,
+        job_id: u64,
+        a4: Arc<[Matrix; 4]>,
+        b4: Arc<[Matrix; 4]>,
+        enqueued: Instant,
+        started: Instant,
+        deadline: Instant,
+        injected_failures: usize,
+        injected_stragglers: usize,
+    ) -> JobState {
+        let n = 2 * a4[0].rows();
+        JobState {
+            job_id,
+            n,
+            a4,
+            b4,
+            enqueued,
+            started,
+            deadline,
+            decoder: graph.decoder(),
+            products: vec![None; graph.num_tasks()],
+            finished: 0,
+            errors: 0,
+            dispatched: graph.num_tasks(),
+            injected_failures,
+            injected_stragglers,
+            time_to_decodable: None,
+        }
+    }
+
+    /// Replies that can still arrive (injected failures never answer).
+    pub fn expected_replies(&self) -> usize {
+        self.dispatched - self.injected_failures
+    }
+
+    /// No more replies are coming for this job.
+    pub fn all_replies_in(&self) -> bool {
+        self.finished + self.errors >= self.expected_replies()
+    }
+
+    pub fn is_decodable(&self) -> bool {
+        self.decoder.is_decodable()
+    }
+
+    /// Fold one worker reply into the decode state. Duplicate replies
+    /// for an already-recorded task are ignored.
+    pub fn on_reply(&mut self, reply: WorkerReply) {
+        debug_assert_eq!(reply.job_id, self.job_id);
+        match reply.product {
+            Ok(m) => {
+                if self.products[reply.task_id].is_some() {
+                    return;
+                }
+                self.products[reply.task_id] = Some(m);
+                self.finished += 1;
+                if self.decoder.on_finished(reply.task_id) && self.time_to_decodable.is_none() {
+                    self.time_to_decodable = Some(self.started.elapsed());
+                }
+            }
+            Err(_) => self.errors += 1,
+        }
+    }
+
+    /// Weighted-sum assembly of C from the finished products (requires
+    /// decodability). Uses the PJRT decode artifact when available,
+    /// native axpy otherwise.
+    pub fn assemble(&self, backend: &Backend) -> Result<Matrix, String> {
+        let bs = self.n / 2;
+        let outcome = self.decoder.solve().ok_or("assemble called before decodable")?;
+        let weight_sets: Vec<Vec<f32>> = (0..4)
+            .map(|t| outcome.weights[t].iter().map(|&w| w as f32).collect())
+            .collect();
+        if let (Backend::Pjrt(h), true) = (backend, self.products.len() <= DECODE_SLOTS) {
+            // One round-trip: the product stack is shipped and staged as
+            // a literal once, all four C blocks come back together.
+            let blocks = h.decode_combine_multi(weight_sets, self.products.clone(), bs)?;
+            let mut it = blocks.into_iter();
+            let four: [Matrix; 4] = std::array::from_fn(|_| it.next().unwrap());
+            return Ok(join_blocks(&four));
+        }
+        let mut blocks: Vec<Matrix> = Vec::with_capacity(4);
+        for weights in &weight_sets {
+            let mut out = Matrix::zeros(bs, bs);
+            for (i, p) in self.products.iter().enumerate() {
+                if weights[i] != 0.0 {
+                    let m = p
+                        .as_ref()
+                        .ok_or_else(|| format!("weight on unfinished task {i}"))?;
+                    out.axpy(weights[i], m);
+                }
+            }
+            blocks.push(out);
+        }
+        let mut it = blocks.into_iter();
+        let four: [Matrix; 4] = std::array::from_fn(|_| it.next().unwrap());
+        Ok(join_blocks(&four))
+    }
+
+    /// Local fallback: reassemble the operands from the shared blocks
+    /// and multiply densely (bit-identical to multiplying the original
+    /// operands — `join_blocks ∘ split_blocks` is the identity).
+    pub fn fallback_product(&self) -> Matrix {
+        join_blocks(&self.a4).matmul(&join_blocks(&self.b4))
+    }
+
+    pub fn report(&self, scheme: &str, fell_back: bool) -> MultiplyReport {
+        MultiplyReport {
+            job_id: self.job_id,
+            n: self.n,
+            scheme: scheme.to_string(),
+            elapsed: self.started.elapsed(),
+            time_to_decodable: self.time_to_decodable,
+            dispatched: self.dispatched,
+            finished: self.finished,
+            injected_failures: self.injected_failures,
+            injected_stragglers: self.injected_stragglers,
+            fell_back,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::scheme::TaskSet;
+    use crate::sim::rng::Rng;
+
+    fn reply(job_id: u64, task_id: usize, m: Matrix) -> WorkerReply {
+        WorkerReply { job_id, task_id, product: Ok(m), compute_time: Duration::ZERO }
+    }
+
+    #[test]
+    fn state_machine_tracks_decodability_and_counts() {
+        use crate::linalg::blocked::{encode_operand, split_blocks};
+        let graph = TaskGraph::new(TaskSet::strassen_winograd(2));
+        let mut rng = Rng::seeded(1);
+        let a = Matrix::random(8, 8, &mut rng);
+        let b = Matrix::random(8, 8, &mut rng);
+        let a4 = split_blocks(&a);
+        let b4 = split_blocks(&b);
+        let now = Instant::now();
+        let mut job = JobState::new(
+            &graph,
+            3,
+            Arc::new(a4.clone()),
+            Arc::new(b4.clone()),
+            now,
+            now,
+            now + Duration::from_secs(5),
+            2,
+            1,
+        );
+        assert_eq!(job.n, 8);
+        assert_eq!(job.expected_replies(), 14);
+        assert!(!job.is_decodable());
+        assert!(
+            job.fallback_product().approx_eq(&a.matmul(&b), 1e-6),
+            "fallback reassembles the operands"
+        );
+
+        for spec in &graph.specs {
+            let ica: [i32; 4] = std::array::from_fn(|i| spec.ca[i] as i32);
+            let icb: [i32; 4] = std::array::from_fn(|i| spec.cb[i] as i32);
+            let p = encode_operand(&ica, &a4).matmul(&encode_operand(&icb, &b4));
+            job.on_reply(reply(3, spec.id, p));
+        }
+        assert!(job.is_decodable());
+        assert_eq!(job.finished, 16);
+        assert!(job.time_to_decodable.is_some());
+        let c = job.assemble(&Backend::Native).unwrap();
+        assert!(c.approx_eq(&a.matmul(&b), 1e-4), "rel {}", c.rel_error(&a.matmul(&b)));
+        let r = job.report("sw+2psmm", false);
+        assert_eq!(r.dispatched, 16);
+        assert_eq!(r.injected_failures, 2);
+        assert_eq!(r.injected_stragglers, 1);
+        assert!(!r.fell_back);
+    }
+
+    fn zero_blocks(bs: usize) -> Arc<[Matrix; 4]> {
+        Arc::new(std::array::from_fn(|_| Matrix::zeros(bs, bs)))
+    }
+
+    #[test]
+    fn duplicate_replies_are_ignored() {
+        let graph = TaskGraph::new(TaskSet::strassen_winograd(0));
+        let now = Instant::now();
+        let mut job = JobState::new(
+            &graph,
+            1,
+            zero_blocks(2),
+            zero_blocks(2),
+            now,
+            now,
+            now + Duration::from_secs(1),
+            0,
+            0,
+        );
+        job.on_reply(reply(1, 0, Matrix::zeros(2, 2)));
+        job.on_reply(reply(1, 0, Matrix::zeros(2, 2)));
+        assert_eq!(job.finished, 1);
+    }
+
+    #[test]
+    fn backend_errors_count_toward_exhaustion() {
+        let graph = TaskGraph::new(TaskSet::strassen_winograd(0));
+        let now = Instant::now();
+        let mut job = JobState::new(
+            &graph,
+            1,
+            zero_blocks(2),
+            zero_blocks(2),
+            now,
+            now,
+            now + Duration::from_secs(1),
+            0,
+            0,
+        );
+        for t in 0..graph.num_tasks() {
+            job.on_reply(WorkerReply {
+                job_id: 1,
+                task_id: t,
+                product: Err("boom".into()),
+                compute_time: Duration::ZERO,
+            });
+        }
+        assert!(job.all_replies_in());
+        assert!(!job.is_decodable());
+        assert_eq!(job.errors, 14);
+    }
+}

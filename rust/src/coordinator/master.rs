@@ -1,31 +1,31 @@
 //! The master node: encode → dispatch → collect (online decode) →
-//! recover → assemble. One `Master` owns a worker pool and serves
-//! multiply jobs sequentially; the [`crate::coordinator::server`] layer
-//! batches jobs on top.
+//! recover → assemble, exactly the master-node role of the paper's
+//! Fig. 1 (plus a deadline/fallback policy the paper leaves implicit).
 //!
-//! Decode policy: an incremental [`SpanDecoder`] is updated as replies
-//! arrive; the moment the four output targets are spanned the master
-//! stops waiting (stragglers' late replies are discarded), solves the
-//! exact decode weights, and assembles the C blocks as weighted sums of
-//! the finished products — on the PJRT decode artifact when available,
-//! natively otherwise. If the deadline passes without decodability (the
-//! paper's "reconstruction failure") the master falls back to computing
-//! the product locally and flags it in the report.
+//! Since the multiplexed-scheduler refactor, `Master` is a thin
+//! sequential facade over [`crate::coordinator::scheduler::Scheduler`]
+//! at in-flight depth 1: one blocking multiply at a time, same decode
+//! state machine ([`crate::coordinator::job::JobState`]) as the
+//! concurrent server. Decode policy: an incremental `SpanDecoder` is
+//! updated as replies arrive; the moment the four output targets are
+//! spanned the master stops waiting (stragglers' late replies are
+//! discarded by the `job_id` guard), solves the exact decode weights,
+//! and assembles the C blocks as weighted sums of the finished products.
+//! If the deadline passes without decodability (the paper's
+//! "reconstruction failure") the master falls back to computing the
+//! product locally and flags it in the report.
 
-use std::sync::mpsc::channel;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coding::scheme::TaskSet;
-use crate::coordinator::task::TaskGraph;
-use crate::coordinator::worker::{Backend, FaultAction, FaultPlan, WorkItem, WorkerPool};
-use crate::linalg::blocked::{join_blocks, split_blocks};
+use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use crate::coordinator::worker::{Backend, FaultPlan};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
-use crate::runtime::artifact::DECODE_SLOTS;
-use crate::sim::rng::Rng;
 
-/// Master configuration.
+pub use crate::coordinator::job::MultiplyReport;
+
+/// Master configuration (per-job policy, shared with the scheduler).
 #[derive(Clone, Debug)]
 pub struct MasterConfig {
     /// How long to wait for worker replies before declaring failure.
@@ -37,6 +37,16 @@ pub struct MasterConfig {
     /// Compute the locally-correct answer on decode failure instead of
     /// erroring (graceful degradation).
     pub fallback_local: bool,
+    /// Wait for every live worker's reply before decoding, instead of
+    /// stopping at first decodability. The finished set then depends
+    /// only on the injected faults — not on thread timing — which makes
+    /// outputs bit-reproducible across runs and scheduler depths
+    /// (used by the verification suite; slower under stragglers). If
+    /// the deadline fires before every live reply arrived, the job
+    /// falls back locally (or errors) instead of decoding from a
+    /// timing-dependent partial set — pick a deadline well above the
+    /// straggler delay in this mode.
+    pub collect_all: bool,
 }
 
 impl Default for MasterConfig {
@@ -46,216 +56,50 @@ impl Default for MasterConfig {
             fault: FaultPlan::NONE,
             seed: 0,
             fallback_local: true,
+            collect_all: false,
         }
     }
 }
 
-/// Outcome report for one multiply job.
-#[derive(Clone, Debug)]
-pub struct MultiplyReport {
-    pub job_id: u64,
-    pub n: usize,
-    pub scheme: String,
-    /// Total wall time of the job.
-    pub elapsed: Duration,
-    /// Time from dispatch until the output became decodable.
-    pub time_to_decodable: Option<Duration>,
-    pub dispatched: usize,
-    /// Replies actually used (received before decodability).
-    pub finished: usize,
-    /// Faults injected at dispatch time.
-    pub injected_failures: usize,
-    pub injected_stragglers: usize,
-    /// True if the deadline passed and the master computed locally.
-    pub fell_back: bool,
-}
-
-/// The master node.
+/// The master node: a depth-1 scheduler serving one job at a time.
 pub struct Master {
-    graph: TaskGraph,
-    pool: WorkerPool,
-    backend: Backend,
-    cfg: MasterConfig,
-    rng: Rng,
-    next_job: u64,
+    sched: Scheduler,
+    /// Shared handle to the scheduler's metric registry.
     pub metrics: Registry,
 }
 
 impl Master {
     /// Build a master with one worker thread per task.
     pub fn new(set: TaskSet, backend: Backend, cfg: MasterConfig) -> Master {
-        let graph = TaskGraph::new(set);
-        let pool = WorkerPool::spawn(graph.num_tasks(), backend.clone());
-        let rng = Rng::seeded(cfg.seed);
-        Master {
-            graph,
-            pool,
-            backend,
-            cfg,
-            rng,
-            next_job: 0,
-            metrics: Registry::new(),
-        }
+        let sched = Scheduler::new(set, backend, SchedulerConfig { master: cfg, depth: 1 });
+        let metrics = sched.metrics.clone();
+        Master { sched, metrics }
     }
 
     pub fn scheme_name(&self) -> &str {
-        &self.graph.set.name
+        self.sched.scheme_name()
     }
 
     pub fn num_workers(&self) -> usize {
-        self.pool.size()
+        self.sched.num_workers()
     }
 
     /// Fault-tolerant multiply: `C = A · B` (square, even dimension).
+    ///
+    /// Clones the operands once to hand them to the scheduler (whose
+    /// submit queue owns its inputs); the scheduler itself keeps only
+    /// the split blocks, shared with the dispatched work items.
     pub fn multiply(&mut self, a: &Matrix, b: &Matrix) -> Result<(Matrix, MultiplyReport), String> {
-        let n = a.rows();
-        if a.shape() != (n, n) || b.shape() != (n, n) {
-            return Err(format!("square matrices required, got {:?} x {:?}", a.shape(), b.shape()));
-        }
-        if n % 2 != 0 {
-            return Err(format!("dimension must be even, got {n}"));
-        }
-        let t_start = Instant::now();
-        self.next_job += 1;
-        let job_id = self.next_job;
-
-        let a4 = Arc::new(split_blocks(a));
-        let b4 = Arc::new(split_blocks(b));
-        let (tx, rx) = channel();
-
-        // Dispatch every task with a sampled fault action.
-        let mut injected_failures = 0;
-        let mut injected_stragglers = 0;
-        for spec in &self.graph.specs {
-            let fault = self.cfg.fault.sample(&mut self.rng);
-            match fault {
-                FaultAction::Fail => injected_failures += 1,
-                FaultAction::Delay(_) => injected_stragglers += 1,
-                FaultAction::None => {}
-            }
-            self.pool.dispatch(
-                spec.id,
-                WorkItem {
-                    job_id,
-                    task_id: spec.id,
-                    ca: spec.ca,
-                    cb: spec.cb,
-                    a4: a4.clone(),
-                    b4: b4.clone(),
-                    fault,
-                    reply: tx.clone(),
-                },
-            );
-        }
-        drop(tx);
-        self.metrics.counter("jobs_dispatched").inc();
-
-        // Collect with online decoding.
-        let mut products: Vec<Option<Matrix>> = vec![None; self.graph.num_tasks()];
-        let mut decoder = self.graph.decoder();
-        let mut finished = 0usize;
-        let mut time_to_decodable = None;
-        let deadline = t_start + self.cfg.deadline;
-        while time_to_decodable.is_none() {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(reply) if reply.job_id == job_id => {
-                    match reply.product {
-                        Ok(m) => {
-                            self.metrics
-                                .histogram("worker_compute")
-                                .observe(reply.compute_time);
-                            products[reply.task_id] = Some(m);
-                            finished += 1;
-                            if decoder.on_finished(reply.task_id) {
-                                time_to_decodable = Some(t_start.elapsed());
-                            }
-                        }
-                        Err(e) => {
-                            // Backend error == node failure for decoding.
-                            self.metrics.counter("worker_errors").inc();
-                            let _ = e;
-                        }
-                    }
-                }
-                Ok(_) => {} // stale reply from a previous job's straggler
-                Err(_) => break, // timeout or all senders gone
-            }
-        }
-
-        let (c, fell_back) = if time_to_decodable.is_some() {
-            (join_blocks(&self.assemble(&decoder, &products, n / 2)?), false)
-        } else if self.cfg.fallback_local {
-            self.metrics.counter("jobs_fell_back").inc();
-            (a.matmul(b), true)
-        } else {
-            return Err(format!(
-                "job {job_id}: not decodable within deadline ({} of {} replies)",
-                finished,
-                self.graph.num_tasks()
-            ));
-        };
-
-        let report = MultiplyReport {
-            job_id,
-            n,
-            scheme: self.graph.set.name.clone(),
-            elapsed: t_start.elapsed(),
-            time_to_decodable,
-            dispatched: self.graph.num_tasks(),
-            finished,
-            injected_failures,
-            injected_stragglers,
-            fell_back,
-        };
-        self.metrics.histogram("job_latency").observe(report.elapsed);
-        Ok((c, report))
+        self.sched.submit(a.clone(), b.clone())?;
+        let mut done = self.sched.drive(1);
+        let job = done.pop().ok_or("scheduler returned no completion")?;
+        job.result
     }
 
-    /// Weighted-sum assembly of the four C blocks from finished products.
-    fn assemble(
-        &self,
-        decoder: &crate::coding::decoder::SpanDecoder,
-        products: &[Option<Matrix>],
-        bs: usize,
-    ) -> Result<[Matrix; 4], String> {
-        let outcome = decoder.solve().ok_or("assemble called before decodable")?;
-        let weight_sets: Vec<Vec<f32>> = (0..4)
-            .map(|t| outcome.weights[t].iter().map(|&w| w as f32).collect())
-            .collect();
-        if let (Backend::Pjrt(h), true) = (&self.backend, products.len() <= DECODE_SLOTS) {
-            // One round-trip: the product stack is shipped and staged as
-            // a literal once, all four C blocks come back together
-            // (previously 4 trips with a full stack clone each — §Perf).
-            let blocks =
-                h.decode_combine_multi(weight_sets, products.to_vec(), bs)?;
-            let mut it = blocks.into_iter();
-            return Ok(std::array::from_fn(|_| it.next().unwrap()));
-        }
-        let mut blocks: Vec<Matrix> = Vec::with_capacity(4);
-        for weights in &weight_sets {
-            let mut out = Matrix::zeros(bs, bs);
-            for (i, p) in products.iter().enumerate() {
-                if weights[i] != 0.0 {
-                    let m = p
-                        .as_ref()
-                        .ok_or_else(|| format!("weight on unfinished task {i}"))?;
-                    out.axpy(weights[i], m);
-                }
-            }
-            blocks.push(out);
-        }
-        let mut it = blocks.into_iter();
-        Ok(std::array::from_fn(|_| it.next().unwrap()))
-    }
-
-    /// Shut the pool down (otherwise worker threads exit when the Master
-    /// is dropped and their queues close).
+    /// Shut the pool down (otherwise worker threads exit only when the
+    /// process does).
     pub fn shutdown(self) {
-        self.pool.shutdown();
+        self.sched.shutdown();
     }
 }
 
@@ -263,6 +107,7 @@ impl Master {
 mod tests {
     use super::*;
     use crate::algorithms::strassen;
+    use crate::sim::rng::Rng;
     use crate::testkit::{check_panics, PropConfig};
 
     fn master(set: TaskSet, fault: FaultPlan, seed: u64) -> Master {
@@ -274,6 +119,7 @@ mod tests {
                 fault,
                 seed,
                 fallback_local: true,
+                collect_all: false,
             },
         )
     }
@@ -335,6 +181,7 @@ mod tests {
                 fault: FaultPlan { p_fail: 1.0, p_straggle: 0.0, delay: Duration::ZERO },
                 seed: 3,
                 fallback_local: true,
+                collect_all: false,
             },
         );
         let (a, b) = rand_pair(8, 3);
@@ -355,6 +202,7 @@ mod tests {
                 fault: FaultPlan { p_fail: 1.0, p_straggle: 0.0, delay: Duration::ZERO },
                 seed: 3,
                 fallback_local: false,
+                collect_all: false,
             },
         );
         let (a, b) = rand_pair(8, 4);
@@ -369,7 +217,7 @@ mod tests {
         let a = Matrix::zeros(8, 8);
         let b = Matrix::zeros(8, 6);
         assert!(m.multiply(&a, &b).is_err());
-        let a = Matrix::zeros(6, 6); // even required... 6 is even; use 7
+        let a = Matrix::zeros(6, 6);
         let b = Matrix::zeros(6, 6);
         assert!(m.multiply(&a, &b).is_ok());
         let a = Matrix::zeros(7, 7);
@@ -380,25 +228,24 @@ mod tests {
 
     #[test]
     fn straggler_tolerance_beats_waiting() {
-        // With S+W+2PSMM and 3 guaranteed stragglers, the master should
-        // decode from the fast 13 without waiting for the slow ones.
+        // With S+W+2PSMM and stragglers injected at p = 0.2, the master
+        // should usually decode from the fast replies without waiting
+        // out the 250 ms delay.
         let mut m = Master::new(
             TaskSet::strassen_winograd(2),
             Backend::Native,
             MasterConfig {
                 deadline: Duration::from_secs(10),
-                fault: FaultPlan::NONE,
+                fault: FaultPlan {
+                    p_fail: 0.0,
+                    p_straggle: 0.2,
+                    delay: Duration::from_millis(250),
+                },
                 seed: 5,
                 fallback_local: false,
+                collect_all: false,
             },
         );
-        // Manually mark tasks 0..3 as stragglers via a fault plan with
-        // p_straggle = 0.2: statistical check over a few jobs.
-        m.cfg.fault = FaultPlan {
-            p_fail: 0.0,
-            p_straggle: 0.2,
-            delay: Duration::from_millis(250),
-        };
         let (a, b) = rand_pair(16, 5);
         let mut fast = 0;
         for _ in 0..5 {
@@ -430,5 +277,32 @@ mod tests {
             assert!(c.approx_eq(&want, 1e-3), "rel {}", c.rel_error(&want));
         });
         m.shutdown();
+    }
+
+    #[test]
+    fn collect_all_mode_is_bit_reproducible() {
+        let make = || {
+            Master::new(
+                TaskSet::strassen_winograd(2),
+                Backend::Native,
+                MasterConfig {
+                    deadline: Duration::from_secs(10),
+                    fault: FaultPlan { p_fail: 0.2, p_straggle: 0.0, delay: Duration::ZERO },
+                    seed: 13,
+                    fallback_local: true,
+                    collect_all: true,
+                },
+            )
+        };
+        let (a, b) = rand_pair(16, 9);
+        let mut m1 = make();
+        let mut m2 = make();
+        for _ in 0..5 {
+            let (c1, _) = m1.multiply(&a, &b).unwrap();
+            let (c2, _) = m2.multiply(&a, &b).unwrap();
+            assert_eq!(c1.as_slice(), c2.as_slice(), "collect_all must be bit-exact");
+        }
+        m1.shutdown();
+        m2.shutdown();
     }
 }

@@ -1,23 +1,43 @@
 //! The distributed coordinator — the paper's system realized on a
-//! thread-per-worker pool with fault injection.
+//! shared thread-pool fleet with fault injection, serving many multiply
+//! jobs concurrently.
 //!
-//! * [`task`] — the dispatchable task graph derived from a
-//!   [`crate::coding::scheme::TaskSet`].
-//! * [`worker`] — the worker pool: each node computes exactly one encoded
-//!   block product per job, on the native or PJRT backend, with
-//!   configurable fault/straggler injection.
-//! * [`master`] — encode → dispatch → collect with an online span decoder
-//!   → recover → assemble, exactly the master-node role of the paper's
-//!   Fig. 1 (plus a deadline/fallback policy the paper leaves implicit).
-//! * [`server`] — a batched request loop over the master for serving
-//!   streams of multiply jobs, with metrics.
+//! Scheduling model (the multiplexed-coordinator refactor):
+//!
+//! * [`worker`] — the shared worker fleet: a fixed set of node threads
+//!   draining ONE work queue, so any idle slot executes the next item
+//!   regardless of which job produced it. Stragglers are modeled as
+//!   delayed replies (a delay line defers delivery without blocking the
+//!   slot); failed nodes never answer.
+//! * [`job`] — the per-job decode state machine: an incremental
+//!   `SpanDecoder`, the finished products and the deadline for one
+//!   multiply job, keyed by `job_id`.
+//! * [`scheduler`] — the job multiplexer: admits jobs up to a
+//!   configurable **in-flight depth**, samples faults at admission (in
+//!   submission order, so seeded streams are depth-invariant), routes
+//!   replies to their job by `job_id` — dropping and counting replies
+//!   for closed jobs (the cross-job leakage guard) — and **cancels**
+//!   a completed job's outstanding items so straggler-freed slots
+//!   immediately pick up the next job's work.
+//! * [`master`] — the sequential facade: encode → dispatch → collect
+//!   with online span decoding → recover → assemble, exactly the
+//!   master-node role of the paper's Fig. 1, implemented as a depth-1
+//!   scheduler.
+//! * [`server`] — the request loop: admission **backpressure** at an
+//!   outstanding-job cap, pipelined draining, latency/throughput
+//!   reports and a fleet-level metric registry (in-flight depth, slot
+//!   utilization, stale drops, cancelled items).
 
+pub mod job;
 pub mod master;
+pub mod scheduler;
 pub mod server;
 pub mod task;
 pub mod worker;
 
+pub use job::JobState;
 pub use master::{Master, MasterConfig, MultiplyReport};
+pub use scheduler::{FinishedJob, Scheduler, SchedulerConfig};
 pub use server::{MmServer, ServerConfig, ServerReport};
 pub use task::TaskGraph;
 pub use worker::{Backend, FaultPlan, WorkerPool};

@@ -1,0 +1,473 @@
+//! The job-multiplexed scheduler: many in-flight multiply jobs share one
+//! [`WorkerPool`], with admission up to a configurable depth,
+//! per-job decode state machines keyed by `job_id`, early cancellation
+//! of spanned jobs' outstanding items, and a `job_id` guard that drops
+//! (and counts) late replies from closed jobs.
+//!
+//! Determinism: faults are sampled from one scheduler-wide RNG at
+//! admission time, per job in task order, and jobs are admitted in
+//! submission order — so a seeded job stream draws the exact same fault
+//! sequence at every depth (the depth-invariance the property tests pin
+//! down; combine with [`MasterConfig::collect_all`] for bit-identical
+//! outputs).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coding::scheme::TaskSet;
+use crate::coordinator::job::{JobState, MultiplyReport};
+use crate::coordinator::master::MasterConfig;
+use crate::coordinator::task::TaskGraph;
+use crate::coordinator::worker::{Backend, FaultAction, WorkItem, WorkerPool, WorkerReply};
+use crate::linalg::blocked::split_blocks;
+use crate::linalg::matrix::Matrix;
+use crate::metrics::Registry;
+use crate::sim::rng::Rng;
+
+/// Scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Per-job policy (deadline, fault plan, seed, fallback, decode mode).
+    pub master: MasterConfig,
+    /// Maximum concurrently in-flight jobs (≥ 1).
+    pub depth: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { master: MasterConfig::default(), depth: 1 }
+    }
+}
+
+/// A completed job, in completion order.
+pub struct FinishedJob {
+    pub job_id: u64,
+    /// The product and its report, or the job-level error (only when
+    /// local fallback is disabled).
+    pub result: Result<(Matrix, MultiplyReport), String>,
+    /// Submit → completion (queue wait included).
+    pub total_latency: Duration,
+}
+
+struct Pending {
+    job_id: u64,
+    a: Matrix,
+    b: Matrix,
+    enqueued: Instant,
+}
+
+/// The multiplexed scheduler.
+pub struct Scheduler {
+    graph: TaskGraph,
+    pool: WorkerPool,
+    backend: Backend,
+    cfg: SchedulerConfig,
+    rng: Rng,
+    next_job: u64,
+    pending: VecDeque<Pending>,
+    inflight: HashMap<u64, JobState>,
+    reply_tx: Sender<WorkerReply>,
+    reply_rx: Receiver<WorkerReply>,
+    pub metrics: Registry,
+}
+
+impl Scheduler {
+    /// Build a scheduler with one worker thread per task in the set.
+    pub fn new(set: TaskSet, backend: Backend, cfg: SchedulerConfig) -> Scheduler {
+        let graph = TaskGraph::new(set);
+        let metrics = Registry::new();
+        let pool = WorkerPool::spawn(graph.num_tasks(), backend.clone(), metrics.clone());
+        let rng = Rng::seeded(cfg.master.seed);
+        let (reply_tx, reply_rx) = channel();
+        Scheduler {
+            graph,
+            pool,
+            backend,
+            cfg,
+            rng,
+            next_job: 0,
+            pending: VecDeque::new(),
+            inflight: HashMap::new(),
+            reply_tx,
+            reply_rx,
+            metrics,
+        }
+    }
+
+    pub fn scheme_name(&self) -> &str {
+        &self.graph.set.name
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Configured in-flight depth (≥ 1).
+    pub fn depth(&self) -> usize {
+        self.cfg.depth.max(1)
+    }
+
+    /// Jobs not yet completed (queued + in flight).
+    pub fn outstanding(&self) -> usize {
+        self.pending.len() + self.inflight.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Submit a multiply job `C = A · B` (square, even dimension).
+    /// Admits immediately if an in-flight slot is free.
+    pub fn submit(&mut self, a: Matrix, b: Matrix) -> Result<u64, String> {
+        let n = a.rows();
+        if a.shape() != (n, n) || b.shape() != (n, n) {
+            return Err(format!(
+                "square matrices required, got {:?} x {:?}",
+                a.shape(),
+                b.shape()
+            ));
+        }
+        if n % 2 != 0 {
+            return Err(format!("dimension must be even, got {n}"));
+        }
+        self.next_job += 1;
+        let job_id = self.next_job;
+        self.pending.push_back(Pending { job_id, a, b, enqueued: Instant::now() });
+        self.admit_ready();
+        self.update_gauges();
+        Ok(job_id)
+    }
+
+    /// Drive the scheduler until `max_jobs` complete (or nothing is
+    /// outstanding). Completions are returned in completion order, which
+    /// at depth > 1 may differ from submission order.
+    pub fn drive(&mut self, max_jobs: usize) -> Vec<FinishedJob> {
+        let mut out = Vec::new();
+        while out.len() < max_jobs && self.outstanding() > 0 {
+            let want = max_jobs - out.len();
+            let mut got = self.poll(Duration::from_millis(200), want);
+            out.append(&mut got);
+        }
+        out
+    }
+
+    /// Process events for up to `timeout`, returning at most
+    /// `max_completions` finished jobs (early-exits once reached).
+    pub fn poll(&mut self, timeout: Duration, max_completions: usize) -> Vec<FinishedJob> {
+        let mut done = Vec::new();
+        let until = Instant::now() + timeout;
+        loop {
+            self.admit_ready();
+            self.reap(&mut done, max_completions);
+            if done.len() >= max_completions || self.inflight.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            let mut wait = until - now;
+            if let Some(d) = self.inflight.values().map(|j| j.deadline).min() {
+                wait = wait.min(d.saturating_duration_since(now));
+            }
+            match self.reply_rx.recv_timeout(wait) {
+                Ok(reply) => self.on_reply(reply, &mut done),
+                Err(RecvTimeoutError::Timeout) => {} // re-check deadlines
+                Err(RecvTimeoutError::Disconnected) => break, // unreachable: we hold reply_tx
+            }
+        }
+        self.update_gauges();
+        done
+    }
+
+    /// Admit pending jobs while in-flight slots are free, in submission
+    /// order (keeps the fault-sampling RNG sequence depth-invariant).
+    fn admit_ready(&mut self) {
+        while self.inflight.len() < self.cfg.depth.max(1) {
+            let Some(p) = self.pending.pop_front() else { break };
+            self.admit(p);
+        }
+    }
+
+    fn admit(&mut self, p: Pending) {
+        let started = Instant::now();
+        let a4 = Arc::new(split_blocks(&p.a));
+        let b4 = Arc::new(split_blocks(&p.b));
+        // Sample all faults first, in task order, so the RNG stream is a
+        // pure function of the job index.
+        let faults: Vec<FaultAction> = self
+            .graph
+            .specs
+            .iter()
+            .map(|_| self.cfg.master.fault.sample(&mut self.rng))
+            .collect();
+        let mut injected_failures = 0;
+        let mut injected_stragglers = 0;
+        for (spec, fault) in self.graph.specs.iter().zip(&faults) {
+            match fault {
+                FaultAction::Fail => injected_failures += 1,
+                FaultAction::Delay(_) => injected_stragglers += 1,
+                FaultAction::None => {}
+            }
+            self.pool.submit(WorkItem {
+                job_id: p.job_id,
+                task_id: spec.id,
+                ca: spec.ca,
+                cb: spec.cb,
+                a4: a4.clone(),
+                b4: b4.clone(),
+                fault: *fault,
+                reply: self.reply_tx.clone(),
+            });
+        }
+        let job = JobState::new(
+            &self.graph,
+            p.job_id,
+            a4,
+            b4,
+            p.enqueued,
+            started,
+            started + self.cfg.master.deadline,
+            injected_failures,
+            injected_stragglers,
+        );
+        self.metrics.counter("jobs_dispatched").inc();
+        self.inflight.insert(p.job_id, job);
+    }
+
+    /// Route one reply to its job; replies for jobs that are no longer
+    /// open (completed, cancelled, or never existed) are dropped and
+    /// counted — the cross-job leakage guard.
+    fn on_reply(&mut self, reply: WorkerReply, done: &mut Vec<FinishedJob>) {
+        let job_id = reply.job_id;
+        let Some(job) = self.inflight.get_mut(&job_id) else {
+            self.metrics.counter("replies_stale_dropped").inc();
+            return;
+        };
+        match &reply.product {
+            Ok(_) => {
+                self.metrics.histogram("worker_compute").observe(reply.compute_time);
+            }
+            Err(_) => {
+                self.metrics.counter("worker_errors").inc();
+            }
+        }
+        job.on_reply(reply);
+        let decodable = job.is_decodable();
+        let collect_all = self.cfg.master.collect_all;
+        let complete = if decodable {
+            !collect_all || job.all_replies_in()
+        } else {
+            // Every possible reply is in and the span is still short:
+            // no point waiting for the deadline.
+            job.all_replies_in()
+        };
+        if complete {
+            let job = self.inflight.remove(&job_id).unwrap();
+            self.finish(job, decodable, done);
+        }
+    }
+
+    /// Complete jobs that hit their deadline or exhausted their replies,
+    /// at most up to the caller's completion budget (the rest stay in
+    /// flight and are reaped by the next poll, so `poll`'s "at most
+    /// `max_completions`" contract holds even when several deadlines
+    /// expire in the same window).
+    fn reap(&mut self, done: &mut Vec<FinishedJob>, max_completions: usize) {
+        let now = Instant::now();
+        let mut ready: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, j)| now >= j.deadline || j.all_replies_in())
+            .map(|(id, _)| *id)
+            .collect();
+        ready.sort_unstable(); // oldest job first
+        for id in ready {
+            if done.len() >= max_completions {
+                break;
+            }
+            let job = self.inflight.remove(&id).unwrap();
+            // collect_all promises a decode set that depends only on the
+            // injected faults: if the deadline fires before every live
+            // reply arrived, fall back (or error) rather than silently
+            // decoding from a timing-dependent partial set.
+            let decodable = job.is_decodable()
+                && (!self.cfg.master.collect_all || job.all_replies_in());
+            self.finish(job, decodable, done);
+        }
+    }
+
+    /// Finalize one job: cancel its outstanding items, assemble or fall
+    /// back, record metrics, free the slot (admitting the next job).
+    fn finish(&mut self, job: JobState, decodable: bool, done: &mut Vec<FinishedJob>) {
+        self.pool.revoke(job.job_id);
+        let scheme = self.graph.set.name.clone();
+        let result = if decodable {
+            match job.assemble(&self.backend) {
+                Ok(c) => Ok((c, job.report(&scheme, false))),
+                Err(e) => Err(format!("job {}: {e}", job.job_id)),
+            }
+        } else if self.cfg.master.fallback_local {
+            self.metrics.counter("jobs_fell_back").inc();
+            let c = job.fallback_product();
+            Ok((c, job.report(&scheme, true)))
+        } else {
+            Err(format!(
+                "job {}: not decodable within deadline ({} of {} replies)",
+                job.job_id, job.finished, job.dispatched
+            ))
+        };
+        if let Ok((_, report)) = &result {
+            self.metrics.histogram("job_latency").observe(report.elapsed);
+        }
+        self.metrics
+            .histogram("queue_wait")
+            .observe(job.started.duration_since(job.enqueued));
+        self.metrics.counter("jobs_completed").inc();
+        done.push(FinishedJob {
+            job_id: job.job_id,
+            result,
+            total_latency: job.enqueued.elapsed(),
+        });
+        self.admit_ready();
+    }
+
+    fn update_gauges(&self) {
+        self.metrics.gauge("inflight_jobs").set(self.inflight.len() as u64);
+        self.metrics.gauge("pending_jobs").set(self.pending.len() as u64);
+    }
+
+    /// Shut the shared pool down.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::FaultPlan;
+
+    fn cfg(depth: usize, fault: FaultPlan, seed: u64) -> SchedulerConfig {
+        SchedulerConfig {
+            master: MasterConfig {
+                deadline: Duration::from_secs(10),
+                fault,
+                seed,
+                fallback_local: true,
+                collect_all: false,
+            },
+            depth,
+        }
+    }
+
+    fn rand_pair(n: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::seeded(seed);
+        (Matrix::random(n, n, &mut rng), Matrix::random(n, n, &mut rng))
+    }
+
+    #[test]
+    fn multiple_inflight_jobs_all_correct() {
+        let mut s = Scheduler::new(
+            TaskSet::strassen_winograd(2),
+            Backend::Native,
+            cfg(4, FaultPlan::NONE, 1),
+        );
+        let mut want = Vec::new();
+        for seed in 0..6 {
+            let (a, b) = rand_pair(16, seed);
+            want.push(a.matmul(&b));
+            s.submit(a, b).unwrap();
+        }
+        assert!(s.in_flight() <= 4);
+        let mut done = s.drive(6);
+        assert_eq!(done.len(), 6);
+        done.sort_by_key(|f| f.job_id);
+        for (f, w) in done.iter().zip(&want) {
+            let (c, report) = f.result.as_ref().unwrap();
+            assert!(!report.fell_back);
+            assert!(c.approx_eq(w, 1e-4));
+        }
+        assert_eq!(s.outstanding(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn depth_is_respected_and_pending_queueing_works() {
+        let mut s = Scheduler::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            cfg(2, FaultPlan::NONE, 1),
+        );
+        for seed in 0..5 {
+            let (a, b) = rand_pair(8, seed);
+            s.submit(a, b).unwrap();
+        }
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(s.outstanding(), 5);
+        let done = s.drive(5);
+        assert_eq!(done.len(), 5);
+        s.shutdown();
+    }
+
+    #[test]
+    fn drive_returns_at_most_requested() {
+        let mut s = Scheduler::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            cfg(4, FaultPlan::NONE, 1),
+        );
+        for seed in 0..4 {
+            let (a, b) = rand_pair(8, seed);
+            s.submit(a, b).unwrap();
+        }
+        let done = s.drive(2);
+        assert_eq!(done.len(), 2);
+        assert_eq!(s.outstanding(), 2);
+        let rest = s.drive(usize::MAX);
+        assert_eq!(rest.len(), 2);
+        s.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut s = Scheduler::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            cfg(1, FaultPlan::NONE, 1),
+        );
+        assert!(s.submit(Matrix::zeros(8, 8), Matrix::zeros(8, 6)).is_err());
+        assert!(s.submit(Matrix::zeros(7, 7), Matrix::zeros(7, 7)).is_err());
+        assert!(s.submit(Matrix::zeros(6, 6), Matrix::zeros(6, 6)).is_ok());
+        assert_eq!(s.drive(1).len(), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn all_failed_job_completes_quickly_via_fallback() {
+        let mut s = Scheduler::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            cfg(
+                1,
+                FaultPlan { p_fail: 1.0, p_straggle: 0.0, delay: Duration::ZERO },
+                3,
+            ),
+        );
+        let (a, b) = rand_pair(8, 3);
+        let want = a.matmul(&b);
+        let t0 = Instant::now();
+        s.submit(a, b).unwrap();
+        let done = s.drive(1);
+        let (c, report) = done[0].result.as_ref().unwrap();
+        assert!(report.fell_back);
+        assert_eq!(report.finished, 0);
+        assert!(c.approx_eq(&want, 1e-5));
+        // Exhaustion (0 expected replies) completes well before the 10 s
+        // deadline.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        s.shutdown();
+    }
+}

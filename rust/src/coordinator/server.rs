@@ -1,39 +1,42 @@
-//! The request loop: a batched multiply server over one [`Master`].
+//! The request loop: a multiplexed multiply server over one shared
+//! worker fleet.
 //!
-//! Jobs are accepted into a FIFO queue and executed by the master; the
-//! server tracks per-job latency, throughput and fault statistics and
-//! produces the report the e2e benchmark (and `ft-strassen serve`)
-//! prints. This is the moral equivalent of the router/launcher layer of
-//! a serving system: config in, metrics out, no Python anywhere.
+//! Jobs are accepted up to an outstanding-job cap (`queue_cap`,
+//! admission backpressure) and executed by the job-multiplexed
+//! [`Scheduler`] with up to `inflight_depth` jobs in flight at once —
+//! while one job waits on its last few replies, the fleet's idle slots
+//! run the next jobs' items. The server tracks per-job latency,
+//! throughput and fault statistics and produces the report the e2e
+//! benchmark (and `ft-strassen serve`) prints. This is the moral
+//! equivalent of the router/launcher layer of a serving system: config
+//! in, metrics out, no Python anywhere.
 
-use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::coding::scheme::TaskSet;
-use crate::coordinator::master::{Master, MasterConfig, MultiplyReport};
+use crate::coordinator::master::{MasterConfig, MultiplyReport};
+use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use crate::coordinator::worker::Backend;
 use crate::linalg::matrix::Matrix;
+use crate::metrics::Registry;
 use crate::sim::rng::Rng;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub master: MasterConfig,
-    /// Maximum queued jobs before `submit` reports backpressure.
+    /// Maximum outstanding jobs (queued + in flight) before `submit`
+    /// reports backpressure.
     pub queue_cap: usize,
+    /// Maximum concurrently in-flight jobs (1 = the paper's sequential
+    /// master; larger values pipeline jobs over the shared fleet).
+    pub inflight_depth: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { master: MasterConfig::default(), queue_cap: 1024 }
+        ServerConfig { master: MasterConfig::default(), queue_cap: 1024, inflight_depth: 4 }
     }
-}
-
-/// One queued multiply job.
-pub struct Job {
-    pub id: u64,
-    pub a: Matrix,
-    pub b: Matrix,
 }
 
 /// Completed job with its report.
@@ -58,58 +61,80 @@ pub struct ServerReport {
     pub mean_finished_workers: f64,
 }
 
-/// Batched multiply server.
+/// Multiplexed multiply server.
 pub struct MmServer {
-    master: Master,
-    queue: VecDeque<(Job, Instant)>,
-    cfg: ServerConfig,
+    sched: Scheduler,
+    queue_cap: usize,
     completed_latencies: Vec<Duration>,
     decoded: usize,
     fell_back: usize,
     finished_sum: u64,
     jobs_done: usize,
-    next_id: u64,
+    /// Failed jobs (id, error) not yet collected via [`Self::take_failures`].
+    failures: Vec<(u64, String)>,
 }
 
 impl MmServer {
     pub fn new(set: TaskSet, backend: Backend, cfg: ServerConfig) -> MmServer {
         MmServer {
-            master: Master::new(set, backend, cfg.master.clone()),
-            queue: VecDeque::new(),
-            cfg,
+            sched: Scheduler::new(
+                set,
+                backend,
+                SchedulerConfig { master: cfg.master, depth: cfg.inflight_depth },
+            ),
+            queue_cap: cfg.queue_cap,
             completed_latencies: Vec::new(),
             decoded: 0,
             fell_back: 0,
             finished_sum: 0,
             jobs_done: 0,
-            next_id: 0,
+            failures: Vec::new(),
         }
     }
 
     /// Enqueue a job. Returns its id, or `Err` on backpressure.
     pub fn submit(&mut self, a: Matrix, b: Matrix) -> Result<u64, String> {
-        if self.queue.len() >= self.cfg.queue_cap {
-            return Err(format!("queue full ({} jobs)", self.cfg.queue_cap));
+        if self.sched.outstanding() >= self.queue_cap {
+            return Err(format!("queue full ({} jobs)", self.queue_cap));
         }
-        self.next_id += 1;
-        let id = self.next_id;
-        self.queue.push_back((Job { id, a, b }, Instant::now()));
-        Ok(id)
+        self.sched.submit(a, b)
     }
 
+    /// Jobs accepted but not yet completed (queued + in flight).
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.sched.outstanding()
     }
 
-    /// Run at most `max_jobs` queued jobs; returns their results.
+    /// Shared handle to the scheduler's metric registry (in-flight
+    /// depth, slot utilization, stale-reply drops, cancelled items...).
+    pub fn registry(&self) -> Registry {
+        self.sched.metrics.clone()
+    }
+
+    /// Run until up to `max_jobs` jobs complete; returns their results
+    /// in completion order. Successful jobs in a batch are always
+    /// recorded and returned, even when other jobs in the same batch
+    /// failed (possible only with `fallback_local` disabled): failures
+    /// are stashed with their job id and error for
+    /// [`Self::take_failures`] and counted in the `jobs_failed` metric.
+    /// `Err` is returned only when the batch produced no successes at
+    /// all, so completed work is never lost.
     pub fn drain(&mut self, max_jobs: usize) -> Result<Vec<Completed>, String> {
-        let mut out = Vec::new();
-        for _ in 0..max_jobs {
-            let Some((job, enqueued)) = self.queue.pop_front() else {
-                break;
+        let finished = self.sched.drive(max_jobs);
+        let mut out = Vec::with_capacity(finished.len());
+        let mut batch_first_err: Option<(u64, String)> = None;
+        for f in finished {
+            let (c, report) = match f.result {
+                Ok(ok) => ok,
+                Err(e) => {
+                    self.sched.metrics.counter("jobs_failed").inc();
+                    if batch_first_err.is_none() {
+                        batch_first_err = Some((f.job_id, e.clone()));
+                    }
+                    self.failures.push((f.job_id, e));
+                    continue;
+                }
             };
-            let (c, report) = self.master.multiply(&job.a, &job.b)?;
-            let total_latency = enqueued.elapsed();
             if report.fell_back {
                 self.fell_back += 1;
             } else {
@@ -117,25 +142,48 @@ impl MmServer {
             }
             self.finished_sum += report.finished as u64;
             self.jobs_done += 1;
-            self.completed_latencies.push(total_latency);
-            out.push(Completed { id: job.id, c, report, total_latency });
+            self.completed_latencies.push(f.total_latency);
+            out.push(Completed { id: f.job_id, c, report, total_latency: f.total_latency });
         }
-        Ok(out)
+        match batch_first_err {
+            Some((_, e)) if out.is_empty() => Err(e),
+            _ => Ok(out),
+        }
+    }
+
+    /// Drain the accumulated per-job failures (id, error). Non-empty
+    /// only when `fallback_local` is disabled.
+    pub fn take_failures(&mut self) -> Vec<(u64, String)> {
+        std::mem::take(&mut self.failures)
     }
 
     /// Convenience: run a synthetic workload of `jobs` random multiplies
-    /// of size `n`, draining as we go, and report aggregates.
+    /// of size `n`, keeping the in-flight window full, and report
+    /// aggregates. Operands are generated in submission order from the
+    /// seed, so the job stream is identical at every depth.
+    ///
+    /// Submission is windowed at the in-flight depth (closed loop), not
+    /// at `queue_cap`: jobs are only submitted when an admission slot is
+    /// free, so reported latencies measure service time rather than
+    /// synthetic backlog wait, and only `depth` jobs' operands are ever
+    /// held at once.
     pub fn run_workload(&mut self, jobs: usize, n: usize, seed: u64) -> Result<ServerReport, String> {
         let mut rng = Rng::seeded(seed);
+        let window = self.sched.depth().min(self.queue_cap.max(1));
         let t0 = Instant::now();
-        for _ in 0..jobs {
+        let mut submitted = 0usize;
+        while submitted < jobs {
+            // Closed loop: complete jobs until an in-flight slot frees up.
+            while self.sched.outstanding() >= window {
+                self.drain(1)?;
+            }
             let a = Matrix::random(n, n, &mut rng);
             let b = Matrix::random(n, n, &mut rng);
             self.submit(a, b)?;
-            // Immediate drain keeps queue depth at 1 — the paper's
-            // one-job-at-a-time master. Larger batches are exercised by
-            // the e2e bench via submit-all-then-drain.
-            self.drain(1)?;
+            submitted += 1;
+        }
+        while self.queue_depth() > 0 {
+            self.drain(usize::MAX)?;
         }
         Ok(self.report(t0.elapsed()))
     }
@@ -162,13 +210,13 @@ impl MmServer {
         }
     }
 
-    /// Metrics snapshot from the underlying master.
+    /// Metrics snapshot from the underlying scheduler.
     pub fn metrics(&self) -> String {
-        self.master.metrics.snapshot()
+        self.sched.metrics.snapshot()
     }
 
     pub fn shutdown(self) {
-        self.master.shutdown();
+        self.sched.shutdown();
     }
 }
 
@@ -178,6 +226,10 @@ mod tests {
     use crate::coordinator::worker::FaultPlan;
 
     fn server(fault: FaultPlan) -> MmServer {
+        server_at_depth(fault, 2)
+    }
+
+    fn server_at_depth(fault: FaultPlan, depth: usize) -> MmServer {
         MmServer::new(
             TaskSet::strassen_winograd(2),
             Backend::Native,
@@ -187,8 +239,10 @@ mod tests {
                     fault,
                     seed: 1,
                     fallback_local: true,
+                    collect_all: false,
                 },
                 queue_cap: 8,
+                inflight_depth: depth,
             },
         )
     }
@@ -210,7 +264,7 @@ mod tests {
     }
 
     #[test]
-    fn backpressure() {
+    fn backpressure_at_queue_cap() {
         let mut s = server(FaultPlan::NONE);
         for _ in 0..8 {
             s.submit(Matrix::zeros(4, 4), Matrix::zeros(4, 4)).unwrap();
@@ -244,11 +298,110 @@ mod tests {
     }
 
     #[test]
+    fn deep_pipeline_matches_dense_ground_truth() {
+        let mut s = server_at_depth(
+            FaultPlan { p_fail: 0.1, p_straggle: 0.2, delay: Duration::from_millis(10) },
+            4,
+        );
+        let mut rng = Rng::seeded(17);
+        let mut want = Vec::new();
+        for _ in 0..6 {
+            let a = Matrix::random(16, 16, &mut rng);
+            let b = Matrix::random(16, 16, &mut rng);
+            want.push(a.matmul(&b));
+            // queue_cap 8 >= 6: no backpressure expected
+            s.submit(a, b).unwrap();
+        }
+        let mut done = s.drain(usize::MAX).unwrap();
+        assert_eq!(done.len(), 6);
+        done.sort_by_key(|c| c.id);
+        for (d, w) in done.iter().zip(&want) {
+            assert!(d.c.approx_eq(w, 1e-4), "job {} rel {}", d.id, d.c.rel_error(w));
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn stale_straggler_replies_are_dropped_and_counted() {
+        // Regression for cross-job reply leakage: job 1's stragglers
+        // answer only after job 1 already completed (fallback at its
+        // 40 ms deadline); their late replies arrive while later jobs
+        // are open and must be dropped by the job_id guard — never
+        // spliced into another job's decode state.
+        let mut s = MmServer::new(
+            TaskSet::strassen_winograd(2),
+            Backend::Native,
+            ServerConfig {
+                master: MasterConfig {
+                    deadline: Duration::from_millis(40),
+                    fault: FaultPlan {
+                        p_fail: 0.0,
+                        p_straggle: 1.0,
+                        delay: Duration::from_millis(60),
+                    },
+                    seed: 1,
+                    fallback_local: true,
+                    collect_all: false,
+                },
+                queue_cap: 8,
+                inflight_depth: 1,
+            },
+        );
+        let mut rng = Rng::seeded(3);
+        let a = Matrix::random(8, 8, &mut rng);
+        let b = Matrix::random(8, 8, &mut rng);
+        let want = a.matmul(&b);
+        for _ in 0..3 {
+            s.submit(a.clone(), b.clone()).unwrap();
+            let done = s.drain(1).unwrap();
+            assert_eq!(done.len(), 1);
+            // All 16 replies are delayed past the deadline: every job
+            // falls back, and every job's answer is still correct.
+            assert!(done[0].report.fell_back);
+            assert!(done[0].c.approx_eq(&want, 1e-5));
+        }
+        let stale = s.registry().counter("replies_stale_dropped").get();
+        assert!(stale >= 16, "expected job 1's 16 late replies dropped, got {stale}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn drain_surfaces_failure_when_nothing_succeeded() {
+        let mut s = MmServer::new(
+            TaskSet::replication(&crate::algorithms::strassen(), 1),
+            Backend::Native,
+            ServerConfig {
+                master: MasterConfig {
+                    deadline: Duration::from_millis(200),
+                    fault: FaultPlan { p_fail: 1.0, p_straggle: 0.0, delay: Duration::ZERO },
+                    seed: 3,
+                    fallback_local: false,
+                    collect_all: false,
+                },
+                queue_cap: 8,
+                inflight_depth: 2,
+            },
+        );
+        s.submit(Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap();
+        let err = s.drain(1).unwrap_err();
+        assert!(err.contains("not decodable"), "{err}");
+        assert_eq!(s.registry().counter("jobs_failed").get(), 1);
+        let failures = s.take_failures();
+        assert_eq!(failures.len(), 1);
+        assert_eq!(failures[0].0, 1, "failed job id is retained");
+        assert!(s.take_failures().is_empty(), "take drains the buffer");
+        // A later, empty drain must not resurrect the old failure.
+        assert!(s.drain(1).unwrap().is_empty());
+        s.shutdown();
+    }
+
+    #[test]
     fn metrics_snapshot_nonempty_after_jobs() {
         let mut s = server(FaultPlan::NONE);
         s.run_workload(2, 8, 1).unwrap();
         let m = s.metrics();
         assert!(m.contains("jobs_dispatched"), "{m}");
+        assert!(m.contains("pool_items_executed"), "{m}");
         s.shutdown();
     }
 }

@@ -1,18 +1,26 @@
-//! The worker pool: one OS thread per simulated compute node.
+//! The worker fleet: a fixed set of OS threads draining one **shared**
+//! work queue, so any idle slot picks up the next item regardless of
+//! which job produced it. This is what lets the multiplexed scheduler
+//! keep the fleet busy while individual jobs wait on stragglers.
 //!
-//! Each node receives `WorkItem`s (the encoded coefficients plus shared
-//! handles to the operand blocks), computes its single block product on
-//! the configured backend, and reports back. Fault injection happens at
-//! the node, exactly like the paper's model: a failed node simply never
-//! answers; a straggler answers late.
+//! Fault injection happens at the node, exactly like the paper's model:
+//! a failed node simply never answers; a straggler answers late. A
+//! straggler is modeled as a *delayed response* (slow link / slow
+//! node-to-master path): the product is computed, handed to a delay
+//! line for deferred delivery, and the worker slot immediately picks up
+//! the next item. Revoking a job purges its still-queued items so
+//! cancelled work never occupies a slot.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::linalg::blocked::encode_operand;
 use crate::linalg::matrix::Matrix;
+use crate::metrics::{Counter, Gauge, Registry};
 use crate::runtime::service::PjrtHandle;
 use crate::sim::rng::Rng;
 
@@ -34,11 +42,11 @@ impl std::fmt::Debug for Backend {
     }
 }
 
-/// Per-dispatch fault decision (sampled by the master's fault plan).
+/// Per-dispatch fault decision (sampled by the scheduler's fault plan).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultAction {
     None,
-    /// Delay the response by this much (straggler).
+    /// Deliver the response this much later (straggler).
     Delay(Duration),
     /// Never respond (the paper's node failure).
     Fail,
@@ -90,66 +98,185 @@ pub struct WorkerReply {
     pub compute_time: Duration,
 }
 
-/// Fixed pool of worker nodes.
+struct PoolShared {
+    queue: Mutex<VecDeque<WorkItem>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+#[derive(Clone)]
+struct PoolCounters {
+    executed: Arc<Counter>,
+    faulted: Arc<Counter>,
+    revoked: Arc<Counter>,
+    busy: Arc<Gauge>,
+    queued: Arc<Gauge>,
+}
+
+/// Fixed fleet of worker nodes over one shared queue.
 pub struct WorkerPool {
-    senders: Vec<Sender<WorkItem>>,
+    shared: Arc<PoolShared>,
     handles: Vec<JoinHandle<()>>,
+    delay_tx: Option<Sender<Delayed>>,
+    delay_handle: Option<JoinHandle<()>>,
+    counters: PoolCounters,
 }
 
 impl WorkerPool {
-    /// Spawn `n` nodes on the given backend.
-    pub fn spawn(n: usize, backend: Backend) -> WorkerPool {
-        let mut senders = Vec::with_capacity(n);
+    /// Spawn `n` nodes on the given backend, recording fleet metrics
+    /// (`pool_*` counters/gauges) into `metrics`.
+    pub fn spawn(n: usize, backend: Backend, metrics: Registry) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let counters = PoolCounters {
+            executed: metrics.counter("pool_items_executed"),
+            faulted: metrics.counter("pool_items_faulted"),
+            revoked: metrics.counter("pool_items_revoked"),
+            busy: metrics.gauge("pool_busy_workers"),
+            queued: metrics.gauge("pool_queue_depth"),
+        };
+        let (delay_tx, delay_rx) = channel::<Delayed>();
+        let delay_handle = std::thread::Builder::new()
+            .name("delay-line".into())
+            .spawn(move || delay_loop(delay_rx))
+            .expect("spawn delay line");
         let mut handles = Vec::with_capacity(n);
         for node in 0..n {
-            let (tx, rx) = channel::<WorkItem>();
+            let shared = shared.clone();
             let backend = backend.clone();
+            let counters = counters.clone();
+            let delay_tx = delay_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{node}"))
-                .spawn(move || node_loop(rx, backend))
+                .spawn(move || node_loop(shared, backend, counters, delay_tx))
                 .expect("spawn worker");
-            senders.push(tx);
             handles.push(handle);
         }
-        WorkerPool { senders, handles }
+        WorkerPool {
+            shared,
+            handles,
+            delay_tx: Some(delay_tx),
+            delay_handle: Some(delay_handle),
+            counters,
+        }
     }
 
     pub fn size(&self) -> usize {
-        self.senders.len()
+        self.handles.len()
     }
 
-    /// Send one item to node `i % size`.
-    pub fn dispatch(&self, i: usize, item: WorkItem) {
-        // A dead node's channel is gone; the master treats missing
-        // replies as failures anyway, so ignore send errors.
-        let _ = self.senders[i % self.senders.len()].send(item);
+    /// Enqueue one item; any idle worker picks it up.
+    pub fn submit(&self, item: WorkItem) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(item);
+        self.counters.queued.set(q.len() as u64);
+        drop(q);
+        self.shared.available.notify_one();
     }
 
-    /// Graceful shutdown: close all queues and join.
-    pub fn shutdown(self) {
-        drop(self.senders);
-        for h in self.handles {
+    /// Cancel a job: purge its still-queued items so straggler-freed
+    /// slots immediately pick up other jobs' work. Items already being
+    /// computed (or sitting in the delay line) still produce replies;
+    /// the scheduler drops those by `job_id`. Returns the purge count.
+    pub fn revoke(&self, job_id: u64) -> usize {
+        let mut q = self.shared.queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|item| item.job_id != job_id);
+        let removed = before - q.len();
+        self.counters.queued.set(q.len() as u64);
+        drop(q);
+        if removed > 0 {
+            self.counters.revoked.add(removed as u64);
+        }
+        removed
+    }
+
+    /// Graceful shutdown: close the queue and join every thread.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // All worker-held delay senders are gone once workers joined;
+        // dropping ours lets the delay line flush and exit.
+        drop(self.delay_tx.take());
+        if let Some(h) = self.delay_handle.take() {
             let _ = h.join();
         }
     }
 }
 
-fn node_loop(rx: Receiver<WorkItem>, backend: Backend) {
-    while let Ok(item) = rx.recv() {
-        match item.fault {
-            FaultAction::Fail => continue, // silently drop (paper's model)
-            FaultAction::Delay(d) => std::thread::sleep(d),
-            FaultAction::None => {}
-        }
-        let t0 = Instant::now();
-        let product = compute(&backend, &item);
-        let reply = WorkerReply {
-            job_id: item.job_id,
-            task_id: item.task_id,
-            product,
-            compute_time: t0.elapsed(),
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // If shutdown() was not called, unblock the threads so they can
+        // exit; do not join in drop (avoids teardown hangs).
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+    }
+}
+
+fn node_loop(
+    shared: Arc<PoolShared>,
+    backend: Backend,
+    counters: PoolCounters,
+    delay_tx: Sender<Delayed>,
+) {
+    loop {
+        let item = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(item) = q.pop_front() {
+                    counters.queued.set(q.len() as u64);
+                    break Some(item);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
         };
-        let _ = item.reply.send(reply);
+        let Some(item) = item else { break };
+        counters.busy.inc();
+        process(item, &backend, &counters, &delay_tx);
+        counters.busy.dec();
+    }
+}
+
+fn process(item: WorkItem, backend: &Backend, counters: &PoolCounters, delay_tx: &Sender<Delayed>) {
+    let delay = match item.fault {
+        FaultAction::Fail => {
+            // Silently drop (the paper's model: a dead node never answers).
+            counters.faulted.inc();
+            return;
+        }
+        FaultAction::Delay(d) => Some(d),
+        FaultAction::None => None,
+    };
+    let t0 = Instant::now();
+    let product = compute(backend, &item);
+    let reply = WorkerReply {
+        job_id: item.job_id,
+        task_id: item.task_id,
+        product,
+        compute_time: t0.elapsed(),
+    };
+    counters.executed.inc();
+    match delay {
+        None => {
+            let _ = item.reply.send(reply);
+        }
+        Some(d) => {
+            // Hand off to the delay line; this slot is free again now.
+            let _ = delay_tx.send(Delayed {
+                due: Instant::now() + d,
+                reply,
+                out: item.reply,
+            });
+        }
     }
 }
 
@@ -162,7 +289,8 @@ fn compute(backend: &Backend, item: &WorkItem) -> Result<Matrix, String> {
             let right = encode_operand(&icb, &item.b4);
             Ok(left.matmul(&right))
         }
-        Backend::Pjrt(h) => h.worker_task(
+        Backend::Pjrt(h) => h.worker_task_tagged(
+            item.job_id,
             item.ca,
             (*item.a4).clone(),
             item.cb,
@@ -179,6 +307,70 @@ fn to_int(c: &[f32; 4]) -> [i32; 4] {
     out
 }
 
+// --- straggler delay line -----------------------------------------------
+
+struct Delayed {
+    due: Instant,
+    reply: WorkerReply,
+    out: Sender<WorkerReply>,
+}
+
+struct HeapEntry {
+    due: Instant,
+    seq: u64,
+    reply: WorkerReply,
+    out: Sender<WorkerReply>,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-due first.
+        other.due.cmp(&self.due).then(other.seq.cmp(&self.seq))
+    }
+}
+
+fn delay_loop(rx: Receiver<Delayed>) {
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+    let mut seq = 0u64;
+    loop {
+        let now = Instant::now();
+        while heap.peek().is_some_and(|e| e.due <= now) {
+            let e = heap.pop().unwrap();
+            let _ = e.out.send(e.reply);
+        }
+        let msg = match heap.peek() {
+            Some(e) => rx.recv_timeout(e.due.saturating_duration_since(Instant::now())),
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        };
+        match msg {
+            Ok(d) => {
+                seq += 1;
+                heap.push(HeapEntry { due: d.due, seq, reply: d.reply, out: d.out });
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // Pool is shutting down: flush what is left immediately
+                // (receivers are usually gone; send errors are fine).
+                for e in heap.into_sorted_vec() {
+                    let _ = e.out.send(e.reply);
+                }
+                return;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,25 +383,33 @@ mod tests {
         (Arc::new(split_blocks(&a)), Arc::new(split_blocks(&b)))
     }
 
+    fn item(
+        job_id: u64,
+        task_id: usize,
+        a4: &Arc<[Matrix; 4]>,
+        b4: &Arc<[Matrix; 4]>,
+        fault: FaultAction,
+        tx: &Sender<WorkerReply>,
+    ) -> WorkItem {
+        WorkItem {
+            job_id,
+            task_id,
+            ca: [1.0, 0.0, 0.0, 0.0],
+            cb: [1.0, 0.0, 0.0, 0.0],
+            a4: a4.clone(),
+            b4: b4.clone(),
+            fault,
+            reply: tx.clone(),
+        }
+    }
+
     #[test]
     fn pool_computes_products() {
-        let pool = WorkerPool::spawn(4, Backend::Native);
+        let pool = WorkerPool::spawn(4, Backend::Native, Registry::new());
         let (a4, b4) = blocks(1, 16);
         let (tx, rx) = channel();
         for task_id in 0..4 {
-            pool.dispatch(
-                task_id,
-                WorkItem {
-                    job_id: 7,
-                    task_id,
-                    ca: [1.0, 0.0, 0.0, 0.0],
-                    cb: [1.0, 0.0, 0.0, 0.0],
-                    a4: a4.clone(),
-                    b4: b4.clone(),
-                    fault: FaultAction::None,
-                    reply: tx.clone(),
-                },
-            );
+            pool.submit(item(7, task_id, &a4, &b4, FaultAction::None, &tx));
         }
         drop(tx);
         let want = a4[0].matmul(&b4[0]);
@@ -225,35 +425,11 @@ mod tests {
 
     #[test]
     fn failed_nodes_never_reply() {
-        let pool = WorkerPool::spawn(2, Backend::Native);
+        let pool = WorkerPool::spawn(2, Backend::Native, Registry::new());
         let (a4, b4) = blocks(2, 8);
         let (tx, rx) = channel();
-        pool.dispatch(
-            0,
-            WorkItem {
-                job_id: 1,
-                task_id: 0,
-                ca: [1.0; 4],
-                cb: [1.0; 4],
-                a4: a4.clone(),
-                b4: b4.clone(),
-                fault: FaultAction::Fail,
-                reply: tx.clone(),
-            },
-        );
-        pool.dispatch(
-            1,
-            WorkItem {
-                job_id: 1,
-                task_id: 1,
-                ca: [1.0; 4],
-                cb: [1.0; 4],
-                a4,
-                b4,
-                fault: FaultAction::None,
-                reply: tx.clone(),
-            },
-        );
+        pool.submit(item(1, 0, &a4, &b4, FaultAction::Fail, &tx));
+        pool.submit(item(1, 1, &a4, &b4, FaultAction::None, &tx));
         drop(tx);
         let replies: Vec<WorkerReply> = rx.iter().collect();
         assert_eq!(replies.len(), 1);
@@ -262,27 +438,40 @@ mod tests {
     }
 
     #[test]
-    fn stragglers_reply_late() {
-        let pool = WorkerPool::spawn(1, Backend::Native);
+    fn stragglers_reply_late_without_blocking_the_slot() {
+        let pool = WorkerPool::spawn(1, Backend::Native, Registry::new());
         let (a4, b4) = blocks(3, 8);
         let (tx, rx) = channel();
         let t0 = Instant::now();
-        pool.dispatch(
-            0,
-            WorkItem {
-                job_id: 1,
-                task_id: 0,
-                ca: [1.0, 0.0, 0.0, 0.0],
-                cb: [1.0, 0.0, 0.0, 0.0],
-                a4,
-                b4,
-                fault: FaultAction::Delay(Duration::from_millis(30)),
-                reply: tx,
-            },
-        );
-        let reply = rx.recv().unwrap();
-        assert!(t0.elapsed() >= Duration::from_millis(30));
-        assert!(reply.product.is_ok());
+        pool.submit(item(1, 0, &a4, &b4, FaultAction::Delay(Duration::from_millis(40)), &tx));
+        // The single slot is NOT blocked by the straggler: a second,
+        // undelayed item must come back first.
+        pool.submit(item(1, 1, &a4, &b4, FaultAction::None, &tx));
+        drop(tx);
+        let first = rx.recv().unwrap();
+        assert_eq!(first.task_id, 1, "undelayed item should arrive first");
+        let second = rx.recv().unwrap();
+        assert_eq!(second.task_id, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        assert!(second.product.is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn revoke_purges_queued_items() {
+        // Zero workers: everything stays queued, so revocation is exact.
+        let metrics = Registry::new();
+        let pool = WorkerPool::spawn(0, Backend::Native, metrics.clone());
+        let (a4, b4) = blocks(4, 8);
+        let (tx, _rx) = channel();
+        for task_id in 0..3 {
+            pool.submit(item(9, task_id, &a4, &b4, FaultAction::None, &tx));
+        }
+        pool.submit(item(10, 0, &a4, &b4, FaultAction::None, &tx));
+        assert_eq!(pool.revoke(9), 3);
+        assert_eq!(metrics.counter("pool_items_revoked").get(), 3);
+        assert_eq!(metrics.gauge("pool_queue_depth").get(), 1);
+        assert_eq!(pool.revoke(9), 0, "idempotent");
         pool.shutdown();
     }
 

@@ -10,12 +10,38 @@
 //!
 //! Three-layer architecture (see `DESIGN.md`):
 //! * **L1** — Pallas block-matmul / encode kernels (build-time Python),
-//! * **L2** — JAX graphs lowered AOT to HLO text in `artifacts/`,
+//! * **L2** — JAX graphs lowered AOT to HLO text in `artifacts/`
+//!   (executed through PJRT when built with the `pjrt` feature),
 //! * **L3** — this crate: the coordinator, the fault-tolerance coding
 //!   layer, the computer-aided search of the paper's Algorithm 1, the
 //!   analytical + Monte-Carlo evaluation (Fig. 2), and a PJRT runtime
 //!   that executes the AOT artifacts on the request path with **no
 //!   Python anywhere at runtime**.
+//!
+//! ## Serving model (the multiplexed coordinator)
+//!
+//! The coordinator treats the worker fleet as a **shared resource under
+//! continuous load**, not a per-job appendage:
+//!
+//! * a single shared [`coordinator::WorkerPool`] drains one work queue —
+//!   any idle node slot executes the next item from *any* job;
+//! * each multiply job is a per-job decode state machine
+//!   ([`coordinator::JobState`], keyed by `job_id`) fed by the
+//!   job-multiplexed [`coordinator::Scheduler`];
+//! * [`coordinator::MmServer`] admits jobs up to a configurable
+//!   **in-flight depth** and reports **backpressure** once the
+//!   outstanding-job cap is hit (`submit` returns queue-full);
+//! * once a job's four output targets are spanned, its outstanding
+//!   items are **cancelled** (queued items revoked; late replies
+//!   dropped — and counted — by the `job_id` guard), so straggler-freed
+//!   slots immediately pick up the next job's items.
+//!
+//! With stragglers injected, depth ≥ 4 serving more than doubles the
+//! jobs/s of the sequential depth-1 master on the paper's 16-node
+//! configuration (see `benches/e2e_throughput.rs`, which emits the
+//! `BENCH_e2e.json` trajectory), while depth-1 outputs remain
+//! bit-identical to the sequential [`coordinator::Master`] on seeded
+//! job streams (`tests/multiplex.rs`).
 //!
 //! Quick taste (pure-Rust backend, no artifacts needed):
 //! ```no_run
@@ -51,6 +77,8 @@ pub mod prelude {
     pub use crate::coding::scheme::TaskSet;
     pub use crate::coding::theory::{failure_probability, replication_fc};
     pub use crate::coordinator::master::{Master, MasterConfig};
+    pub use crate::coordinator::scheduler::{FinishedJob, Scheduler, SchedulerConfig};
+    pub use crate::coordinator::server::{MmServer, ServerConfig};
     pub use crate::coordinator::worker::{Backend, FaultPlan};
     pub use crate::linalg::matrix::Matrix;
     pub use crate::search::searchlp::{search_lp, SearchResult};

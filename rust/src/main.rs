@@ -43,12 +43,19 @@ subcommands:
   fig2     [--trials N] [--out D]  regenerate Fig. 2 (CSV + ASCII)
   multiply [--n N] [--scheme S] [--backend B] [--p-e P]
   serve    [--jobs J] [--n N] [--scheme S] [--backend B] [--p-straggle P]
+           [--depth D] [--queue-cap Q]
 
 common options:
   --config FILE                  TOML config (CLI overrides it)
   --scheme S                     strassen-x1|x2|x3, winograd-x1, sw+{0,1,2}psmm
   --backend B                    native | pjrt
   --artifacts DIR                artifact directory (default: artifacts)
+
+serve options:
+  --depth D                      max in-flight jobs (default 4; 1 = the
+                                 paper's sequential one-job-at-a-time master)
+  --queue-cap Q                  outstanding-job cap before submit reports
+                                 backpressure (default 4096)
 ";
 
 fn main() {
@@ -291,6 +298,7 @@ fn cmd_multiply(args: &Args) -> Result<(), String> {
             },
             seed: cfg.seed,
             fallback_local: true,
+            collect_all: false,
         },
     );
     let (c, report) = master.multiply(&a, &b)?;
@@ -320,6 +328,14 @@ fn cmd_multiply(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let jobs = args.get_parsed_or("jobs", 32usize).map_err(|e| e.to_string())?;
+    let depth = args.get_parsed_or("depth", 4usize).map_err(|e| e.to_string())?;
+    let queue_cap = args.get_parsed_or("queue-cap", 4096usize).map_err(|e| e.to_string())?;
+    if depth == 0 {
+        return Err("--depth must be >= 1".into());
+    }
+    if queue_cap == 0 {
+        return Err("--queue-cap must be >= 1".into());
+    }
     let (backend, _svc) = backend_for(&cfg)?;
     let mut server = MmServer::new(
         cfg.scheme.task_set(),
@@ -334,13 +350,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 },
                 seed: cfg.seed,
                 fallback_local: true,
+                collect_all: false,
             },
-            queue_cap: 4096,
+            queue_cap,
+            inflight_depth: depth,
         },
     );
     let report = server.run_workload(jobs, cfg.n, cfg.seed)?;
     println!(
-        "scheme={} n={} jobs={}: {:.2} jobs/s, mean latency {:?}, p95 {:?}",
+        "scheme={} n={} jobs={} depth={depth}: {:.2} jobs/s, mean latency {:?}, p95 {:?}",
         cfg.scheme.display_name(),
         cfg.n,
         report.jobs,

@@ -52,6 +52,18 @@ impl Gauge {
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
     }
+
+    /// Increment (for occupancy-style gauges, e.g. busy workers).
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (never wraps below zero).
+    pub fn dec(&self) {
+        let _ = self
+            .value
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
 }
 
 /// Histogram with base-2 log buckets over microseconds: bucket i counts
@@ -211,6 +223,14 @@ mod tests {
         let g = r.gauge("queue_depth");
         g.set(17);
         assert_eq!(r.gauge("queue_depth").get(), 17);
+        g.inc();
+        assert_eq!(g.get(), 18);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 16);
+        g.set(0);
+        g.dec();
+        assert_eq!(g.get(), 0, "dec saturates at zero");
     }
 
     #[test]

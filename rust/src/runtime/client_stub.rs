@@ -1,0 +1,126 @@
+//! Stub PJRT client, compiled when the `pjrt` cargo feature is OFF.
+//!
+//! Mirrors the API surface of the real [`Runtime`] (`client.rs`) so the
+//! compute service, benches and examples compile unchanged on machines
+//! without `libxla_extension`. `Runtime::new` still loads and validates
+//! the artifact manifest — a missing `artifacts/` directory reports the
+//! usual "run `make artifacts`" error — but then always fails with a
+//! feature-gate message, so a `Runtime` value is never constructed and
+//! the coordinator falls back to the native backend.
+
+use std::path::Path;
+
+use crate::linalg::matrix::Matrix;
+use crate::runtime::artifact::Manifest;
+
+/// Errors from the runtime, stringly-typed at this boundary.
+pub type RtResult<T> = Result<T, String>;
+
+const DISABLED: &str = "ft_strassen was built without the `pjrt` feature; \
+wire the vendored `xla` crate into rust/Cargo.toml (see the header comment \
+there for the exact lines) and rebuild with `--features pjrt`";
+
+/// Feature-gated stand-in for the PJRT runtime. Never constructible.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Validate the artifact manifest, then fail with the feature-gate
+    /// message (artifacts exist but this build cannot execute them).
+    pub fn new(artifacts_dir: &Path) -> RtResult<Runtime> {
+        let _ = Manifest::load(artifacts_dir)?;
+        Err(DISABLED.to_string())
+    }
+
+    pub fn platform(&self) -> String {
+        DISABLED.to_string()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn warmup(&mut self, _bs: usize) -> RtResult<()> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn cached(&self) -> usize {
+        0
+    }
+
+    pub fn worker_task(
+        &mut self,
+        _ca: &[f32; 4],
+        _a4: &[Matrix; 4],
+        _cb: &[f32; 4],
+        _b4: &[Matrix; 4],
+    ) -> RtResult<Matrix> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn decode_combine(
+        &mut self,
+        _weights: &[f32],
+        _products: &[Option<&Matrix>],
+        _bs: usize,
+    ) -> RtResult<Matrix> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn decode_combine_multi(
+        &mut self,
+        _weight_sets: &[Vec<f32>],
+        _products: &[Option<&Matrix>],
+        _bs: usize,
+    ) -> RtResult<Vec<Matrix>> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn matmul(&mut self, _a: &Matrix, _b: &Matrix) -> RtResult<Matrix> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn strassen_once(
+        &mut self,
+        _a4: &[Matrix; 4],
+        _b4: &[Matrix; 4],
+    ) -> RtResult<[Matrix; 4]> {
+        Err(DISABLED.to_string())
+    }
+
+    pub fn winograd_once(
+        &mut self,
+        _a4: &[Matrix; 4],
+        _b4: &[Matrix; 4],
+    ) -> RtResult<[Matrix; 4]> {
+        Err(DISABLED.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_artifacts_first() {
+        let err = Runtime::new(Path::new("/no/such/dir")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn stub_reports_feature_gate_when_artifacts_exist() {
+        use std::io::Write;
+        let dir = std::env::temp_dir().join(format!("ftms_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        write!(
+            f,
+            "worker_task_bs32\tworker_task_bs32.hlo.txt\tfloat32[4]\tfloat32[32,32]\n"
+        )
+        .unwrap();
+        let err = Runtime::new(&dir).unwrap_err();
+        assert!(err.contains("pjrt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -5,15 +5,30 @@
 //! so the runtime is owned by a dedicated **compute service thread**
 //! ([`service::ComputeService`]); worker threads hold a cheap clonable
 //! [`service::PjrtHandle`] and exchange requests/replies over channels.
-//! The CPU PJRT executor parallelizes internally, so a single service
-//! thread does not serialize the actual math.
+//! Requests are tagged with the originating `job_id` so the service's
+//! errors and logs stay attributable under job multiplexing. The CPU
+//! PJRT executor parallelizes internally, so a single service thread
+//! does not serialize the actual math.
 //!
 //! Interchange is HLO *text* (jax >= 0.5 protos use 64-bit ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids — see
 //! /opt/xla-example/README.md and DESIGN.md).
+//!
+//! The `xla` dependency sits behind the **`pjrt` cargo feature** so the
+//! crate builds and tests on machines without `libxla_extension`.
+//! Without the feature, [`client`] is a stub whose `Runtime::new`
+//! always fails (after validating the artifact manifest, so error
+//! messages stay helpful) and the coordinator degrades to the native
+//! backend exactly as if artifacts were missing.
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
+pub mod client;
+
 pub mod service;
 
 pub use artifact::{Manifest, DECODE_SLOTS};

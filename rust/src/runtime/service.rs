@@ -12,6 +12,9 @@ use crate::runtime::client::Runtime;
 
 enum Request {
     WorkerTask {
+        /// Originating job id (0 = untagged), for attributable errors
+        /// and logs under job multiplexing.
+        tag: u64,
         ca: [f32; 4],
         a4: Box<[Matrix; 4]>,
         cb: [f32; 4],
@@ -66,7 +69,21 @@ impl PjrtHandle {
         cb: [f32; 4],
         b4: [Matrix; 4],
     ) -> Result<Matrix, String> {
+        self.worker_task_tagged(0, ca, a4, cb, b4)
+    }
+
+    /// [`Self::worker_task`] tagged with the originating `job_id`, so
+    /// multiplexed requests stay attributable in errors and logs.
+    pub fn worker_task_tagged(
+        &self,
+        tag: u64,
+        ca: [f32; 4],
+        a4: [Matrix; 4],
+        cb: [f32; 4],
+        b4: [Matrix; 4],
+    ) -> Result<Matrix, String> {
         self.call(|reply| Request::WorkerTask {
+            tag,
             ca,
             a4: Box::new(a4),
             cb,
@@ -173,8 +190,11 @@ fn serve(
     let _ = ready.send(Ok(()));
     while let Ok(req) = rx.recv() {
         match req {
-            Request::WorkerTask { ca, a4, cb, b4, reply } => {
-                let _ = reply.send(rt.worker_task(&ca, &a4, &cb, &b4));
+            Request::WorkerTask { tag, ca, a4, cb, b4, reply } => {
+                let _ = reply.send(
+                    rt.worker_task(&ca, &a4, &cb, &b4)
+                        .map_err(|e| format!("job {tag}: {e}")),
+                );
             }
             Request::DecodeCombine { weights, products, bs, reply } => {
                 let refs: Vec<Option<&Matrix>> = products.iter().map(|p| p.as_ref()).collect();

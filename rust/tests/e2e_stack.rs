@@ -32,6 +32,7 @@ fn pjrt_multiply_matches_dense_no_faults() {
             fault: FaultPlan::NONE,
             seed: 1,
             fallback_local: false,
+            collect_all: false,
         },
     );
     let mut rng = Rng::seeded(11);
@@ -63,6 +64,7 @@ fn pjrt_multiply_survives_failures_and_stragglers() {
             },
             seed: 5,
             fallback_local: true,
+            collect_all: false,
         },
     );
     let mut rng = Rng::seeded(13);
@@ -90,6 +92,7 @@ fn pjrt_and_native_agree_bitwise_closely() {
         fault: FaultPlan::NONE,
         seed: 2,
         fallback_local: false,
+        collect_all: false,
     };
     let mut mp = Master::new(TaskSet::strassen_winograd(0), backend, cfg.clone());
     let mut mn = Master::new(TaskSet::strassen_winograd(0), Backend::Native, cfg);
@@ -117,8 +120,10 @@ fn e2e_server_workload_on_pjrt() {
                 },
                 seed: 3,
                 fallback_local: true,
+                collect_all: false,
             },
             queue_cap: 64,
+            inflight_depth: 4,
         },
     );
     let report = server.run_workload(6, 128, 23).unwrap();
@@ -142,6 +147,7 @@ fn pjrt_missing_block_size_degrades_to_fallback() {
             fault: FaultPlan::NONE,
             seed: 1,
             fallback_local: true,
+            collect_all: false,
         },
     );
     let mut rng = Rng::seeded(41);
@@ -169,6 +175,7 @@ fn native_full_pipeline_large() {
             },
             seed: 9,
             fallback_local: true,
+            collect_all: false,
         },
     );
     let mut rng = Rng::seeded(31);

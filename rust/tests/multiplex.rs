@@ -1,0 +1,158 @@
+//! Multiplexed-coordinator invariants:
+//!
+//! * **Bit-exact equivalence** — the multiplexed `MmServer` at depth 1
+//!   (and depth 4) reproduces the sequential `Master`'s outputs
+//!   bit-for-bit on the same seeded job stream, for every built-in
+//!   `TaskSet`, with fault injection on. This relies on (a) faults
+//!   being sampled at admission in submission order, (b) the canonical
+//!   `SpanDecoder::solve`, and (c) `collect_all` pinning the decode set
+//!   to the injected faults rather than thread timing.
+//! * **Backpressure** — `submit` reports queue-full exactly at
+//!   `queue_cap` outstanding jobs.
+
+use std::time::Duration;
+
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coordinator::master::{Master, MasterConfig};
+use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::worker::{Backend, FaultPlan};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::sim::rng::Rng;
+
+const JOBS: usize = 6;
+const N: usize = 16;
+
+fn fault_cfg(seed: u64) -> MasterConfig {
+    MasterConfig {
+        deadline: Duration::from_secs(30),
+        fault: FaultPlan {
+            p_fail: 0.15,
+            p_straggle: 0.1,
+            delay: Duration::from_millis(5),
+        },
+        seed,
+        fallback_local: true,
+        // Deterministic decode set: wait for every live reply.
+        collect_all: true,
+    }
+}
+
+fn job_stream(seed: u64) -> Vec<(Matrix, Matrix)> {
+    let mut rng = Rng::seeded(seed);
+    (0..JOBS)
+        .map(|_| (Matrix::random(N, N, &mut rng), Matrix::random(N, N, &mut rng)))
+        .collect()
+}
+
+/// The reference: one-job-at-a-time sequential master.
+fn sequential_outputs(set: &TaskSet, seed: u64) -> Vec<Matrix> {
+    let mut m = Master::new(set.clone(), Backend::Native, fault_cfg(seed));
+    let out = job_stream(seed)
+        .iter()
+        .map(|(a, b)| m.multiply(a, b).unwrap().0)
+        .collect();
+    m.shutdown();
+    out
+}
+
+/// The same stream through the multiplexed server at a given depth.
+fn multiplexed_outputs(set: &TaskSet, seed: u64, depth: usize) -> Vec<Matrix> {
+    let mut s = MmServer::new(
+        set.clone(),
+        Backend::Native,
+        ServerConfig {
+            master: fault_cfg(seed),
+            queue_cap: 64,
+            inflight_depth: depth,
+        },
+    );
+    for (a, b) in job_stream(seed) {
+        s.submit(a, b).unwrap();
+    }
+    let mut done = s.drain(usize::MAX).unwrap();
+    assert_eq!(done.len(), JOBS);
+    // Depth > 1 completes out of order; job ids are assigned in
+    // submission order.
+    done.sort_by_key(|c| c.id);
+    let out = done.into_iter().map(|c| c.c).collect();
+    s.shutdown();
+    out
+}
+
+fn assert_bit_identical(set: &TaskSet, want: &[Matrix], got: &[Matrix], what: &str) {
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            w.as_slice(),
+            g.as_slice(),
+            "{}: job {} diverged from sequential master ({what})",
+            set.name,
+            i + 1
+        );
+    }
+}
+
+#[test]
+fn depth1_is_bit_identical_to_sequential_master_all_schemes() {
+    for set in TaskSet::fig2_schemes() {
+        let want = sequential_outputs(&set, 42);
+        let got = multiplexed_outputs(&set, 42, 1);
+        assert_bit_identical(&set, &want, &got, "depth 1");
+    }
+}
+
+#[test]
+fn depth4_is_bit_identical_to_sequential_master_all_schemes() {
+    // Multiplexing must not change results: faults are sampled at
+    // admission in submission order, so depth only affects overlap.
+    for set in TaskSet::fig2_schemes() {
+        let want = sequential_outputs(&set, 7);
+        let got = multiplexed_outputs(&set, 7, 4);
+        assert_bit_identical(&set, &want, &got, "depth 4");
+    }
+}
+
+#[test]
+fn outputs_match_dense_ground_truth_modulo_rounding() {
+    // Sanity alongside the bit-exactness: the decoded answers are also
+    // *correct* (fallback jobs exactly, decoded jobs to f32 rounding).
+    let set = TaskSet::strassen_winograd(2);
+    let got = multiplexed_outputs(&set, 42, 4);
+    for ((a, b), c) in job_stream(42).iter().zip(&got) {
+        let want = a.matmul(b);
+        assert!(c.approx_eq(&want, 1e-3), "rel {}", c.rel_error(&want));
+    }
+}
+
+#[test]
+fn submit_reports_queue_full_at_queue_cap() {
+    let cap = 5;
+    let mut s = MmServer::new(
+        TaskSet::strassen_winograd(2),
+        Backend::Native,
+        ServerConfig {
+            master: MasterConfig {
+                deadline: Duration::from_secs(5),
+                fault: FaultPlan::NONE,
+                seed: 1,
+                fallback_local: true,
+                collect_all: false,
+            },
+            queue_cap: cap,
+            inflight_depth: 2,
+        },
+    );
+    for i in 0..cap {
+        assert_eq!(s.queue_depth(), i);
+        s.submit(Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap();
+    }
+    let err = s.submit(Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap_err();
+    assert!(err.contains("queue full"), "{err}");
+    assert!(err.contains("5"), "cap should appear in the error: {err}");
+    // Completing one job frees exactly one admission slot.
+    let done = s.drain(1).unwrap();
+    assert_eq!(done.len(), 1);
+    s.submit(Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap();
+    assert!(s.submit(Matrix::zeros(8, 8), Matrix::zeros(8, 8)).is_err());
+    s.shutdown();
+}
