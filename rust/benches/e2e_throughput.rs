@@ -11,9 +11,11 @@
 use std::path::Path;
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
+use ft_strassen::coding::nested::NestedTaskSet;
 use ft_strassen::coding::scheme::TaskSet;
 use ft_strassen::coordinator::master::MasterConfig;
 use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::task::DispatchPlan;
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::runtime::service::ComputeService;
 
@@ -191,6 +193,74 @@ fn main() {
     };
     std::fs::write(&traj, body).unwrap();
     println!("appended depth-sweep trajectory to {}", traj.display());
+
+    // --- nested vs flat at equal node count ------------------------------
+    // Both configurations get a 16-thread fleet. Flat sw+2psmm sends 16
+    // items per job; nested sw+2psmm:sw+2psmm fans out 256 leaves that
+    // multiplex onto the same 16 slots (with eager group cancellation
+    // pruning most of them). The nested scheme pays compute overhead for
+    // a first_loss of 9 leaf failures vs the flat scheme's 3.
+    let nested_jobs = if quick { 6 } else { 24 };
+    let nested_n = 64usize;
+    let nested_fault = FaultPlan {
+        p_fail: 0.02,
+        p_straggle: 0.15,
+        delay: Duration::from_millis(10),
+    };
+    println!(
+        "\nnested vs flat (16 workers each): {nested_jobs} jobs of {nested_n}x{nested_n}, \
+         p_fail={}, p_straggle={} ({:?})",
+        nested_fault.p_fail, nested_fault.p_straggle, nested_fault.delay
+    );
+    println!(
+        "{:<26} {:>6} {:>9} {:>12} {:>12} {:>9} {:>9}",
+        "scheme", "items", "jobs/s", "mean", "p95", "decoded", "fallback"
+    );
+    let mut nested_rows =
+        String::from("scheme,items_per_job,jobs_per_s,mean_ns,p95_ns,decoded,fell_back\n");
+    let variants: Vec<(&str, DispatchPlan)> = vec![
+        ("sw+2psmm (flat)", DispatchPlan::flat(TaskSet::strassen_winograd(2))),
+        (
+            "sw+2psmm:sw+2psmm",
+            DispatchPlan::nested(NestedTaskSet::compose(
+                TaskSet::strassen_winograd(2),
+                TaskSet::strassen_winograd(2),
+            )),
+        ),
+    ];
+    for (name, plan) in variants {
+        let items = plan.num_work_items();
+        let mut server = MmServer::with_plan(
+            plan,
+            backend.clone(),
+            server_cfg(nested_fault, 4),
+            Some(16),
+        );
+        let r = server.run_workload(nested_jobs, nested_n, 1).expect("nested workload");
+        println!(
+            "{:<26} {:>6} {:>9.2} {:>12.3?} {:>12.3?} {:>9} {:>9}",
+            name,
+            items,
+            r.throughput_jobs_per_s,
+            r.mean_latency,
+            r.p95_latency,
+            r.decoded,
+            r.fell_back
+        );
+        nested_rows.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            name,
+            items,
+            r.throughput_jobs_per_s,
+            r.mean_latency.as_nanos(),
+            r.p95_latency.as_nanos(),
+            r.decoded,
+            r.fell_back
+        ));
+        server.shutdown();
+    }
+    std::fs::write(out.join("nested_vs_flat.csv"), nested_rows).unwrap();
+    println!("wrote target/bench_results/nested_vs_flat.csv");
 
     // --- coordinator overhead microbench (native, no faults) -------------
     // n=16 makes worker compute negligible -> isolates dispatch + online

@@ -104,6 +104,67 @@ pub fn rank(forms: &[BilinearForm]) -> usize {
     basis.rank()
 }
 
+/// Rank of a set of integer rows over the prime field GF(p),
+/// p = 2³¹ − 1 (Mersenne).
+///
+/// Always a *lower bound* on the rank over ℚ, and equal to it unless p
+/// divides one of the pivot minors — astronomically unlikely for the
+/// small ±1-product coefficients used here. The nested-scheme tests use
+/// this for 256-dimensional composed (Kronecker) forms, where the
+/// fraction-free i128 elimination of `coding::fc` would overflow.
+pub fn rank_mod_p(rows: &[Vec<i64>]) -> usize {
+    const P: i64 = 2_147_483_647; // 2^31 - 1, prime
+    fn inv_mod(a: i64) -> i64 {
+        // Fermat: a^(P-2) mod P.
+        let (mut base, mut exp, mut acc) = (a as i128, P - 2, 1i128);
+        let p = P as i128;
+        while exp > 0 {
+            if exp & 1 == 1 {
+                acc = acc * base % p;
+            }
+            base = base * base % p;
+            exp >>= 1;
+        }
+        acc as i64
+    }
+    if rows.is_empty() {
+        return 0;
+    }
+    let width = rows[0].len();
+    let mut m: Vec<Vec<i64>> = rows
+        .iter()
+        .map(|r| {
+            assert_eq!(r.len(), width, "ragged rows");
+            r.iter().map(|&x| x.rem_euclid(P)).collect()
+        })
+        .collect();
+    let mut rank = 0;
+    for col in 0..width {
+        let Some(pivot) = (rank..m.len()).find(|&r| m[r][col] != 0) else {
+            continue;
+        };
+        m.swap(rank, pivot);
+        let inv = inv_mod(m[rank][col]) as i128;
+        for c in col..width {
+            m[rank][c] = (m[rank][c] as i128 * inv % P as i128) as i64;
+        }
+        for r in (rank + 1)..m.len() {
+            let f = m[r][col] as i128;
+            if f != 0 {
+                for c in col..width {
+                    let v = (m[r][c] as i128 - f * m[rank][c] as i128) % P as i128;
+                    m[r][c] = v.rem_euclid(P as i128) as i64;
+                }
+            }
+        }
+        rank += 1;
+        if rank == m.len() {
+            break;
+        }
+    }
+    rank
+}
+
 /// Express `target` as a rational combination of `forms`:
 /// returns `w` with `Σ w[i] · forms[i] = target`, or `None` if `target`
 /// is not in the span. Uses full Gaussian elimination on the augmented
@@ -267,6 +328,20 @@ mod tests {
         );
         assert!(mixed[0].is_some());
         assert!(mixed[1].is_none());
+    }
+
+    #[test]
+    fn rank_mod_p_matches_exact_rank_on_forms() {
+        let forms = strassen();
+        let rows: Vec<Vec<i64>> = forms
+            .iter()
+            .map(|f| f.coeffs.iter().map(|&c| c as i64).collect())
+            .collect();
+        assert_eq!(rank_mod_p(&rows), rank(&forms));
+        // Degenerate cases.
+        assert_eq!(rank_mod_p(&[]), 0);
+        assert_eq!(rank_mod_p(&[vec![0, 0, 0]]), 0);
+        assert_eq!(rank_mod_p(&[vec![0, -3, 6], vec![0, 1, -2], vec![5, 0, 0]]), 2);
     }
 
     #[test]

@@ -26,6 +26,18 @@ pub struct FcTable {
 impl FcTable {
     /// Smallest k with FC(k) > 0 — the scheme's "minimum distance - 1"
     /// analogue (it tolerates any k-1 ... below this).
+    ///
+    /// ```
+    /// use ft_strassen::coding::fc::fc_table;
+    /// use ft_strassen::coding::scheme::TaskSet;
+    /// use ft_strassen::algorithms::strassen;
+    ///
+    /// // 2-copy replication survives any single loss, not every pair.
+    /// let fc = fc_table(&TaskSet::replication(&strassen(), 2));
+    /// assert_eq!(fc.first_loss(), 2);
+    /// // Out-of-range k has no patterns at all, hence no fatal ones.
+    /// assert_eq!(fc.fatal_fraction(100), 0.0);
+    /// ```
     pub fn first_loss(&self) -> usize {
         self.counts
             .iter()
@@ -33,8 +45,13 @@ impl FcTable {
             .unwrap_or(self.m + 1)
     }
 
-    /// Fraction of k-failure patterns that are fatal.
+    /// Fraction of k-failure patterns that are fatal. For `k > m` there
+    /// are no k-failure patterns, so the fatal fraction is 0 (rather
+    /// than an out-of-bounds index into the counts).
     pub fn fatal_fraction(&self, k: usize) -> f64 {
+        if k > self.m {
+            return 0.0;
+        }
         let total = binomial(self.m as u64, k as u64) as f64;
         self.counts[k] as f64 / total
     }
@@ -404,6 +421,14 @@ mod tests {
         assert!(!oracle.is_decodable(kill_s1));
         // any two copies -> fine
         assert!(oracle.is_decodable(1u64 | (1 << 7)));
+    }
+
+    #[test]
+    fn fatal_fraction_guards_out_of_range_k() {
+        let t = fc_table(&TaskSet::replication(&strassen(), 1));
+        assert_eq!(t.fatal_fraction(t.m + 1), 0.0);
+        assert_eq!(t.fatal_fraction(usize::MAX), 0.0);
+        assert_eq!(t.fatal_fraction(t.m), 1.0, "all-failed is fatal");
     }
 
     #[test]

@@ -10,15 +10,21 @@
 //!   every built-in task set (see tests).
 //! * [`fc`] — exhaustive FC(k) tables ("k-failure combinations such that
 //!   C cannot be recovered", eq. (9) input) over all 2^M patterns.
-//! * [`theory`] — the closed forms: eq. (10) for replication FC(k) and
-//!   eq. (9) for P_f.
+//! * [`theory`] — the closed forms: eq. (10) for replication FC(k),
+//!   eq. (9) for P_f, and the compositional nested P_f.
+//! * [`nested`] — two-level nested schemes
+//!   ([`nested::NestedTaskSet`]): compose two task sets so every
+//!   level-1 product is itself distributed via a level-2 scheme
+//!   (fan-out M₁·M₂ = 196–256), decoded in two stages.
 
 pub mod decoder;
 pub mod fc;
+pub mod nested;
 pub mod scheme;
 pub mod theory;
 
 pub use decoder::{DecodeOutcome, PeelingDecoder, SpanDecoder};
 pub use fc::{fc_table, FcTable};
+pub use nested::{NestedOracle, NestedTaskSet};
 pub use scheme::TaskSet;
-pub use theory::{failure_probability, replication_fc};
+pub use theory::{failure_probability, nested_failure_probability, replication_fc};

@@ -1,0 +1,415 @@
+//! Nested two-level coded task sets: compose two (possibly distinct)
+//! [`TaskSet`]s level by level, so that each level-1 (outer) product is
+//! itself distributed via the level-2 (inner) scheme.
+//!
+//! The paper applies its coding at a single 2×2 split level (M ≤ 21
+//! nodes). Wang & Duursma's *Parity-Checked Strassen Algorithm*
+//! (PAPERS.md) observes that nesting parity-checked schemes compounds
+//! straggler tolerance **multiplicatively**: an outer scheme with M₁
+//! tasks whose every task is re-distributed through an inner scheme with
+//! M₂ tasks yields M₁·M₂ leaf tasks (e.g. 16×16 = 256, or 14×14 = 196),
+//! and the minimum number of leaf failures that defeats the two-stage
+//! decoder is the *product* of the per-level minima
+//! ([`NestedTaskSet::first_loss`]).
+//!
+//! Decoding is operationally **two-stage** (the path `coordinator/job.rs`
+//! implements): the inner span decoder of each outer group recovers that
+//! group's product P_g = L_g · R_g first, and recovered groups then feed
+//! the outer span decoder that solves the four C blocks. A failure
+//! pattern, given as one failed-leaf mask per group, is *nested-decodable*
+//! iff the set of unrecoverable groups is an outer-decodable failure set
+//! ([`NestedTaskSet::decodable_with_failures`]). This is a conservative
+//! subset of what a hypothetical flattened 256-dimensional joint decoder
+//! could recover, but it is the decoder a coordinator can actually run
+//! incrementally, group by group.
+//!
+//! Analysis entry points: [`NestedOracle`] (O(1)-per-group decodability
+//! for Monte-Carlo at M = 196–256 where exhaustive 2^M enumeration is
+//! impossible), [`NestedTaskSet::first_loss`], and the compositional
+//! closed form [`crate::coding::theory::nested_failure_probability`].
+
+use crate::algebra::form::{BilinearForm, ELEM_DIM};
+use crate::coding::fc::{fc_table, DecodeOracle};
+use crate::coding::scheme::TaskSet;
+use crate::linalg::blocked::kron_coeffs;
+
+/// A two-level nested scheme: `outer` distributes the 2×2 block products
+/// of C; each outer product is itself computed distributedly by `inner`.
+#[derive(Clone, Debug)]
+pub struct NestedTaskSet {
+    /// `"<outer name>:<inner name>"` (the CLI's `--nest` spelling).
+    pub name: String,
+    /// Level-1 scheme over the outer 2×2 blocks of A and B.
+    pub outer: TaskSet,
+    /// Level-2 scheme applied to every outer product `L_g · R_g`.
+    pub inner: TaskSet,
+}
+
+impl NestedTaskSet {
+    /// Compose two task sets into a nested scheme with
+    /// `outer.num_tasks() * inner.num_tasks()` leaf tasks.
+    ///
+    /// ```
+    /// use ft_strassen::coding::nested::NestedTaskSet;
+    /// use ft_strassen::coding::scheme::TaskSet;
+    ///
+    /// let nested = NestedTaskSet::compose(
+    ///     TaskSet::strassen_winograd(2),
+    ///     TaskSet::strassen_winograd(2),
+    /// );
+    /// assert_eq!(nested.num_leaves(), 256);
+    /// // tolerance compounds multiplicatively: 3 × 3 = 9 leaf failures
+    /// // are needed before any pattern defeats the two-stage decoder.
+    /// assert_eq!(nested.first_loss(), 9);
+    /// ```
+    pub fn compose(outer: TaskSet, inner: TaskSet) -> NestedTaskSet {
+        assert!(outer.num_tasks() <= 64, "outer mask model supports <= 64 groups");
+        assert!(inner.num_tasks() <= 64, "inner mask model supports <= 64 tasks");
+        NestedTaskSet {
+            name: format!("{}:{}", outer.name, inner.name),
+            outer,
+            inner,
+        }
+    }
+
+    /// Number of outer groups M₁.
+    pub fn num_groups(&self) -> usize {
+        self.outer.num_tasks()
+    }
+
+    /// Leaf tasks per group M₂.
+    pub fn group_size(&self) -> usize {
+        self.inner.num_tasks()
+    }
+
+    /// Total leaf tasks M₁·M₂ (the fan-out).
+    pub fn num_leaves(&self) -> usize {
+        self.num_groups() * self.group_size()
+    }
+
+    /// Leaf name `"<outer task>/<inner task>"`, e.g. `"S3/W5"`.
+    pub fn leaf_name(&self, g: usize, j: usize) -> String {
+        format!("{}/{}", self.outer.tasks[g].name, self.inner.tasks[j].name)
+    }
+
+    /// The leaf's encoding coefficients over the 16 two-level blocks of
+    /// each operand: the Kronecker products `u_g ⊗ u'_j` and
+    /// `v_g ⊗ v'_j` (outer-major block order, matching
+    /// [`crate::linalg::blocked::split_blocks16`]).
+    pub fn leaf_uv(&self, g: usize, j: usize) -> ([i32; 16], [i32; 16]) {
+        let o = &self.outer.tasks[g];
+        let i = &self.inner.tasks[j];
+        (kron_coeffs(&o.u, &i.u), kron_coeffs(&o.v, &i.v))
+    }
+
+    /// The leaf's bilinear form over the 256 two-level elementary
+    /// products, flattened row-major: coefficient of
+    /// `A_(p,r) · B_(q,s)` at index `(p*4 + r) * 16 + (q*4 + s)`.
+    ///
+    /// Equal to the Kronecker product of the outer and inner task forms
+    /// under that index map — the "composed form" whose rank the algebra
+    /// tests pin to `rank(outer span) · rank(inner span)`.
+    pub fn leaf_form_flat(&self, g: usize, j: usize) -> Vec<i64> {
+        kron_form_flat(&self.outer.tasks[g].form(), &self.inner.tasks[j].form())
+    }
+
+    /// Is the failure pattern decodable by the two-stage decoder?
+    /// `group_failed[g]` is the failed-leaf mask of group `g`
+    /// (bit j = leaf (g, j) failed).
+    pub fn decodable_with_failures(&self, group_failed: &[u64]) -> bool {
+        assert_eq!(group_failed.len(), self.num_groups());
+        let mut outer_failed = 0u64;
+        for (g, &mask) in group_failed.iter().enumerate() {
+            if !self.inner.decodable_with_failures(mask) {
+                outer_failed |= 1 << g;
+            }
+        }
+        self.outer.decodable_with_failures(outer_failed)
+    }
+
+    /// Smallest number of leaf failures for which some pattern defeats
+    /// the two-stage decoder — exactly the **product** of the per-level
+    /// [`crate::coding::fc::FcTable::first_loss`] values: defeating the
+    /// outer span needs at least `first_loss(outer)` unrecoverable
+    /// groups, and making one group unrecoverable needs at least
+    /// `first_loss(inner)` leaf failures inside it (and the minimal
+    /// fatal pattern achieves both bounds simultaneously).
+    pub fn first_loss(&self) -> usize {
+        fc_table(&self.outer).first_loss() * fc_table(&self.inner).first_loss()
+    }
+}
+
+/// Flattened Kronecker product of two bilinear forms (256 coefficients,
+/// see [`NestedTaskSet::leaf_form_flat`] for the index map). Also maps
+/// output targets: the two-level C block `((I,k),(J,l))` of a nested
+/// multiply is the composed form `kron_form_flat(C_IJ, c_kl)`.
+pub fn kron_form_flat(outer: &BilinearForm, inner: &BilinearForm) -> Vec<i64> {
+    let mut flat = vec![0i64; ELEM_DIM * ELEM_DIM];
+    for p in 0..4 {
+        for q in 0..4 {
+            let co = outer.coeffs[p * 4 + q] as i64;
+            if co == 0 {
+                continue;
+            }
+            for r in 0..4 {
+                for s in 0..4 {
+                    let ci = inner.coeffs[r * 4 + s] as i64;
+                    if ci != 0 {
+                        flat[(p * 4 + r) * ELEM_DIM + (q * 4 + s)] = co * ci;
+                    }
+                }
+            }
+        }
+    }
+    flat
+}
+
+/// Fast two-level decodability oracle: one per-level [`DecodeOracle`]
+/// built once, then O(M₁) per query — the Monte-Carlo inner loop for
+/// fan-outs (196–256 leaves) where the flat 2^M enumeration of
+/// [`crate::coding::fc::DecodabilityTable`] is out of reach.
+#[derive(Clone, Debug)]
+pub struct NestedOracle {
+    outer: DecodeOracle,
+    inner: DecodeOracle,
+    m1: usize,
+    m2: usize,
+}
+
+impl NestedOracle {
+    pub fn build(set: &NestedTaskSet) -> NestedOracle {
+        NestedOracle {
+            outer: DecodeOracle::build(&set.outer),
+            inner: DecodeOracle::build(&set.inner),
+            m1: set.num_groups(),
+            m2: set.group_size(),
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.m1
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.m2
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.m1 * self.m2
+    }
+
+    /// Can group `g`'s product be recovered given its failed-leaf mask?
+    #[inline]
+    pub fn group_decodable(&self, failed_mask: u64) -> bool {
+        self.inner.is_decodable(failed_mask)
+    }
+
+    /// Is the outer span decodable given the failed-GROUP mask?
+    #[inline]
+    pub fn outer_decodable(&self, group_failed_mask: u64) -> bool {
+        self.outer.is_decodable(group_failed_mask)
+    }
+
+    /// Full two-stage decodability over per-group failed-leaf masks.
+    pub fn is_decodable(&self, group_failed: &[u64]) -> bool {
+        debug_assert_eq!(group_failed.len(), self.m1);
+        let mut outer_failed = 0u64;
+        for (g, &mask) in group_failed.iter().enumerate() {
+            if !self.inner.is_decodable(mask) {
+                outer_failed |= 1 << g;
+            }
+        }
+        self.outer.is_decodable(outer_failed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::form::Target;
+    use crate::algebra::gauss::{rank, rank_mod_p};
+    use crate::algorithms::strassen;
+
+    fn sw2_squared() -> NestedTaskSet {
+        NestedTaskSet::compose(TaskSet::strassen_winograd(2), TaskSet::strassen_winograd(2))
+    }
+
+    #[test]
+    fn compose_shapes_and_names() {
+        let n = sw2_squared();
+        assert_eq!(n.num_groups(), 16);
+        assert_eq!(n.group_size(), 16);
+        assert_eq!(n.num_leaves(), 256);
+        assert_eq!(n.leaf_name(0, 8), "S1/W2");
+        let m = NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(0),
+        );
+        assert_eq!(m.num_leaves(), 196);
+    }
+
+    #[test]
+    fn no_failures_decodable_and_single_group_wipeout_tolerated() {
+        let n = sw2_squared();
+        let clean = vec![0u64; 16];
+        assert!(n.decodable_with_failures(&clean));
+        // Wipe out ANY single group entirely (16 leaf failures): the
+        // outer scheme tolerates any single product loss.
+        for g in 0..16 {
+            let mut masks = clean.clone();
+            masks[g] = (1 << 16) - 1;
+            assert!(n.decodable_with_failures(&masks), "group {g} wipeout fatal");
+        }
+    }
+
+    #[test]
+    fn scattered_sub_threshold_failures_tolerated() {
+        let n = sw2_squared();
+        // Two leaf failures in every group: below the inner first_loss
+        // (3), so every group recovers and the outer span is full.
+        let masks = vec![0b11u64; 16];
+        assert!(n.decodable_with_failures(&masks));
+    }
+
+    #[test]
+    fn fatal_pattern_at_first_loss() {
+        let n = sw2_squared();
+        // sw+2psmm's first fatal triple is {S1, S2, W5} = {0, 1, 11}
+        // at either level... find one fatal triple exhaustively instead
+        // of hard-coding it.
+        let inner_fc = fc_table(&n.inner);
+        assert_eq!(inner_fc.first_loss(), 3);
+        let mut fatal_inner = None;
+        'outer: for a in 0..16u32 {
+            for b in (a + 1)..16 {
+                for c in (b + 1)..16 {
+                    let mask = (1u64 << a) | (1 << b) | (1 << c);
+                    if !n.inner.decodable_with_failures(mask) {
+                        fatal_inner = Some(mask);
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let fatal_inner = fatal_inner.expect("some fatal triple exists");
+        // Kill three groups (a fatal outer triple) with a fatal inner
+        // triple each: 9 leaf failures, undecodable.
+        let mut fatal_outer = None;
+        'outer2: for a in 0..16u32 {
+            for b in (a + 1)..16 {
+                for c in (b + 1)..16 {
+                    let mask = (1u64 << a) | (1 << b) | (1 << c);
+                    if !n.outer.decodable_with_failures(mask) {
+                        fatal_outer = Some([a as usize, b as usize, c as usize]);
+                        break 'outer2;
+                    }
+                }
+            }
+        }
+        let groups = fatal_outer.expect("some fatal outer triple exists");
+        let mut masks = vec![0u64; 16];
+        for &g in &groups {
+            masks[g] = fatal_inner;
+        }
+        assert!(!n.decodable_with_failures(&masks));
+        assert_eq!(n.first_loss(), 9);
+    }
+
+    #[test]
+    fn first_loss_is_product_and_at_least_per_level_minimum() {
+        for (outer, inner) in [
+            (TaskSet::strassen_winograd(2), TaskSet::strassen_winograd(2)),
+            (TaskSet::strassen_winograd(0), TaskSet::strassen_winograd(2)),
+            (TaskSet::replication(&strassen(), 2), TaskSet::strassen_winograd(0)),
+        ] {
+            let d1 = fc_table(&outer).first_loss();
+            let d2 = fc_table(&inner).first_loss();
+            let n = NestedTaskSet::compose(outer, inner);
+            assert_eq!(n.first_loss(), d1 * d2, "{}", n.name);
+            assert!(n.first_loss() >= d1.max(d2), "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn oracle_matches_direct_decodability() {
+        let n = NestedTaskSet::compose(
+            TaskSet::replication(&strassen(), 2),
+            TaskSet::strassen_winograd(0),
+        );
+        let oracle = NestedOracle::build(&n);
+        assert_eq!(oracle.num_leaves(), 14 * 14);
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200 {
+            let masks: Vec<u64> = (0..n.num_groups())
+                .map(|_| next() & next() & ((1 << n.group_size()) - 1))
+                .collect();
+            assert_eq!(
+                oracle.is_decodable(&masks),
+                n.decodable_with_failures(&masks),
+                "masks {masks:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn leaf_uv_is_kronecker_of_level_encodings() {
+        let n = sw2_squared();
+        let (u, v) = n.leaf_uv(2, 11); // S3 ⊗ W5
+        let o = &n.outer.tasks[2];
+        let i = &n.inner.tasks[11];
+        for p in 0..4 {
+            for r in 0..4 {
+                assert_eq!(u[p * 4 + r], o.u[p] * i.u[r]);
+                assert_eq!(v[p * 4 + r], o.v[p] * i.v[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn composed_form_rank_is_product_of_level_ranks() {
+        // span{a_g ⊗ b_j} = span{a_g} ⊗ span{b_j}, so the rank of the
+        // 256-dim composed forms is the product of the per-level ranks.
+        for (outer, inner) in [
+            (TaskSet::replication(&strassen(), 1), TaskSet::replication(&strassen(), 1)),
+            (TaskSet::strassen_winograd(2), TaskSet::replication(&strassen(), 1)),
+            (TaskSet::strassen_winograd(0), TaskSet::strassen_winograd(0)),
+        ] {
+            let r1 = rank(&outer.forms());
+            let r2 = rank(&inner.forms());
+            let n = NestedTaskSet::compose(outer, inner);
+            let rows: Vec<Vec<i64>> = (0..n.num_groups())
+                .flat_map(|g| (0..n.group_size()).map(move |j| (g, j)))
+                .map(|(g, j)| n.leaf_form_flat(g, j))
+                .collect();
+            assert_eq!(rank_mod_p(&rows), r1 * r2, "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn composed_targets_lie_in_leaf_span() {
+        // Every two-level output block C_(I,k),(J,l) = C_IJ ⊗ c_kl must
+        // be decodable from the full leaf set: appending all 16 composed
+        // targets leaves the rank unchanged.
+        let n = NestedTaskSet::compose(
+            TaskSet::replication(&strassen(), 1),
+            TaskSet::strassen_winograd(0),
+        );
+        let mut rows: Vec<Vec<i64>> = (0..n.num_groups())
+            .flat_map(|g| (0..n.group_size()).map(move |j| (g, j)))
+            .map(|(g, j)| n.leaf_form_flat(g, j))
+            .collect();
+        let base = rank_mod_p(&rows);
+        for to in Target::ALL {
+            for ti in Target::ALL {
+                rows.push(kron_form_flat(&to.form(), &ti.form()));
+            }
+        }
+        assert_eq!(rank_mod_p(&rows), base, "composed targets escape the span");
+    }
+}

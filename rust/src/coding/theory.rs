@@ -45,6 +45,24 @@ pub fn replication_failure_probability(c: usize, p_e: f64) -> f64 {
     1.0 - (1.0 - p_e.powi(c as i32)).powi(7)
 }
 
+/// P_f of a two-level nested scheme under i.i.d. Bernoulli leaf failures
+/// — the compositional form of eq. (9): groups fail independently with
+/// probability `q = P_f_inner(p_e)` (each group is an independent run of
+/// the inner scheme over its own leaves), so the nested failure
+/// probability is the outer eq. (9) evaluated at `q`:
+///
+/// ```text
+/// P_f_nested(p_e) = Σ_k FC_outer(k) q^k (1 - q)^(M₁ - k),
+///     q = Σ_k FC_inner(k) p_e^k (1 - p_e)^(M₂ - k)
+/// ```
+///
+/// Exact for the two-stage decoder of
+/// [`crate::coding::nested::NestedTaskSet`]; cross-validated against
+/// per-leaf Monte-Carlo in `sim::montecarlo`.
+pub fn nested_failure_probability(outer: &FcTable, inner: &FcTable, p_e: f64) -> f64 {
+    failure_probability(outer, failure_probability(inner, p_e))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +99,34 @@ mod tests {
                     "c={c} p={p_e}: {via_table} vs {closed}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn nested_single_copy_reduces_to_49_node_closed_form() {
+        // strassen-x1 nested in strassen-x1: every one of the 49 leaves
+        // is essential, so P_f = 1 - (1 - p)^49 exactly.
+        let fc1 = fc_table(&TaskSet::replication(&strassen(), 1));
+        for p in [0.01, 0.05, 0.1, 0.3] {
+            let nested = nested_failure_probability(&fc1, &fc1, p);
+            let closed = 1.0 - (1.0 - p).powi(49);
+            assert!(
+                (nested - closed).abs() < 1e-12,
+                "p={p}: {nested} vs {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn nested_beats_flat_at_small_pe() {
+        // The headline of nesting: at small p_e the 256-leaf nested
+        // sw+2psmm² (first_loss 9) has a far lower P_f than the flat
+        // 16-node sw+2psmm (first_loss 3) despite 16x the nodes.
+        let fc = fc_table(&TaskSet::strassen_winograd(2));
+        for p in [0.005, 0.01, 0.02] {
+            let flat = failure_probability(&fc, p);
+            let nested = nested_failure_probability(&fc, &fc, p);
+            assert!(nested < flat, "p={p}: nested {nested} vs flat {flat}");
         }
     }
 

@@ -5,4 +5,4 @@ pub mod toml;
 pub mod types;
 
 pub use toml::{parse_toml, TomlDoc, Value};
-pub use types::{BackendKind, RunConfig, SchemeKind};
+pub use types::{BackendKind, NestSpec, RunConfig, SchemeKind};

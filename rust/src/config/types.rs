@@ -6,6 +6,7 @@ use std::path::PathBuf;
 
 use super::toml::{parse_toml, TomlDoc, TomlError};
 use crate::algorithms::{strassen, winograd};
+use crate::coding::nested::NestedTaskSet;
 use crate::coding::scheme::TaskSet;
 
 /// Which task-set family to run.
@@ -69,6 +70,33 @@ impl SchemeKind {
     }
 }
 
+/// A nested two-level scheme spec: `outer:inner` (each side any
+/// [`SchemeKind`] name), e.g. `sw+2psmm:sw+2psmm` for the 256-leaf
+/// composition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NestSpec {
+    pub outer: SchemeKind,
+    pub inner: SchemeKind,
+}
+
+impl NestSpec {
+    pub fn parse(s: &str) -> Result<NestSpec, String> {
+        let (o, i) = s
+            .split_once(':')
+            .ok_or_else(|| format!("expected outer:inner (e.g. sw+2psmm:sw+2psmm), got `{s}`"))?;
+        Ok(NestSpec { outer: SchemeKind::parse(o)?, inner: SchemeKind::parse(i)? })
+    }
+
+    /// Materialize the composed task set.
+    pub fn task_set(&self) -> NestedTaskSet {
+        NestedTaskSet::compose(self.outer.task_set(), self.inner.task_set())
+    }
+
+    pub fn display_name(&self) -> String {
+        format!("{}:{}", self.outer.display_name(), self.inner.display_name())
+    }
+}
+
 /// Which compute backend executes block multiplications.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
@@ -92,6 +120,9 @@ impl BackendKind {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub scheme: SchemeKind,
+    /// When set, dispatch nested (two-level) instead of `scheme`:
+    /// `outer:inner` composition, n must be divisible by 4.
+    pub nest: Option<NestSpec>,
     pub backend: BackendKind,
     /// Matrix dimension n (the multiply is n x n).
     pub n: usize,
@@ -113,6 +144,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             scheme: SchemeKind::StrassenWinograd { psmms: 2 },
+            nest: None,
             backend: BackendKind::Native,
             n: 256,
             workers: 16,
@@ -142,8 +174,15 @@ impl RunConfig {
             )?,
             None => d.backend,
         };
+        let nest = match doc.get("run.nest") {
+            Some(v) => Some(NestSpec::parse(
+                v.as_str().ok_or("run.nest must be a string")?,
+            )?),
+            None => d.nest,
+        };
         let cfg = RunConfig {
             scheme,
+            nest,
             backend,
             n: doc.int_or("run.n", d.n as i64) as usize,
             workers: doc.int_or("run.workers", d.workers as i64) as usize,
@@ -171,6 +210,12 @@ impl RunConfig {
     pub fn validate(&self) -> Result<(), String> {
         if self.n == 0 || self.n % 2 != 0 {
             return Err(format!("n must be even and positive, got {}", self.n));
+        }
+        if self.nest.is_some() && self.n % 4 != 0 {
+            return Err(format!(
+                "nested schemes split twice: n must be divisible by 4, got {}",
+                self.n
+            ));
         }
         if self.workers == 0 {
             return Err("workers must be >= 1".into());
@@ -217,6 +262,33 @@ mod tests {
             SchemeKind::parse("strassen-x2").unwrap().task_set().num_tasks(),
             14
         );
+    }
+
+    #[test]
+    fn nest_spec_parsing() {
+        let n = NestSpec::parse("sw+2psmm:strassen-x2").unwrap();
+        assert_eq!(n.outer, SchemeKind::StrassenWinograd { psmms: 2 });
+        assert_eq!(n.inner, SchemeKind::StrassenReplicated { copies: 2 });
+        assert_eq!(n.display_name(), "sw+2psmm:strassen-x2");
+        assert_eq!(n.task_set().num_leaves(), 16 * 14);
+        assert!(NestSpec::parse("sw+2psmm").is_err(), "missing inner");
+        assert!(NestSpec::parse("bogus:sw+2psmm").is_err());
+    }
+
+    #[test]
+    fn nest_in_toml_and_validation() {
+        let doc = parse_toml("[run]\nnest = \"sw+0psmm:sw+0psmm\"\nn = 64").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(
+            cfg.nest,
+            Some(NestSpec {
+                outer: SchemeKind::StrassenWinograd { psmms: 0 },
+                inner: SchemeKind::StrassenWinograd { psmms: 0 },
+            })
+        );
+        // Nested requires n % 4 == 0.
+        let doc = parse_toml("[run]\nnest = \"sw+0psmm:sw+0psmm\"\nn = 6").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -1,14 +1,39 @@
 //! Per-job decode state machine: one [`JobState`] per in-flight multiply
-//! job, keyed by `job_id`. The scheduler routes each [`WorkerReply`] to
-//! its job's state; the job tracks an incremental [`SpanDecoder`], the
-//! finished products, and its deadline, and knows how to assemble the
-//! final C matrix once (if) the four output targets are spanned.
+//! job, keyed by `job_id`.
+//!
+//! The scheduler routes each [`WorkerReply`] to its job's state; the job
+//! tracks timing, reply accounting, and one of two decode structures:
+//!
+//! * **Flat** (the paper's single-level model) — an incremental
+//!   [`SpanDecoder`] over the task set; the job is decodable once the
+//!   four `C_ij` targets are spanned, and `assemble` combines finished
+//!   products with the exact decode weights.
+//! * **Nested** (two-level schemes, [`crate::coding::nested`]) — the
+//!   **two-stage decoder**: every outer group `g` has its own inner
+//!   span decoder over that group's leaf products; the moment a group's
+//!   inner span covers its four targets, the group's product
+//!   `P_g = L_g · R_g` is recovered (inner solve + block join) and fed
+//!   to the *outer* decoder as `on_finished(g)`. The job is decodable
+//!   once the recovered groups span the outer targets. Group recoveries
+//!   are consumed **incrementally**: in eager mode (`collect_all` off)
+//!   [`JobState::on_reply`] returns the newly-recovered group's leaf-id
+//!   range so the scheduler can cancel the group's outstanding items;
+//!   with `collect_all` on, matrix assembly is deferred to
+//!   [`JobState::assemble`] so the decode set — and therefore the output
+//!   bits — depend only on the injected faults, never on thread timing.
+//!
+//! Reply accounting is uniform across both shapes: a job has exhausted
+//! its replies when `finished + errors` reaches `dispatched − injected
+//! failures − mid-job revocations` ([`JobState::all_replies_in`]), which
+//! is what lets the scheduler finish undecodable jobs early instead of
+//! waiting out the deadline.
 
+use std::ops::Range;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coding::decoder::SpanDecoder;
-use crate::coordinator::task::TaskGraph;
+use crate::coordinator::task::DispatchPlan;
 use crate::coordinator::worker::{Backend, WorkerReply};
 use crate::linalg::blocked::join_blocks;
 use crate::linalg::matrix::Matrix;
@@ -25,13 +50,44 @@ pub struct MultiplyReport {
     /// Time from dispatch until the output became decodable.
     pub time_to_decodable: Option<Duration>,
     pub dispatched: usize,
-    /// Successful replies incorporated into the decode state.
+    /// Successful worker replies received (for nested jobs this counts
+    /// leaf replies, including late ones for already-recovered groups).
     pub finished: usize,
     /// Faults injected at dispatch time.
     pub injected_failures: usize,
     pub injected_stragglers: usize,
     /// True if the deadline passed and the master computed locally.
     pub fell_back: bool,
+}
+
+/// One inner group's decode state (nested jobs only).
+struct GroupDecode {
+    decoder: SpanDecoder,
+    products: Vec<Option<Matrix>>,
+    /// Still accepting replies? Cleared when the group is recovered
+    /// eagerly (its remaining items are then revoked).
+    open: bool,
+    /// Has this group been reported to the outer decoder?
+    registered: bool,
+}
+
+/// Decode structure of a job: single-level span decoding, or the
+/// two-stage nested decoder.
+enum Decode {
+    Flat {
+        decoder: SpanDecoder,
+        products: Vec<Option<Matrix>>,
+    },
+    Nested {
+        group_size: usize,
+        groups: Vec<GroupDecode>,
+        outer: SpanDecoder,
+        outer_products: Vec<Option<Matrix>>,
+        /// Recover groups (and request cancellation) the moment their
+        /// inner span closes. Off under `collect_all`, where assembly
+        /// is deferred so outputs are bit-reproducible.
+        eager: bool,
+    },
 }
 
 /// One in-flight job's complete decode state.
@@ -48,21 +104,23 @@ pub struct JobState {
     /// When the job was admitted and its items dispatched.
     pub started: Instant,
     pub deadline: Instant,
-    decoder: SpanDecoder,
-    products: Vec<Option<Matrix>>,
+    decode: Decode,
     pub finished: usize,
     /// Backend errors (count as node failures for decoding).
     pub errors: usize,
     pub dispatched: usize,
     pub injected_failures: usize,
     pub injected_stragglers: usize,
+    /// Replies that will never arrive because their items were revoked
+    /// mid-job (group cancellation).
+    revoked: usize,
     pub time_to_decodable: Option<Duration>,
 }
 
 impl JobState {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
-        graph: &TaskGraph,
+        plan: &DispatchPlan,
         job_id: u64,
         a4: Arc<[Matrix; 4]>,
         b4: Arc<[Matrix; 4]>,
@@ -71,8 +129,29 @@ impl JobState {
         deadline: Instant,
         injected_failures: usize,
         injected_stragglers: usize,
+        eager: bool,
     ) -> JobState {
         let n = 2 * a4[0].rows();
+        let decode = match plan {
+            DispatchPlan::Flat(g) => Decode::Flat {
+                decoder: g.decoder(),
+                products: vec![None; g.num_tasks()],
+            },
+            DispatchPlan::Nested(g) => Decode::Nested {
+                group_size: g.group_size(),
+                groups: (0..g.num_groups())
+                    .map(|_| GroupDecode {
+                        decoder: g.inner.decoder(),
+                        products: vec![None; g.group_size()],
+                        open: true,
+                        registered: false,
+                    })
+                    .collect(),
+                outer: g.outer.decoder(),
+                outer_products: vec![None; g.num_groups()],
+                eager,
+            },
+        };
         JobState {
             job_id,
             n,
@@ -81,20 +160,21 @@ impl JobState {
             enqueued,
             started,
             deadline,
-            decoder: graph.decoder(),
-            products: vec![None; graph.num_tasks()],
+            decode,
             finished: 0,
             errors: 0,
-            dispatched: graph.num_tasks(),
+            dispatched: plan.num_work_items(),
             injected_failures,
             injected_stragglers,
+            revoked: 0,
             time_to_decodable: None,
         }
     }
 
-    /// Replies that can still arrive (injected failures never answer).
+    /// Replies that can still arrive (injected failures never answer;
+    /// revoked items were purged from the queue before execution).
     pub fn expected_replies(&self) -> usize {
-        self.dispatched - self.injected_failures
+        self.dispatched - self.injected_failures - self.revoked
     }
 
     /// No more replies are coming for this job.
@@ -102,62 +182,138 @@ impl JobState {
         self.finished + self.errors >= self.expected_replies()
     }
 
+    /// Debit the expected-reply count after a mid-job revocation purged
+    /// `n` would-have-replied items from the work queue.
+    pub fn note_revoked(&mut self, n: usize) {
+        self.revoked += n;
+    }
+
     pub fn is_decodable(&self) -> bool {
-        self.decoder.is_decodable()
+        match &self.decode {
+            Decode::Flat { decoder, .. } => decoder.is_decodable(),
+            Decode::Nested { outer, .. } => outer.is_decodable(),
+        }
+    }
+
+    /// Outer groups recovered so far (0 for flat jobs).
+    pub fn groups_recovered(&self) -> usize {
+        match &self.decode {
+            Decode::Flat { .. } => 0,
+            Decode::Nested { groups, .. } => {
+                groups.iter().filter(|g| g.registered).count()
+            }
+        }
     }
 
     /// Fold one worker reply into the decode state. Duplicate replies
     /// for an already-recorded task are ignored.
-    pub fn on_reply(&mut self, reply: WorkerReply) {
+    ///
+    /// Returns the leaf-id range of a group that was *just* recovered
+    /// eagerly (nested jobs only) — the scheduler revokes that range
+    /// from the work queue and debits the purge via [`Self::note_revoked`].
+    pub fn on_reply(&mut self, reply: WorkerReply) -> Option<Range<usize>> {
         debug_assert_eq!(reply.job_id, self.job_id);
-        match reply.product {
-            Ok(m) => {
-                if self.products[reply.task_id].is_some() {
-                    return;
+        let n = self.n;
+        match &mut self.decode {
+            Decode::Flat { decoder, products } => {
+                match reply.product {
+                    Ok(m) => {
+                        if products[reply.task_id].is_some() {
+                            return None;
+                        }
+                        products[reply.task_id] = Some(m);
+                        self.finished += 1;
+                        if decoder.on_finished(reply.task_id)
+                            && self.time_to_decodable.is_none()
+                        {
+                            self.time_to_decodable = Some(self.started.elapsed());
+                        }
+                    }
+                    Err(_) => self.errors += 1,
                 }
-                self.products[reply.task_id] = Some(m);
-                self.finished += 1;
-                if self.decoder.on_finished(reply.task_id) && self.time_to_decodable.is_none() {
-                    self.time_to_decodable = Some(self.started.elapsed());
-                }
+                None
             }
-            Err(_) => self.errors += 1,
+            Decode::Nested { group_size, groups, outer, outer_products, eager } => {
+                let m = match reply.product {
+                    Ok(m) => m,
+                    Err(_) => {
+                        self.errors += 1;
+                        return None;
+                    }
+                };
+                let g = reply.task_id / *group_size;
+                let j = reply.task_id % *group_size;
+                let grp = &mut groups[g];
+                if !grp.open {
+                    // The group is already recovered; the reply still
+                    // counts toward exhaustion accounting.
+                    self.finished += 1;
+                    return None;
+                }
+                if grp.products[j].is_some() {
+                    return None;
+                }
+                grp.products[j] = Some(m);
+                self.finished += 1;
+                if grp.decoder.on_finished(j) && !grp.registered {
+                    grp.registered = true;
+                    if outer.on_finished(g) && self.time_to_decodable.is_none() {
+                        self.time_to_decodable = Some(self.started.elapsed());
+                    }
+                    if *eager {
+                        let blocks = solve_blocks(&grp.decoder, &grp.products, n / 4)
+                            .expect("inner solve after decodability");
+                        outer_products[g] = Some(join_blocks(&blocks));
+                        grp.open = false;
+                        grp.products = Vec::new();
+                        return Some(g * *group_size..(g + 1) * *group_size);
+                    }
+                }
+                None
+            }
         }
     }
 
     /// Weighted-sum assembly of C from the finished products (requires
-    /// decodability). Uses the PJRT decode artifact when available,
-    /// native axpy otherwise.
-    pub fn assemble(&self, backend: &Backend) -> Result<Matrix, String> {
-        let bs = self.n / 2;
-        let outcome = self.decoder.solve().ok_or("assemble called before decodable")?;
-        let weight_sets: Vec<Vec<f32>> = (0..4)
-            .map(|t| outcome.weights[t].iter().map(|&w| w as f32).collect())
-            .collect();
-        if let (Backend::Pjrt(h), true) = (backend, self.products.len() <= DECODE_SLOTS) {
-            // One round-trip: the product stack is shipped and staged as
-            // a literal once, all four C blocks come back together.
-            let blocks = h.decode_combine_multi(weight_sets, self.products.clone(), bs)?;
-            let mut it = blocks.into_iter();
-            let four: [Matrix; 4] = std::array::from_fn(|_| it.next().unwrap());
-            return Ok(join_blocks(&four));
-        }
-        let mut blocks: Vec<Matrix> = Vec::with_capacity(4);
-        for weights in &weight_sets {
-            let mut out = Matrix::zeros(bs, bs);
-            for (i, p) in self.products.iter().enumerate() {
-                if weights[i] != 0.0 {
-                    let m = p
-                        .as_ref()
-                        .ok_or_else(|| format!("weight on unfinished task {i}"))?;
-                    out.axpy(weights[i], m);
+    /// decodability). Flat jobs use the PJRT decode artifact when
+    /// available, native axpy otherwise; nested jobs first recover any
+    /// deferred groups (inner solves), then solve the outer span.
+    pub fn assemble(&mut self, backend: &Backend) -> Result<Matrix, String> {
+        let n = self.n;
+        match &mut self.decode {
+            Decode::Flat { decoder, products } => {
+                let bs = n / 2;
+                if let (Backend::Pjrt(h), true) = (backend, products.len() <= DECODE_SLOTS) {
+                    let outcome =
+                        decoder.solve().ok_or("assemble called before decodable")?;
+                    let weight_sets: Vec<Vec<f32>> = (0..4)
+                        .map(|t| outcome.weights[t].iter().map(|&w| w as f32).collect())
+                        .collect();
+                    // One round-trip: the product stack is shipped and
+                    // staged as a literal once, all four C blocks come
+                    // back together.
+                    let blocks = h.decode_combine_multi(weight_sets, products.clone(), bs)?;
+                    let mut it = blocks.into_iter();
+                    let four: [Matrix; 4] = std::array::from_fn(|_| it.next().unwrap());
+                    return Ok(join_blocks(&four));
                 }
+                let four = solve_blocks(decoder, products, bs)?;
+                Ok(join_blocks(&four))
             }
-            blocks.push(out);
+            Decode::Nested { groups, outer, outer_products, .. } => {
+                // Recover groups whose assembly was deferred
+                // (collect_all mode, or a race between decodability and
+                // completion).
+                for (g, grp) in groups.iter().enumerate() {
+                    if outer_products[g].is_none() && grp.decoder.is_decodable() {
+                        let blocks = solve_blocks(&grp.decoder, &grp.products, n / 4)?;
+                        outer_products[g] = Some(join_blocks(&blocks));
+                    }
+                }
+                let four = solve_blocks(outer, outer_products, n / 2)?;
+                Ok(join_blocks(&four))
+            }
         }
-        let mut it = blocks.into_iter();
-        let four: [Matrix; 4] = std::array::from_fn(|_| it.next().unwrap());
-        Ok(join_blocks(&four))
     }
 
     /// Local fallback: reassemble the operands from the shared blocks
@@ -183,50 +339,93 @@ impl JobState {
     }
 }
 
+/// Solve the four decode-weight sets and combine `products` into the
+/// four output blocks of size `bs` (native axpy path). Requires the
+/// decoder to be decodable; weights are only ever non-zero on finished
+/// tasks, so every referenced product is present.
+fn solve_blocks(
+    decoder: &SpanDecoder,
+    products: &[Option<Matrix>],
+    bs: usize,
+) -> Result<[Matrix; 4], String> {
+    let outcome = decoder.solve().ok_or("assemble called before decodable")?;
+    let mut blocks: Vec<Matrix> = Vec::with_capacity(4);
+    for weights in &outcome.weights {
+        let mut out = Matrix::zeros(bs, bs);
+        for (i, p) in products.iter().enumerate() {
+            let w = weights[i] as f32;
+            if w != 0.0 {
+                let m = p
+                    .as_ref()
+                    .ok_or_else(|| format!("weight on unfinished task {i}"))?;
+                out.axpy(w, m);
+            }
+        }
+        blocks.push(out);
+    }
+    let mut it = blocks.into_iter();
+    Ok(std::array::from_fn(|_| it.next().unwrap()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::nested::NestedTaskSet;
     use crate::coding::scheme::TaskSet;
+    use crate::coordinator::task::{NestedGraph, TaskGraph};
+    use crate::linalg::blocked::{encode_operand, split_blocks};
     use crate::sim::rng::Rng;
 
     fn reply(job_id: u64, task_id: usize, m: Matrix) -> WorkerReply {
         WorkerReply { job_id, task_id, product: Ok(m), compute_time: Duration::ZERO }
     }
 
+    fn flat_job(
+        graph: &TaskGraph,
+        job_id: u64,
+        a4: Arc<[Matrix; 4]>,
+        b4: Arc<[Matrix; 4]>,
+        injected_failures: usize,
+        injected_stragglers: usize,
+    ) -> JobState {
+        let now = Instant::now();
+        JobState::new(
+            &DispatchPlan::Flat(graph.clone()),
+            job_id,
+            a4,
+            b4,
+            now,
+            now,
+            now + Duration::from_secs(5),
+            injected_failures,
+            injected_stragglers,
+            true,
+        )
+    }
+
     #[test]
     fn state_machine_tracks_decodability_and_counts() {
-        use crate::linalg::blocked::{encode_operand, split_blocks};
         let graph = TaskGraph::new(TaskSet::strassen_winograd(2));
         let mut rng = Rng::seeded(1);
         let a = Matrix::random(8, 8, &mut rng);
         let b = Matrix::random(8, 8, &mut rng);
         let a4 = split_blocks(&a);
         let b4 = split_blocks(&b);
-        let now = Instant::now();
-        let mut job = JobState::new(
-            &graph,
-            3,
-            Arc::new(a4.clone()),
-            Arc::new(b4.clone()),
-            now,
-            now,
-            now + Duration::from_secs(5),
-            2,
-            1,
-        );
+        let mut job =
+            flat_job(&graph, 3, Arc::new(a4.clone()), Arc::new(b4.clone()), 2, 1);
         assert_eq!(job.n, 8);
         assert_eq!(job.expected_replies(), 14);
         assert!(!job.is_decodable());
+        assert_eq!(job.groups_recovered(), 0);
         assert!(
             job.fallback_product().approx_eq(&a.matmul(&b), 1e-6),
             "fallback reassembles the operands"
         );
 
         for spec in &graph.specs {
-            let ica: [i32; 4] = std::array::from_fn(|i| spec.ca[i] as i32);
-            let icb: [i32; 4] = std::array::from_fn(|i| spec.cb[i] as i32);
-            let p = encode_operand(&ica, &a4).matmul(&encode_operand(&icb, &b4));
-            job.on_reply(reply(3, spec.id, p));
+            let p = encode_operand(&spec.int_ca(), &a4)
+                .matmul(&encode_operand(&spec.int_cb(), &b4));
+            assert!(job.on_reply(reply(3, spec.id, p)).is_none());
         }
         assert!(job.is_decodable());
         assert_eq!(job.finished, 16);
@@ -247,18 +446,7 @@ mod tests {
     #[test]
     fn duplicate_replies_are_ignored() {
         let graph = TaskGraph::new(TaskSet::strassen_winograd(0));
-        let now = Instant::now();
-        let mut job = JobState::new(
-            &graph,
-            1,
-            zero_blocks(2),
-            zero_blocks(2),
-            now,
-            now,
-            now + Duration::from_secs(1),
-            0,
-            0,
-        );
+        let mut job = flat_job(&graph, 1, zero_blocks(2), zero_blocks(2), 0, 0);
         job.on_reply(reply(1, 0, Matrix::zeros(2, 2)));
         job.on_reply(reply(1, 0, Matrix::zeros(2, 2)));
         assert_eq!(job.finished, 1);
@@ -267,18 +455,7 @@ mod tests {
     #[test]
     fn backend_errors_count_toward_exhaustion() {
         let graph = TaskGraph::new(TaskSet::strassen_winograd(0));
-        let now = Instant::now();
-        let mut job = JobState::new(
-            &graph,
-            1,
-            zero_blocks(2),
-            zero_blocks(2),
-            now,
-            now,
-            now + Duration::from_secs(1),
-            0,
-            0,
-        );
+        let mut job = flat_job(&graph, 1, zero_blocks(2), zero_blocks(2), 0, 0);
         for t in 0..graph.num_tasks() {
             job.on_reply(WorkerReply {
                 job_id: 1,
@@ -290,5 +467,127 @@ mod tests {
         assert!(job.all_replies_in());
         assert!(!job.is_decodable());
         assert_eq!(job.errors, 14);
+    }
+
+    /// Compute the leaf product (g, j) exactly as a nested worker would:
+    /// inner-encode the blocks of the outer-encoded operands.
+    fn leaf_product(
+        graph: &NestedGraph,
+        a4: &[Matrix; 4],
+        b4: &[Matrix; 4],
+        g: usize,
+        j: usize,
+    ) -> Matrix {
+        let lo = encode_operand(&graph.outer.specs[g].int_ca(), a4);
+        let ro = encode_operand(&graph.outer.specs[g].int_cb(), b4);
+        let li = encode_operand(&graph.inner.specs[j].int_ca(), &split_blocks(&lo));
+        let ri = encode_operand(&graph.inner.specs[j].int_cb(), &split_blocks(&ro));
+        li.matmul(&ri)
+    }
+
+    fn nested_job(graph: &NestedGraph, eager: bool) -> (JobState, Matrix, Matrix) {
+        let mut rng = Rng::seeded(9);
+        // Small-integer operands: every intermediate is exactly
+        // representable in f32, so decode equality is bit-exact.
+        let n = 8;
+        let a = Matrix::from_fn(n, n, |_, _| (rng.below(7) as f32) - 3.0);
+        let b = Matrix::from_fn(n, n, |_, _| (rng.below(7) as f32) - 3.0);
+        let now = Instant::now();
+        let job = JobState::new(
+            &DispatchPlan::Nested(graph.clone()),
+            1,
+            Arc::new(split_blocks(&a)),
+            Arc::new(split_blocks(&b)),
+            now,
+            now,
+            now + Duration::from_secs(5),
+            0,
+            0,
+            eager,
+        );
+        (job, a, b)
+    }
+
+    #[test]
+    fn nested_two_stage_decode_recovers_exactly() {
+        let graph = NestedGraph::new(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(2),
+            TaskSet::strassen_winograd(2),
+        ));
+        let (mut job, a, b) = nested_job(&graph, true);
+        assert_eq!(job.dispatched, 256);
+        let a4 = split_blocks(&join_blocks(&job.a4));
+        let b4 = split_blocks(&join_blocks(&job.b4));
+        let m2 = graph.group_size();
+        // Deliver every leaf; eager mode must revoke each group's
+        // remaining items exactly once, right when its span closes.
+        let mut revokes = 0;
+        for g in 0..graph.num_groups() {
+            for j in 0..m2 {
+                let p = leaf_product(&graph, &a4, &b4, g, j);
+                if let Some(range) = job.on_reply(reply(1, g * m2 + j, p)) {
+                    assert_eq!(range, graph.group_range(g));
+                    revokes += 1;
+                }
+            }
+        }
+        assert_eq!(revokes, graph.num_groups());
+        assert_eq!(job.groups_recovered(), graph.num_groups());
+        assert!(job.is_decodable());
+        let c = job.assemble(&Backend::Native).unwrap();
+        assert_eq!(c.as_slice(), a.matmul(&b).as_slice(), "integer decode is exact");
+    }
+
+    #[test]
+    fn nested_deferred_mode_assembles_at_the_end() {
+        let graph = NestedGraph::new(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(0),
+        ));
+        let (mut job, a, b) = nested_job(&graph, false);
+        let a4 = split_blocks(&join_blocks(&job.a4));
+        let b4 = split_blocks(&join_blocks(&job.b4));
+        let m2 = graph.group_size();
+        for g in 0..graph.num_groups() {
+            for j in 0..m2 {
+                let p = leaf_product(&graph, &a4, &b4, g, j);
+                assert!(
+                    job.on_reply(reply(1, g * m2 + j, p)).is_none(),
+                    "deferred mode never requests revocation"
+                );
+            }
+        }
+        assert!(job.is_decodable());
+        assert!(job.all_replies_in());
+        let c = job.assemble(&Backend::Native).unwrap();
+        assert_eq!(c.as_slice(), a.matmul(&b).as_slice());
+    }
+
+    #[test]
+    fn nested_revocation_accounting_reaches_exhaustion() {
+        let graph = NestedGraph::new(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(0),
+        ));
+        let (mut job, _a, _b) = nested_job(&graph, true);
+        let a4 = split_blocks(&join_blocks(&job.a4));
+        let b4 = split_blocks(&join_blocks(&job.b4));
+        let m2 = graph.group_size();
+        // Deliver replies group by group, stopping at the reply that
+        // closes each group's span; credit the rest of the group as
+        // revoked, exactly as the scheduler does after a queue purge.
+        for g in 0..graph.num_groups() {
+            for j in 0..m2 {
+                let p = leaf_product(&graph, &a4, &b4, g, j);
+                if let Some(range) = job.on_reply(reply(1, g * m2 + j, p)) {
+                    // Pretend the queue still held the rest of the group.
+                    let remaining = range.end - (g * m2 + j + 1);
+                    job.note_revoked(remaining);
+                    break;
+                }
+            }
+        }
+        assert!(job.all_replies_in(), "revocation must debit expected replies");
+        assert!(job.is_decodable());
     }
 }

@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use crate::coordinator::task::DispatchPlan;
 use crate::coordinator::worker::{Backend, FaultPlan};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
@@ -71,7 +72,25 @@ pub struct Master {
 impl Master {
     /// Build a master with one worker thread per task.
     pub fn new(set: TaskSet, backend: Backend, cfg: MasterConfig) -> Master {
-        let sched = Scheduler::new(set, backend, SchedulerConfig { master: cfg, depth: 1 });
+        Master::with_plan(DispatchPlan::flat(set), backend, cfg, None)
+    }
+
+    /// Build a master over an arbitrary dispatch plan (e.g. a nested
+    /// two-level scheme), optionally pinning the worker-pool size — the
+    /// same sequential one-multiply-at-a-time facade, so `multiply`
+    /// works identically for flat and nested schemes.
+    pub fn with_plan(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: MasterConfig,
+        workers: Option<usize>,
+    ) -> Master {
+        let sched = Scheduler::with_plan(
+            plan,
+            backend,
+            SchedulerConfig { master: cfg, depth: 1 },
+            workers,
+        );
         let metrics = sched.metrics.clone();
         Master { sched, metrics }
     }
@@ -208,6 +227,29 @@ mod tests {
         let (a, b) = rand_pair(8, 4);
         let err = m.multiply(&a, &b).unwrap_err();
         assert!(err.contains("not decodable"), "{err}");
+        m.shutdown();
+    }
+
+    #[test]
+    fn nested_plan_facade_multiplies() {
+        use crate::coding::nested::NestedTaskSet;
+        let mut m = Master::with_plan(
+            DispatchPlan::nested(NestedTaskSet::compose(
+                TaskSet::strassen_winograd(0),
+                TaskSet::strassen_winograd(0),
+            )),
+            Backend::Native,
+            MasterConfig::default(),
+            Some(14),
+        );
+        assert_eq!(m.num_workers(), 14);
+        let (a, b) = rand_pair(16, 21);
+        let (c, report) = m.multiply(&a, &b).unwrap();
+        assert_eq!(report.dispatched, 196);
+        assert!(!report.fell_back);
+        assert!(c.approx_eq(&a.matmul(&b), 1e-3));
+        // Nested plans split twice: n must be divisible by 4.
+        assert!(m.multiply(&Matrix::zeros(6, 6), &Matrix::zeros(6, 6)).is_err());
         m.shutdown();
     }
 

@@ -10,15 +10,22 @@
 //!   delayed replies (a delay line defers delivery without blocking the
 //!   slot); failed nodes never answer.
 //! * [`job`] — the per-job decode state machine: an incremental
-//!   `SpanDecoder`, the finished products and the deadline for one
-//!   multiply job, keyed by `job_id`.
+//!   `SpanDecoder` (or, for nested two-level schemes, one inner decoder
+//!   per outer group plus the outer decoder — the two-stage path), the
+//!   finished products and the deadline for one multiply job, keyed by
+//!   `job_id`.
+//! * [`task`] — the dispatch plans: a flat [`TaskGraph`] (one item per
+//!   task, the paper's model) or a nested `NestedGraph` (M₁·M₂ leaf
+//!   items, grouped by outer product, ids contiguous per group).
 //! * [`scheduler`] — the job multiplexer: admits jobs up to a
 //!   configurable **in-flight depth**, samples faults at admission (in
 //!   submission order, so seeded streams are depth-invariant), routes
 //!   replies to their job by `job_id` — dropping and counting replies
 //!   for closed jobs (the cross-job leakage guard) — and **cancels**
 //!   a completed job's outstanding items so straggler-freed slots
-//!   immediately pick up the next job's work.
+//!   immediately pick up the next job's work. Nested jobs additionally
+//!   cancel an entire inner group's queued leaves the moment that
+//!   group's product is recovered.
 //! * [`master`] — the sequential facade: encode → dispatch → collect
 //!   with online span decoding → recover → assemble, exactly the
 //!   master-node role of the paper's Fig. 1, implemented as a depth-1
@@ -39,5 +46,5 @@ pub use job::JobState;
 pub use master::{Master, MasterConfig, MultiplyReport};
 pub use scheduler::{FinishedJob, Scheduler, SchedulerConfig};
 pub use server::{MmServer, ServerConfig, ServerReport};
-pub use task::TaskGraph;
+pub use task::{DispatchPlan, NestedGraph, TaskGraph};
 pub use worker::{Backend, FaultPlan, WorkerPool};

@@ -1,15 +1,31 @@
 //! The job-multiplexed scheduler: many in-flight multiply jobs share one
-//! [`WorkerPool`], with admission up to a configurable depth,
-//! per-job decode state machines keyed by `job_id`, early cancellation
-//! of spanned jobs' outstanding items, and a `job_id` guard that drops
+//! [`WorkerPool`], with admission up to a configurable depth, per-job
+//! decode state machines keyed by `job_id`, early cancellation of
+//! spanned jobs' outstanding items, and a `job_id` guard that drops
 //! (and counts) late replies from closed jobs.
+//!
+//! A job is dispatched according to its [`DispatchPlan`]:
+//!
+//! * **Flat** — one work item per task of the scheme (the paper's
+//!   model: the master encodes each operand pair and sends one product
+//!   to each node).
+//! * **Nested** — the two-level fan-out: for every outer group `g` the
+//!   scheduler computes the outer-encoded operands `L_g = Σ u_g[p] A_p`
+//!   and `R_g = Σ v_g[q] B_q`, splits them 2×2 again, and dispatches
+//!   one leaf item per inner task — `M₁·M₂` items with contiguous ids
+//!   per group. The moment a group's inner span closes, its remaining
+//!   queued leaf items are **revoked as a group**
+//!   ([`WorkerPool::revoke_range`]) and the job's expected-reply count
+//!   is debited, so a 256-leaf job stops occupying the fleet long
+//!   before every leaf has run.
 //!
 //! Determinism: faults are sampled from one scheduler-wide RNG at
 //! admission time, per job in task order, and jobs are admitted in
 //! submission order — so a seeded job stream draws the exact same fault
 //! sequence at every depth (the depth-invariance the property tests pin
 //! down; combine with [`MasterConfig::collect_all`] for bit-identical
-//! outputs).
+//! outputs). Jobs submitted with an explicit fault script
+//! ([`Scheduler::submit_with_faults`]) draw nothing from the RNG.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -19,9 +35,9 @@ use std::time::{Duration, Instant};
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::job::{JobState, MultiplyReport};
 use crate::coordinator::master::MasterConfig;
-use crate::coordinator::task::TaskGraph;
+use crate::coordinator::task::DispatchPlan;
 use crate::coordinator::worker::{Backend, FaultAction, WorkItem, WorkerPool, WorkerReply};
-use crate::linalg::blocked::split_blocks;
+use crate::linalg::blocked::{encode_operand, split_blocks};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
 use crate::sim::rng::Rng;
@@ -56,11 +72,14 @@ struct Pending {
     a: Matrix,
     b: Matrix,
     enqueued: Instant,
+    /// Explicit per-item fault script (tests / replay); `None` samples
+    /// from the scheduler RNG at admission.
+    faults: Option<Vec<FaultAction>>,
 }
 
 /// The multiplexed scheduler.
 pub struct Scheduler {
-    graph: TaskGraph,
+    plan: DispatchPlan,
     pool: WorkerPool,
     backend: Backend,
     cfg: SchedulerConfig,
@@ -76,13 +95,26 @@ pub struct Scheduler {
 impl Scheduler {
     /// Build a scheduler with one worker thread per task in the set.
     pub fn new(set: TaskSet, backend: Backend, cfg: SchedulerConfig) -> Scheduler {
-        let graph = TaskGraph::new(set);
+        Scheduler::with_plan(DispatchPlan::flat(set), backend, cfg, None)
+    }
+
+    /// Build a scheduler for an arbitrary dispatch plan. `workers`
+    /// overrides the pool size (defaults to one node per task for flat
+    /// plans, a capped fleet for nested fan-outs — leaf items multiplex
+    /// onto whatever fleet exists, they do not each own a thread).
+    pub fn with_plan(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: SchedulerConfig,
+        workers: Option<usize>,
+    ) -> Scheduler {
         let metrics = Registry::new();
-        let pool = WorkerPool::spawn(graph.num_tasks(), backend.clone(), metrics.clone());
+        let pool_size = workers.unwrap_or_else(|| plan.default_pool_size());
+        let pool = WorkerPool::spawn(pool_size, backend.clone(), metrics.clone());
         let rng = Rng::seeded(cfg.master.seed);
         let (reply_tx, reply_rx) = channel();
         Scheduler {
-            graph,
+            plan,
             pool,
             backend,
             cfg,
@@ -97,11 +129,16 @@ impl Scheduler {
     }
 
     pub fn scheme_name(&self) -> &str {
-        &self.graph.set.name
+        self.plan.name()
     }
 
     pub fn num_workers(&self) -> usize {
         self.pool.size()
+    }
+
+    /// Work items dispatched per job (tasks, or leaves for nested plans).
+    pub fn items_per_job(&self) -> usize {
+        self.plan.num_work_items()
     }
 
     /// Configured in-flight depth (≥ 1).
@@ -118,9 +155,38 @@ impl Scheduler {
         self.inflight.len()
     }
 
-    /// Submit a multiply job `C = A · B` (square, even dimension).
-    /// Admits immediately if an in-flight slot is free.
+    /// Submit a multiply job `C = A · B` (square, dimension divisible by
+    /// 2 per split level: 2 for flat plans, 4 for nested). Admits
+    /// immediately if an in-flight slot is free.
     pub fn submit(&mut self, a: Matrix, b: Matrix) -> Result<u64, String> {
+        self.submit_job(a, b, None)
+    }
+
+    /// Submit with an explicit per-item fault script (length must equal
+    /// [`Self::items_per_job`]), bypassing the fault plan's sampling —
+    /// deterministic replay for tests and fault-pattern experiments.
+    pub fn submit_with_faults(
+        &mut self,
+        a: Matrix,
+        b: Matrix,
+        faults: Vec<FaultAction>,
+    ) -> Result<u64, String> {
+        if faults.len() != self.plan.num_work_items() {
+            return Err(format!(
+                "fault script length {} != work items per job {}",
+                faults.len(),
+                self.plan.num_work_items()
+            ));
+        }
+        self.submit_job(a, b, Some(faults))
+    }
+
+    fn submit_job(
+        &mut self,
+        a: Matrix,
+        b: Matrix,
+        faults: Option<Vec<FaultAction>>,
+    ) -> Result<u64, String> {
         let n = a.rows();
         if a.shape() != (n, n) || b.shape() != (n, n) {
             return Err(format!(
@@ -129,12 +195,17 @@ impl Scheduler {
                 b.shape()
             ));
         }
-        if n % 2 != 0 {
-            return Err(format!("dimension must be even, got {n}"));
+        let div = self.plan.block_divisor();
+        if n == 0 || n % div != 0 {
+            return Err(format!(
+                "dimension must be a positive multiple of {div} for {}, got {n}",
+                self.plan.name()
+            ));
         }
         self.next_job += 1;
         let job_id = self.next_job;
-        self.pending.push_back(Pending { job_id, a, b, enqueued: Instant::now() });
+        self.pending
+            .push_back(Pending { job_id, a, b, enqueued: Instant::now(), faults });
         self.admit_ready();
         self.update_gauges();
         Ok(job_id)
@@ -195,35 +266,65 @@ impl Scheduler {
         let started = Instant::now();
         let a4 = Arc::new(split_blocks(&p.a));
         let b4 = Arc::new(split_blocks(&p.b));
-        // Sample all faults first, in task order, so the RNG stream is a
-        // pure function of the job index.
-        let faults: Vec<FaultAction> = self
-            .graph
-            .specs
-            .iter()
-            .map(|_| self.cfg.master.fault.sample(&mut self.rng))
-            .collect();
+        // Sample all faults first, in item order, so the RNG stream is a
+        // pure function of the job index (scripted jobs draw nothing).
+        let faults: Vec<FaultAction> = match p.faults {
+            Some(f) => f,
+            None => (0..self.plan.num_work_items())
+                .map(|_| self.cfg.master.fault.sample(&mut self.rng))
+                .collect(),
+        };
         let mut injected_failures = 0;
         let mut injected_stragglers = 0;
-        for (spec, fault) in self.graph.specs.iter().zip(&faults) {
+        for fault in &faults {
             match fault {
                 FaultAction::Fail => injected_failures += 1,
                 FaultAction::Delay(_) => injected_stragglers += 1,
                 FaultAction::None => {}
             }
-            self.pool.submit(WorkItem {
-                job_id: p.job_id,
-                task_id: spec.id,
-                ca: spec.ca,
-                cb: spec.cb,
-                a4: a4.clone(),
-                b4: b4.clone(),
-                fault: *fault,
-                reply: self.reply_tx.clone(),
-            });
+        }
+        match &self.plan {
+            DispatchPlan::Flat(graph) => {
+                for (spec, fault) in graph.specs.iter().zip(&faults) {
+                    self.pool.submit(WorkItem {
+                        job_id: p.job_id,
+                        task_id: spec.id,
+                        ca: spec.ca,
+                        cb: spec.cb,
+                        a4: a4.clone(),
+                        b4: b4.clone(),
+                        fault: *fault,
+                        reply: self.reply_tx.clone(),
+                    });
+                }
+            }
+            DispatchPlan::Nested(graph) => {
+                let m2 = graph.group_size();
+                for (g, ospec) in graph.outer.specs.iter().enumerate() {
+                    // Level-1 encode at the master, level-2 split: the
+                    // group's operands are shared by its leaf items.
+                    let lg = encode_operand(&ospec.int_ca(), &a4);
+                    let rg = encode_operand(&ospec.int_cb(), &b4);
+                    let ga4 = Arc::new(split_blocks(&lg));
+                    let gb4 = Arc::new(split_blocks(&rg));
+                    for (j, ispec) in graph.inner.specs.iter().enumerate() {
+                        let task_id = g * m2 + j;
+                        self.pool.submit(WorkItem {
+                            job_id: p.job_id,
+                            task_id,
+                            ca: ispec.ca,
+                            cb: ispec.cb,
+                            a4: ga4.clone(),
+                            b4: gb4.clone(),
+                            fault: faults[task_id],
+                            reply: self.reply_tx.clone(),
+                        });
+                    }
+                }
+            }
         }
         let job = JobState::new(
-            &self.graph,
+            &self.plan,
             p.job_id,
             a4,
             b4,
@@ -232,6 +333,7 @@ impl Scheduler {
             started + self.cfg.master.deadline,
             injected_failures,
             injected_stragglers,
+            !self.cfg.master.collect_all,
         );
         self.metrics.counter("jobs_dispatched").inc();
         self.inflight.insert(p.job_id, job);
@@ -239,22 +341,36 @@ impl Scheduler {
 
     /// Route one reply to its job; replies for jobs that are no longer
     /// open (completed, cancelled, or never existed) are dropped and
-    /// counted — the cross-job leakage guard.
+    /// counted — the cross-job leakage guard. A reply that closes a
+    /// nested group triggers the group's queue revocation.
     fn on_reply(&mut self, reply: WorkerReply, done: &mut Vec<FinishedJob>) {
         let job_id = reply.job_id;
-        let Some(job) = self.inflight.get_mut(&job_id) else {
-            self.metrics.counter("replies_stale_dropped").inc();
-            return;
+        let revoke = {
+            let Some(job) = self.inflight.get_mut(&job_id) else {
+                self.metrics.counter("replies_stale_dropped").inc();
+                return;
+            };
+            match &reply.product {
+                Ok(_) => {
+                    self.metrics.histogram("worker_compute").observe(reply.compute_time);
+                }
+                Err(_) => {
+                    self.metrics.counter("worker_errors").inc();
+                }
+            }
+            job.on_reply(reply)
         };
-        match &reply.product {
-            Ok(_) => {
-                self.metrics.histogram("worker_compute").observe(reply.compute_time);
+        if let Some(range) = revoke {
+            let (removed, replying) = self.pool.revoke_range(job_id, range);
+            if removed > 0 {
+                self.metrics.counter("group_items_cancelled").add(removed as u64);
             }
-            Err(_) => {
-                self.metrics.counter("worker_errors").inc();
+            if let Some(job) = self.inflight.get_mut(&job_id) {
+                job.note_revoked(replying);
             }
+            self.metrics.counter("groups_recovered").inc();
         }
-        job.on_reply(reply);
+        let Some(job) = self.inflight.get(&job_id) else { return };
         let decodable = job.is_decodable();
         let collect_all = self.cfg.master.collect_all;
         let complete = if decodable {
@@ -301,9 +417,9 @@ impl Scheduler {
 
     /// Finalize one job: cancel its outstanding items, assemble or fall
     /// back, record metrics, free the slot (admitting the next job).
-    fn finish(&mut self, job: JobState, decodable: bool, done: &mut Vec<FinishedJob>) {
+    fn finish(&mut self, mut job: JobState, decodable: bool, done: &mut Vec<FinishedJob>) {
         self.pool.revoke(job.job_id);
-        let scheme = self.graph.set.name.clone();
+        let scheme = self.plan.name().to_string();
         let result = if decodable {
             match job.assemble(&self.backend) {
                 Ok(c) => Ok((c, job.report(&scheme, false))),
@@ -348,6 +464,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::nested::NestedTaskSet;
     use crate::coordinator::worker::FaultPlan;
 
     fn cfg(depth: usize, fault: FaultPlan, seed: u64) -> SchedulerConfig {
@@ -468,6 +585,70 @@ mod tests {
         // Exhaustion (0 expected replies) completes well before the 10 s
         // deadline.
         assert!(t0.elapsed() < Duration::from_secs(5));
+        s.shutdown();
+    }
+
+    fn nested_plan() -> DispatchPlan {
+        DispatchPlan::nested(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(2),
+            TaskSet::strassen_winograd(2),
+        ))
+    }
+
+    #[test]
+    fn nested_plan_runs_end_to_end_without_faults() {
+        let mut s = Scheduler::with_plan(
+            nested_plan(),
+            Backend::Native,
+            cfg(2, FaultPlan::NONE, 1),
+            Some(16),
+        );
+        assert_eq!(s.items_per_job(), 256);
+        assert_eq!(s.num_workers(), 16);
+        let (a, b) = rand_pair(16, 4);
+        let want = a.matmul(&b);
+        s.submit(a, b).unwrap();
+        let done = s.drive(1);
+        let (c, report) = done[0].result.as_ref().unwrap();
+        assert!(!report.fell_back);
+        assert_eq!(report.dispatched, 256);
+        assert!(c.approx_eq(&want, 1e-3), "rel {}", c.rel_error(&want));
+        // Eager group recovery cancels queued leaf work.
+        assert!(s.metrics.counter("groups_recovered").get() >= 16);
+        s.shutdown();
+    }
+
+    #[test]
+    fn nested_plan_rejects_non_divisible_dimension() {
+        let mut s = Scheduler::with_plan(
+            nested_plan(),
+            Backend::Native,
+            cfg(1, FaultPlan::NONE, 1),
+            Some(4),
+        );
+        let err = s.submit(Matrix::zeros(6, 6), Matrix::zeros(6, 6)).unwrap_err();
+        assert!(err.contains("multiple of 4"), "{err}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn fault_script_length_is_validated() {
+        let mut s = Scheduler::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            cfg(1, FaultPlan::NONE, 1),
+        );
+        let err = s
+            .submit_with_faults(Matrix::zeros(8, 8), Matrix::zeros(8, 8), vec![])
+            .unwrap_err();
+        assert!(err.contains("fault script"), "{err}");
+        let ok = s.submit_with_faults(
+            Matrix::zeros(8, 8),
+            Matrix::zeros(8, 8),
+            vec![FaultAction::None; 14],
+        );
+        assert!(ok.is_ok());
+        assert_eq!(s.drive(1).len(), 1);
         s.shutdown();
     }
 }

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::master::{MasterConfig, MultiplyReport};
 use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use crate::coordinator::task::DispatchPlan;
 use crate::coordinator::worker::Backend;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
@@ -76,11 +77,25 @@ pub struct MmServer {
 
 impl MmServer {
     pub fn new(set: TaskSet, backend: Backend, cfg: ServerConfig) -> MmServer {
+        MmServer::with_plan(DispatchPlan::flat(set), backend, cfg, None)
+    }
+
+    /// Serve an arbitrary dispatch plan (e.g. a nested two-level scheme)
+    /// with an optional worker-pool-size override — the nested fan-out's
+    /// leaves multiplex onto the fleet, so "equal node count" comparisons
+    /// pin `workers` to the flat scheme's task count.
+    pub fn with_plan(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: ServerConfig,
+        workers: Option<usize>,
+    ) -> MmServer {
         MmServer {
-            sched: Scheduler::new(
-                set,
+            sched: Scheduler::with_plan(
+                plan,
                 backend,
                 SchedulerConfig { master: cfg.master, depth: cfg.inflight_depth },
+                workers,
             ),
             queue_cap: cfg.queue_cap,
             completed_latencies: Vec::new(),
@@ -392,6 +407,35 @@ mod tests {
         assert!(s.take_failures().is_empty(), "take drains the buffer");
         // A later, empty drain must not resurrect the old failure.
         assert!(s.drain(1).unwrap().is_empty());
+        s.shutdown();
+    }
+
+    #[test]
+    fn nested_plan_serves_a_workload() {
+        use crate::coding::nested::NestedTaskSet;
+        let plan = DispatchPlan::nested(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(0),
+        ));
+        let mut s = MmServer::with_plan(
+            plan,
+            Backend::Native,
+            ServerConfig {
+                master: MasterConfig {
+                    deadline: Duration::from_secs(10),
+                    fault: FaultPlan { p_fail: 0.05, p_straggle: 0.0, delay: Duration::ZERO },
+                    seed: 2,
+                    fallback_local: true,
+                    collect_all: false,
+                },
+                queue_cap: 8,
+                inflight_depth: 2,
+            },
+            Some(14),
+        );
+        let report = s.run_workload(3, 16, 5).unwrap();
+        assert_eq!(report.jobs, 3);
+        assert!(report.decoded >= 2, "196-leaf scheme should survive p=0.05");
         s.shutdown();
     }
 

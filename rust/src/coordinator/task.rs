@@ -1,10 +1,13 @@
 //! The dispatchable task graph: per-node encoding coefficients plus the
 //! decode machinery (relations, decoder seeds) derived once per task set
-//! and shared by every job.
+//! and shared by every job — for flat single-level sets and for nested
+//! two-level sets ([`DispatchPlan`]).
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use crate::coding::decoder::SpanDecoder;
+use crate::coding::nested::NestedTaskSet;
 use crate::coding::scheme::TaskSet;
 
 /// One dispatchable task (a worker's entire job description).
@@ -16,6 +19,18 @@ pub struct TaskSpec {
     /// consumes).
     pub ca: [f32; 4],
     pub cb: [f32; 4],
+}
+
+impl TaskSpec {
+    /// Integer view of the left coefficients (they are small integers).
+    pub fn int_ca(&self) -> [i32; 4] {
+        std::array::from_fn(|i| self.ca[i] as i32)
+    }
+
+    /// Integer view of the right coefficients.
+    pub fn int_cb(&self) -> [i32; 4] {
+        std::array::from_fn(|i| self.cb[i] as i32)
+    }
 }
 
 /// The full graph for a task set.
@@ -55,6 +70,101 @@ impl TaskGraph {
     }
 }
 
+/// The two-level graph for a nested task set: the outer graph indexes
+/// the M₁ groups, the inner graph the M₂ leaves of every group. Leaf
+/// work-item ids are `g * M₂ + j` (group-major), so one group's items
+/// form a contiguous range — what group-level cancellation revokes.
+#[derive(Clone, Debug)]
+pub struct NestedGraph {
+    pub set: Arc<NestedTaskSet>,
+    pub outer: TaskGraph,
+    pub inner: TaskGraph,
+}
+
+impl NestedGraph {
+    pub fn new(set: NestedTaskSet) -> NestedGraph {
+        let outer = TaskGraph::new(set.outer.clone());
+        let inner = TaskGraph::new(set.inner.clone());
+        NestedGraph { set: Arc::new(set), outer, inner }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.outer.num_tasks()
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.inner.num_tasks()
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.num_groups() * self.group_size()
+    }
+
+    /// Group of a leaf work-item id.
+    pub fn group_of(&self, task_id: usize) -> usize {
+        task_id / self.group_size()
+    }
+
+    /// The contiguous leaf id range of one group.
+    pub fn group_range(&self, g: usize) -> Range<usize> {
+        g * self.group_size()..(g + 1) * self.group_size()
+    }
+}
+
+/// What the scheduler dispatches for one job: a flat single-level task
+/// set (one work item per task, as in the paper) or a nested two-level
+/// set (one work item per leaf, grouped by outer product).
+#[derive(Clone, Debug)]
+pub enum DispatchPlan {
+    Flat(TaskGraph),
+    Nested(NestedGraph),
+}
+
+impl DispatchPlan {
+    pub fn flat(set: TaskSet) -> DispatchPlan {
+        DispatchPlan::Flat(TaskGraph::new(set))
+    }
+
+    pub fn nested(set: NestedTaskSet) -> DispatchPlan {
+        DispatchPlan::Nested(NestedGraph::new(set))
+    }
+
+    /// Scheme display name.
+    pub fn name(&self) -> &str {
+        match self {
+            DispatchPlan::Flat(g) => &g.set.name,
+            DispatchPlan::Nested(g) => &g.set.name,
+        }
+    }
+
+    /// Work items dispatched per job (tasks, or leaves for nested).
+    pub fn num_work_items(&self) -> usize {
+        match self {
+            DispatchPlan::Flat(g) => g.num_tasks(),
+            DispatchPlan::Nested(g) => g.num_leaves(),
+        }
+    }
+
+    /// Matrix dimension must be divisible by this (one 2×2 split level
+    /// per nesting level).
+    pub fn block_divisor(&self) -> usize {
+        match self {
+            DispatchPlan::Flat(_) => 2,
+            DispatchPlan::Nested(_) => 4,
+        }
+    }
+
+    /// Default worker-pool size: one node per task for flat sets (the
+    /// paper's model); for nested fan-outs the pool is capped — leaves
+    /// are multiplexed onto the fleet, they do not each own a thread.
+    pub fn default_pool_size(&self) -> usize {
+        match self {
+            DispatchPlan::Flat(g) => g.num_tasks(),
+            DispatchPlan::Nested(g) => g.num_leaves().min(64),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -67,9 +177,11 @@ mod tests {
         assert_eq!(g.specs[0].ca, [1.0, 0.0, 0.0, 1.0]);
         assert_eq!(g.specs[0].cb, [1.0, 0.0, 0.0, 1.0]);
         assert_eq!(g.specs[0].name, "S1");
+        assert_eq!(g.specs[0].int_ca(), [1, 0, 0, 1]);
         // W2 = M12 B21
         assert_eq!(g.specs[8].ca, [0.0, 1.0, 0.0, 0.0]);
         assert_eq!(g.specs[8].cb, [0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(g.specs[8].int_cb(), [0, 0, 1, 0]);
         // PSMM names
         assert_eq!(g.specs[14].name, "P1");
         assert_eq!(g.specs[15].name, "P2");
@@ -85,5 +197,36 @@ mod tests {
         assert!(d1.is_decodable());
         let d2 = g.decoder();
         assert!(!d2.is_decodable());
+    }
+
+    #[test]
+    fn nested_graph_indexing() {
+        let g = NestedGraph::new(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(2),
+            TaskSet::strassen_winograd(0),
+        ));
+        assert_eq!(g.num_groups(), 16);
+        assert_eq!(g.group_size(), 14);
+        assert_eq!(g.num_leaves(), 224);
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(13), 0);
+        assert_eq!(g.group_of(14), 1);
+        assert_eq!(g.group_range(2), 28..42);
+    }
+
+    #[test]
+    fn plan_shapes() {
+        let flat = DispatchPlan::flat(TaskSet::strassen_winograd(2));
+        assert_eq!(flat.num_work_items(), 16);
+        assert_eq!(flat.block_divisor(), 2);
+        assert_eq!(flat.default_pool_size(), 16);
+        let nested = DispatchPlan::nested(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(2),
+            TaskSet::strassen_winograd(2),
+        ));
+        assert_eq!(nested.num_work_items(), 256);
+        assert_eq!(nested.block_divisor(), 4);
+        assert_eq!(nested.default_pool_size(), 64, "leaves multiplex onto a capped fleet");
+        assert_eq!(nested.name(), "S+W +2 PSMM:S+W +2 PSMM");
     }
 }

@@ -194,6 +194,40 @@ impl WorkerPool {
         removed
     }
 
+    /// Cancel one job's still-queued items within a task-id range — the
+    /// group-level cancellation of nested dispatch: once a group's inner
+    /// span is recovered, its remaining leaf items are dead work.
+    ///
+    /// Returns `(removed, would_have_replied)`: the total purge count
+    /// and how many of the purged items would have produced a reply
+    /// (i.e. were not injected failures) — what the job's
+    /// expected-reply accounting must be debited by. Items already
+    /// being computed (or in the delay line) still reply; the job state
+    /// ignores replies for closed groups.
+    pub fn revoke_range(
+        &self,
+        job_id: u64,
+        tasks: std::ops::Range<usize>,
+    ) -> (usize, usize) {
+        let mut q = self.shared.queue.lock().unwrap();
+        let before = q.len();
+        let mut replying = 0usize;
+        q.retain(|item| {
+            let hit = item.job_id == job_id && tasks.contains(&item.task_id);
+            if hit && item.fault != FaultAction::Fail {
+                replying += 1;
+            }
+            !hit
+        });
+        let removed = before - q.len();
+        self.counters.queued.set(q.len() as u64);
+        drop(q);
+        if removed > 0 {
+            self.counters.revoked.add(removed as u64);
+        }
+        (removed, replying)
+    }
+
     /// Graceful shutdown: close the queue and join every thread.
     pub fn shutdown(mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
@@ -472,6 +506,30 @@ mod tests {
         assert_eq!(metrics.counter("pool_items_revoked").get(), 3);
         assert_eq!(metrics.gauge("pool_queue_depth").get(), 1);
         assert_eq!(pool.revoke(9), 0, "idempotent");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn revoke_range_purges_only_the_group_and_reports_replying() {
+        // Zero workers: everything stays queued, so revocation is exact.
+        let metrics = Registry::new();
+        let pool = WorkerPool::spawn(0, Backend::Native, metrics.clone());
+        let (a4, b4) = blocks(5, 8);
+        let (tx, _rx) = channel();
+        // Job 9: tasks 0..6; tasks 2..4 are "group 1"; task 3 is an
+        // injected failure (would never have replied anyway).
+        for task_id in 0..6 {
+            let fault = if task_id == 3 { FaultAction::Fail } else { FaultAction::None };
+            pool.submit(item(9, task_id, &a4, &b4, fault, &tx));
+        }
+        pool.submit(item(10, 2, &a4, &b4, FaultAction::None, &tx));
+        let (removed, replying) = pool.revoke_range(9, 2..4);
+        assert_eq!(removed, 2);
+        assert_eq!(replying, 1, "the injected failure does not count");
+        assert_eq!(metrics.gauge("pool_queue_depth").get(), 5);
+        assert_eq!(pool.revoke_range(9, 2..4), (0, 0), "idempotent");
+        // Other jobs' items with ids in the range are untouched.
+        assert_eq!(pool.revoke(10), 1);
         pool.shutdown();
     }
 

@@ -34,7 +34,15 @@
 //! * once a job's four output targets are spanned, its outstanding
 //!   items are **cancelled** (queued items revoked; late replies
 //!   dropped — and counted — by the `job_id` guard), so straggler-freed
-//!   slots immediately pick up the next job's items.
+//!   slots immediately pick up the next job's items;
+//! * **nested two-level schemes** ([`coding::nested::NestedTaskSet`])
+//!   compose two task sets so each level-1 product is itself
+//!   distributed via a level-2 scheme — M₁·M₂ leaf tasks (196–256)
+//!   decoded in two stages (inner group spans first, then the outer
+//!   span), with whole inner groups cancelled the moment their product
+//!   is recovered. Straggler tolerance compounds multiplicatively:
+//!   `first_loss(outer) × first_loss(inner)` leaf failures are needed
+//!   before any pattern defeats the decoder.
 //!
 //! With stragglers injected, depth ≥ 4 serving more than doubles the
 //! jobs/s of the sequential depth-1 master on the paper's 16-node
@@ -74,11 +82,15 @@ pub mod prelude {
     pub use crate::algebra::form::{BilinearForm, Target, ELEM_DIM};
     pub use crate::algorithms::scheme::BilinearScheme;
     pub use crate::coding::decoder::{DecodeOutcome, PeelingDecoder, SpanDecoder};
+    pub use crate::coding::nested::{NestedOracle, NestedTaskSet};
     pub use crate::coding::scheme::TaskSet;
-    pub use crate::coding::theory::{failure_probability, replication_fc};
+    pub use crate::coding::theory::{
+        failure_probability, nested_failure_probability, replication_fc,
+    };
     pub use crate::coordinator::master::{Master, MasterConfig};
     pub use crate::coordinator::scheduler::{FinishedJob, Scheduler, SchedulerConfig};
     pub use crate::coordinator::server::{MmServer, ServerConfig};
+    pub use crate::coordinator::task::DispatchPlan;
     pub use crate::coordinator::worker::{Backend, FaultPlan};
     pub use crate::linalg::matrix::Matrix;
     pub use crate::search::searchlp::{search_lp, SearchResult};

@@ -1,5 +1,13 @@
 //! 2×2 block partition / assembly and encoded-operand construction —
-//! the native-side mirror of the L1 `encode` kernel.
+//! the native-side mirror of the L1 `encode` kernel — plus the
+//! **two-level** (4×4 = 16-block) variants for nested coded schemes:
+//! a leaf task of a nested scheme computes, semantically, a product of
+//! operands encoded with the Kronecker coefficients `u ⊗ u'` over the
+//! 16 two-level blocks ([`kron_coeffs`], [`split_blocks16`],
+//! [`encode_operand16`]). The coordinator dispatches the same
+//! computation level by level (outer encode, split, inner encode); the
+//! flattened helpers here pin that equivalence and back the nested
+//! coding-layer analysis.
 
 use crate::linalg::matrix::Matrix;
 
@@ -57,6 +65,73 @@ pub fn encode_operand(coeffs: &[i32; 4], blocks: &[Matrix; 4]) -> Matrix {
     out
 }
 
+/// Split a dimension-divisible-by-4 matrix into its 16 two-level blocks,
+/// outer-major: entry `p * 4 + r` is inner block `r` of outer block `p`
+/// (i.e. `split_blocks` applied twice).
+pub fn split_blocks16(x: &Matrix) -> [Matrix; 16] {
+    let (r, c) = x.shape();
+    assert!(
+        r % 4 == 0 && c % 4 == 0,
+        "shape {:?} cannot be 4x4-blocked",
+        x.shape()
+    );
+    let outer = split_blocks(x);
+    let mut out: Vec<Matrix> = Vec::with_capacity(16);
+    for blk in &outer {
+        out.extend(split_blocks(blk));
+    }
+    match out.try_into() {
+        Ok(a) => a,
+        Err(_) => unreachable!("4 outer blocks x 4 inner blocks"),
+    }
+}
+
+/// Reassemble 16 two-level blocks (outer-major order, as produced by
+/// [`split_blocks16`]) into one matrix.
+pub fn join_blocks16(b: &[Matrix; 16]) -> Matrix {
+    let quad = |p: usize| -> [Matrix; 4] {
+        std::array::from_fn(|r| b[p * 4 + r].clone())
+    };
+    let outer: [Matrix; 4] = std::array::from_fn(|p| join_blocks(&quad(p)));
+    join_blocks(&outer)
+}
+
+/// Flattened two-level encode: `Σ_p Σ_r coeffs[p*4 + r] * blocks[p*4 + r]`.
+///
+/// The *semantic* description of a nested leaf's operand: with
+/// Kronecker coefficients [`kron_coeffs`]`(u, u')` this equals the
+/// level-by-level encode the coordinator actually performs at dispatch
+/// (outer encode, split, inner encode — see `coordinator::scheduler`);
+/// the equivalence is pinned by the tests below and is what makes the
+/// nested analysis in `coding::nested` (flat 256-dim leaf forms) speak
+/// about the dispatched computation.
+pub fn encode_operand16(coeffs: &[i32; 16], blocks: &[Matrix; 16]) -> Matrix {
+    let (r, c) = blocks[0].shape();
+    let mut out = Matrix::zeros(r, c);
+    for (p, &s) in coeffs.iter().enumerate() {
+        if s != 0 {
+            out.axpy(s as f32, &blocks[p]);
+        }
+    }
+    out
+}
+
+/// Kronecker product of an outer and an inner 4-vector of encoding
+/// coefficients: `out[p*4 + r] = outer[p] * inner[r]`, matching the
+/// block order of [`split_blocks16`]. Encoding with the Kronecker
+/// coefficients over 16 blocks equals encoding with `inner` over the
+/// blocks of the `outer`-encoded operand — the identity nested dispatch
+/// relies on (pinned by the tests below).
+pub fn kron_coeffs(outer: &[i32; 4], inner: &[i32; 4]) -> [i32; 16] {
+    let mut out = [0i32; 16];
+    for p in 0..4 {
+        for r in 0..4 {
+            out[p * 4 + r] = outer[p] * inner[r];
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +170,48 @@ mod tests {
         let e = encode_operand(&[-1, 0, 1, 0], &b);
         let want = &b[2] - &b[0];
         assert!(e.approx_eq(&want, 1e-6));
+    }
+
+    #[test]
+    fn split16_join16_roundtrip() {
+        let mut rng = Rng::seeded(21);
+        let x = Matrix::random(8, 16, &mut rng);
+        let b = split_blocks16(&x);
+        assert_eq!(b[0].shape(), (2, 4));
+        assert_eq!(join_blocks16(&b), x);
+    }
+
+    #[test]
+    fn split16_is_split_of_split() {
+        let mut rng = Rng::seeded(22);
+        let x = Matrix::random(8, 8, &mut rng);
+        let b16 = split_blocks16(&x);
+        let outer = split_blocks(&x);
+        for (p, blk) in outer.iter().enumerate() {
+            let inner = split_blocks(blk);
+            for (r, want) in inner.iter().enumerate() {
+                assert_eq!(&b16[p * 4 + r], want, "block ({p},{r})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "4x4-blocked")]
+    fn split16_rejects_non_divisible() {
+        let _ = split_blocks16(&Matrix::zeros(6, 6));
+    }
+
+    #[test]
+    fn kron_encode_equals_two_level_encode() {
+        // encode16(u ⊗ u', split16(A)) == encode(u', split(encode(u, split(A))))
+        let mut rng = Rng::seeded(23);
+        let x = Matrix::random(16, 16, &mut rng);
+        let u = [1, 0, -1, 1];
+        let ui = [0, 1, 1, -1];
+        let flat = encode_operand16(&kron_coeffs(&u, &ui), &split_blocks16(&x));
+        let outer_enc = encode_operand(&u, &split_blocks(&x));
+        let two_level = encode_operand(&ui, &split_blocks(&outer_enc));
+        assert!(flat.approx_eq(&two_level, 1e-6));
     }
 
     #[test]

@@ -11,6 +11,21 @@ use crate::linalg::blocked::{encode_operand, join_blocks, split_blocks};
 use crate::linalg::matrix::Matrix;
 
 /// Recursion parameters.
+///
+/// ```
+/// use ft_strassen::linalg::matrix::Matrix;
+/// use ft_strassen::linalg::recursive::{strassen_mm, RecursiveConfig};
+/// use ft_strassen::sim::rng::Rng;
+///
+/// let mut rng = Rng::seeded(1);
+/// let a = Matrix::random(16, 16, &mut rng);
+/// let b = Matrix::random(16, 16, &mut rng);
+/// // Two levels of 2x2 splitting, naive below 4x4 — the single-node
+/// // ground truth the nested e2e tests compare against.
+/// let cfg = RecursiveConfig { cutoff: 4, max_depth: 2 };
+/// let c = strassen_mm(&a, &b, &cfg);
+/// assert!(c.approx_eq(&a.matmul(&b), 1e-4));
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct RecursiveConfig {
     /// Below this dimension, fall back to the naive matmul.

@@ -8,8 +8,12 @@
 //! * `theory`    — analytical P_f (eqs. (9)/(10)) over a p_e sweep
 //! * `sim`       — Monte-Carlo P_f, cross-checked against theory
 //! * `fig2`      — full Fig.-2 regeneration (theory + MC + ASCII plot + CSV)
-//! * `multiply`  — one fault-tolerant multiply (native or PJRT backend)
+//! * `nested`    — two-level nested schemes: theory + Monte-Carlo P_f
+//!   curves at fan-outs 196–256 (the Fig.-2 analogue for nesting)
+//! * `multiply`  — one fault-tolerant multiply (native or PJRT backend;
+//!   `--nest outer:inner` dispatches the two-level composition)
 //! * `serve`     — batched request loop with straggler injection
+//!   (`--nest` serves the nested fan-out over a fixed-size fleet)
 
 use std::path::Path;
 use std::time::Duration;
@@ -20,9 +24,12 @@ use ft_strassen::cli::Args;
 use ft_strassen::coding::fc::fc_table;
 use ft_strassen::coding::scheme::TaskSet;
 use ft_strassen::coding::theory::failure_probability;
-use ft_strassen::config::{BackendKind, RunConfig, SchemeKind};
+use ft_strassen::coding::nested::{NestedOracle, NestedTaskSet};
+use ft_strassen::coding::theory::nested_failure_probability;
+use ft_strassen::config::{BackendKind, NestSpec, RunConfig, SchemeKind};
 use ft_strassen::coordinator::master::{Master, MasterConfig};
 use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::task::DispatchPlan;
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::linalg::matrix::Matrix;
 use ft_strassen::runtime::service::ComputeService;
@@ -41,15 +48,20 @@ subcommands:
   theory   [--points N]          analytical P_f sweep
   sim      [--p-e P] [--trials N]  Monte-Carlo P_f vs theory
   fig2     [--trials N] [--out D]  regenerate Fig. 2 (CSV + ASCII)
-  multiply [--n N] [--scheme S] [--backend B] [--p-e P]
+  nested   [--trials N] [--points N] [--out D]  nested-scheme P_f curves
+  multiply [--n N] [--scheme S] [--backend B] [--p-e P] [--nest O:I]
   serve    [--jobs J] [--n N] [--scheme S] [--backend B] [--p-straggle P]
-           [--depth D] [--queue-cap Q]
+           [--depth D] [--queue-cap Q] [--nest O:I] [--workers W]
 
 common options:
   --config FILE                  TOML config (CLI overrides it)
   --scheme S                     strassen-x1|x2|x3, winograd-x1, sw+{0,1,2}psmm
+  --nest O:I                     nested two-level scheme, e.g.
+                                 sw+2psmm:sw+2psmm (256 leaf tasks; n % 4 == 0)
   --backend B                    native | pjrt
   --artifacts DIR                artifact directory (default: artifacts)
+  --straggle-ms MS               injected straggler delay (default 50)
+  --deadline-ms MS               per-job decode deadline (default 1000)
 
 serve options:
   --depth D                      max in-flight jobs (default 4; 1 = the
@@ -73,6 +85,7 @@ fn main() {
         Some("theory") => cmd_theory(&args),
         Some("sim") => cmd_sim(&args),
         Some("fig2") => cmd_fig2(&args),
+        Some("nested") => cmd_nested(&args),
         Some("multiply") => cmd_multiply(&args),
         Some("serve") => cmd_serve(&args),
         _ => {
@@ -94,6 +107,9 @@ fn load_config(args: &Args) -> Result<RunConfig, String> {
     if let Some(s) = args.get("scheme") {
         cfg.scheme = SchemeKind::parse(s)?;
     }
+    if let Some(s) = args.get("nest") {
+        cfg.nest = Some(NestSpec::parse(s)?);
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
@@ -105,6 +121,12 @@ fn load_config(args: &Args) -> Result<RunConfig, String> {
     cfg.p_straggle = args
         .get_parsed_or("p-straggle", cfg.p_straggle)
         .map_err(|e| e.to_string())?;
+    cfg.straggle_ms = args
+        .get_parsed_or("straggle-ms", cfg.straggle_ms)
+        .map_err(|e| e.to_string())?;
+    cfg.deadline_ms = args
+        .get_parsed_or("deadline-ms", cfg.deadline_ms)
+        .map_err(|e| e.to_string())?;
     cfg.seed = args.get_parsed_or("seed", cfg.seed).map_err(|e| e.to_string())?;
     cfg.validate()?;
     Ok(cfg)
@@ -114,7 +136,13 @@ fn backend_for(cfg: &RunConfig) -> Result<(Backend, Option<ComputeService>), Str
     match cfg.backend {
         BackendKind::Native => Ok((Backend::Native, None)),
         BackendKind::Pjrt => {
-            let svc = ComputeService::spawn(&cfg.artifacts_dir, &[cfg.n / 2])?;
+            // Flat workers multiply n/2 blocks; nested leaves n/4.
+            let sizes: Vec<usize> = if cfg.nest.is_some() {
+                vec![cfg.n / 2, cfg.n / 4]
+            } else {
+                vec![cfg.n / 2]
+            };
+            let svc = ComputeService::spawn(&cfg.artifacts_dir, &sizes)?;
             println!("pjrt: {}", svc.handle().platform()?);
             Ok((Backend::Pjrt(svc.handle()), Some(svc)))
         }
@@ -280,35 +308,105 @@ fn cmd_fig2(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_nested(args: &Args) -> Result<(), String> {
+    let trials = args.get_parsed_or("trials", 20_000u64).map_err(|e| e.to_string())?;
+    let points = args.get_parsed_or("points", 7usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parsed_or("seed", 1u64).map_err(|e| e.to_string())?;
+    let out = args.get_or("out", "target/nested");
+    let grid = pe_grid(points);
+    let specs = [
+        ("sw+0psmm:sw+0psmm", TaskSet::strassen_winograd(0), TaskSet::strassen_winograd(0)),
+        ("sw+2psmm:sw+2psmm", TaskSet::strassen_winograd(2), TaskSet::strassen_winograd(2)),
+        (
+            "strassen-x2:strassen-x2",
+            TaskSet::replication(&ft_strassen::algorithms::strassen(), 2),
+            TaskSet::replication(&ft_strassen::algorithms::strassen(), 2),
+        ),
+    ];
+    let mut csv = String::from("scheme,leaves,first_loss,p_e,theory_pf,mc_pf,mc_stderr\n");
+    let mut series = Vec::new();
+    println!("nested two-level schemes ({trials} MC trials, seed {seed}):\n");
+    for (name, outer, inner) in specs {
+        let fc_o = fc_table(&outer);
+        let fc_i = fc_table(&inner);
+        let nested = NestedTaskSet::compose(outer, inner);
+        let oracle = NestedOracle::build(&nested);
+        let first_loss = fc_o.first_loss() * fc_i.first_loss();
+        println!(
+            "  {:24} leaves={:3}  first fatal k={}",
+            name,
+            nested.num_leaves(),
+            first_loss
+        );
+        let mut pts = Vec::new();
+        for &p in &grid {
+            let theory = nested_failure_probability(&fc_o, &fc_i, p);
+            let mc = MonteCarlo::new(trials, seed).nested_failure_probability(p, &oracle);
+            csv.push_str(&format!(
+                "{},{},{},{p},{theory},{},{}\n",
+                name,
+                nested.num_leaves(),
+                first_loss,
+                mc.mean,
+                mc.std_err
+            ));
+            println!(
+                "    p_e={p:<8.4} theory={theory:.6e}  mc={:.6e} (±{:.1e})",
+                mc.mean, mc.std_err
+            );
+            if theory > 0.0 {
+                pts.push((p, theory));
+            }
+        }
+        series.push(Series::new(name.to_string(), pts));
+    }
+    println!("\nP_f vs p_e (theory):\n{}", ascii_loglog(&series, 72, 24));
+    std::fs::create_dir_all(out).map_err(|e| e.to_string())?;
+    let csv_path = Path::new(out).join("nested_curves.csv");
+    std::fs::write(&csv_path, csv).map_err(|e| e.to_string())?;
+    println!("wrote {}", csv_path.display());
+    Ok(())
+}
+
+fn master_config(cfg: &RunConfig) -> MasterConfig {
+    MasterConfig {
+        deadline: Duration::from_millis(cfg.deadline_ms),
+        fault: FaultPlan {
+            p_fail: cfg.p_e,
+            p_straggle: cfg.p_straggle,
+            delay: Duration::from_millis(cfg.straggle_ms),
+        },
+        seed: cfg.seed,
+        fallback_local: true,
+        collect_all: false,
+    }
+}
+
 fn cmd_multiply(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let (backend, _svc) = backend_for(&cfg)?;
     let mut rng = Rng::seeded(cfg.seed);
     let a = Matrix::random(cfg.n, cfg.n, &mut rng);
     let b = Matrix::random(cfg.n, cfg.n, &mut rng);
-    let mut master = Master::new(
-        cfg.scheme.task_set(),
-        backend,
-        MasterConfig {
-            deadline: Duration::from_millis(cfg.deadline_ms),
-            fault: FaultPlan {
-                p_fail: cfg.p_e,
-                p_straggle: cfg.p_straggle,
-                delay: Duration::from_millis(cfg.straggle_ms),
-            },
-            seed: cfg.seed,
-            fallback_local: true,
-            collect_all: false,
-        },
-    );
+    // One facade for both shapes: nested plans multiplex their leaves
+    // onto a fixed fleet of `workers` threads.
+    let mut master = match cfg.nest {
+        Some(nest) => Master::with_plan(
+            DispatchPlan::nested(nest.task_set()),
+            backend,
+            master_config(&cfg),
+            Some(cfg.workers),
+        ),
+        None => Master::new(cfg.scheme.task_set(), backend, master_config(&cfg)),
+    };
     let (c, report) = master.multiply(&a, &b)?;
+    let scheme_name = master.scheme_name().to_string();
+    let workers = master.num_workers();
+    master.shutdown();
     let want = a.matmul(&b);
     println!(
-        "scheme={} n={} backend={:?} workers={}",
-        master.scheme_name(),
-        cfg.n,
-        cfg.backend,
-        master.num_workers()
+        "scheme={} n={} backend={:?} workers={} tasks={}",
+        scheme_name, cfg.n, cfg.backend, workers, report.dispatched
     );
     println!(
         "elapsed={:?} decodable_after={:?} finished={}/{} injected: {} fail, {} straggle, fell_back={}",
@@ -321,7 +419,6 @@ fn cmd_multiply(args: &Args) -> Result<(), String> {
         report.fell_back
     );
     println!("rel_error vs dense = {:.3e}", c.rel_error(&want));
-    master.shutdown();
     Ok(())
 }
 
@@ -337,29 +434,42 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err("--queue-cap must be >= 1".into());
     }
     let (backend, _svc) = backend_for(&cfg)?;
-    let mut server = MmServer::new(
-        cfg.scheme.task_set(),
-        backend,
-        ServerConfig {
-            master: MasterConfig {
-                deadline: Duration::from_millis(cfg.deadline_ms),
-                fault: FaultPlan {
-                    p_fail: cfg.p_e,
-                    p_straggle: cfg.p_straggle,
-                    delay: Duration::from_millis(cfg.straggle_ms),
-                },
-                seed: cfg.seed,
-                fallback_local: true,
-                collect_all: false,
-            },
-            queue_cap,
-            inflight_depth: depth,
-        },
-    );
+    let server_cfg = ServerConfig {
+        master: master_config(&cfg),
+        queue_cap,
+        inflight_depth: depth,
+    };
+    // Explicit --workers pins the fleet size for either shape; without
+    // it, flat schemes keep one node per task (the paper's model) and
+    // nested fan-outs use the configured fleet size.
+    let workers_override: Option<usize> = match args.get("workers") {
+        Some(s) => Some(s.parse().map_err(|e| format!("--workers {s}: {e}"))?),
+        None => None,
+    };
+    let (mut server, scheme_name) = match cfg.nest {
+        Some(nest) => {
+            let name = nest.display_name();
+            let plan = DispatchPlan::nested(nest.task_set());
+            let workers = workers_override.unwrap_or(cfg.workers);
+            (
+                MmServer::with_plan(plan, backend, server_cfg, Some(workers)),
+                name,
+            )
+        }
+        None => (
+            MmServer::with_plan(
+                DispatchPlan::flat(cfg.scheme.task_set()),
+                backend,
+                server_cfg,
+                workers_override,
+            ),
+            cfg.scheme.display_name(),
+        ),
+    };
     let report = server.run_workload(jobs, cfg.n, cfg.seed)?;
     println!(
         "scheme={} n={} jobs={} depth={depth}: {:.2} jobs/s, mean latency {:?}, p95 {:?}",
-        cfg.scheme.display_name(),
+        scheme_name,
         cfg.n,
         report.jobs,
         report.throughput_jobs_per_s,

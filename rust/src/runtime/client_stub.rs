@@ -7,6 +7,17 @@
 //! usual "run `make artifacts`" error — but then always fails with a
 //! feature-gate message, so a `Runtime` value is never constructed and
 //! the coordinator falls back to the native backend.
+//!
+//! Why a stub rather than `#[cfg]`-ing out the call sites: the PJRT
+//! runtime is threaded through the worker pool ([`Backend::Pjrt`] in
+//! `coordinator::worker`), the decode path and the launcher, and
+//! scattering feature gates across all of them would let native-only
+//! builds rot. The stub keeps exactly one `#[cfg]` switch (in
+//! `runtime::mod`) and makes every call site compile both ways; its
+//! methods return the same `RtResult` error so callers exercise their
+//! real error paths in tests.
+//!
+//! [`Backend::Pjrt`]: crate::coordinator::worker::Backend
 
 use std::path::Path;
 

@@ -4,7 +4,9 @@
 //! leaves latency-distribution models to future work; we implement both
 //! (`bernoulli` for the paper's model, `latency` for shifted-exponential
 //! stragglers) plus the Monte-Carlo estimator that cross-validates the
-//! analytical P_f of `coding::theory`.
+//! analytical P_f of `coding::theory` — including per-leaf failure and
+//! latency sampling for nested two-level schemes at fan-outs of 196–256
+//! leaves, where the flat 2^M enumeration is impossible.
 
 pub mod bernoulli;
 pub mod latency;

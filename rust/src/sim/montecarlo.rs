@@ -1,7 +1,10 @@
 //! Monte-Carlo estimation of reconstruction-failure probability and
 //! completion-time statistics (cross-validates `coding::theory` and
-//! generates the simulation series of Fig. 2).
+//! generates the simulation series of Fig. 2), including the nested
+//! two-level variants at fan-outs (196–256 leaves) where the flat
+//! 2^M bitmask enumeration is impossible.
 
+use crate::coding::nested::NestedOracle;
 use crate::sim::bernoulli::BernoulliFailures;
 use crate::sim::latency::{completion_time, sample_completion_times, LatencyModel};
 use crate::sim::rng::Rng;
@@ -49,6 +52,63 @@ impl MonteCarlo {
         let mean = failures as f64 / self.trials as f64;
         let std_err = (mean * (1.0 - mean) / self.trials as f64).sqrt();
         Estimate { mean, std_err, trials: self.trials }
+    }
+
+    /// P(reconstruction fails) for a nested two-level scheme under
+    /// i.i.d. Bernoulli **leaf** failures: each trial samples one
+    /// failed-leaf mask per outer group and asks the two-stage oracle.
+    /// Cross-validates `coding::theory::nested_failure_probability`
+    /// (the Fig.-2-style curves at M = 196–256).
+    pub fn nested_failure_probability(&self, p_e: f64, oracle: &NestedOracle) -> Estimate {
+        let model = BernoulliFailures::new(p_e, oracle.group_size());
+        let mut rng = Rng::seeded(self.seed);
+        let mut masks = vec![0u64; oracle.num_groups()];
+        let mut failures = 0u64;
+        for _ in 0..self.trials {
+            for m in masks.iter_mut() {
+                *m = model.sample(&mut rng);
+            }
+            if !oracle.is_decodable(&masks) {
+                failures += 1;
+            }
+        }
+        let mean = failures as f64 / self.trials as f64;
+        let std_err = (mean * (1.0 - mean) / self.trials as f64).sqrt();
+        Estimate { mean, std_err, trials: self.trials }
+    }
+
+    /// Mean time-to-decode of a nested scheme under a per-leaf latency
+    /// model: a group's product is available at the earliest time its
+    /// finished leaves span the inner targets; the job decodes at the
+    /// earliest time the available groups span the outer targets.
+    pub fn nested_mean_completion_time(
+        &self,
+        model: &LatencyModel,
+        oracle: &NestedOracle,
+    ) -> Estimate {
+        let (m1, m2) = (oracle.num_groups(), oracle.group_size());
+        let full2 = (1u64 << m2) - 1;
+        let full1 = (1u64 << m1) - 1;
+        let mut rng = Rng::seeded(self.seed);
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        for _ in 0..self.trials {
+            let group_times: Vec<f64> = (0..m1)
+                .map(|_| {
+                    let times = sample_completion_times(model, m2, &mut rng);
+                    completion_time(&times, |fin| oracle.group_decodable(!fin & full2))
+                        .expect("full inner set always decodes")
+                })
+                .collect();
+            let t = completion_time(&group_times, |fin| oracle.outer_decodable(!fin & full1))
+                .expect("full outer set always decodes");
+            sum += t;
+            sum_sq += t * t;
+        }
+        let n = self.trials;
+        let mean = sum / n as f64;
+        let var = (sum_sq / n as f64 - mean * mean).max(0.0);
+        Estimate { mean, std_err: (var / n as f64).sqrt(), trials: n }
     }
 
     /// Mean time-to-decode under a latency model: nodes finish at sampled
@@ -110,6 +170,50 @@ mod tests {
         let e = mc.failure_probability(p_e, 7, |mask| mask == 0);
         let want = 1.0 - (1.0f64 - p_e).powi(7);
         assert!((e.mean - want).abs() < 5.0 * e.std_err, "{e:?} want {want}");
+    }
+
+    #[test]
+    fn nested_mc_matches_compositional_theory() {
+        use crate::coding::fc::fc_table;
+        use crate::coding::nested::{NestedOracle, NestedTaskSet};
+        use crate::coding::scheme::TaskSet;
+        use crate::coding::theory::nested_failure_probability;
+        use crate::algorithms::strassen;
+
+        // strassen-x2 nested in strassen-x2 (196 leaves): both the
+        // theory and the oracle take the replication fast paths, and
+        // the failure probability is large enough to resolve by MC.
+        let outer = TaskSet::replication(&strassen(), 2);
+        let inner = TaskSet::replication(&strassen(), 2);
+        let want = nested_failure_probability(&fc_table(&outer), &fc_table(&inner), 0.2);
+        let nested = NestedTaskSet::compose(outer, inner);
+        let oracle = NestedOracle::build(&nested);
+        let mc = MonteCarlo::new(40_000, 7).nested_failure_probability(0.2, &oracle);
+        assert!(
+            (mc.mean - want).abs() < 5.0 * mc.std_err + 1e-3,
+            "mc {} vs theory {want} (stderr {})",
+            mc.mean,
+            mc.std_err
+        );
+    }
+
+    #[test]
+    fn nested_completion_time_single_copy_is_max_of_all_leaves() {
+        use crate::coding::nested::{NestedOracle, NestedTaskSet};
+        use crate::coding::scheme::TaskSet;
+        use crate::algorithms::strassen;
+
+        // strassen-x1 : strassen-x1 needs every one of the 49 leaves,
+        // so time-to-decode is the max of 49 exponentials: E = H_49.
+        let nested = NestedTaskSet::compose(
+            TaskSet::replication(&strassen(), 1),
+            TaskSet::replication(&strassen(), 1),
+        );
+        let oracle = NestedOracle::build(&nested);
+        let model = LatencyModel::ShiftedExp { shift: 0.0, rate: 1.0 };
+        let e = MonteCarlo::new(20_000, 11).nested_mean_completion_time(&model, &oracle);
+        let h49: f64 = (1..=49).map(|k| 1.0 / k as f64).sum();
+        assert!((e.mean - h49).abs() < 0.1, "{e:?} want {h49}");
     }
 
     #[test]

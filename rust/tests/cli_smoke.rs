@@ -95,6 +95,50 @@ fn serve_native_runs_workload() {
 }
 
 #[test]
+fn nested_curves_smoke() {
+    let (stdout, _, ok) = run(&["nested", "--trials", "2000", "--points", "3"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("sw+2psmm:sw+2psmm"), "{stdout}");
+    assert!(stdout.contains("leaves=256"), "{stdout}");
+    assert!(stdout.contains("first fatal k=9"), "{stdout}");
+    assert!(stdout.contains("nested_curves.csv"), "{stdout}");
+}
+
+#[test]
+fn multiply_nested_dispatches_256_leaves() {
+    let (stdout, _, ok) = run(&[
+        "multiply", "--n", "32", "--nest", "sw+2psmm:sw+2psmm",
+        "--backend", "native", "--p-e", "0.05", "--seed", "5",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("tasks=256"), "{stdout}");
+    assert!(stdout.contains("scheme=S+W +2 PSMM:S+W +2 PSMM"), "{stdout}");
+    let err_line = stdout.lines().find(|l| l.contains("rel_error")).unwrap();
+    let v: f64 = err_line.rsplit('=').next().unwrap().trim().parse().unwrap();
+    assert!(v < 1e-3, "rel error {v}");
+}
+
+#[test]
+fn serve_nested_runs_workload() {
+    let (stdout, _, ok) = run(&[
+        "serve", "--jobs", "3", "--n", "16", "--nest", "sw+0psmm:sw+0psmm",
+        "--backend", "native", "--workers", "14", "--depth", "2",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("scheme=sw+0psmm:sw+0psmm"), "{stdout}");
+    assert!(stdout.contains("jobs/s"), "{stdout}");
+}
+
+#[test]
+fn nested_rejects_bad_dimension() {
+    let (_, stderr, ok) = run(&[
+        "multiply", "--n", "6", "--nest", "sw+0psmm:sw+0psmm", "--backend", "native",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("divisible by 4"), "{stderr}");
+}
+
+#[test]
 fn config_file_is_honored_and_cli_overrides() {
     let (stdout, _, ok) = run(&[
         "serve", "--config", "configs/sim_fig2.toml", "--jobs", "2",

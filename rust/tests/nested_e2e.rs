@@ -1,0 +1,219 @@
+//! Nested two-level scheme invariants, end to end:
+//!
+//! * a 16×16-composed job (256 leaves) over the multiplexed scheduler
+//!   survives **any** single-group wipeout plus scattered sub-threshold
+//!   leaf failures, and the decoded C equals the single-node recursive
+//!   ground truth (`linalg::recursive`) exactly — integer operands make
+//!   every intermediate exactly representable, so decode equality is
+//!   bit-exact, not approximate;
+//! * random recoverable failure patterns (per-leaf Bernoulli, accepted
+//!   by the [`NestedOracle`]) also decode bit-identically to the ground
+//!   truth;
+//! * nested serving is bit-reproducible across scheduler depths under
+//!   `collect_all`, like the flat schemes in `tests/multiplex.rs`;
+//! * `first_loss` of a composition is the product of the per-level
+//!   values — in particular at least the per-level minimum.
+
+use std::time::Duration;
+
+use ft_strassen::coding::fc::fc_table;
+use ft_strassen::coding::nested::{NestedOracle, NestedTaskSet};
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coordinator::master::MasterConfig;
+use ft_strassen::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use ft_strassen::coordinator::task::DispatchPlan;
+use ft_strassen::coordinator::worker::{Backend, FaultAction, FaultPlan};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::linalg::recursive::{strassen_mm, RecursiveConfig};
+use ft_strassen::sim::rng::Rng;
+
+fn int_matrix(n: usize, rng: &mut Rng) -> Matrix {
+    // Small integers: all products, encodes and (dyadic-weight) decodes
+    // are exact in f32, so equality assertions are bit-exact.
+    Matrix::from_fn(n, n, |_, _| (rng.below(7) as f32) - 3.0)
+}
+
+/// Single-node recursive ground truth: two levels of 2×2 splitting,
+/// exactly mirroring the nested dispatch structure.
+fn ground_truth(a: &Matrix, b: &Matrix) -> Matrix {
+    strassen_mm(a, b, &RecursiveConfig { cutoff: 4, max_depth: 2 })
+}
+
+fn sw2_squared_plan() -> DispatchPlan {
+    DispatchPlan::nested(NestedTaskSet::compose(
+        TaskSet::strassen_winograd(2),
+        TaskSet::strassen_winograd(2),
+    ))
+}
+
+fn cfg(depth: usize, fault: FaultPlan, collect_all: bool) -> SchedulerConfig {
+    SchedulerConfig {
+        master: MasterConfig {
+            deadline: Duration::from_secs(30),
+            fault,
+            seed: 1,
+            // No silent degradation: a decode failure fails the test.
+            fallback_local: false,
+            collect_all,
+        },
+        depth,
+    }
+}
+
+#[test]
+fn nested_survives_any_single_group_wipeout_plus_scatter() {
+    let m2 = 16;
+    let leaves = 256;
+    let mut s = Scheduler::with_plan(
+        sw2_squared_plan(),
+        Backend::Native,
+        cfg(4, FaultPlan::NONE, false),
+        Some(16),
+    );
+    let mut rng = Rng::seeded(42);
+    let mut want = Vec::new();
+    for g in 0..16usize {
+        let a = int_matrix(32, &mut rng);
+        let b = int_matrix(32, &mut rng);
+        want.push(ground_truth(&a, &b));
+        // Wipe out group g entirely (16 dead leaves = one whole outer
+        // product), plus two scattered failures in each of two other
+        // groups (below the inner first_loss of 3), plus stragglers.
+        let mut faults = vec![FaultAction::None; leaves];
+        for j in 0..m2 {
+            faults[g * m2 + j] = FaultAction::Fail;
+        }
+        for other in [(g + 1) % 16, (g + 5) % 16] {
+            faults[other * m2 + 1] = FaultAction::Fail;
+            faults[other * m2 + 7] = FaultAction::Fail;
+        }
+        faults[(g + 3) % 16 * m2 + 2] = FaultAction::Delay(Duration::from_millis(5));
+        s.submit_with_faults(a, b, faults).unwrap();
+    }
+    let mut done = s.drive(16);
+    assert_eq!(done.len(), 16);
+    done.sort_by_key(|f| f.job_id);
+    for (i, f) in done.iter().enumerate() {
+        let (c, report) = f.result.as_ref().unwrap_or_else(|e| {
+            panic!("job {} (wiped group {}) failed to decode: {e}", f.job_id, i)
+        });
+        assert!(!report.fell_back);
+        assert_eq!(report.injected_failures, 20);
+        assert_eq!(
+            c.as_slice(),
+            want[i].as_slice(),
+            "wiped group {i}: decode differs from recursive ground truth"
+        );
+    }
+    s.shutdown();
+}
+
+#[test]
+fn nested_decodes_random_recoverable_patterns_bit_exactly() {
+    let set = NestedTaskSet::compose(
+        TaskSet::strassen_winograd(2),
+        TaskSet::strassen_winograd(2),
+    );
+    let oracle = NestedOracle::build(&set);
+    let (m1, m2) = (set.num_groups(), set.group_size());
+    let mut s = Scheduler::with_plan(
+        DispatchPlan::nested(set),
+        Backend::Native,
+        cfg(2, FaultPlan::NONE, false),
+        Some(16),
+    );
+    let mut rng = Rng::seeded(7);
+    let mut want = Vec::new();
+    let mut submitted = 0;
+    while submitted < 6 {
+        // Random per-leaf failure pattern; keep only recoverable ones
+        // (the property under test is decode exactness, not coverage).
+        let mut masks = vec![0u64; m1];
+        let mut faults = vec![FaultAction::None; m1 * m2];
+        for g in 0..m1 {
+            for j in 0..m2 {
+                if rng.bernoulli(0.06) {
+                    masks[g] |= 1 << j;
+                    faults[g * m2 + j] = FaultAction::Fail;
+                }
+            }
+        }
+        if !oracle.is_decodable(&masks) {
+            continue;
+        }
+        let a = int_matrix(16, &mut rng);
+        let b = int_matrix(16, &mut rng);
+        want.push(ground_truth(&a, &b));
+        s.submit_with_faults(a, b, faults).unwrap();
+        submitted += 1;
+    }
+    let mut done = s.drive(6);
+    assert_eq!(done.len(), 6);
+    done.sort_by_key(|f| f.job_id);
+    for (f, w) in done.iter().zip(&want) {
+        let (c, report) = f.result.as_ref().unwrap();
+        assert!(!report.fell_back);
+        assert_eq!(c.as_slice(), w.as_slice(), "job {}", f.job_id);
+    }
+    s.shutdown();
+}
+
+#[test]
+fn nested_collect_all_is_bit_reproducible_across_depths() {
+    let jobs = 4;
+    let n = 16;
+    let fault = FaultPlan { p_fail: 0.1, p_straggle: 0.0, delay: Duration::ZERO };
+    let run = |depth: usize| -> Vec<Matrix> {
+        let plan = DispatchPlan::nested(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(0),
+        ));
+        let mut cfg = cfg(depth, fault, true);
+        cfg.master.fallback_local = true;
+        let mut s = Scheduler::with_plan(plan, Backend::Native, cfg, Some(28));
+        let mut rng = Rng::seeded(9);
+        for _ in 0..jobs {
+            let a = Matrix::random(n, n, &mut rng);
+            let b = Matrix::random(n, n, &mut rng);
+            s.submit(a, b).unwrap();
+        }
+        let mut done = s.drive(jobs);
+        assert_eq!(done.len(), jobs);
+        done.sort_by_key(|f| f.job_id);
+        let out = done
+            .into_iter()
+            .map(|f| f.result.unwrap().0)
+            .collect();
+        s.shutdown();
+        out
+    };
+    let d1 = run(1);
+    let d3 = run(3);
+    for (i, (x, y)) in d1.iter().zip(&d3).enumerate() {
+        assert_eq!(
+            x.as_slice(),
+            y.as_slice(),
+            "job {} diverged between depth 1 and depth 3",
+            i + 1
+        );
+    }
+}
+
+#[test]
+fn nested_first_loss_at_least_per_level_minimum() {
+    use ft_strassen::algorithms::strassen;
+    for (outer, inner) in [
+        (TaskSet::strassen_winograd(2), TaskSet::strassen_winograd(2)),
+        (TaskSet::strassen_winograd(2), TaskSet::replication(&strassen(), 2)),
+        (TaskSet::replication(&strassen(), 3), TaskSet::strassen_winograd(0)),
+        (TaskSet::replication(&strassen(), 1), TaskSet::strassen_winograd(2)),
+    ] {
+        let d_outer = fc_table(&outer).first_loss();
+        let d_inner = fc_table(&inner).first_loss();
+        let nested = NestedTaskSet::compose(outer, inner);
+        let got = nested.first_loss();
+        assert_eq!(got, d_outer * d_inner, "{}", nested.name);
+        assert!(got >= d_outer.min(d_inner), "{}", nested.name);
+        assert!(got >= d_outer.max(d_inner), "{}", nested.name);
+    }
+}
