@@ -1,9 +1,10 @@
 //! Bench: end-to-end serving throughput/latency under stragglers for the
 //! schemes the paper compares — the systems-level counterpart of Fig. 2 —
 //! plus the **in-flight depth sweep** of the multiplexed coordinator
-//! (depth 1 = the paper's sequential master), which appends a trajectory
-//! entry to `BENCH_e2e.json` at the repo root so throughput is trackable
-//! across PRs.
+//! (depth 1 = the paper's sequential master) and a **decode alloc
+//! count**, appended as a trajectory entry to `BENCH_e2e.json` at the
+//! repo root (via `bench::trajectory`, cwd-independent) so throughput
+//! is trackable across PRs.
 //!
 //! Uses the native backend by default (hermetic); set FT_BENCH_PJRT=1
 //! to route worker products through the AOT Pallas artifacts.
@@ -11,6 +12,7 @@
 use std::path::Path;
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
+use ft_strassen::bench::trajectory;
 use ft_strassen::coding::nested::NestedTaskSet;
 use ft_strassen::coding::scheme::TaskSet;
 use ft_strassen::coordinator::master::MasterConfig;
@@ -155,7 +157,61 @@ fn main() {
     let speedup4 = sweep.iter().find(|s| s.0 == 4).map(|s| s.1 / base).unwrap_or(0.0);
     println!("depth-4 speedup over sequential: {speedup4:.2}x");
 
+    // --- decode alloc count: zero matrix clones per solve -----------------
+    // Drive one flat job's decode state machine by hand and count deep
+    // Matrix copies across the solve+assemble; the borrowed-slice
+    // combine path must clone nothing (tests/decode_alloc.rs pins this,
+    // the bench records it in the trajectory).
+    let decode_clones = {
+        use ft_strassen::coordinator::job::JobState;
+        use ft_strassen::coordinator::task::TaskGraph;
+        use ft_strassen::coordinator::worker::WorkerReply;
+        use ft_strassen::linalg::blocked::{encode_operand, split_blocks};
+        use ft_strassen::linalg::matrix::Matrix;
+        use ft_strassen::sim::rng::Rng;
+        use std::sync::Arc;
+        use std::time::Instant;
+        let graph = TaskGraph::new(TaskSet::strassen_winograd(2));
+        let mut rng = Rng::seeded(7);
+        let a = Matrix::random(64, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let a4 = split_blocks(&a);
+        let b4 = split_blocks(&b);
+        let now = Instant::now();
+        let mut job = JobState::new(
+            &DispatchPlan::Flat(graph.clone()),
+            1,
+            Arc::new(a4.clone()),
+            Arc::new(b4.clone()),
+            now,
+            now,
+            now + Duration::from_secs(5),
+            0,
+            0,
+            true,
+        );
+        for spec in &graph.specs {
+            let p = encode_operand(&spec.int_ca(), &a4)
+                .matmul(&encode_operand(&spec.int_cb(), &b4));
+            job.on_reply(WorkerReply {
+                job_id: 1,
+                task_id: spec.id,
+                product: Ok(p),
+                compute_time: Duration::ZERO,
+            });
+        }
+        let before = Matrix::clone_count();
+        let c = job.assemble(&Backend::Native).expect("decodable");
+        assert_eq!(c.shape(), (64, 64));
+        Matrix::clone_count() - before
+    };
+    println!("decode solve matrix clones: {decode_clones} (expect 0)");
+
     // Append one trajectory entry to BENCH_e2e.json at the repo root.
+    // Schema (documented in README "Benchmark trajectories"): unix_time,
+    // scheme, n, jobs, fault params, quick, speedup_depth4_vs_1,
+    // decode_clones_per_solve, depths[{depth, jobs_per_s, mean_ns,
+    // p95_ns}].
     let unix_time = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -171,27 +227,15 @@ fn main() {
     let entry = format!(
         "{{\"unix_time\": {unix_time}, \"scheme\": \"sw+2psmm\", \"n\": {sweep_n}, \
          \"jobs\": {sweep_jobs}, \"p_fail\": {}, \"p_straggle\": {}, \"delay_ms\": {}, \
-         \"quick\": {quick}, \"speedup_depth4_vs_1\": {speedup4:.3}, \"depths\": [{}]}}",
+         \"quick\": {quick}, \"speedup_depth4_vs_1\": {speedup4:.3}, \
+         \"decode_clones_per_solve\": {decode_clones}, \"depths\": [{}]}}",
         sweep_fault.p_fail,
         sweep_fault.p_straggle,
         sweep_fault.delay.as_millis(),
         depth_objs.join(", ")
     );
-    let traj = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_e2e.json");
-    let body = match std::fs::read_to_string(&traj) {
-        Ok(existing) => {
-            // The file is a JSON array, one entry per recorded run:
-            // splice the new entry before the closing bracket.
-            let trimmed = existing.trim_end();
-            match trimmed.strip_suffix(']') {
-                Some(head) if head.trim_end().ends_with('[') => format!("[\n{entry}\n]\n"),
-                Some(head) => format!("{},\n{entry}\n]\n", head.trim_end()),
-                None => format!("[\n{entry}\n]\n"), // malformed: start over
-            }
-        }
-        Err(_) => format!("[\n{entry}\n]\n"),
-    };
-    std::fs::write(&traj, body).unwrap();
+    let traj = trajectory::append_to_repo_root("BENCH_e2e.json", &entry)
+        .expect("write BENCH_e2e.json");
     println!("appended depth-sweep trajectory to {}", traj.display());
 
     // --- nested vs flat at equal node count ------------------------------

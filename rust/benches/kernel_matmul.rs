@@ -1,29 +1,108 @@
-//! Bench: the compute hot path across backends — native blocked matmul
-//! vs the AOT Pallas artifacts through PJRT (worker task, decode
-//! combine, plain matmul, one-level Strassen) — plus the recursive
-//! Strassen complexity curve that anchors the O(n^2.81) claim.
+//! Bench: the compute hot path across kernels and backends —
 //!
-//! PJRT benches self-skip when `artifacts/` is missing.
+//! * **naive vs packed** native matmul (serial and multi-threaded) at
+//!   128/256/512, with a bitwise cross-check and the speedup headline
+//!   appended to `BENCH_kernel.json` at the repo root;
+//! * **alloc-count comparison** of the worker encode path (fresh
+//!   allocation per task vs the reusable scratch buffer);
+//! * the recursive Strassen complexity curve anchoring O(n^2.81);
+//! * the AOT Pallas artifacts through PJRT (worker task, decode
+//!   combine, plain matmul, one-level Strassen) — these self-skip when
+//!   `artifacts/` is missing.
 
 use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
 
 use ft_strassen::bench::harness::BenchRunner;
-use ft_strassen::linalg::blocked::split_blocks;
+use ft_strassen::bench::trajectory;
+use ft_strassen::linalg::blocked::{encode_operand, encode_operand_into, split_blocks};
+use ft_strassen::linalg::kernel;
 use ft_strassen::linalg::matrix::Matrix;
 use ft_strassen::linalg::recursive::{multiplication_count, strassen_mm, RecursiveConfig};
 use ft_strassen::runtime::client::Runtime;
 use ft_strassen::sim::rng::Rng;
 
+/// Per-size naive/packed comparison row.
+struct SizeRow {
+    n: usize,
+    naive_ns: u128,
+    packed_ns: u128,
+    packed_mt_ns: u128,
+}
+
 fn main() {
+    let quick = std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1");
     let mut runner = BenchRunner::from_env();
     let mut rng = Rng::seeded(1);
+    let mt = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8);
 
-    // --- native path ------------------------------------------------------
-    for n in [64usize, 128, 256] {
+    // --- naive vs packed ---------------------------------------------------
+    println!("kernel comparison (packed-mt uses {mt} threads):");
+    let mut rows: Vec<SizeRow> = Vec::new();
+    for n in [128usize, 256, 512] {
         let a = Matrix::random(n, n, &mut rng);
         let b = Matrix::random(n, n, &mut rng);
-        runner.bench_value(&format!("native/matmul_n{n}"), || a.matmul(&b));
+        // Cross-check first: the packed kernel must be bit-identical to
+        // the naive oracle at every size we report.
+        let want = a.matmul_naive(&b);
+        assert_eq!(
+            kernel::matmul_packed(&a, &b, mt).as_slice(),
+            want.as_slice(),
+            "packed kernel diverged from naive at n={n}"
+        );
+        let naive_ns = runner
+            .bench_value(&format!("native/naive_n{n}"), || a.matmul_naive(&b))
+            .stats
+            .mean
+            .as_nanos();
+        let packed_ns = runner
+            .bench_value(&format!("native/packed_n{n}"), || {
+                kernel::matmul_packed(&a, &b, 1)
+            })
+            .stats
+            .mean
+            .as_nanos();
+        let packed_mt_ns = runner
+            .bench_value(&format!("native/packed_mt{mt}_n{n}"), || {
+                kernel::matmul_packed(&a, &b, mt)
+            })
+            .stats
+            .mean
+            .as_nanos();
+        rows.push(SizeRow { n, naive_ns, packed_ns, packed_mt_ns });
     }
+    for r in &rows {
+        println!(
+            "  n={:4}: naive/packed = {:.2}x serial, {:.2}x with {mt} threads",
+            r.n,
+            r.naive_ns as f64 / r.packed_ns.max(1) as f64,
+            r.naive_ns as f64 / r.packed_mt_ns.max(1) as f64,
+        );
+    }
+
+    // --- alloc-count comparison: encode scratch reuse ---------------------
+    // The worker encode used to allocate two fresh matrices per task;
+    // the scratch path reuses one buffer per operand. Clone counts stay
+    // zero on both (encode never clones), so the comparison is timing +
+    // the clone counter pinning the decode-path invariant.
+    let x = Matrix::random(256, 256, &mut rng);
+    let blocks = split_blocks(&x);
+    let coeffs = [1i32, -1, 0, 1];
+    runner.bench_value("encode/alloc_per_task", || encode_operand(&coeffs, &blocks));
+    let mut scratch = Matrix::zeros(0, 0);
+    runner.bench("encode/scratch_reuse", || {
+        encode_operand_into(&mut scratch, &coeffs, &blocks);
+    });
+    let clones_before = Matrix::clone_count();
+    encode_operand_into(&mut scratch, &coeffs, &blocks);
+    let _p = blocks[0].matmul(&blocks[1]);
+    let encode_clones = Matrix::clone_count() - clones_before;
+    println!("encode+matmul hot path matrix clones: {encode_clones} (expect 0)");
+
+    // --- recursive + blocked reference points -----------------------------
     let a = Matrix::random(256, 256, &mut rng);
     let b = Matrix::random(256, 256, &mut rng);
     runner.bench_value("native/strassen_rec_n256_cut64", || {
@@ -88,4 +167,38 @@ fn main() {
     let out = Path::new("target/bench_results");
     std::fs::create_dir_all(out).unwrap();
     runner.write_csv(&out.join("kernel_timings.csv")).unwrap();
+    runner.write_json(&out.join("kernel_timings.json")).unwrap();
+
+    // --- BENCH_kernel.json trajectory entry (repo root) -------------------
+    // Schema (documented in README "Benchmark trajectories"): one object
+    // per run with unix_time, quick, threads_mt, encode_clones and a
+    // `sizes` array of {n, naive_ns, packed_ns, packed_mt_ns,
+    // speedup_packed, speedup_packed_mt}.
+    let unix_time = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let size_objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"n\": {}, \"naive_ns\": {}, \"packed_ns\": {}, \"packed_mt_ns\": {}, \
+                 \"speedup_packed\": {:.3}, \"speedup_packed_mt\": {:.3}}}",
+                r.n,
+                r.naive_ns,
+                r.packed_ns,
+                r.packed_mt_ns,
+                r.naive_ns as f64 / r.packed_ns.max(1) as f64,
+                r.naive_ns as f64 / r.packed_mt_ns.max(1) as f64,
+            )
+        })
+        .collect();
+    let entry = format!(
+        "{{\"unix_time\": {unix_time}, \"quick\": {quick}, \"threads_mt\": {mt}, \
+         \"encode_clones\": {encode_clones}, \"sizes\": [{}]}}",
+        size_objs.join(", ")
+    );
+    let path = trajectory::append_to_repo_root("BENCH_kernel.json", &entry)
+        .expect("write BENCH_kernel.json");
+    println!("appended kernel trajectory to {}", path.display());
 }

@@ -5,6 +5,7 @@
 pub mod harness;
 pub mod plot;
 pub mod stats;
+pub mod trajectory;
 
 pub use harness::{BenchRunner, BenchSpec};
 pub use plot::{ascii_loglog, Series};

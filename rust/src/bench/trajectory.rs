@@ -1,0 +1,91 @@
+//! Append-only JSON-array trajectory files at the repo root
+//! (`BENCH_e2e.json`, `BENCH_kernel.json`): one entry per recorded
+//! bench run, so the perf trajectory is trackable across PRs.
+//!
+//! The file format is a plain JSON array of objects. [`append_entry`]
+//! splices a new entry before the closing bracket (starting a fresh
+//! array for a missing or malformed file), and
+//! [`append_to_repo_root`] resolves the repo root from the crate
+//! manifest directory — independent of the bench binary's working
+//! directory, which is what previously made `BENCH_e2e.json` land
+//! nowhere when benches ran from an unexpected cwd.
+
+use std::path::{Path, PathBuf};
+
+/// The repository root (`rust/..`), resolved at compile time from the
+/// crate's manifest directory and canonicalized when possible.
+pub fn repo_root() -> PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    root.canonicalize().unwrap_or(root)
+}
+
+/// Splice `entry` (one JSON object, no trailing newline needed) into
+/// the JSON array at `path`, creating the file as `[entry]` when it is
+/// missing, empty, or malformed.
+pub fn append_entry(path: &Path, entry: &str) -> std::io::Result<()> {
+    let entry = entry.trim();
+    let body = match std::fs::read_to_string(path) {
+        Ok(existing) => {
+            let trimmed = existing.trim_end();
+            match trimmed.strip_suffix(']') {
+                Some(head) if head.trim_end().is_empty() || head.trim_end().ends_with('[') => {
+                    format!("[\n{entry}\n]\n")
+                }
+                Some(head) => format!("{},\n{entry}\n]\n", head.trim_end()),
+                None => format!("[\n{entry}\n]\n"), // malformed: start over
+            }
+        }
+        Err(_) => format!("[\n{entry}\n]\n"),
+    };
+    std::fs::write(path, body)
+}
+
+/// [`append_entry`] into `<repo root>/<file_name>`; returns the path
+/// written so the bench can print where the trajectory landed.
+pub fn append_to_repo_root(file_name: &str, entry: &str) -> std::io::Result<PathBuf> {
+    let path = repo_root().join(file_name);
+    append_entry(&path, entry)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ftms_traj_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn append_builds_a_growing_json_array() {
+        let path = tmp("grow.json");
+        let _ = std::fs::remove_file(&path);
+        append_entry(&path, "{\"a\": 1}").unwrap();
+        let one = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(one.trim(), "[\n{\"a\": 1}\n]");
+        append_entry(&path, "{\"b\": 2}").unwrap();
+        let two = std::fs::read_to_string(&path).unwrap();
+        assert!(two.contains("{\"a\": 1},"), "{two}");
+        assert!(two.contains("{\"b\": 2}"), "{two}");
+        assert_eq!(two.matches('{').count(), 2);
+        assert!(two.trim_end().ends_with(']'));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_recovers_from_empty_and_malformed_files() {
+        let path = tmp("recover.json");
+        for seed in ["", "[]", "[\n]", "not json at all"] {
+            std::fs::write(&path, seed).unwrap();
+            append_entry(&path, "{\"x\": 1}").unwrap();
+            let body = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(body.trim(), "[\n{\"x\": 1}\n]", "seed {seed:?}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn repo_root_contains_the_rust_crate() {
+        assert!(repo_root().join("rust").join("Cargo.toml").exists());
+    }
+}

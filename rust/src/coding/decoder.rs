@@ -18,6 +18,7 @@
 use crate::algebra::form::{BilinearForm, Target};
 use crate::algebra::gauss::SpanBasis;
 use crate::coding::scheme::TaskSet;
+use crate::linalg::matrix::Matrix;
 use crate::search::searchlp::{search_lp, LocalRelation, SearchOptions};
 
 /// Decode result: per-target weights over the task list.
@@ -98,6 +99,52 @@ impl SpanDecoder {
             weights[t.index()] = full;
         }
         Some(DecodeOutcome { weights })
+    }
+
+    /// Solve the decode weights and combine **borrowed** finished
+    /// products straight into the quadrants of `out` (the caller's
+    /// per-job combine buffer, side `2·bs` for `bs×bs` products):
+    /// target `t` lands in quadrant `(t/2, t%2)`, matching
+    /// [`crate::linalg::blocked::join_blocks`] layout. No product is
+    /// cloned and no per-block temporary is allocated; each output
+    /// element is the same weighted sum, added in the same task order,
+    /// as the historical solve-then-join path, so assembled outputs
+    /// are bit-identical to it.
+    ///
+    /// Errors when called before decodability, or if a non-zero weight
+    /// lands on a missing product (cannot happen for weights produced
+    /// by [`Self::solve`], which only weights finished tasks).
+    pub fn combine_into(
+        &self,
+        products: &[Option<Matrix>],
+        out: &mut Matrix,
+    ) -> Result<(), String> {
+        let outcome = self.solve().ok_or("assemble called before decodable")?;
+        let bs = products
+            .iter()
+            .flatten()
+            .next()
+            .map(|m| m.rows())
+            .ok_or("combine_into with no finished products")?;
+        assert_eq!(
+            out.shape(),
+            (2 * bs, 2 * bs),
+            "combine buffer must be 2bs x 2bs"
+        );
+        out.as_mut_slice().fill(0.0);
+        for (t, weights) in outcome.weights.iter().enumerate() {
+            let (bi, bj) = (t / 2, t % 2);
+            for (i, p) in products.iter().enumerate() {
+                let w = weights[i] as f32;
+                if w != 0.0 {
+                    let m = p
+                        .as_ref()
+                        .ok_or_else(|| format!("weight on unfinished task {i}"))?;
+                    out.add_scaled_region(bi * bs, bj * bs, w, m);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -313,6 +360,60 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn combine_into_matches_solve_then_join() {
+        use crate::linalg::blocked::{encode_operand, join_blocks, split_blocks};
+        use crate::sim::rng::Rng;
+        let ts = TaskSet::strassen_winograd(2);
+        let mut rng = Rng::seeded(77);
+        let a = Matrix::random(8, 8, &mut rng);
+        let b = Matrix::random(8, 8, &mut rng);
+        let a4 = split_blocks(&a);
+        let b4 = split_blocks(&b);
+        let mut d = SpanDecoder::new(&ts);
+        let mut products: Vec<Option<Matrix>> = vec![None; ts.num_tasks()];
+        for (i, task) in ts.tasks.iter().enumerate() {
+            if i == 3 {
+                continue; // one failure, still decodable
+            }
+            let p = encode_operand(&task.u, &a4).matmul(&encode_operand(&task.v, &b4));
+            products[i] = Some(p);
+            d.on_finished(i);
+        }
+        assert!(d.is_decodable());
+        // Historical path: per-target block sums, then join.
+        let outcome = d.solve().unwrap();
+        let mut blocks: Vec<Matrix> = Vec::new();
+        for weights in &outcome.weights {
+            let mut blk = Matrix::zeros(4, 4);
+            for (i, p) in products.iter().enumerate() {
+                let w = weights[i] as f32;
+                if w != 0.0 {
+                    blk.axpy(w, p.as_ref().unwrap());
+                }
+            }
+            blocks.push(blk);
+        }
+        let four: [Matrix; 4] = std::array::from_fn(|i| blocks[i].clone());
+        let want = join_blocks(&four);
+        // New path: straight into the combine buffer.
+        let mut got = Matrix::zeros(8, 8);
+        d.combine_into(&products, &mut got).unwrap();
+        assert_eq!(got.as_slice(), want.as_slice(), "must be bit-identical");
+        assert!(got.approx_eq(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn combine_into_before_decodable_is_error() {
+        let ts = TaskSet::strassen_winograd(0);
+        let mut d = SpanDecoder::new(&ts);
+        d.on_finished(0);
+        let products: Vec<Option<Matrix>> =
+            (0..ts.num_tasks()).map(|i| (i == 0).then(|| Matrix::zeros(2, 2))).collect();
+        let mut out = Matrix::zeros(4, 4);
+        assert!(d.combine_into(&products, &mut out).is_err());
     }
 
     #[test]

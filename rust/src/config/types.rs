@@ -8,6 +8,7 @@ use super::toml::{parse_toml, TomlDoc, TomlError};
 use crate::algorithms::{strassen, winograd};
 use crate::coding::nested::NestedTaskSet;
 use crate::coding::scheme::TaskSet;
+use crate::linalg::kernel::KernelKind;
 
 /// Which task-set family to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -138,6 +139,12 @@ pub struct RunConfig {
     pub seed: u64,
     /// Directory with AOT artifacts (for the PJRT backend).
     pub artifacts_dir: PathBuf,
+    /// Native matmul kernel family (`--kernel {naive,packed}`); packed
+    /// still routes sub-break-even products to the naive kernel.
+    pub kernel: KernelKind,
+    /// Worker threads for the packed kernel's row-panel loop (>= 1;
+    /// 1 = serial, the safe default under the multi-threaded pool).
+    pub kernel_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -154,6 +161,8 @@ impl Default for RunConfig {
             deadline_ms: 1_000,
             seed: 0,
             artifacts_dir: PathBuf::from("artifacts"),
+            kernel: KernelKind::Packed,
+            kernel_threads: 1,
         }
     }
 }
@@ -180,6 +189,19 @@ impl RunConfig {
             )?),
             None => d.nest,
         };
+        let kernel = match doc.get("run.kernel") {
+            Some(v) => KernelKind::parse(
+                v.as_str().ok_or("run.kernel must be a string")?,
+            )?,
+            None => d.kernel,
+        };
+        // Validate in i64 BEFORE the usize cast: a negative TOML value
+        // would otherwise wrap to a huge thread count and sail past
+        // validate()'s `== 0` check.
+        let kernel_threads = doc.int_or("run.kernel_threads", d.kernel_threads as i64);
+        if kernel_threads < 1 {
+            return Err(format!("run.kernel_threads must be >= 1, got {kernel_threads}"));
+        }
         let cfg = RunConfig {
             scheme,
             nest,
@@ -194,6 +216,8 @@ impl RunConfig {
             artifacts_dir: PathBuf::from(
                 doc.str_or("run.artifacts_dir", d.artifacts_dir.to_str().unwrap()),
             ),
+            kernel,
+            kernel_threads: kernel_threads as usize,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -225,6 +249,16 @@ impl RunConfig {
         }
         if !(0.0..=1.0).contains(&self.p_straggle) {
             return Err(format!("p_straggle out of [0,1]: {}", self.p_straggle));
+        }
+        if self.p_e + self.p_straggle > 1.0 {
+            return Err(format!(
+                "fail/straggle are exclusive marginals: p_e + p_straggle must be <= 1, \
+                 got {} + {}",
+                self.p_e, self.p_straggle
+            ));
+        }
+        if self.kernel_threads == 0 {
+            return Err("kernel_threads must be >= 1".into());
         }
         Ok(())
     }
@@ -322,6 +356,29 @@ p_e = 0.2
         cfg.p_e = 0.1;
         cfg.workers = 0;
         assert!(cfg.validate().is_err());
+        cfg.workers = 4;
+        cfg.p_e = 0.7;
+        cfg.p_straggle = 0.6;
+        assert!(cfg.validate().is_err(), "marginals must sum to <= 1");
+        cfg.p_straggle = 0.2;
+        assert!(cfg.validate().is_ok());
+        cfg.kernel_threads = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_in_toml() {
+        let doc = parse_toml("[run]\nkernel = \"naive\"\nkernel_threads = 4").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.kernel, KernelKind::Naive);
+        assert_eq!(cfg.kernel_threads, 4);
+        assert_eq!(RunConfig::default().kernel, KernelKind::Packed);
+        let doc = parse_toml("[run]\nkernel = \"blas\"").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // Negative thread counts must not wrap through the usize cast.
+        let doc = parse_toml("[run]\nkernel_threads = -2").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("kernel_threads"), "{err}");
     }
 
     #[test]

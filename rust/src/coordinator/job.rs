@@ -261,9 +261,14 @@ impl JobState {
                         self.time_to_decodable = Some(self.started.elapsed());
                     }
                     if *eager {
-                        let blocks = solve_blocks(&grp.decoder, &grp.products, n / 4)
+                        // Combine the group's borrowed leaf products
+                        // straight into its P_g buffer (no per-block
+                        // temporaries, no clones).
+                        let mut pg = Matrix::zeros(n / 2, n / 2);
+                        grp.decoder
+                            .combine_into(&grp.products, &mut pg)
                             .expect("inner solve after decodability");
-                        outer_products[g] = Some(join_blocks(&blocks));
+                        outer_products[g] = Some(pg);
                         grp.open = false;
                         grp.products = Vec::new();
                         return Some(g * *group_size..(g + 1) * *group_size);
@@ -275,9 +280,13 @@ impl JobState {
     }
 
     /// Weighted-sum assembly of C from the finished products (requires
-    /// decodability). Flat jobs use the PJRT decode artifact when
-    /// available, native axpy otherwise; nested jobs first recover any
-    /// deferred groups (inner solves), then solve the outer span.
+    /// decodability), combined straight into the per-job output buffer
+    /// from **borrowed** product slices — the decode path performs zero
+    /// matrix clones per solve (pinned by `tests/decode_alloc.rs`).
+    /// Flat jobs use the PJRT decode artifact when available (the
+    /// product stack is serialized once into the wire buffer instead of
+    /// cloning every product); nested jobs first recover any deferred
+    /// groups (inner solves), then solve the outer span.
     pub fn assemble(&mut self, backend: &Backend) -> Result<Matrix, String> {
         let n = self.n;
         match &mut self.decode {
@@ -289,16 +298,18 @@ impl JobState {
                     let weight_sets: Vec<Vec<f32>> = (0..4)
                         .map(|t| outcome.weights[t].iter().map(|&w| w as f32).collect())
                         .collect();
-                    // One round-trip: the product stack is shipped and
-                    // staged as a literal once, all four C blocks come
-                    // back together.
-                    let blocks = h.decode_combine_multi(weight_sets, products.clone(), bs)?;
+                    // One round-trip: the handle borrows the products,
+                    // serializes them once into the wire stack (no
+                    // Matrix clones), stages the stack as a literal
+                    // once, and all four C blocks come back together.
+                    let blocks = h.decode_combine_multi(weight_sets, products, bs)?;
                     let mut it = blocks.into_iter();
                     let four: [Matrix; 4] = std::array::from_fn(|_| it.next().unwrap());
                     return Ok(join_blocks(&four));
                 }
-                let four = solve_blocks(decoder, products, bs)?;
-                Ok(join_blocks(&four))
+                let mut out = Matrix::zeros(n, n);
+                decoder.combine_into(products, &mut out)?;
+                Ok(out)
             }
             Decode::Nested { groups, outer, outer_products, .. } => {
                 // Recover groups whose assembly was deferred
@@ -306,12 +317,14 @@ impl JobState {
                 // completion).
                 for (g, grp) in groups.iter().enumerate() {
                     if outer_products[g].is_none() && grp.decoder.is_decodable() {
-                        let blocks = solve_blocks(&grp.decoder, &grp.products, n / 4)?;
-                        outer_products[g] = Some(join_blocks(&blocks));
+                        let mut pg = Matrix::zeros(n / 2, n / 2);
+                        grp.decoder.combine_into(&grp.products, &mut pg)?;
+                        outer_products[g] = Some(pg);
                     }
                 }
-                let four = solve_blocks(outer, outer_products, n / 2)?;
-                Ok(join_blocks(&four))
+                let mut out = Matrix::zeros(n, n);
+                outer.combine_into(outer_products, &mut out)?;
+                Ok(out)
             }
         }
     }
@@ -337,34 +350,6 @@ impl JobState {
             fell_back,
         }
     }
-}
-
-/// Solve the four decode-weight sets and combine `products` into the
-/// four output blocks of size `bs` (native axpy path). Requires the
-/// decoder to be decodable; weights are only ever non-zero on finished
-/// tasks, so every referenced product is present.
-fn solve_blocks(
-    decoder: &SpanDecoder,
-    products: &[Option<Matrix>],
-    bs: usize,
-) -> Result<[Matrix; 4], String> {
-    let outcome = decoder.solve().ok_or("assemble called before decodable")?;
-    let mut blocks: Vec<Matrix> = Vec::with_capacity(4);
-    for weights in &outcome.weights {
-        let mut out = Matrix::zeros(bs, bs);
-        for (i, p) in products.iter().enumerate() {
-            let w = weights[i] as f32;
-            if w != 0.0 {
-                let m = p
-                    .as_ref()
-                    .ok_or_else(|| format!("weight on unfinished task {i}"))?;
-                out.axpy(w, m);
-            }
-        }
-        blocks.push(out);
-    }
-    let mut it = blocks.into_iter();
-    Ok(std::array::from_fn(|_| it.next().unwrap()))
 }
 
 #[cfg(test)]

@@ -37,7 +37,7 @@ use crate::coordinator::job::{JobState, MultiplyReport};
 use crate::coordinator::master::MasterConfig;
 use crate::coordinator::task::DispatchPlan;
 use crate::coordinator::worker::{Backend, FaultAction, WorkItem, WorkerPool, WorkerReply};
-use crate::linalg::blocked::{encode_operand, split_blocks};
+use crate::linalg::blocked::{encode_operand_into, split_blocks};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
 use crate::sim::rng::Rng;
@@ -300,13 +300,19 @@ impl Scheduler {
             }
             DispatchPlan::Nested(graph) => {
                 let m2 = graph.group_size();
+                // One encode scratch pair for the whole dispatch: the
+                // level-1 encodes write into it in place, and only the
+                // level-2 split blocks (shared by the group's leaf
+                // items) are allocated per group.
+                let mut enc_l = Matrix::zeros(0, 0);
+                let mut enc_r = Matrix::zeros(0, 0);
                 for (g, ospec) in graph.outer.specs.iter().enumerate() {
                     // Level-1 encode at the master, level-2 split: the
                     // group's operands are shared by its leaf items.
-                    let lg = encode_operand(&ospec.int_ca(), &a4);
-                    let rg = encode_operand(&ospec.int_cb(), &b4);
-                    let ga4 = Arc::new(split_blocks(&lg));
-                    let gb4 = Arc::new(split_blocks(&rg));
+                    encode_operand_into(&mut enc_l, &ospec.int_ca(), &a4);
+                    encode_operand_into(&mut enc_r, &ospec.int_cb(), &b4);
+                    let ga4 = Arc::new(split_blocks(&enc_l));
+                    let gb4 = Arc::new(split_blocks(&enc_r));
                     for (j, ispec) in graph.inner.specs.iter().enumerate() {
                         let task_id = g * m2 + j;
                         self.pool.submit(WorkItem {

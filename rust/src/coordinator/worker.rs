@@ -18,7 +18,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::linalg::blocked::encode_operand;
+use crate::linalg::blocked::encode_operand_into;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{Counter, Gauge, Registry};
 use crate::runtime::service::PjrtHandle;
@@ -52,7 +52,11 @@ pub enum FaultAction {
     Fail,
 }
 
-/// Job-level fault plan: how to sample per-node actions.
+/// Job-level fault plan: how to sample per-node actions. Failure and
+/// straggling are mutually exclusive events with the exact marginal
+/// probabilities the paper's model specifies: `P(Fail) = p_fail` and
+/// `P(Delay) = p_straggle` (requires `p_fail + p_straggle <= 1`, which
+/// [`crate::config::RunConfig::validate`] enforces for CLI runs).
 #[derive(Clone, Copy, Debug)]
 pub struct FaultPlan {
     /// P(node fails) — the paper's p_e.
@@ -66,10 +70,28 @@ impl FaultPlan {
     pub const NONE: FaultPlan =
         FaultPlan { p_fail: 0.0, p_straggle: 0.0, delay: Duration::ZERO };
 
+    /// Sample one node's fault action. A single uniform draw partitions
+    /// `[0, 1)` into `[0, p_fail)` → fail, `[p_fail, p_fail +
+    /// p_straggle)` → straggle, rest → healthy, so both marginals are
+    /// exact. (An earlier version sampled straggling *conditionally
+    /// after* non-failure, deflating the effective straggle probability
+    /// to `p_straggle·(1 − p_fail)` and skewing every sim-vs-theory
+    /// comparison that swept both parameters.)
     pub fn sample(&self, rng: &mut Rng) -> FaultAction {
-        if self.p_fail > 0.0 && rng.bernoulli(self.p_fail) {
+        debug_assert!(
+            self.p_fail + self.p_straggle <= 1.0,
+            "fail/straggle are exclusive marginals: p_fail {} + p_straggle {} > 1 \
+             silently truncates P(Delay)",
+            self.p_fail,
+            self.p_straggle
+        );
+        if self.p_fail <= 0.0 && self.p_straggle <= 0.0 {
+            return FaultAction::None;
+        }
+        let u = rng.uniform();
+        if u < self.p_fail {
             FaultAction::Fail
-        } else if self.p_straggle > 0.0 && rng.bernoulli(self.p_straggle) {
+        } else if u < self.p_fail + self.p_straggle {
             FaultAction::Delay(self.delay)
         } else {
             FaultAction::None
@@ -253,12 +275,29 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Per-worker-thread reusable encode scratch: the two encoded operands
+/// are written into these buffers ([`encode_operand_into`]) instead of
+/// allocating two fresh matrices per task — after the first item of a
+/// given block size the native encode path allocates nothing but the
+/// product it ships back.
+struct EncodeScratch {
+    left: Matrix,
+    right: Matrix,
+}
+
+impl EncodeScratch {
+    fn new() -> EncodeScratch {
+        EncodeScratch { left: Matrix::zeros(0, 0), right: Matrix::zeros(0, 0) }
+    }
+}
+
 fn node_loop(
     shared: Arc<PoolShared>,
     backend: Backend,
     counters: PoolCounters,
     delay_tx: Sender<Delayed>,
 ) {
+    let mut scratch = EncodeScratch::new();
     loop {
         let item = {
             let mut q = shared.queue.lock().unwrap();
@@ -275,12 +314,18 @@ fn node_loop(
         };
         let Some(item) = item else { break };
         counters.busy.inc();
-        process(item, &backend, &counters, &delay_tx);
+        process(item, &backend, &counters, &delay_tx, &mut scratch);
         counters.busy.dec();
     }
 }
 
-fn process(item: WorkItem, backend: &Backend, counters: &PoolCounters, delay_tx: &Sender<Delayed>) {
+fn process(
+    item: WorkItem,
+    backend: &Backend,
+    counters: &PoolCounters,
+    delay_tx: &Sender<Delayed>,
+    scratch: &mut EncodeScratch,
+) {
     let delay = match item.fault {
         FaultAction::Fail => {
             // Silently drop (the paper's model: a dead node never answers).
@@ -291,7 +336,7 @@ fn process(item: WorkItem, backend: &Backend, counters: &PoolCounters, delay_tx:
         FaultAction::None => None,
     };
     let t0 = Instant::now();
-    let product = compute(backend, &item);
+    let product = compute(backend, &item, scratch);
     let reply = WorkerReply {
         job_id: item.job_id,
         task_id: item.task_id,
@@ -314,21 +359,27 @@ fn process(item: WorkItem, backend: &Backend, counters: &PoolCounters, delay_tx:
     }
 }
 
-fn compute(backend: &Backend, item: &WorkItem) -> Result<Matrix, String> {
+fn compute(
+    backend: &Backend,
+    item: &WorkItem,
+    scratch: &mut EncodeScratch,
+) -> Result<Matrix, String> {
     match backend {
         Backend::Native => {
             let ica = to_int(&item.ca);
             let icb = to_int(&item.cb);
-            let left = encode_operand(&ica, &item.a4);
-            let right = encode_operand(&icb, &item.b4);
-            Ok(left.matmul(&right))
+            encode_operand_into(&mut scratch.left, &ica, &item.a4);
+            encode_operand_into(&mut scratch.right, &icb, &item.b4);
+            Ok(scratch.left.matmul(&scratch.right))
         }
+        // The Arc clones here bump refcounts; the blocks themselves are
+        // shared with the scheduler's work items, never copied.
         Backend::Pjrt(h) => h.worker_task_tagged(
             item.job_id,
             item.ca,
-            (*item.a4).clone(),
+            item.a4.clone(),
             item.cb,
-            (*item.b4).clone(),
+            item.b4.clone(),
         ),
     }
 }
@@ -534,7 +585,11 @@ mod tests {
     }
 
     #[test]
-    fn fault_plan_sampling_frequencies() {
+    fn fault_plan_sampling_frequencies_are_the_exact_marginals() {
+        // Regression: straggling used to be sampled conditionally after
+        // non-failure, deflating P(Delay) to p_straggle·(1 − p_fail) =
+        // 0.1875 here. The model's marginals are p_fail and p_straggle
+        // themselves.
         let plan = FaultPlan {
             p_fail: 0.25,
             p_straggle: 0.25,
@@ -552,9 +607,36 @@ mod tests {
             }
         }
         let pf = fails as f64 / n as f64;
-        // delay is sampled only among non-failures: P = 0.75 * 0.25
         let pd = delays as f64 / n as f64;
-        assert!((pf - 0.25).abs() < 0.01, "{pf}");
-        assert!((pd - 0.1875).abs() < 0.01, "{pd}");
+        assert!((pf - 0.25).abs() < 0.01, "P(fail) {pf} != 0.25");
+        assert!((pd - 0.25).abs() < 0.01, "P(delay) {pd} != 0.25");
+    }
+
+    #[test]
+    fn fault_plan_none_draws_nothing_from_the_rng() {
+        // FaultPlan::NONE must not consume RNG state: fault-free runs
+        // keep historical RNG streams (and seeded reproducibility).
+        let mut a = Rng::seeded(9);
+        let mut b = Rng::seeded(9);
+        for _ in 0..10 {
+            assert_eq!(FaultPlan::NONE.sample(&mut a), FaultAction::None);
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fault_plan_straggle_only_hits_its_marginal() {
+        let plan = FaultPlan {
+            p_fail: 0.0,
+            p_straggle: 0.4,
+            delay: Duration::from_millis(1),
+        };
+        let mut rng = Rng::seeded(6);
+        let n = 40_000;
+        let delays = (0..n)
+            .filter(|_| matches!(plan.sample(&mut rng), FaultAction::Delay(_)))
+            .count();
+        let pd = delays as f64 / n as f64;
+        assert!((pd - 0.4).abs() < 0.01, "P(delay) {pd} != 0.4");
     }
 }

@@ -92,6 +92,7 @@ pub mod prelude {
     pub use crate::coordinator::server::{MmServer, ServerConfig};
     pub use crate::coordinator::task::DispatchPlan;
     pub use crate::coordinator::worker::{Backend, FaultPlan};
+    pub use crate::linalg::kernel::KernelKind;
     pub use crate::linalg::matrix::Matrix;
     pub use crate::search::searchlp::{search_lp, SearchResult};
     pub use crate::sim::montecarlo::MonteCarlo;

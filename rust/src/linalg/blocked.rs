@@ -53,16 +53,26 @@ pub fn join_blocks(b: &[Matrix; 4]) -> Matrix {
 }
 
 /// Encode an operand: `Σ_p coeffs[p] * blocks[p]` (the ±1 sums the
-/// master sends to a worker). Zero-coefficient blocks are skipped.
+/// master sends to a worker). Zero-coefficient blocks are skipped —
+/// that skip is the *definition* of the encode (the sum runs over the
+/// coefficient support), not a floating-point shortcut.
 pub fn encode_operand(coeffs: &[i32; 4], blocks: &[Matrix; 4]) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    encode_operand_into(&mut out, coeffs, blocks);
+    out
+}
+
+/// [`encode_operand`] into a caller-owned buffer, which is reshaped and
+/// zeroed in place (allocation-free once warm) — the worker threads'
+/// per-thread encode scratch path.
+pub fn encode_operand_into(out: &mut Matrix, coeffs: &[i32; 4], blocks: &[Matrix; 4]) {
     let (r, c) = blocks[0].shape();
-    let mut out = Matrix::zeros(r, c);
+    out.reset(r, c);
     for (p, &s) in coeffs.iter().enumerate() {
         if s != 0 {
             out.axpy(s as f32, &blocks[p]);
         }
     }
-    out
 }
 
 /// Split a dimension-divisible-by-4 matrix into its 16 two-level blocks,
@@ -170,6 +180,20 @@ mod tests {
         let e = encode_operand(&[-1, 0, 1, 0], &b);
         let want = &b[2] - &b[0];
         assert!(e.approx_eq(&want, 1e-6));
+    }
+
+    #[test]
+    fn encode_into_reuses_a_stale_buffer() {
+        let mut rng = Rng::seeded(10);
+        let x = Matrix::random(8, 8, &mut rng);
+        let b = split_blocks(&x);
+        // A scratch with wrong shape and stale garbage must come out
+        // identical to the allocating path.
+        let mut scratch = Matrix::from_slice(1, 3, &[9.0, 9.0, 9.0]);
+        encode_operand_into(&mut scratch, &[1, 1, 0, -1], &b);
+        let want = encode_operand(&[1, 1, 0, -1], &b);
+        assert_eq!(scratch.as_slice(), want.as_slice());
+        assert_eq!(scratch.shape(), (4, 4));
     }
 
     #[test]

@@ -1,0 +1,427 @@
+//! The packed matmul kernel: cache-blocked `MC×KC×NC` tiling with
+//! panel-packed operands, an `MR×NR` register microkernel written to
+//! auto-vectorize, and an opt-in thread-parallel outer loop over row
+//! panels — pure std, no dependencies.
+//!
+//! # Kernel selection
+//!
+//! [`Matrix::matmul`] dispatches through this module: the process-wide
+//! default kind ([`set_default`], CLI `--kernel {naive,packed}`) picks
+//! the family, and a size heuristic ([`PACKED_MIN_FLOPS`]) keeps tiny
+//! products on the naive `(i,k,j)` kernel, whose loop overhead-free
+//! inner loop wins below the packing break-even point. The naive kernel
+//! ([`Matrix::matmul_naive`]) is the reference oracle: the property
+//! suite (`tests/kernel_packed.rs`) pins the packed kernel against it
+//! on random shapes — including non-square, non-divisible and 1×N —
+//! and on NaN/Inf operands.
+//!
+//! # Bit-exactness
+//!
+//! The packed kernel accumulates every output element in ascending-`k`
+//! order — the `kk` block loop is the outermost reduction loop and the
+//! microkernel walks `p` upward inside each block — which is exactly
+//! the naive kernel's per-element order. Rust does not contract `a*b+c`
+//! to FMA, so for every input (finite or not) the packed result is
+//! **bit-identical** to the naive result, and the coordinator's decode
+//! bit-reproducibility guarantees (`collect_all`) are unaffected by
+//! kernel choice. Zero-padded panel tails only feed accumulator lanes
+//! that are never written back.
+//!
+//! # Parallelism
+//!
+//! `threads > 1` splits the *output rows* into contiguous `MC`-aligned
+//! chunks, one scoped thread per chunk, each with private pack buffers.
+//! Each output element is still produced by exactly one thread with the
+//! same accumulation order, so results are identical for every thread
+//! count. Parallelism is opt-in (default 1): the worker pool already
+//! runs one kernel per worker thread, and oversubscribing it would slow
+//! the fleet down. `--kernel-threads N` (or [`set_threads`]) enables it
+//! for single large multiplies (e.g. the master's local fallback).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+
+use crate::linalg::matrix::Matrix;
+
+thread_local! {
+    /// Per-thread pack buffers, reused across calls on persistent
+    /// threads — the worker pool and the serial path, where a fresh
+    /// ~576 KiB allocation pair per matmul would put an allocator
+    /// round-trip on the hot path the encode scratch just removed.
+    /// (The opt-in multi-threaded path spawns scoped threads per call,
+    /// so each pays one allocation; thread-spawn cost dominates there.)
+    /// The packing loops fully overwrite every panel slot they expose
+    /// (padding included), so the buffers are grown but never re-zeroed.
+    static PACK_BUFS: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Rows of the register microkernel tile.
+pub const MR: usize = 8;
+/// Columns of the register microkernel tile (one 8-lane f32 vector).
+pub const NR: usize = 8;
+/// Rows per packed A block (multiple of `MR`; A pack = MC×KC ≈ 64 KiB).
+pub const MC: usize = 64;
+/// Depth of one cache block (shared by the A and B packs).
+pub const KC: usize = 256;
+/// Columns per packed B block (multiple of `NR`; B pack = KC×NC floats).
+pub const NC: usize = 512;
+
+/// Below this `m·k·n` product the naive kernel wins (packing overhead
+/// is linear in the operand sizes but the break-even is empirical:
+/// ~64³ on the boxes this repo targets).
+pub const PACKED_MIN_FLOPS: usize = 64 * 64 * 64;
+
+/// Which matmul kernel family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Reference `(i,k,j)` kernel — the oracle the packed kernel is
+    /// property-tested against.
+    Naive,
+    /// Cache-blocked panel-packed kernel (this module).
+    Packed,
+}
+
+impl KernelKind {
+    /// Parse `naive` / `packed` (the CLI `--kernel` values).
+    pub fn parse(s: &str) -> Result<KernelKind, String> {
+        match s.trim().to_lowercase().as_str() {
+            "naive" => Ok(KernelKind::Naive),
+            "packed" => Ok(KernelKind::Packed),
+            other => Err(format!("unknown kernel `{other}` (naive|packed)")),
+        }
+    }
+
+    pub fn display_name(&self) -> &'static str {
+        match self {
+            KernelKind::Naive => "naive",
+            KernelKind::Packed => "packed",
+        }
+    }
+}
+
+// Process-wide kernel policy. 0 = packed (default), 1 = naive.
+static KERNEL_KIND: AtomicU8 = AtomicU8::new(0);
+// Worker threads for the packed kernel's row-panel loop (>= 1).
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide default kernel (CLI `--kernel`).
+pub fn set_default(kind: KernelKind) {
+    KERNEL_KIND.store(matches!(kind, KernelKind::Naive) as u8, Ordering::Relaxed);
+}
+
+/// The process-wide default kernel.
+pub fn default_kind() -> KernelKind {
+    if KERNEL_KIND.load(Ordering::Relaxed) == 1 {
+        KernelKind::Naive
+    } else {
+        KernelKind::Packed
+    }
+}
+
+/// Set the packed kernel's worker-thread count (CLI `--kernel-threads`).
+/// Clamped to >= 1; 1 disables parallelism (the default — worker-pool
+/// threads each run their own kernel and must not oversubscribe).
+pub fn set_threads(threads: usize) {
+    KERNEL_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// The packed kernel's configured worker-thread count.
+pub fn threads() -> usize {
+    KERNEL_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Kernel dispatch for [`Matrix::matmul`]: the configured default kind,
+/// with small products routed to the naive kernel by the size heuristic.
+pub(crate) fn dispatch(lhs: &Matrix, rhs: &Matrix) -> Matrix {
+    let flops = lhs.rows() * lhs.cols() * rhs.cols();
+    match default_kind() {
+        KernelKind::Naive => lhs.matmul_naive(rhs),
+        KernelKind::Packed if flops >= PACKED_MIN_FLOPS => {
+            matmul_packed(lhs, rhs, threads())
+        }
+        KernelKind::Packed => lhs.matmul_naive(rhs),
+    }
+}
+
+/// Packed matmul with an explicit thread count (1 = serial). Panics on
+/// a dimension mismatch, like [`Matrix::matmul`].
+pub fn matmul_packed(lhs: &Matrix, rhs: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(
+        lhs.cols(),
+        rhs.rows(),
+        "matmul dims: {:?} x {:?}",
+        lhs.shape(),
+        rhs.shape()
+    );
+    let (m, k) = lhs.shape();
+    let n = rhs.cols();
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    // At most one thread per MC row panel; each thread gets a contiguous
+    // MC-aligned row chunk so no two threads share an output row.
+    let panels = (m + MC - 1) / MC;
+    let t = threads.max(1).min(panels);
+    if t <= 1 {
+        packed_serial(lhs.as_slice(), rhs.as_slice(), out.as_mut_slice(), m, k, n);
+        return out;
+    }
+    let panels_per_thread = (panels + t - 1) / t;
+    let rows_per_chunk = panels_per_thread * MC;
+    let a = lhs.as_slice();
+    let b = rhs.as_slice();
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut row = 0;
+        while row < m {
+            let rows = rows_per_chunk.min(m - row);
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let a_sub = &a[row * k..(row + rows) * k];
+            s.spawn(move || packed_serial(a_sub, b, chunk, rows, k, n));
+            row += rows;
+        }
+    });
+    out
+}
+
+/// Serial packed kernel over one row range: `out += a · b` with `out`
+/// pre-zeroed, `a` of shape `m×k`, `b` of shape `k×n`, all row-major.
+///
+/// When called from the threaded outer loop, each thread packs its own
+/// copy of the shared B panels: at the sizes this system serves the
+/// duplicated packing is ~1–2% of the thread's compute, and avoiding it
+/// would need cross-thread synchronization on the pack buffer.
+fn packed_serial(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    PACK_BUFS.with(|bufs| {
+        let (apack, bpack) = &mut *bufs.borrow_mut();
+        if apack.len() < MC * KC {
+            apack.resize(MC * KC, 0.0);
+        }
+        if bpack.len() < NC * KC {
+            bpack.resize(NC * KC, 0.0);
+        }
+        // jj (output columns) and ii (output rows) are pure partition
+        // loops; kk is the reduction loop and therefore sits INSIDE
+        // them in ascending order so each element accumulates in naive
+        // k-order.
+        let mut jj = 0;
+        while jj < n {
+            let nc = NC.min(n - jj);
+            let mut kk = 0;
+            while kk < k {
+                let kc = KC.min(k - kk);
+                pack_b(b, n, kk, kc, jj, nc, bpack);
+                let mut ii = 0;
+                while ii < m {
+                    let mc = MC.min(m - ii);
+                    pack_a(a, k, ii, mc, kk, kc, apack);
+                    macro_block(apack, bpack, out, n, ii, mc, jj, nc, kc);
+                    ii += mc;
+                }
+                kk += kc;
+            }
+            jj += nc;
+        }
+    });
+}
+
+/// Pack an `mc×kc` block of A (rows `ii..`, cols `kk..`) into MR-tall
+/// row panels: element `(r, p)` of panel `pi` lands at
+/// `pi·(MR·kc) + p·MR + r`. Short tail panels are zero-padded.
+fn pack_a(a: &[f32], lda: usize, ii: usize, mc: usize, kk: usize, kc: usize, apack: &mut [f32]) {
+    let mut pi = 0;
+    let mut i0 = 0;
+    while i0 < mc {
+        let mr = MR.min(mc - i0);
+        let panel = &mut apack[pi * MR * kc..(pi + 1) * MR * kc];
+        for p in 0..kc {
+            let col = &mut panel[p * MR..(p + 1) * MR];
+            for (r, slot) in col.iter_mut().enumerate() {
+                *slot = if r < mr {
+                    a[(ii + i0 + r) * lda + kk + p]
+                } else {
+                    0.0
+                };
+            }
+        }
+        pi += 1;
+        i0 += mr;
+    }
+}
+
+/// Pack a `kc×nc` block of B (rows `kk..`, cols `jj..`) into NR-wide
+/// column panels: element `(p, c)` of panel `pj` lands at
+/// `pj·(NR·kc) + p·NR + c`. Short tail panels are zero-padded.
+fn pack_b(b: &[f32], ldb: usize, kk: usize, kc: usize, jj: usize, nc: usize, bpack: &mut [f32]) {
+    let mut pj = 0;
+    let mut j0 = 0;
+    while j0 < nc {
+        let nr = NR.min(nc - j0);
+        let panel = &mut bpack[pj * NR * kc..(pj + 1) * NR * kc];
+        for p in 0..kc {
+            let src = &b[(kk + p) * ldb + jj + j0..];
+            let row = &mut panel[p * NR..(p + 1) * NR];
+            for (c, slot) in row.iter_mut().enumerate() {
+                *slot = if c < nr { src[c] } else { 0.0 };
+            }
+        }
+        pj += 1;
+        j0 += nr;
+    }
+}
+
+/// One `mc×nc` macro block: every (MR panel of A) × (NR panel of B)
+/// microkernel, accumulating into `out`.
+#[allow(clippy::too_many_arguments)]
+fn macro_block(
+    apack: &[f32],
+    bpack: &[f32],
+    out: &mut [f32],
+    ldo: usize,
+    ii: usize,
+    mc: usize,
+    jj: usize,
+    nc: usize,
+    kc: usize,
+) {
+    let mut pj = 0;
+    let mut j0 = 0;
+    while j0 < nc {
+        let nr = NR.min(nc - j0);
+        let bpanel = &bpack[pj * NR * kc..(pj + 1) * NR * kc];
+        let mut pi = 0;
+        let mut i0 = 0;
+        while i0 < mc {
+            let mr = MR.min(mc - i0);
+            let apanel = &apack[pi * MR * kc..(pi + 1) * MR * kc];
+            // Load the live output lanes into the accumulator BEFORE
+            // the rank-kc update: the per-element accumulation chain
+            // then continues the previous kk blocks' partial sum term
+            // by term, in exactly the naive kernel's order — float
+            // addition is not associative, so summing a block into a
+            // fresh accumulator and adding it afterwards would NOT be
+            // bit-identical once k > KC. Padded lanes start at 0 and
+            // are never stored back.
+            let mut acc = [[0.0f32; NR]; MR];
+            for (r, acc_row) in acc.iter_mut().enumerate().take(mr) {
+                let src = &out[(ii + i0 + r) * ldo + jj + j0..][..nr];
+                acc_row[..nr].copy_from_slice(src);
+            }
+            microkernel(apanel, bpanel, kc, &mut acc);
+            for (r, acc_row) in acc.iter().enumerate().take(mr) {
+                let dst = &mut out[(ii + i0 + r) * ldo + jj + j0..][..nr];
+                dst.copy_from_slice(&acc_row[..nr]);
+            }
+            pi += 1;
+            i0 += mr;
+        }
+        pj += 1;
+        j0 += nr;
+    }
+}
+
+/// The `MR×NR` register microkernel: a fixed-shape rank-`kc` update of
+/// the pre-loaded accumulator, which the compiler unrolls into vector
+/// mul+add (Rust never contracts to FMA, preserving bit-exactness).
+#[inline]
+fn microkernel(apanel: &[f32], bpanel: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    for p in 0..kc {
+        let a: &[f32; MR] = apanel[p * MR..(p + 1) * MR].try_into().unwrap();
+        let b: &[f32; NR] = bpanel[p * NR..(p + 1) * NR].try_into().unwrap();
+        for r in 0..MR {
+            let ar = a[r];
+            let row = &mut acc[r];
+            for c in 0..NR {
+                row[c] += ar * b[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    /// Elementwise equality that also accepts NaN == NaN (packed and
+    /// naive produce NaN at the same positions).
+    fn same_values(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.as_slice()
+                .iter()
+                .zip(b.as_slice().iter())
+                .all(|(x, y)| (x.is_nan() && y.is_nan()) || x == y)
+    }
+
+    #[test]
+    fn packed_matches_naive_on_blocked_and_tail_shapes() {
+        let mut rng = Rng::seeded(31);
+        // Shapes straddling every panel boundary: exact multiples, ±1
+        // tails, degenerate 1×N, tall/flat.
+        for &(m, k, n) in &[
+            (8usize, 8usize, 8usize),
+            (16, 16, 16),
+            (64, 64, 64),
+            (65, 63, 66),
+            (1, 40, 17),
+            (33, 1, 9),
+            (7, 300, 5),
+            (70, 70, 1),
+        ] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let want = a.matmul_naive(&b);
+            let got = matmul_packed(&a, &b, 1);
+            assert!(same_values(&got, &want), "{m}x{k}x{n} mismatch");
+        }
+    }
+
+    #[test]
+    fn packed_is_threadcount_invariant() {
+        let mut rng = Rng::seeded(32);
+        let a = Matrix::random(130, 70, &mut rng);
+        let b = Matrix::random(70, 90, &mut rng);
+        let serial = matmul_packed(&a, &b, 1);
+        for t in [2, 3, 4, 8] {
+            let par = matmul_packed(&a, &b, t);
+            assert_eq!(
+                par.as_slice(),
+                serial.as_slice(),
+                "threads={t} changed the result"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_handles_empty_reduction() {
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 5);
+        let c = matmul_packed(&a, &b, 2);
+        assert_eq!(c.shape(), (4, 5));
+        assert!(c.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dims")]
+    fn packed_rejects_dim_mismatch() {
+        let _ = matmul_packed(&Matrix::zeros(2, 3), &Matrix::zeros(2, 3), 1);
+    }
+
+    #[test]
+    fn kernel_kind_parse_and_globals() {
+        assert_eq!(KernelKind::parse("Packed").unwrap(), KernelKind::Packed);
+        assert_eq!(KernelKind::parse("naive").unwrap(), KernelKind::Naive);
+        assert!(KernelKind::parse("fast").is_err());
+        assert_eq!(KernelKind::Packed.display_name(), "packed");
+        let before = threads();
+        set_threads(0);
+        assert_eq!(threads(), 1, "thread count clamps to >= 1");
+        set_threads(before);
+    }
+}

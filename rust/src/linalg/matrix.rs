@@ -1,18 +1,34 @@
 //! Row-major dense `f32` matrix with the operations the coordinator
 //! needs on its hot path: add/sub/scale/AXPY-style combines and a
-//! cache-friendly (i, k, j) matmul.
+//! matmul that dispatches between the naive reference kernel and the
+//! cache-blocked packed kernel ([`crate::linalg::kernel`]).
 
 use std::fmt;
 use std::ops::{Add, Index, IndexMut, Mul, Neg, Sub};
+use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::linalg::kernel;
 use crate::sim::rng::Rng;
 
+/// Deep copies of `Matrix` since process start — the observable the
+/// alloc-regression tests/benches use to pin "zero matrix clones per
+/// decode solve" (`tests/decode_alloc.rs`). One relaxed increment per
+/// clone; negligible next to the `memcpy` it counts.
+static CLONES: AtomicU64 = AtomicU64::new(0);
+
 /// Dense row-major `f32` matrix.
-#[derive(Clone, PartialEq)]
+#[derive(PartialEq)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
     data: Vec<f32>,
+}
+
+impl Clone for Matrix {
+    fn clone(&self) -> Matrix {
+        CLONES.fetch_add(1, Ordering::Relaxed);
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.clone() }
+    }
 }
 
 impl Matrix {
@@ -72,14 +88,30 @@ impl Matrix {
         &mut self.data
     }
 
-    /// Naive-but-cache-friendly matmul: (i, k, j) loop order with the
-    /// inner j-loop auto-vectorizable over contiguous rows.
+    /// Matmul `self · rhs`, dispatched through the kernel policy: the
+    /// packed cache-blocked kernel for large products, the naive
+    /// reference kernel below the size break-even or when `--kernel
+    /// naive` is selected ([`kernel::set_default`]). Both kernels
+    /// accumulate each element in the same ascending-`k` order, so the
+    /// result is bit-identical regardless of which one runs.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
+        kernel::dispatch(self, rhs)
+    }
+
+    /// Reference `(i, k, j)` kernel — the oracle the packed kernel is
+    /// property-tested against. Full IEEE semantics: zero lhs entries
+    /// are NOT skipped, so `0·NaN = NaN` and `0·∞ = NaN` propagate from
+    /// `rhs` exactly as a textbook inner product would. (An earlier
+    /// version skipped `a == 0.0` rows as a throughput hack, silently
+    /// laundering non-finite `rhs` rows into zeros.)
     ///
     /// §Perf note: a 4-row-blocked variant (reusing each B row across 4
     /// accumulator streams) was tried and measured ~10% SLOWER at n =
     /// 128/256 on this single-core box (register pressure beats the L2
-    /// traffic saving), so the simple kernel stays — see EXPERIMENTS.md.
-    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+    /// traffic saving); the packed kernel in [`crate::linalg::kernel`]
+    /// is the fast path instead.
+    pub fn matmul_naive(&self, rhs: &Matrix) -> Matrix {
         assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
         let mut out = Matrix::zeros(self.rows, rhs.cols);
         let n = rhs.cols;
@@ -87,16 +119,56 @@ impl Matrix {
             let orow = &mut out.data[i * n..(i + 1) * n];
             for k in 0..self.cols {
                 let a = self.data[i * self.cols + k];
-                if a == 0.0 {
-                    continue;
-                }
                 let brow = &rhs.data[k * n..(k + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
+                for (o, b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
                 }
             }
         }
         out
+    }
+
+    /// Packed cache-blocked matmul with the configured thread count
+    /// ([`kernel::threads`]), bypassing the size heuristic.
+    pub fn matmul_packed(&self, rhs: &Matrix) -> Matrix {
+        kernel::matmul_packed(self, rhs, kernel::threads())
+    }
+
+    /// Reshape to `rows × cols` and zero-fill, reusing the existing
+    /// allocation when capacity allows — the scratch-buffer primitive
+    /// behind the workers' zero-allocation encode path.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Deep copies of `Matrix` since process start (alloc-regression
+    /// observability; see the `CLONES` static's doc).
+    pub fn clone_count() -> u64 {
+        CLONES.load(Ordering::Relaxed)
+    }
+
+    /// In-place `self[top.., left..] += s * other` over an
+    /// `other`-shaped region — the decode combine writes each output
+    /// quadrant straight into the final buffer with this, skipping the
+    /// per-block temporaries and the `join_blocks` copy.
+    pub fn add_scaled_region(&mut self, top: usize, left: usize, s: f32, other: &Matrix) {
+        let (r, c) = other.shape();
+        assert!(
+            top + r <= self.rows && left + c <= self.cols,
+            "region {:?}+({top},{left}) exceeds {:?}",
+            other.shape(),
+            self.shape()
+        );
+        for i in 0..r {
+            let dst = &mut self.data[(top + i) * self.cols + left..][..c];
+            let src = &other.data[i * c..(i + 1) * c];
+            for (d, x) in dst.iter_mut().zip(src.iter()) {
+                *d += s * x;
+            }
+        }
     }
 
     /// In-place `self += s * other` (the decode/assembly primitive).
@@ -129,9 +201,17 @@ impl Matrix {
             .fold(0.0, f32::max)
     }
 
-    /// Frobenius norm.
+    /// Frobenius norm, accumulated in f64: an f32 running sum loses the
+    /// tail of large matrices' squared entries (at 10⁶ elements the f32
+    /// accumulator's ulp exceeds small entries' squares entirely),
+    /// which skewed the e2e relative-error assertions that divide by
+    /// this norm.
     pub fn frobenius(&self) -> f32 {
-        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt() as f32
     }
 
     /// Relative error vs a reference (||self - ref|| / ||ref||).
@@ -309,5 +389,89 @@ mod tests {
         let mut rng = Rng::seeded(3);
         let a = Matrix::random(4, 7, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero_lhs_entries() {
+        // Regression: the old kernel skipped a == 0.0 lhs entries, so a
+        // NaN/Inf row of rhs multiplied by a zero coefficient silently
+        // vanished instead of poisoning the output (IEEE: 0·NaN = NaN).
+        let a = Matrix::from_slice(1, 2, &[0.0, 1.0]);
+        let b = Matrix::from_slice(2, 2, &[f32::NAN, f32::INFINITY, 2.0, 3.0]);
+        for c in [a.matmul(&b), a.matmul_naive(&b)] {
+            assert!(c[(0, 0)].is_nan(), "0*NaN + 1*2 must be NaN");
+            assert!(c[(0, 1)].is_nan(), "0*Inf + 1*3 must be NaN (0*Inf = NaN)");
+        }
+    }
+
+    #[test]
+    fn dispatch_is_bit_identical_to_naive_above_threshold() {
+        // 64x64x64 sits exactly at PACKED_MIN_FLOPS: dispatch takes the
+        // packed path, which must be bit-identical to the oracle.
+        let mut rng = Rng::seeded(41);
+        let a = Matrix::random(64, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        assert_eq!(a.matmul(&b).as_slice(), a.matmul_naive(&b).as_slice());
+        assert_eq!(a.matmul_packed(&b).as_slice(), a.matmul_naive(&b).as_slice());
+    }
+
+    #[test]
+    fn frobenius_accumulates_in_f64() {
+        // One large entry followed by many small ones: an f32 running
+        // sum absorbs the small squares entirely (1e8 + 1.0 == 1e8 in
+        // f32), underestimating the norm by ~0.5.
+        let n = 100;
+        let mut m = Matrix::zeros(n, n);
+        m[(0, 0)] = 1.0e4;
+        for i in 0..n {
+            for j in 0..n {
+                if (i, j) != (0, 0) {
+                    m[(i, j)] = 1.0;
+                }
+            }
+        }
+        let want = (1.0e8f64 + (n * n - 1) as f64).sqrt();
+        let got = m.frobenius() as f64;
+        assert!(
+            (got - want).abs() < 1e-2,
+            "got {got}, want {want} (f32 accumulation would give 1e4)"
+        );
+    }
+
+    #[test]
+    fn reset_reuses_and_zeroes() {
+        let mut m = Matrix::from_slice(2, 3, &[1.0; 6]);
+        m.reset(3, 2);
+        assert_eq!(m.shape(), (3, 2));
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+        m.reset(1, 10);
+        assert_eq!(m.shape(), (1, 10));
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn add_scaled_region_writes_one_quadrant() {
+        let mut out = Matrix::zeros(4, 4);
+        let blk = Matrix::from_slice(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        out.add_scaled_region(2, 0, 2.0, &blk); // bottom-left quadrant
+        assert_eq!(out[(2, 0)], 2.0);
+        assert_eq!(out[(3, 1)], 8.0);
+        assert_eq!(out[(0, 0)], 0.0);
+        assert_eq!(out[(2, 2)], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn add_scaled_region_bounds_checked() {
+        let mut out = Matrix::zeros(2, 2);
+        out.add_scaled_region(1, 1, 1.0, &Matrix::zeros(2, 2));
+    }
+
+    #[test]
+    fn clone_counter_observes_deep_copies() {
+        let m = Matrix::zeros(4, 4);
+        let before = Matrix::clone_count();
+        let _copy = m.clone();
+        assert!(Matrix::clone_count() > before);
     }
 }

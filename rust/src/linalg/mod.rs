@@ -8,9 +8,11 @@
 //! every integration test checks against.
 
 pub mod blocked;
+pub mod kernel;
 pub mod matrix;
 pub mod recursive;
 
 pub use blocked::{join_blocks, split_blocks};
+pub use kernel::KernelKind;
 pub use matrix::Matrix;
 pub use recursive::{strassen_mm, winograd_mm, RecursiveConfig};

@@ -31,6 +31,7 @@ use ft_strassen::coordinator::master::{Master, MasterConfig};
 use ft_strassen::coordinator::server::{MmServer, ServerConfig};
 use ft_strassen::coordinator::task::DispatchPlan;
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
+use ft_strassen::linalg::kernel::{self, KernelKind};
 use ft_strassen::linalg::matrix::Matrix;
 use ft_strassen::runtime::service::ComputeService;
 use ft_strassen::search::relations::summarize;
@@ -59,6 +60,10 @@ common options:
   --nest O:I                     nested two-level scheme, e.g.
                                  sw+2psmm:sw+2psmm (256 leaf tasks; n % 4 == 0)
   --backend B                    native | pjrt
+  --kernel K                     native matmul kernel: naive | packed
+                                 (default packed; small products always naive)
+  --kernel-threads T             packed-kernel row-panel threads (default 1;
+                                 keep 1 when the worker pool is the parallelism)
   --artifacts DIR                artifact directory (default: artifacts)
   --straggle-ms MS               injected straggler delay (default 50)
   --deadline-ms MS               per-job decode deadline (default 1000)
@@ -128,7 +133,18 @@ fn load_config(args: &Args) -> Result<RunConfig, String> {
         .get_parsed_or("deadline-ms", cfg.deadline_ms)
         .map_err(|e| e.to_string())?;
     cfg.seed = args.get_parsed_or("seed", cfg.seed).map_err(|e| e.to_string())?;
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = KernelKind::parse(k)?;
+    }
+    cfg.kernel_threads = args
+        .get_parsed_or("kernel-threads", cfg.kernel_threads)
+        .map_err(|e| e.to_string())?;
     cfg.validate()?;
+    // The kernel policy is process-wide: every matmul below here (worker
+    // encode products, decode fallback, reference checks) dispatches
+    // through it.
+    kernel::set_default(cfg.kernel);
+    kernel::set_threads(cfg.kernel_threads);
     Ok(cfg)
 }
 
@@ -405,8 +421,13 @@ fn cmd_multiply(args: &Args) -> Result<(), String> {
     master.shutdown();
     let want = a.matmul(&b);
     println!(
-        "scheme={} n={} backend={:?} workers={} tasks={}",
-        scheme_name, cfg.n, cfg.backend, workers, report.dispatched
+        "scheme={} n={} backend={:?} kernel={} workers={} tasks={}",
+        scheme_name,
+        cfg.n,
+        cfg.backend,
+        cfg.kernel.display_name(),
+        workers,
+        report.dispatched
     );
     println!(
         "elapsed={:?} decodable_after={:?} finished={}/{} injected: {} fail, {} straggle, fell_back={}",

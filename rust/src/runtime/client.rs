@@ -151,8 +151,9 @@ impl Runtime {
     }
 
     /// Multi-target decode: same product stack, several weight vectors
-    /// (the master decodes all four C blocks per job). The stacked
-    /// literal is built ONCE — the dominant cost at bs >= 64 (§Perf).
+    /// (the master decodes all four C blocks per job). Serializes the
+    /// borrowed products into the wire stack once, then delegates to
+    /// [`Self::decode_combine_multi_stacked`].
     pub fn decode_combine_multi(
         &mut self,
         weight_sets: &[Vec<f32>],
@@ -160,7 +161,6 @@ impl Runtime {
         bs: usize,
     ) -> RtResult<Vec<Matrix>> {
         assert!(products.len() <= DECODE_SLOTS);
-        let name = format!("decode_combine_bs{bs}");
         let mut stacked = vec![0.0f32; DECODE_SLOTS * bs * bs];
         for (t, p) in products.iter().enumerate() {
             if let Some(m) = p {
@@ -168,17 +168,38 @@ impl Runtime {
                 stacked[t * bs * bs..(t + 1) * bs * bs].copy_from_slice(m.as_slice());
             }
         }
-        let stack_lit = xla::Literal::vec1(&stacked)
-            .reshape(&[DECODE_SLOTS as i64, bs as i64, bs as i64])
-            .map_err(xerr("reshape stack"))?;
-        let mut out = Vec::with_capacity(weight_sets.len());
         for weights in weight_sets {
-            assert_eq!(weights.len(), products.len());
+            assert_eq!(weights.len(), products.len(), "weights/products length mismatch");
             for (t, p) in products.iter().enumerate() {
                 if p.is_none() {
                     assert_eq!(weights[t], 0.0, "missing product with nonzero weight");
                 }
             }
+        }
+        self.decode_combine_multi_stacked(weight_sets, &stacked, products.len(), bs)
+    }
+
+    /// Batched decode submission over a pre-serialized product stack
+    /// (`DECODE_SLOTS·bs·bs` floats, zero padding for missing slots).
+    /// The stacked literal is built ONCE and reused across the weight
+    /// vectors — the dominant cost at bs >= 64 (§Perf) — and the caller
+    /// never clones a `Matrix` to get its products on the wire.
+    pub fn decode_combine_multi_stacked(
+        &mut self,
+        weight_sets: &[Vec<f32>],
+        stacked: &[f32],
+        num_products: usize,
+        bs: usize,
+    ) -> RtResult<Vec<Matrix>> {
+        assert!(num_products <= DECODE_SLOTS, "too many tasks for decode slots");
+        assert_eq!(stacked.len(), DECODE_SLOTS * bs * bs, "wire stack size");
+        let name = format!("decode_combine_bs{bs}");
+        let stack_lit = xla::Literal::vec1(stacked)
+            .reshape(&[DECODE_SLOTS as i64, bs as i64, bs as i64])
+            .map_err(xerr("reshape stack"))?;
+        let mut out = Vec::with_capacity(weight_sets.len());
+        for weights in weight_sets {
+            assert_eq!(weights.len(), num_products);
             let mut w = vec![0.0f32; DECODE_SLOTS];
             w[..weights.len()].copy_from_slice(weights);
             let lit = self.run(&name, &[xla::Literal::vec1(&w), stack_lit.clone()])?;

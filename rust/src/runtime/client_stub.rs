@@ -88,6 +88,16 @@ impl Runtime {
         Err(DISABLED.to_string())
     }
 
+    pub fn decode_combine_multi_stacked(
+        &mut self,
+        _weight_sets: &[Vec<f32>],
+        _stacked: &[f32],
+        _num_products: usize,
+        _bs: usize,
+    ) -> RtResult<Vec<Matrix>> {
+        Err(DISABLED.to_string())
+    }
+
     pub fn matmul(&mut self, _a: &Matrix, _b: &Matrix) -> RtResult<Matrix> {
         Err(DISABLED.to_string())
     }

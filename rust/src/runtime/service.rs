@@ -5,9 +5,11 @@
 
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::linalg::matrix::Matrix;
+use crate::runtime::artifact::DECODE_SLOTS;
 use crate::runtime::client::Runtime;
 
 enum Request {
@@ -16,9 +18,11 @@ enum Request {
         /// and logs under job multiplexing.
         tag: u64,
         ca: [f32; 4],
-        a4: Box<[Matrix; 4]>,
+        /// Shared with the dispatching work item — crossing the channel
+        /// bumps a refcount, not four matrix copies.
+        a4: Arc<[Matrix; 4]>,
         cb: [f32; 4],
-        b4: Box<[Matrix; 4]>,
+        b4: Arc<[Matrix; 4]>,
         reply: Sender<Result<Matrix, String>>,
     },
     DecodeCombine {
@@ -27,9 +31,14 @@ enum Request {
         bs: usize,
         reply: Sender<Result<Matrix, String>>,
     },
-    DecodeCombineMulti {
+    /// Pre-serialized product stack (`DECODE_SLOTS·bs·bs` floats, zero
+    /// padding for missing slots): the zero-clone decode wire format —
+    /// the only multi-target request shape (un-stacked multi decode was
+    /// removed when the decode path went zero-copy).
+    DecodeCombineMultiStacked {
         weight_sets: Vec<Vec<f32>>,
-        products: Vec<Option<Matrix>>,
+        stacked: Vec<f32>,
+        num_products: usize,
         bs: usize,
         reply: Sender<Result<Vec<Matrix>, String>>,
     },
@@ -69,27 +78,22 @@ impl PjrtHandle {
         cb: [f32; 4],
         b4: [Matrix; 4],
     ) -> Result<Matrix, String> {
-        self.worker_task_tagged(0, ca, a4, cb, b4)
+        self.worker_task_tagged(0, ca, Arc::new(a4), cb, Arc::new(b4))
     }
 
     /// [`Self::worker_task`] tagged with the originating `job_id`, so
-    /// multiplexed requests stay attributable in errors and logs.
+    /// multiplexed requests stay attributable in errors and logs. Takes
+    /// the operand blocks by `Arc` so the worker pool's shared blocks
+    /// cross into the service without being cloned.
     pub fn worker_task_tagged(
         &self,
         tag: u64,
         ca: [f32; 4],
-        a4: [Matrix; 4],
+        a4: Arc<[Matrix; 4]>,
         cb: [f32; 4],
-        b4: [Matrix; 4],
+        b4: Arc<[Matrix; 4]>,
     ) -> Result<Matrix, String> {
-        self.call(|reply| Request::WorkerTask {
-            tag,
-            ca,
-            a4: Box::new(a4),
-            cb,
-            b4: Box::new(b4),
-            reply,
-        })
+        self.call(|reply| Request::WorkerTask { tag, ca, a4, cb, b4, reply })
     }
 
     /// `Σ w[t] products[t]` on the PJRT backend.
@@ -102,14 +106,47 @@ impl PjrtHandle {
         self.call(|reply| Request::DecodeCombine { weights, products, bs, reply })
     }
 
-    /// All four C blocks in one round-trip (product stack sent once).
+    /// All four C blocks in one round-trip: borrows the products,
+    /// copies each finished one ONCE into the pre-padded wire stack
+    /// (missing slots stay zero — their weights must be zero), and
+    /// ships the stack; no `Matrix` is cloned to cross the channel.
     pub fn decode_combine_multi(
         &self,
         weight_sets: Vec<Vec<f32>>,
-        products: Vec<Option<Matrix>>,
+        products: &[Option<Matrix>],
         bs: usize,
     ) -> Result<Vec<Matrix>, String> {
-        self.call(|reply| Request::DecodeCombineMulti { weight_sets, products, bs, reply })
+        if products.len() > DECODE_SLOTS {
+            return Err(format!(
+                "{} products exceed the {DECODE_SLOTS} decode slots",
+                products.len()
+            ));
+        }
+        let mut stacked = vec![0.0f32; DECODE_SLOTS * bs * bs];
+        for (t, p) in products.iter().enumerate() {
+            if let Some(m) = p {
+                stacked[t * bs * bs..(t + 1) * bs * bs].copy_from_slice(m.as_slice());
+            }
+        }
+        self.decode_combine_multi_stacked(weight_sets, stacked, products.len(), bs)
+    }
+
+    /// [`Self::decode_combine_multi`] over an already-serialized
+    /// product stack (`DECODE_SLOTS·bs·bs` floats, missing slots zero).
+    pub fn decode_combine_multi_stacked(
+        &self,
+        weight_sets: Vec<Vec<f32>>,
+        stacked: Vec<f32>,
+        num_products: usize,
+        bs: usize,
+    ) -> Result<Vec<Matrix>, String> {
+        self.call(|reply| Request::DecodeCombineMultiStacked {
+            weight_sets,
+            stacked,
+            num_products,
+            bs,
+            reply,
+        })
     }
 
     /// Plain matmul baseline.
@@ -200,9 +237,19 @@ fn serve(
                 let refs: Vec<Option<&Matrix>> = products.iter().map(|p| p.as_ref()).collect();
                 let _ = reply.send(rt.decode_combine(&weights, &refs, bs));
             }
-            Request::DecodeCombineMulti { weight_sets, products, bs, reply } => {
-                let refs: Vec<Option<&Matrix>> = products.iter().map(|p| p.as_ref()).collect();
-                let _ = reply.send(rt.decode_combine_multi(&weight_sets, &refs, bs));
+            Request::DecodeCombineMultiStacked {
+                weight_sets,
+                stacked,
+                num_products,
+                bs,
+                reply,
+            } => {
+                let _ = reply.send(rt.decode_combine_multi_stacked(
+                    &weight_sets,
+                    &stacked,
+                    num_products,
+                    bs,
+                ));
             }
             Request::Matmul { a, b, reply } => {
                 let _ = reply.send(rt.matmul(&a, &b));

@@ -1,0 +1,168 @@
+//! Property tests pitting the packed kernel against the naive oracle:
+//!
+//! * random shapes, including non-square, non-divisible-by-anything and
+//!   degenerate 1×N / N×1 — results must be **bit-identical** (both
+//!   kernels accumulate each element in ascending-k order and Rust
+//!   never contracts to FMA);
+//! * NaN/Inf operands — IEEE propagation must match the oracle, and a
+//!   zero lhs coefficient must NOT launder a non-finite rhs row (the
+//!   old kernel's zero-skip bug);
+//! * thread-count invariance of the parallel row-panel loop;
+//! * the `Matrix::matmul` dispatch path agreeing with both.
+
+use ft_strassen::linalg::kernel::{self, KernelKind};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::testkit::{check_panics, gen, PropConfig};
+
+/// Bit-level equality with NaN == NaN (propagation positions must
+/// match; on one platform the same op sequence yields the same bits).
+fn assert_same(got: &Matrix, want: &Matrix, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    for (i, (x, y)) in got
+        .as_slice()
+        .iter()
+        .zip(want.as_slice().iter())
+        .enumerate()
+    {
+        let same = (x.is_nan() && y.is_nan()) || x == y;
+        assert!(same, "{what}: element {i}: got {x}, want {y}");
+    }
+}
+
+#[test]
+fn prop_packed_matches_naive_on_random_shapes() {
+    check_panics(
+        "packed == naive",
+        PropConfig { cases: 60, base_seed: 0x7ac },
+        |rng| {
+            let m = gen::size(rng, 1, 80);
+            let k = gen::size(rng, 1, 80);
+            let n = gen::size(rng, 1, 80);
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let want = a.matmul_naive(&b);
+            let got = kernel::matmul_packed(&a, &b, 1);
+            assert_eq!(got.as_slice(), want.as_slice(), "{m}x{k}x{n}");
+        },
+    );
+}
+
+#[test]
+fn prop_packed_matches_naive_on_degenerate_shapes() {
+    check_panics(
+        "degenerate shapes",
+        PropConfig { cases: 40, base_seed: 0x7ad },
+        |rng| {
+            // 1×N, N×1 and single-k shapes hit every panel-tail branch.
+            let n = gen::size(rng, 1, 130);
+            let shapes = [(1, n, n), (n, n, 1), (n, 1, n), (1, 1, n), (n, 1, 1)];
+            for (m, k, cols) in shapes {
+                let a = Matrix::random(m, k, rng);
+                let b = Matrix::random(k, cols, rng);
+                assert_eq!(
+                    kernel::matmul_packed(&a, &b, 1).as_slice(),
+                    a.matmul_naive(&b).as_slice(),
+                    "{m}x{k}x{cols}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_packed_matches_naive_on_nonfinite_operands() {
+    check_panics(
+        "NaN/Inf propagation",
+        PropConfig { cases: 40, base_seed: 0x7ae },
+        |rng| {
+            let m = gen::size(rng, 1, 40);
+            let k = gen::size(rng, 2, 40);
+            let n = gen::size(rng, 1, 40);
+            let mut a = Matrix::random(m, k, rng);
+            let mut b = Matrix::random(k, n, rng);
+            // Sprinkle non-finite values and exact zeros (the zero-skip
+            // regression needs a zero lhs entry meeting a NaN rhs row).
+            for _ in 0..4 {
+                let (i, j) = (gen::size(rng, 0, m - 1), gen::size(rng, 0, k - 1));
+                a[(i, j)] = match rng.below(3) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    _ => 0.0,
+                };
+                let (p, q) = (gen::size(rng, 0, k - 1), gen::size(rng, 0, n - 1));
+                b[(p, q)] = match rng.below(3) {
+                    0 => f32::NAN,
+                    1 => f32::NEG_INFINITY,
+                    _ => 0.0,
+                };
+            }
+            let want = a.matmul_naive(&b);
+            assert_same(&kernel::matmul_packed(&a, &b, 1), &want, "packed");
+            assert_same(&kernel::matmul_packed(&a, &b, 3), &want, "packed mt");
+        },
+    );
+}
+
+#[test]
+fn zero_times_nonfinite_is_not_skipped() {
+    // The documented zero-skip regression, end to end through dispatch:
+    // lhs [0, 1] · rhs [[NaN, Inf], [1, 1]] must be [NaN, NaN].
+    let a = Matrix::from_slice(1, 2, &[0.0, 1.0]);
+    let b = Matrix::from_slice(2, 2, &[f32::NAN, f32::INFINITY, 1.0, 1.0]);
+    for (what, c) in [
+        ("dispatch", a.matmul(&b)),
+        ("naive", a.matmul_naive(&b)),
+        ("packed", kernel::matmul_packed(&a, &b, 1)),
+    ] {
+        assert!(c[(0, 0)].is_nan(), "{what}: 0·NaN must poison");
+        assert!(c[(0, 1)].is_nan(), "{what}: 0·Inf must poison");
+    }
+}
+
+#[test]
+fn prop_parallel_is_threadcount_invariant() {
+    check_panics(
+        "thread invariance",
+        PropConfig { cases: 20, base_seed: 0x7af },
+        |rng| {
+            let m = gen::size(rng, 60, 200);
+            let k = gen::size(rng, 1, 90);
+            let n = gen::size(rng, 1, 90);
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let serial = kernel::matmul_packed(&a, &b, 1);
+            for t in [2, 5, 16] {
+                assert_eq!(
+                    kernel::matmul_packed(&a, &b, t).as_slice(),
+                    serial.as_slice(),
+                    "{m}x{k}x{n} threads={t}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn dispatch_agrees_with_both_kernels_across_the_threshold() {
+    // Under and over PACKED_MIN_FLOPS the dispatched result equals both
+    // kernels bitwise, whatever the heuristic picked.
+    let mut rng = ft_strassen::sim::rng::Rng::seeded(99);
+    for n in [8usize, 32, 64, 96] {
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let via_dispatch = a.matmul(&b);
+        assert_eq!(via_dispatch.as_slice(), a.matmul_naive(&b).as_slice(), "n={n}");
+        assert_eq!(
+            via_dispatch.as_slice(),
+            kernel::matmul_packed(&a, &b, 1).as_slice(),
+            "n={n}"
+        );
+    }
+}
+
+#[test]
+fn kernel_kind_cli_names_round_trip() {
+    for kind in [KernelKind::Naive, KernelKind::Packed] {
+        assert_eq!(KernelKind::parse(kind.display_name()).unwrap(), kind);
+    }
+}
