@@ -5,6 +5,9 @@
 //!   appended to `BENCH_kernel.json` at the repo root;
 //! * **alloc-count comparison** of the worker encode path (fresh
 //!   allocation per task vs the reusable scratch buffer);
+//! * **recursive-vs-flat crossover sweep**: recursive Strassen (arena,
+//!   SIMD leaves when the CPU has them) against one flat kernel call
+//!   over sizes × crossovers, appended to `BENCH_recursive.json`;
 //! * the recursive Strassen complexity curve anchoring O(n^2.81);
 //! * the AOT Pallas artifacts through PJRT (worker task, decode
 //!   combine, plain matmul, one-level Strassen) — these self-skip when
@@ -16,9 +19,11 @@ use std::time::{SystemTime, UNIX_EPOCH};
 use ft_strassen::bench::harness::BenchRunner;
 use ft_strassen::bench::trajectory;
 use ft_strassen::linalg::blocked::{encode_operand, encode_operand_into, split_blocks};
-use ft_strassen::linalg::kernel;
+use ft_strassen::linalg::kernel::{self, KernelKind};
 use ft_strassen::linalg::matrix::Matrix;
-use ft_strassen::linalg::recursive::{multiplication_count, strassen_mm, RecursiveConfig};
+use ft_strassen::linalg::recursive::{
+    multiplication_count, scheme_mm_into, strassen_mm, RecursiveConfig,
+};
 use ft_strassen::runtime::client::Runtime;
 use ft_strassen::sim::rng::Rng;
 
@@ -106,7 +111,8 @@ fn main() {
     let a = Matrix::random(256, 256, &mut rng);
     let b = Matrix::random(256, 256, &mut rng);
     runner.bench_value("native/strassen_rec_n256_cut64", || {
-        strassen_mm(&a, &b, &RecursiveConfig { cutoff: 64, max_depth: 8 })
+        let cfg = RecursiveConfig { crossover: 64, max_depth: 8, ..Default::default() };
+        strassen_mm(&a, &b, &cfg)
     });
     let a4 = split_blocks(&a);
     let b4 = split_blocks(&b);
@@ -115,6 +121,73 @@ fn main() {
         let right = &b4[0] + &b4[3];
         left.matmul(&right)
     });
+
+    // --- recursive-vs-flat crossover sweep --------------------------------
+    // Leaves route through the SIMD microkernel when the CPU reports
+    // the features, scalar packed otherwise; the recursion result is
+    // cross-checked against the flat kernel at every point.
+    let leaf_kind = if kernel::simd_available() {
+        KernelKind::Simd
+    } else {
+        KernelKind::Packed
+    };
+    let sweep_sizes: &[usize] = if quick {
+        &[256, 512]
+    } else {
+        &[256, 512, 1024, 2048, 4096]
+    };
+    let crossovers = [64usize, 128, 256, 512];
+    let strassen_scheme = ft_strassen::algorithms::strassen();
+    println!(
+        "\nrecursive-vs-flat sweep (leaf kernel: {}):",
+        leaf_kind.display_name()
+    );
+    let mut sweep_objs: Vec<String> = Vec::new();
+    for &n in sweep_sizes {
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let mut flat = Matrix::zeros(0, 0);
+        let flat_ns = runner
+            .bench(&format!("sweep/flat_{}_n{n}", leaf_kind.display_name()), || {
+                kernel::matmul_into(leaf_kind, &a, &b, &mut flat, 1);
+            })
+            .stats
+            .mean
+            .as_nanos();
+        let mut rec = Matrix::zeros(0, 0);
+        let mut best_crossover = 0usize;
+        let mut best_ns = u128::MAX;
+        let mut points: Vec<String> = Vec::new();
+        for &crossover in crossovers.iter().filter(|&&c| c < n) {
+            let cfg = RecursiveConfig { crossover, max_depth: usize::MAX, leaf: leaf_kind };
+            let rec_ns = runner
+                .bench(&format!("sweep/rec_n{n}_c{crossover}"), || {
+                    scheme_mm_into(&strassen_scheme, &a, &b, &mut rec, &cfg);
+                })
+                .stats
+                .mean
+                .as_nanos();
+            assert!(
+                rec.approx_eq(&flat, 2e-3),
+                "recursive diverged from flat at n={n} crossover={crossover}: rel_err={}",
+                rec.rel_error(&flat)
+            );
+            let speedup = flat_ns as f64 / rec_ns.max(1) as f64;
+            println!("  n={n:4} crossover={crossover:3}: rec/flat speedup {speedup:.2}x");
+            if rec_ns < best_ns {
+                best_ns = rec_ns;
+                best_crossover = crossover;
+            }
+            points.push(format!(
+                "{{\"crossover\": {crossover}, \"rec_ns\": {rec_ns}, \"speedup\": {speedup:.3}}}"
+            ));
+        }
+        sweep_objs.push(format!(
+            "{{\"n\": {n}, \"flat_ns\": {flat_ns}, \"best_crossover\": {best_crossover}, \
+             \"points\": [{}]}}",
+            points.join(", ")
+        ));
+    }
 
     // complexity model table
     println!("\nmultiplication counts (cutoff 32):");
@@ -201,4 +274,19 @@ fn main() {
     let path = trajectory::append_to_repo_root("BENCH_kernel.json", &entry)
         .expect("write BENCH_kernel.json");
     println!("appended kernel trajectory to {}", path.display());
+
+    // --- BENCH_recursive.json trajectory entry (repo root) ----------------
+    // Schema (documented in README "Benchmark trajectories"): one object
+    // per run with unix_time, quick, kernel (the leaf microkernel that
+    // ran) and a `sweep` array of {n, flat_ns, best_crossover,
+    // points: [{crossover, rec_ns, speedup}]}.
+    let entry = format!(
+        "{{\"unix_time\": {unix_time}, \"quick\": {quick}, \"kernel\": \"{}\", \
+         \"sweep\": [{}]}}",
+        leaf_kind.display_name(),
+        sweep_objs.join(", ")
+    );
+    let path = trajectory::append_to_repo_root("BENCH_recursive.json", &entry)
+        .expect("write BENCH_recursive.json");
+    println!("appended recursive trajectory to {}", path.display());
 }

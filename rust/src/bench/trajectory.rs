@@ -1,6 +1,7 @@
 //! Append-only JSON-array trajectory files at the repo root
-//! (`BENCH_e2e.json`, `BENCH_kernel.json`): one entry per recorded
-//! bench run, so the perf trajectory is trackable across PRs.
+//! (`BENCH_e2e.json`, `BENCH_kernel.json`, `BENCH_recursive.json`):
+//! one entry per recorded bench run, so the perf trajectory is
+//! trackable across PRs.
 //!
 //! The file format is a plain JSON array of objects. [`append_entry`]
 //! splices a new entry before the closing bracket (starting a fresh

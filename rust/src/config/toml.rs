@@ -84,6 +84,15 @@ impl TomlDoc {
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(Value::as_bool).unwrap_or(default)
     }
+
+    /// Like [`TomlDoc::int_or`] for unsigned config fields: rejects a
+    /// negative value with the offending key in the message, instead of
+    /// letting a later `as usize` cast silently wrap it to a huge
+    /// number.
+    pub fn uint_or(&self, path: &str, default: usize) -> Result<usize, String> {
+        let v = self.int_or(path, default as i64);
+        usize::try_from(v).map_err(|_| format!("{path} must be >= 0, got {v}"))
+    }
 }
 
 /// Parse error with 1-based line number.
@@ -272,6 +281,15 @@ count = 16
         let doc = parse_toml("").unwrap();
         assert_eq!(doc.int_or("nope", 9), 9);
         assert_eq!(doc.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn uint_rejects_negatives_with_the_key_name() {
+        let doc = parse_toml("a = 12\nb = -3").unwrap();
+        assert_eq!(doc.uint_or("a", 0).unwrap(), 12);
+        assert_eq!(doc.uint_or("nope", 7).unwrap(), 7);
+        let e = doc.uint_or("b", 0).unwrap_err();
+        assert!(e.contains('b') && e.contains("-3"), "{e}");
     }
 
     #[test]

@@ -139,12 +139,21 @@ pub struct RunConfig {
     pub seed: u64,
     /// Directory with AOT artifacts (for the PJRT backend).
     pub artifacts_dir: PathBuf,
-    /// Native matmul kernel family (`--kernel {naive,packed}`); packed
-    /// still routes sub-break-even products to the naive kernel.
+    /// Native matmul kernel family (`--kernel {naive,packed,simd}`);
+    /// packed/simd still route sub-break-even products to the naive
+    /// kernel via the global dispatch, and `simd` degrades to `packed`
+    /// on CPUs without the features.
     pub kernel: KernelKind,
     /// Worker threads for the packed kernel's row-panel loop (>= 1;
     /// 1 = serial, the safe default under the multi-threaded pool).
     pub kernel_threads: usize,
+    /// Recursive split/leaf crossover for the single-node recursive
+    /// path (`localmm`): at or below this dimension leaves go straight
+    /// to the kernel (TOML `run.cutoff`, CLI `--cutoff`; >= 1).
+    pub crossover: usize,
+    /// Maximum recursion depth for the single-node recursive path;
+    /// 0 = unlimited (TOML `run.max_depth`, CLI `--max-depth`).
+    pub max_depth: usize,
 }
 
 impl Default for RunConfig {
@@ -163,6 +172,8 @@ impl Default for RunConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             kernel: KernelKind::Packed,
             kernel_threads: 1,
+            crossover: 64,
+            max_depth: 0,
         }
     }
 }
@@ -218,9 +229,22 @@ impl RunConfig {
             ),
             kernel,
             kernel_threads: kernel_threads as usize,
+            crossover: doc.uint_or("run.cutoff", d.crossover)?,
+            max_depth: doc.uint_or("run.max_depth", d.max_depth)?,
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The recursion parameters for the single-node recursive path,
+    /// with the `max_depth == 0` sentinel mapped to unlimited and the
+    /// configured kernel routed explicitly to the leaves.
+    pub fn recursive_config(&self) -> crate::linalg::recursive::RecursiveConfig {
+        crate::linalg::recursive::RecursiveConfig {
+            crossover: self.crossover,
+            max_depth: if self.max_depth == 0 { usize::MAX } else { self.max_depth },
+            leaf: self.kernel,
+        }
     }
 
     /// Load from a file path.
@@ -259,6 +283,9 @@ impl RunConfig {
         }
         if self.kernel_threads == 0 {
             return Err("kernel_threads must be >= 1".into());
+        }
+        if self.crossover == 0 {
+            return Err("cutoff (recursive crossover) must be >= 1".into());
         }
         Ok(())
     }
@@ -379,6 +406,33 @@ p_e = 0.2
         let doc = parse_toml("[run]\nkernel_threads = -2").unwrap();
         let err = RunConfig::from_toml(&doc).unwrap_err();
         assert!(err.contains("kernel_threads"), "{err}");
+    }
+
+    #[test]
+    fn cutoff_and_depth_in_toml() {
+        let doc = parse_toml("[run]\ncutoff = 32\nmax_depth = 3\nkernel = \"simd\"").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.crossover, 32);
+        assert_eq!(cfg.max_depth, 3);
+        assert_eq!(cfg.kernel, KernelKind::Simd);
+        let rc = cfg.recursive_config();
+        assert_eq!(rc.crossover, 32);
+        assert_eq!(rc.max_depth, 3);
+        assert_eq!(rc.leaf, KernelKind::Simd);
+        // Defaults: crossover 64, depth sentinel 0 -> unlimited.
+        let d = RunConfig::default();
+        assert_eq!(d.crossover, 64);
+        assert_eq!(d.recursive_config().max_depth, usize::MAX);
+        // Negative values must not wrap through the usize cast.
+        let doc = parse_toml("[run]\ncutoff = -1").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("cutoff"), "{err}");
+        let doc = parse_toml("[run]\nmax_depth = -4").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("max_depth"), "{err}");
+        // cutoff = 0 is rejected by validation.
+        let doc = parse_toml("[run]\ncutoff = 0").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -14,22 +14,35 @@ use crate::linalg::matrix::Matrix;
 /// Split an even-dimensioned matrix into its four blocks
 /// `[X11, X12, X21, X22]`.
 pub fn split_blocks(x: &Matrix) -> [Matrix; 4] {
+    let mut out = [
+        Matrix::zeros(0, 0),
+        Matrix::zeros(0, 0),
+        Matrix::zeros(0, 0),
+        Matrix::zeros(0, 0),
+    ];
+    split_blocks_into(&mut out, x);
+    out
+}
+
+/// [`split_blocks`] into caller-owned block buffers, each reshaped in
+/// place (allocation-free once warm) — the recursion arena's per-level
+/// split path.
+pub fn split_blocks_into(out: &mut [Matrix; 4], x: &Matrix) {
     let (r, c) = x.shape();
     assert!(r % 2 == 0 && c % 2 == 0, "odd shape {:?} cannot be 2x2-blocked", x.shape());
     let (hr, hc) = (r / 2, c / 2);
     let src = x.as_slice();
-    let block = |bi: usize, bj: usize| {
+    for (idx, m) in out.iter_mut().enumerate() {
+        let (bi, bj) = (idx / 2, idx % 2);
         // Row-contiguous copies (two memcpys per source row pair beat a
         // per-element closure with div/mod — see EXPERIMENTS.md §Perf).
-        let mut m = Matrix::zeros(hr, hc);
+        m.reset(hr, hc);
         let dst = m.as_mut_slice();
         for i in 0..hr {
             let s = (bi * hr + i) * c + bj * hc;
             dst[i * hc..(i + 1) * hc].copy_from_slice(&src[s..s + hc]);
         }
-        m
-    };
-    [block(0, 0), block(0, 1), block(1, 0), block(1, 1)]
+    }
 }
 
 /// Reassemble four equally-shaped blocks into one matrix.
@@ -194,6 +207,26 @@ mod tests {
         let want = encode_operand(&[1, 1, 0, -1], &b);
         assert_eq!(scratch.as_slice(), want.as_slice());
         assert_eq!(scratch.shape(), (4, 4));
+    }
+
+    #[test]
+    fn split_into_reuses_stale_buffers() {
+        let mut rng = Rng::seeded(13);
+        let x = Matrix::random(6, 10, &mut rng);
+        let want = split_blocks(&x);
+        // Wrong-shaped, garbage-filled scratch blocks must come out
+        // identical to the allocating path.
+        let mut scratch = [
+            Matrix::from_slice(1, 1, &[9.0]),
+            Matrix::zeros(7, 7),
+            Matrix::zeros(0, 0),
+            Matrix::from_slice(2, 2, &[1.0, 2.0, 3.0, 4.0]),
+        ];
+        split_blocks_into(&mut scratch, &x);
+        for (got, want) in scratch.iter().zip(want.iter()) {
+            assert_eq!(got.shape(), (3, 5));
+            assert_eq!(got.as_slice(), want.as_slice());
+        }
     }
 
     #[test]

@@ -1,45 +1,70 @@
-//! The packed matmul kernel: cache-blocked `MC×KC×NC` tiling with
-//! panel-packed operands, an `MR×NR` register microkernel written to
-//! auto-vectorize, and an opt-in thread-parallel outer loop over row
-//! panels — pure std, no dependencies.
+//! The packed matmul kernel family: cache-blocked `MC×KC×NC` tiling
+//! with panel-packed operands, an `MR×NR` register microkernel — scalar
+//! (auto-vectorized, bit-exact) or explicit SIMD (AVX2/FMA on x86_64,
+//! NEON on aarch64, runtime-detected) — and an opt-in thread-parallel
+//! outer loop over row panels. Pure std, no dependencies.
 //!
 //! # Kernel selection
 //!
 //! [`Matrix::matmul`] dispatches through this module: the process-wide
-//! default kind ([`set_default`], CLI `--kernel {naive,packed}`) picks
-//! the family, and a size heuristic ([`PACKED_MIN_FLOPS`]) keeps tiny
-//! products on the naive `(i,k,j)` kernel, whose loop overhead-free
-//! inner loop wins below the packing break-even point. The naive kernel
-//! ([`Matrix::matmul_naive`]) is the reference oracle: the property
-//! suite (`tests/kernel_packed.rs`) pins the packed kernel against it
-//! on random shapes — including non-square, non-divisible and 1×N —
-//! and on NaN/Inf operands.
+//! default kind ([`set_default`], CLI `--kernel {naive,packed,simd}`)
+//! picks the family, and a size heuristic ([`PACKED_MIN_FLOPS`]) keeps
+//! tiny products on the naive `(i,k,j)` kernel, whose loop
+//! overhead-free inner loop wins below the packing break-even point.
+//! The naive kernel ([`Matrix::matmul_naive`]) is the reference oracle:
+//! the property suite (`tests/kernel_packed.rs`, `tests/kernel_simd.rs`)
+//! pins the packed kernel against it bit-exactly and the SIMD kernel
+//! against the packed kernel under the documented epsilon bound.
 //!
-//! # Bit-exactness
+//! Recursive Strassen/Winograd (`linalg/recursive.rs`) does NOT go
+//! through the process-wide default: its leaves route explicitly via
+//! [`matmul_into`] with the leaf kind carried in `RecursiveConfig`, so
+//! a recursion benchmark cannot be silently skewed by global state.
 //!
-//! The packed kernel accumulates every output element in ascending-`k`
-//! order — the `kk` block loop is the outermost reduction loop and the
-//! microkernel walks `p` upward inside each block — which is exactly
-//! the naive kernel's per-element order. Rust does not contract `a*b+c`
-//! to FMA, so for every input (finite or not) the packed result is
-//! **bit-identical** to the naive result, and the coordinator's decode
-//! bit-reproducibility guarantees (`collect_all`) are unaffected by
-//! kernel choice. Zero-padded panel tails only feed accumulator lanes
-//! that are never written back.
+//! # Bit-exactness and the FMA policy
+//!
+//! The **scalar packed** kernel accumulates every output element in
+//! ascending-`k` order — the `kk` block loop is the outermost reduction
+//! loop and the microkernel walks `p` upward inside each block — which
+//! is exactly the naive kernel's per-element order. Rust does not
+//! contract `a*b+c` to FMA, so for every input (finite or not) the
+//! packed result is **bit-identical** to the naive result, and the
+//! coordinator's decode bit-reproducibility guarantees (`collect_all`)
+//! are unaffected by choosing `naive` vs `packed`. Zero-padded panel
+//! tails only feed accumulator lanes that are never written back.
+//!
+//! The **SIMD** kernel keeps the same ascending-`k` accumulation order
+//! but fuses each `acc += a·b` step into one FMA instruction (single
+//! rounding instead of two). Its results are therefore NOT bit-identical
+//! to the oracles; they are *more* accurate per step, and the elementwise
+//! difference from the scalar kernel is bounded by [`simd_abs_bound`]
+//! (two forward-error cones around the exact dot product, Higham ch. 3).
+//! NaN/Inf positions still match the oracle: fusion changes rounding,
+//! not IEEE propagation, away from the overflow boundary. Selecting
+//! `--kernel simd` trades decode bit-reproducibility across kernel
+//! choices for throughput; reproducibility across *runs and thread
+//! counts* is retained (the kernel is deterministic).
+//!
+//! [`KernelKind::Simd`] is honored only when the CPU reports the
+//! features at runtime (`is_x86_feature_detected!("avx2")` + `"fma"`,
+//! NEON on aarch64); otherwise every SIMD entry point silently runs the
+//! scalar packed path ([`effective_kind`] reports the substitution).
 //!
 //! # Parallelism
 //!
 //! `threads > 1` splits the *output rows* into contiguous `MC`-aligned
 //! chunks, one scoped thread per chunk, each with private pack buffers.
-//! Each output element is still produced by exactly one thread with the
-//! same accumulation order, so results are identical for every thread
-//! count. Parallelism is opt-in (default 1): the worker pool already
-//! runs one kernel per worker thread, and oversubscribing it would slow
-//! the fleet down. `--kernel-threads N` (or [`set_threads`]) enables it
-//! for single large multiplies (e.g. the master's local fallback).
+//! The thread count is clamped to the row-panel count, so a thread
+//! never receives an empty chunk. Each output element is still produced
+//! by exactly one thread with the same accumulation order, so results
+//! are identical for every thread count. Parallelism is opt-in
+//! (default 1): the worker pool already runs one kernel per worker
+//! thread, and oversubscribing it would slow the fleet down.
+//! `--kernel-threads N` (or [`set_threads`]) enables it for single
+//! large multiplies (e.g. the master's local fallback).
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 
 use crate::linalg::matrix::Matrix;
 
@@ -58,7 +83,8 @@ thread_local! {
 
 /// Rows of the register microkernel tile.
 pub const MR: usize = 8;
-/// Columns of the register microkernel tile (one 8-lane f32 vector).
+/// Columns of the register microkernel tile (one 8-lane f32 vector on
+/// AVX2; two 4-lane vectors on NEON).
 pub const NR: usize = 8;
 /// Rows per packed A block (multiple of `MR`; A pack = MC×KC ≈ 64 KiB).
 pub const MC: usize = 64;
@@ -78,17 +104,23 @@ pub enum KernelKind {
     /// Reference `(i,k,j)` kernel — the oracle the packed kernel is
     /// property-tested against.
     Naive,
-    /// Cache-blocked panel-packed kernel (this module).
+    /// Cache-blocked panel-packed kernel with the scalar microkernel
+    /// (bit-identical to `Naive`).
     Packed,
+    /// Packed kernel with the explicit-SIMD FMA microkernel
+    /// (AVX2/FMA or NEON; falls back to `Packed` when the CPU lacks
+    /// the features — see [`simd_available`]).
+    Simd,
 }
 
 impl KernelKind {
-    /// Parse `naive` / `packed` (the CLI `--kernel` values).
+    /// Parse `naive` / `packed` / `simd` (the CLI `--kernel` values).
     pub fn parse(s: &str) -> Result<KernelKind, String> {
         match s.trim().to_lowercase().as_str() {
             "naive" => Ok(KernelKind::Naive),
             "packed" => Ok(KernelKind::Packed),
-            other => Err(format!("unknown kernel `{other}` (naive|packed)")),
+            "simd" => Ok(KernelKind::Simd),
+            other => Err(format!("unknown kernel `{other}` (naive|packed|simd)")),
         }
     }
 
@@ -96,26 +128,55 @@ impl KernelKind {
         match self {
             KernelKind::Naive => "naive",
             KernelKind::Packed => "packed",
+            KernelKind::Simd => "simd",
         }
     }
 }
 
-// Process-wide kernel policy. 0 = packed (default), 1 = naive.
+/// Which microkernel a packed call runs — resolved ONCE per call, after
+/// feature detection, so the inner loops never re-check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Micro {
+    Scalar,
+    Simd,
+}
+
+// Process-wide kernel policy. 0 = packed (default), 1 = naive, 2 = simd.
 static KERNEL_KIND: AtomicU8 = AtomicU8::new(0);
 // Worker threads for the packed kernel's row-panel loop (>= 1).
 static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(1);
+// Call counters: top-level packed/SIMD kernel invocations since process
+// start. Observability for the recursion-routing tests and benches —
+// one relaxed increment per matmul, negligible next to the compute.
+static PACKED_CALLS: AtomicU64 = AtomicU64::new(0);
+static SIMD_CALLS: AtomicU64 = AtomicU64::new(0);
 
 /// Set the process-wide default kernel (CLI `--kernel`).
 pub fn set_default(kind: KernelKind) {
-    KERNEL_KIND.store(matches!(kind, KernelKind::Naive) as u8, Ordering::Relaxed);
+    let v = match kind {
+        KernelKind::Packed => 0,
+        KernelKind::Naive => 1,
+        KernelKind::Simd => 2,
+    };
+    KERNEL_KIND.store(v, Ordering::Relaxed);
 }
 
-/// The process-wide default kernel.
+/// The process-wide default kernel (as requested; see
+/// [`effective_kind`] for what actually runs).
 pub fn default_kind() -> KernelKind {
-    if KERNEL_KIND.load(Ordering::Relaxed) == 1 {
-        KernelKind::Naive
-    } else {
-        KernelKind::Packed
+    match KERNEL_KIND.load(Ordering::Relaxed) {
+        1 => KernelKind::Naive,
+        2 => KernelKind::Simd,
+        _ => KernelKind::Packed,
+    }
+}
+
+/// The kernel that will actually execute for a requested kind:
+/// `Simd` degrades to `Packed` when the CPU lacks the features.
+pub fn effective_kind(kind: KernelKind) -> KernelKind {
+    match kind {
+        KernelKind::Simd if !simd_available() => KernelKind::Packed,
+        k => k,
     }
 }
 
@@ -131,22 +192,121 @@ pub fn threads() -> usize {
     KERNEL_THREADS.load(Ordering::Relaxed).max(1)
 }
 
+/// Top-level scalar packed kernel calls since process start.
+pub fn packed_call_count() -> u64 {
+    PACKED_CALLS.load(Ordering::Relaxed)
+}
+
+/// Top-level SIMD kernel calls since process start (only bumped when
+/// the SIMD microkernel actually ran, not on the fallback).
+pub fn simd_call_count() -> u64 {
+    SIMD_CALLS.load(Ordering::Relaxed)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_available_impl() -> bool {
+    // Both are required: the microkernel issues vfmadd231ps on ymm.
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn simd_available_impl() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn simd_available_impl() -> bool {
+    false
+}
+
+/// Whether this CPU can run the explicit-SIMD microkernel (AVX2+FMA on
+/// x86_64, NEON on aarch64). The std detection macros cache, so this is
+/// cheap to call per matmul.
+pub fn simd_available() -> bool {
+    simd_available_impl()
+}
+
+/// Elementwise bound on `|simd − scalar|` for one output element of an
+/// `m×k · k×n` product whose operand entries are bounded by `a_max` /
+/// `b_max` in magnitude.
+///
+/// Both kernels compute the same ascending-`k` sum; each is within the
+/// standard dot-product forward-error cone `γ_k · Σ|aᵢ·bᵢ|` of the
+/// exact value (`γ_k = k·ε/(1−k·ε)`, ε = `f32::EPSILON`/2; FMA is
+/// strictly tighter). The difference of the two is therefore at most
+/// `2·γ_k·Σ|aᵢ·bᵢ| ≤ 2·k·ε·k·a_max·b_max` to first order. This is a
+/// *worst-case* bound — observed differences are typically ~√k smaller —
+/// used by `tests/kernel_simd.rs` as the acceptance epsilon.
+pub fn simd_abs_bound(k: usize, a_max: f32, b_max: f32) -> f32 {
+    let kf = k as f32;
+    2.0 * kf * f32::EPSILON * kf * a_max * b_max
+}
+
 /// Kernel dispatch for [`Matrix::matmul`]: the configured default kind,
 /// with small products routed to the naive kernel by the size heuristic.
 pub(crate) fn dispatch(lhs: &Matrix, rhs: &Matrix) -> Matrix {
     let flops = lhs.rows() * lhs.cols() * rhs.cols();
     match default_kind() {
         KernelKind::Naive => lhs.matmul_naive(rhs),
-        KernelKind::Packed if flops >= PACKED_MIN_FLOPS => {
-            matmul_packed(lhs, rhs, threads())
-        }
-        KernelKind::Packed => lhs.matmul_naive(rhs),
+        _ if flops < PACKED_MIN_FLOPS => lhs.matmul_naive(rhs),
+        KernelKind::Packed => matmul_packed(lhs, rhs, threads()),
+        KernelKind::Simd => matmul_simd(lhs, rhs, threads()),
     }
 }
 
-/// Packed matmul with an explicit thread count (1 = serial). Panics on
-/// a dimension mismatch, like [`Matrix::matmul`].
+/// Multiply `lhs · rhs` into a caller-owned buffer (reshaped and zeroed
+/// in place, allocation-free once warm) with an explicit kernel kind —
+/// the recursion leaves' entry point, deliberately independent of the
+/// process-wide default.
+pub fn matmul_into(
+    kind: KernelKind,
+    lhs: &Matrix,
+    rhs: &Matrix,
+    out: &mut Matrix,
+    threads: usize,
+) {
+    match kind {
+        KernelKind::Naive => lhs.matmul_naive_into(rhs, out),
+        KernelKind::Packed => matmul_packed_into(lhs, rhs, out, threads),
+        KernelKind::Simd => matmul_simd_into(lhs, rhs, out, threads),
+    }
+}
+
+/// Scalar packed matmul with an explicit thread count (1 = serial).
+/// Panics on a dimension mismatch, like [`Matrix::matmul`].
 pub fn matmul_packed(lhs: &Matrix, rhs: &Matrix, threads: usize) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    matmul_packed_into(lhs, rhs, &mut out, threads);
+    out
+}
+
+/// [`matmul_packed`] into a caller-owned buffer.
+pub fn matmul_packed_into(lhs: &Matrix, rhs: &Matrix, out: &mut Matrix, threads: usize) {
+    packed_into(lhs, rhs, out, threads, Micro::Scalar);
+}
+
+/// SIMD packed matmul with an explicit thread count; runs the scalar
+/// packed kernel when the CPU lacks the features (see module docs).
+pub fn matmul_simd(lhs: &Matrix, rhs: &Matrix, threads: usize) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    matmul_simd_into(lhs, rhs, &mut out, threads);
+    out
+}
+
+/// [`matmul_simd`] into a caller-owned buffer.
+pub fn matmul_simd_into(lhs: &Matrix, rhs: &Matrix, out: &mut Matrix, threads: usize) {
+    let micro = if simd_available() {
+        Micro::Simd
+    } else {
+        Micro::Scalar
+    };
+    packed_into(lhs, rhs, out, threads, micro);
+}
+
+/// Shared packed driver: tiling, packing and the thread split are
+/// identical for both microkernels; only the innermost rank-`kc` update
+/// differs.
+fn packed_into(lhs: &Matrix, rhs: &Matrix, out: &mut Matrix, threads: usize, micro: Micro) {
     assert_eq!(
         lhs.cols(),
         rhs.rows(),
@@ -154,22 +314,26 @@ pub fn matmul_packed(lhs: &Matrix, rhs: &Matrix, threads: usize) -> Matrix {
         lhs.shape(),
         rhs.shape()
     );
+    match micro {
+        Micro::Scalar => PACKED_CALLS.fetch_add(1, Ordering::Relaxed),
+        Micro::Simd => SIMD_CALLS.fetch_add(1, Ordering::Relaxed),
+    };
     let (m, k) = lhs.shape();
     let n = rhs.cols();
-    let mut out = Matrix::zeros(m, n);
+    out.reset(m, n);
     if m == 0 || n == 0 || k == 0 {
-        return out;
+        return;
     }
     // At most one thread per MC row panel; each thread gets a contiguous
-    // MC-aligned row chunk so no two threads share an output row.
-    let panels = (m + MC - 1) / MC;
+    // MC-aligned row chunk so no two threads share an output row, and
+    // the clamp to `panels` guarantees every spawned chunk is non-empty.
+    let panels = m.div_ceil(MC);
     let t = threads.max(1).min(panels);
     if t <= 1 {
-        packed_serial(lhs.as_slice(), rhs.as_slice(), out.as_mut_slice(), m, k, n);
-        return out;
+        packed_serial(lhs.as_slice(), rhs.as_slice(), out.as_mut_slice(), m, k, n, micro);
+        return;
     }
-    let panels_per_thread = (panels + t - 1) / t;
-    let rows_per_chunk = panels_per_thread * MC;
+    let rows_per_chunk = panels.div_ceil(t) * MC;
     let a = lhs.as_slice();
     let b = rhs.as_slice();
     std::thread::scope(|s| {
@@ -177,14 +341,14 @@ pub fn matmul_packed(lhs: &Matrix, rhs: &Matrix, threads: usize) -> Matrix {
         let mut row = 0;
         while row < m {
             let rows = rows_per_chunk.min(m - row);
+            debug_assert!(rows > 0, "empty thread chunk at row {row} of {m}");
             let (chunk, tail) = rest.split_at_mut(rows * n);
             rest = tail;
             let a_sub = &a[row * k..(row + rows) * k];
-            s.spawn(move || packed_serial(a_sub, b, chunk, rows, k, n));
+            s.spawn(move || packed_serial(a_sub, b, chunk, rows, k, n, micro));
             row += rows;
         }
     });
-    out
 }
 
 /// Serial packed kernel over one row range: `out += a · b` with `out`
@@ -194,7 +358,15 @@ pub fn matmul_packed(lhs: &Matrix, rhs: &Matrix, threads: usize) -> Matrix {
 /// copy of the shared B panels: at the sizes this system serves the
 /// duplicated packing is ~1–2% of the thread's compute, and avoiding it
 /// would need cross-thread synchronization on the pack buffer.
-fn packed_serial(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+fn packed_serial(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    micro: Micro,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -221,7 +393,7 @@ fn packed_serial(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: u
                 while ii < m {
                     let mc = MC.min(m - ii);
                     pack_a(a, k, ii, mc, kk, kc, apack);
-                    macro_block(apack, bpack, out, n, ii, mc, jj, nc, kc);
+                    macro_block(apack, bpack, out, n, ii, mc, jj, nc, kc, micro);
                     ii += mc;
                 }
                 kk += kc;
@@ -289,6 +461,7 @@ fn macro_block(
     jj: usize,
     nc: usize,
     kc: usize,
+    micro: Micro,
 ) {
     let mut pj = 0;
     let mut j0 = 0;
@@ -307,13 +480,15 @@ fn macro_block(
             // addition is not associative, so summing a block into a
             // fresh accumulator and adding it afterwards would NOT be
             // bit-identical once k > KC. Padded lanes start at 0 and
-            // are never stored back.
+            // are never stored back. (The same ordering argument gives
+            // the SIMD path its epsilon bound: it runs the identical
+            // chain, just with each step fused.)
             let mut acc = [[0.0f32; NR]; MR];
             for (r, acc_row) in acc.iter_mut().enumerate().take(mr) {
                 let src = &out[(ii + i0 + r) * ldo + jj + j0..][..nr];
                 acc_row[..nr].copy_from_slice(src);
             }
-            microkernel(apanel, bpanel, kc, &mut acc);
+            micro_update(micro, apanel, bpanel, kc, &mut acc);
             for (r, acc_row) in acc.iter().enumerate().take(mr) {
                 let dst = &mut out[(ii + i0 + r) * ldo + jj + j0..][..nr];
                 dst.copy_from_slice(&acc_row[..nr]);
@@ -326,9 +501,41 @@ fn macro_block(
     }
 }
 
-/// The `MR×NR` register microkernel: a fixed-shape rank-`kc` update of
-/// the pre-loaded accumulator, which the compiler unrolls into vector
-/// mul+add (Rust never contracts to FMA, preserving bit-exactness).
+/// Rank-`kc` update of one `MR×NR` tile with the resolved microkernel.
+#[inline]
+fn micro_update(
+    micro: Micro,
+    apanel: &[f32],
+    bpanel: &[f32],
+    kc: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert!(apanel.len() >= kc * MR && bpanel.len() >= kc * NR);
+    match micro {
+        Micro::Scalar => microkernel(apanel, bpanel, kc, acc),
+        Micro::Simd => {
+            // SAFETY: `Micro::Simd` is only constructed in
+            // `matmul_simd_into` after `simd_available()` confirmed the
+            // target features, and the debug_assert above re-states the
+            // panel-length contract the pointer arithmetic relies on.
+            #[cfg(target_arch = "x86_64")]
+            unsafe {
+                microkernel_avx2(apanel, bpanel, kc, acc);
+            }
+            #[cfg(target_arch = "aarch64")]
+            unsafe {
+                microkernel_neon(apanel, bpanel, kc, acc);
+            }
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            microkernel(apanel, bpanel, kc, acc);
+        }
+    }
+}
+
+/// The `MR×NR` scalar register microkernel: a fixed-shape rank-`kc`
+/// update of the pre-loaded accumulator, which the compiler unrolls
+/// into vector mul+add (Rust never contracts to FMA, preserving
+/// bit-exactness).
 #[inline]
 fn microkernel(apanel: &[f32], bpanel: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
     for p in 0..kc {
@@ -341,6 +548,72 @@ fn microkernel(apanel: &[f32], bpanel: &[f32], kc: usize, acc: &mut [[f32; NR]; 
                 row[c] += ar * b[c];
             }
         }
+    }
+}
+
+/// AVX2/FMA microkernel: one 8-lane `ymm` accumulator per tile row,
+/// `vfmadd231ps` per (row, k) step. Same ascending-`k` chain as the
+/// scalar kernel, each step fused (see the module's FMA policy).
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` via
+/// [`simd_available`], and `apanel`/`bpanel` must hold at least
+/// `kc·MR` / `kc·NR` elements.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn microkernel_avx2(apanel: &[f32], bpanel: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let mut vacc: [__m256; MR] = [_mm256_setzero_ps(); MR];
+    for r in 0..MR {
+        vacc[r] = _mm256_loadu_ps(acc[r].as_ptr());
+    }
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    for p in 0..kc {
+        let bv = _mm256_loadu_ps(bp.add(p * NR));
+        let arow = ap.add(p * MR);
+        for r in 0..MR {
+            let av = _mm256_set1_ps(*arow.add(r));
+            vacc[r] = _mm256_fmadd_ps(av, bv, vacc[r]);
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), vacc[r]);
+    }
+}
+
+/// NEON microkernel: two 4-lane `v`-register accumulators per tile row
+/// (NR = 8), `fmla` per (row, k, half) step. Same ascending-`k` chain
+/// as the scalar kernel, each step fused.
+///
+/// # Safety
+/// Caller must have verified NEON via [`simd_available`], and
+/// `apanel`/`bpanel` must hold at least `kc·MR` / `kc·NR` elements.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon(apanel: &[f32], bpanel: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    use std::arch::aarch64::*;
+    let mut lo: [float32x4_t; MR] = [vdupq_n_f32(0.0); MR];
+    let mut hi: [float32x4_t; MR] = [vdupq_n_f32(0.0); MR];
+    for r in 0..MR {
+        lo[r] = vld1q_f32(acc[r].as_ptr());
+        hi[r] = vld1q_f32(acc[r].as_ptr().add(4));
+    }
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    for p in 0..kc {
+        let b_lo = vld1q_f32(bp.add(p * NR));
+        let b_hi = vld1q_f32(bp.add(p * NR + 4));
+        let arow = ap.add(p * MR);
+        for r in 0..MR {
+            let av = vdupq_n_f32(*arow.add(r));
+            lo[r] = vfmaq_f32(lo[r], av, b_lo);
+            hi[r] = vfmaq_f32(hi[r], av, b_hi);
+        }
+    }
+    for r in 0..MR {
+        vst1q_f32(acc[r].as_mut_ptr(), lo[r]);
+        vst1q_f32(acc[r].as_mut_ptr().add(4), hi[r]);
     }
 }
 
@@ -399,6 +672,26 @@ mod tests {
     }
 
     #[test]
+    fn threads_beyond_panel_count_are_clamped() {
+        // m = 9 is a single MC panel: 1000 threads must degrade to the
+        // serial path without spawning empty chunks or changing bits.
+        let mut rng = Rng::seeded(33);
+        let a = Matrix::random(9, 33, &mut rng);
+        let b = Matrix::random(33, 21, &mut rng);
+        assert_eq!(
+            matmul_packed(&a, &b, 1000).as_slice(),
+            matmul_packed(&a, &b, 1).as_slice()
+        );
+        // Two panels, many threads: exactly two non-empty chunks.
+        let a = Matrix::random(MC + 1, 17, &mut rng);
+        let b = Matrix::random(17, 5, &mut rng);
+        assert_eq!(
+            matmul_packed(&a, &b, 64).as_slice(),
+            matmul_packed(&a, &b, 1).as_slice()
+        );
+    }
+
+    #[test]
     fn packed_handles_empty_reduction() {
         let a = Matrix::zeros(4, 0);
         let b = Matrix::zeros(0, 5);
@@ -414,14 +707,58 @@ mod tests {
     }
 
     #[test]
+    fn packed_into_reuses_a_stale_buffer() {
+        let mut rng = Rng::seeded(34);
+        let a = Matrix::random(20, 30, &mut rng);
+        let b = Matrix::random(30, 10, &mut rng);
+        let want = matmul_packed(&a, &b, 1);
+        let mut out = Matrix::from_slice(1, 3, &[9.0, 9.0, 9.0]);
+        matmul_packed_into(&a, &b, &mut out, 1);
+        assert_eq!(out.as_slice(), want.as_slice());
+        assert_eq!(out.shape(), (20, 10));
+    }
+
+    #[test]
+    fn simd_matches_scalar_within_bound_or_exactly() {
+        // On CPUs without the features the SIMD entry points run the
+        // scalar kernel, so this test is meaningful either way.
+        let mut rng = Rng::seeded(35);
+        for &(m, k, n) in &[(16usize, 16usize, 16usize), (65, 63, 66), (7, 300, 5)] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let scalar = matmul_packed(&a, &b, 1);
+            let simd = matmul_simd(&a, &b, 1);
+            let bound = simd_abs_bound(k, 1.0, 1.0);
+            for (i, (x, y)) in simd.as_slice().iter().zip(scalar.as_slice()).enumerate() {
+                assert!(
+                    (x - y).abs() <= bound,
+                    "{m}x{k}x{n} elem {i}: |{x} - {y}| > {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn kernel_kind_parse_and_globals() {
         assert_eq!(KernelKind::parse("Packed").unwrap(), KernelKind::Packed);
         assert_eq!(KernelKind::parse("naive").unwrap(), KernelKind::Naive);
+        assert_eq!(KernelKind::parse("SIMD").unwrap(), KernelKind::Simd);
         assert!(KernelKind::parse("fast").is_err());
         assert_eq!(KernelKind::Packed.display_name(), "packed");
+        assert_eq!(KernelKind::Simd.display_name(), "simd");
         let before = threads();
         set_threads(0);
         assert_eq!(threads(), 1, "thread count clamps to >= 1");
         set_threads(before);
+        // effective_kind only substitutes Simd, and only when the CPU
+        // lacks the features.
+        assert_eq!(effective_kind(KernelKind::Naive), KernelKind::Naive);
+        assert_eq!(effective_kind(KernelKind::Packed), KernelKind::Packed);
+        let eff = effective_kind(KernelKind::Simd);
+        if simd_available() {
+            assert_eq!(eff, KernelKind::Simd);
+        } else {
+            assert_eq!(eff, KernelKind::Packed);
+        }
     }
 }

@@ -16,6 +16,17 @@ use crate::sim::rng::Rng;
 /// clone; negligible next to the `memcpy` it counts.
 static CLONES: AtomicU64 = AtomicU64::new(0);
 
+/// Fresh data-buffer allocations (constructors, clones, and `reset`
+/// calls that outgrow the existing capacity) since process start — the
+/// second alloc-regression observable: `tests/recursive_arena.rs` pins
+/// "zero matrix allocations per warm recursive multiply" with this.
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn note_alloc() {
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Dense row-major `f32` matrix.
 #[derive(PartialEq)]
 pub struct Matrix {
@@ -27,6 +38,7 @@ pub struct Matrix {
 impl Clone for Matrix {
     fn clone(&self) -> Matrix {
         CLONES.fetch_add(1, Ordering::Relaxed);
+        note_alloc();
         Matrix { rows: self.rows, cols: self.cols, data: self.data.clone() }
     }
 }
@@ -34,6 +46,7 @@ impl Clone for Matrix {
 impl Matrix {
     /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
+        note_alloc();
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
@@ -48,6 +61,7 @@ impl Matrix {
 
     /// Build from a function of (row, col).
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        note_alloc();
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -60,6 +74,7 @@ impl Matrix {
     /// From a row-major slice.
     pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        note_alloc();
         Matrix { rows, cols, data: data.to_vec() }
     }
 
@@ -89,11 +104,14 @@ impl Matrix {
     }
 
     /// Matmul `self · rhs`, dispatched through the kernel policy: the
-    /// packed cache-blocked kernel for large products, the naive
+    /// packed cache-blocked kernel (scalar or explicit-SIMD microkernel
+    /// per `--kernel {packed,simd}`) for large products, the naive
     /// reference kernel below the size break-even or when `--kernel
-    /// naive` is selected ([`kernel::set_default`]). Both kernels
-    /// accumulate each element in the same ascending-`k` order, so the
-    /// result is bit-identical regardless of which one runs.
+    /// naive` is selected ([`kernel::set_default`]). `naive` and
+    /// `packed` accumulate each element in the same ascending-`k`
+    /// order, so those two are bit-identical; `simd` fuses each
+    /// accumulation step and is equal only up to the documented bound
+    /// ([`kernel::simd_abs_bound`]).
     pub fn matmul(&self, rhs: &Matrix) -> Matrix {
         assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
         kernel::dispatch(self, rhs)
@@ -112,8 +130,16 @@ impl Matrix {
     /// traffic saving); the packed kernel in [`crate::linalg::kernel`]
     /// is the fast path instead.
     pub fn matmul_naive(&self, rhs: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.matmul_naive_into(rhs, &mut out);
+        out
+    }
+
+    /// [`Matrix::matmul_naive`] into a caller-owned buffer (reshaped
+    /// and zeroed in place, allocation-free once warm).
+    pub fn matmul_naive_into(&self, rhs: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
-        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        out.reset(self.rows, rhs.cols);
         let n = rhs.cols;
         for i in 0..self.rows {
             let orow = &mut out.data[i * n..(i + 1) * n];
@@ -125,7 +151,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// Packed cache-blocked matmul with the configured thread count
@@ -140,6 +165,9 @@ impl Matrix {
     pub fn reset(&mut self, rows: usize, cols: usize) {
         self.rows = rows;
         self.cols = cols;
+        if rows * cols > self.data.capacity() {
+            note_alloc();
+        }
         self.data.clear();
         self.data.resize(rows * cols, 0.0);
     }
@@ -148,6 +176,14 @@ impl Matrix {
     /// observability; see the `CLONES` static's doc).
     pub fn clone_count() -> u64 {
         CLONES.load(Ordering::Relaxed)
+    }
+
+    /// Fresh data-buffer allocations since process start: constructors,
+    /// clones, and [`Matrix::reset`] calls that had to grow. Warm
+    /// scratch reuse (reset within capacity) does NOT count — which is
+    /// exactly what the recursion-arena tests pin to zero.
+    pub fn alloc_count() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
     }
 
     /// In-place `self[top.., left..] += s * other` over an
@@ -473,5 +509,31 @@ mod tests {
         let before = Matrix::clone_count();
         let _copy = m.clone();
         assert!(Matrix::clone_count() > before);
+    }
+
+    #[test]
+    fn alloc_counter_observes_fresh_buffers() {
+        // Only the monotone direction is assertable here: tests in this
+        // binary run in parallel and share the process-global counter.
+        // The exact warm-reuse delta (zero) is pinned by the
+        // single-test binary `tests/recursive_arena.rs`.
+        let before = Matrix::alloc_count();
+        let m = Matrix::zeros(8, 8);
+        assert!(Matrix::alloc_count() > before);
+        let before = Matrix::alloc_count();
+        let _c = m.clone();
+        assert!(Matrix::alloc_count() > before);
+    }
+
+    #[test]
+    fn matmul_naive_into_reuses_a_stale_buffer() {
+        let mut rng = Rng::seeded(43);
+        let a = Matrix::random(6, 9, &mut rng);
+        let b = Matrix::random(9, 4, &mut rng);
+        let want = a.matmul_naive(&b);
+        let mut out = Matrix::from_slice(2, 2, &[7.0; 4]);
+        a.matmul_naive_into(&b, &mut out);
+        assert_eq!(out.shape(), (6, 4));
+        assert_eq!(out.as_slice(), want.as_slice());
     }
 }

@@ -12,7 +12,7 @@ pub mod kernel;
 pub mod matrix;
 pub mod recursive;
 
-pub use blocked::{join_blocks, split_blocks};
+pub use blocked::{join_blocks, split_blocks, split_blocks_into};
 pub use kernel::KernelKind;
 pub use matrix::Matrix;
-pub use recursive::{strassen_mm, winograd_mm, RecursiveConfig};
+pub use recursive::{scheme_mm, scheme_mm_into, strassen_mm, winograd_mm, RecursiveConfig};

@@ -1,14 +1,51 @@
 //! Multi-level recursive Strassen-like multiplication in pure Rust.
 //!
-//! Applies any [`BilinearScheme`] recursively with a cutoff to the naive
-//! kernel — the classical O(n^log2 7) construction the paper builds on.
-//! The distributed coordinator applies the scheme at the *top* level only
-//! (one worker per product); this module provides the single-node
-//! substrate and the ground truth for benchmarks.
+//! Applies any [`BilinearScheme`] recursively down to a measured
+//! crossover, where leaves route **explicitly** to a compute kernel
+//! ([`RecursiveConfig::leaf`] → [`kernel::matmul_into`]) instead of
+//! through `Matrix::matmul`'s process-wide dispatch — a recursion
+//! benchmark or test can therefore never be skewed by global kernel
+//! state. The distributed coordinator applies the scheme at the *top*
+//! level only (one worker per product); this module provides the
+//! single-node substrate and the ground truth for benchmarks.
+//!
+//! # Recursion arena
+//!
+//! Every level of the recursion needs scratch: the four blocks of each
+//! operand, the two encoded leaf operands, the product buffer, and (for
+//! odd dimensions) zero-padded operand/result images. A naive
+//! implementation allocates all of these per level per call — 17+
+//! allocations per node of the recursion tree. This module instead
+//! keeps a **thread-local arena**: a `Vec<LevelScratch>` indexed by
+//! recursion level, pre-sized before descent, with every buffer grown
+//! in place via [`Matrix::reset`] and reused across calls on the same
+//! thread. At steady state a warm recursive multiply performs **zero**
+//! matrix allocations and zero clones (pinned by
+//! `tests/recursive_arena.rs` via [`Matrix::alloc_count`] /
+//! [`Matrix::clone_count`]).
+//!
+//! Ownership during descent is handled by slice splitting: level `d`
+//! takes the head of the remaining arena slice (`split_first_mut`) and
+//! recurses with the tail, so each level's buffers are borrowed
+//! disjointly — no `RefCell` juggling inside the hot path and no
+//! aliasing, enforced at compile time.
+//!
+//! # Odd dimensions
+//!
+//! A dimension that is odd at some level no longer abandons recursion
+//! for the whole subtree: the operands are zero-padded by one
+//! row/column to even (exact for the retained entries — the padded
+//! products contribute only zeros there), the padded product is
+//! computed recursively at the same depth, and the top-left `m×n`
+//! window is copied out. `1000×1000` therefore still enjoys Strassen
+//! savings instead of silently falling back to a dense kernel at
+//! `125×125`.
 
 use crate::algorithms::scheme::BilinearScheme;
-use crate::linalg::blocked::{encode_operand, join_blocks, split_blocks};
+use crate::linalg::blocked::{encode_operand_into, split_blocks_into};
+use crate::linalg::kernel::{self, KernelKind};
 use crate::linalg::matrix::Matrix;
+use std::cell::RefCell;
 
 /// Recursion parameters.
 ///
@@ -20,66 +57,196 @@ use crate::linalg::matrix::Matrix;
 /// let mut rng = Rng::seeded(1);
 /// let a = Matrix::random(16, 16, &mut rng);
 /// let b = Matrix::random(16, 16, &mut rng);
-/// // Two levels of 2x2 splitting, naive below 4x4 — the single-node
-/// // ground truth the nested e2e tests compare against.
-/// let cfg = RecursiveConfig { cutoff: 4, max_depth: 2 };
+/// // Two levels of 2x2 splitting, leaf kernel below 4x4 — the
+/// // single-node ground truth the nested e2e tests compare against.
+/// let cfg = RecursiveConfig { crossover: 4, max_depth: 2, ..Default::default() };
 /// let c = strassen_mm(&a, &b, &cfg);
 /// assert!(c.approx_eq(&a.matmul(&b), 1e-4));
 /// ```
 #[derive(Clone, Copy, Debug)]
 pub struct RecursiveConfig {
-    /// Below this dimension, fall back to the naive matmul.
-    pub cutoff: usize,
-    /// Maximum recursion depth (levels of 2×2 splitting).
+    /// The measured split/leaf crossover: at or below this dimension
+    /// the multiply goes straight to the leaf kernel; above it, keep
+    /// splitting. (`BENCH_recursive.json` carries the sweep that
+    /// justifies the default; treated as at least 1.)
+    pub crossover: usize,
+    /// Maximum recursion depth (levels of 2×2 splitting; padding does
+    /// not consume depth).
     pub max_depth: usize,
+    /// Kernel the leaves route to — explicit, NOT the process-wide
+    /// [`kernel::set_default`] choice. `Simd` falls back to the scalar
+    /// packed kernel on CPUs without the features.
+    pub leaf: KernelKind,
 }
 
 impl Default for RecursiveConfig {
     fn default() -> Self {
-        RecursiveConfig { cutoff: 64, max_depth: usize::MAX }
+        RecursiveConfig { crossover: 64, max_depth: usize::MAX, leaf: KernelKind::Packed }
     }
+}
+
+/// Per-level scratch: operand blocks, encoded leaf operands, the
+/// product buffer, and the odd-dimension padding images. All buffers
+/// start empty and grow in place on first use at their level's size.
+struct LevelScratch {
+    ablocks: [Matrix; 4],
+    bblocks: [Matrix; 4],
+    left: Matrix,
+    right: Matrix,
+    prod: Matrix,
+    a_pad: Matrix,
+    b_pad: Matrix,
+    c_pad: Matrix,
+}
+
+impl LevelScratch {
+    fn empty() -> Self {
+        let z = || Matrix::zeros(0, 0);
+        LevelScratch {
+            ablocks: [z(), z(), z(), z()],
+            bblocks: [z(), z(), z(), z()],
+            left: z(),
+            right: z(),
+            prod: z(),
+            a_pad: z(),
+            b_pad: z(),
+            c_pad: z(),
+        }
+    }
+}
+
+thread_local! {
+    /// The recursion arena, reused across every recursive multiply on
+    /// this thread (worker threads are persistent, so the buffers reach
+    /// steady state after the first call at a given size).
+    static ARENA: RefCell<Vec<LevelScratch>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Worst-case arena levels for an `n`-row multiply: each halving step
+/// consumes at most two levels (one padding + one split), and `n`
+/// strictly shrinks per halving, so `2·⌈log₂ n⌉ + 4` always suffices.
+fn arena_depth_bound(n: usize) -> usize {
+    2 * (usize::BITS - n.leading_zeros()) as usize + 4
 }
 
 /// Multiply with a Strassen-like scheme applied recursively.
 ///
-/// Requires square matrices whose dimension is divisible by 2 at every
-/// applied level (power-of-two sizes always work; otherwise recursion
-/// stops early at odd dimensions).
+/// Any shapes multiply: dimensions odd at some level are zero-padded to
+/// even for that level (see the module docs), so non-square and
+/// non-power-of-two sizes keep their recursion savings.
 pub fn scheme_mm(scheme: &BilinearScheme, a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
-    mm_rec(scheme, a, b, cfg, 0)
+    let mut out = Matrix::zeros(0, 0);
+    scheme_mm_into(scheme, a, b, &mut out, cfg);
+    out
 }
 
-fn mm_rec(scheme: &BilinearScheme, a: &Matrix, b: &Matrix, cfg: &RecursiveConfig, depth: usize) -> Matrix {
-    let n = a.rows();
-    if n <= cfg.cutoff || n % 2 != 0 || depth >= cfg.max_depth || a.cols() % 2 != 0 || b.cols() % 2 != 0 {
-        return a.matmul(b);
+/// [`scheme_mm`] into a caller-owned buffer (reshaped and zeroed in
+/// place) — together with the warm arena, a steady-state recursive
+/// multiply that performs zero matrix allocations.
+pub fn scheme_mm_into(
+    scheme: &BilinearScheme,
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut Matrix,
+    cfg: &RecursiveConfig,
+) {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul dims: {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    ARENA.with(|cell| {
+        let mut arena = cell.borrow_mut();
+        let bound = arena_depth_bound(a.rows().max(1));
+        if arena.len() < bound {
+            arena.resize_with(bound, LevelScratch::empty);
+        }
+        mm_rec(scheme, a, b, out, cfg, 0, &mut arena[..]);
+    });
+}
+
+fn mm_rec(
+    scheme: &BilinearScheme,
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut Matrix,
+    cfg: &RecursiveConfig,
+    depth: usize,
+    arena: &mut [LevelScratch],
+) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    // `m <= 1` is a leaf regardless of the crossover: a 1-row operand
+    // would otherwise pad to 2 and split back to 1 forever.
+    if m <= cfg.crossover.max(1) || depth >= cfg.max_depth {
+        kernel::matmul_into(cfg.leaf, a, b, out, kernel::threads());
+        return;
     }
-    let ab = split_blocks(a);
-    let bb = split_blocks(b);
-    let products: Vec<Matrix> = scheme
-        .products
-        .iter()
-        .map(|p| {
-            let left = encode_operand(&p.u, &ab);
-            let right = encode_operand(&p.v, &bb);
-            mm_rec(scheme, &left, &right, cfg, depth + 1)
-        })
-        .collect();
-    let (hr, hc) = (a.rows() / 2, b.cols() / 2);
-    let mut cblocks = [
-        Matrix::zeros(hr, hc),
-        Matrix::zeros(hr, hc),
-        Matrix::zeros(hr, hc),
-        Matrix::zeros(hr, hc),
-    ];
-    for (t, cblock) in cblocks.iter_mut().enumerate() {
-        for (i, &coef) in scheme.output[t].iter().enumerate() {
+    let Some((lvl, rest)) = arena.split_first_mut() else {
+        // Unreachable for the bound computed in `scheme_mm_into`
+        // (debug-checked); degrade to a leaf rather than crash.
+        debug_assert!(false, "recursion arena exhausted at depth {depth}");
+        kernel::matmul_into(cfg.leaf, a, b, out, kernel::threads());
+        return;
+    };
+    if m % 2 != 0 || k % 2 != 0 || n % 2 != 0 {
+        // One level of zero-padding to even, then recurse at the SAME
+        // depth — the padded multiply does the actual splitting.
+        let LevelScratch { a_pad, b_pad, c_pad, .. } = lvl;
+        pad_to_even_into(a_pad, a);
+        pad_to_even_into(b_pad, b);
+        mm_rec(scheme, a_pad, b_pad, c_pad, cfg, depth, rest);
+        copy_top_left_into(out, c_pad, m, n);
+        return;
+    }
+    let LevelScratch { ablocks, bblocks, left, right, prod, .. } = lvl;
+    split_blocks_into(ablocks, a);
+    split_blocks_into(bblocks, b);
+    let (hr, hc) = (m / 2, n / 2);
+    out.reset(m, n);
+    for (i, p) in scheme.products.iter().enumerate() {
+        encode_operand_into(left, &p.u, ablocks);
+        encode_operand_into(right, &p.v, bblocks);
+        mm_rec(scheme, left, right, prod, cfg, depth + 1, rest);
+        // Accumulate the product straight into the output quadrants,
+        // ascending product index per target — the same per-element
+        // accumulation order as materializing all products first and
+        // then combining per quadrant, so results are bit-identical to
+        // that formulation (each output element sees the identical
+        // float addition chain).
+        for (t, coeffs) in scheme.output.iter().enumerate() {
+            let coef = coeffs[i];
             if coef != 0 {
-                cblock.axpy(coef as f32, &products[i]);
+                out.add_scaled_region((t / 2) * hr, (t % 2) * hc, coef as f32, prod);
             }
         }
     }
-    join_blocks(&cblocks)
+}
+
+/// Zero-pad `x` by one trailing row/column as needed to even dims.
+fn pad_to_even_into(out: &mut Matrix, x: &Matrix) {
+    let (r, c) = x.shape();
+    let (pr, pc) = (r + r % 2, c + c % 2);
+    out.reset(pr, pc); // zeroed: the pad row/column stays 0
+    let src = x.as_slice();
+    let dst = out.as_mut_slice();
+    for i in 0..r {
+        dst[i * pc..i * pc + c].copy_from_slice(&src[i * c..(i + 1) * c]);
+    }
+}
+
+/// Copy the top-left `r × c` window of `padded` into `out`.
+fn copy_top_left_into(out: &mut Matrix, padded: &Matrix, r: usize, c: usize) {
+    debug_assert!(padded.rows() >= r && padded.cols() >= c);
+    out.reset(r, c);
+    let pc = padded.cols();
+    let src = padded.as_slice();
+    let dst = out.as_mut_slice();
+    for i in 0..r {
+        dst[i * c..(i + 1) * c].copy_from_slice(&src[i * pc..i * pc + c]);
+    }
 }
 
 /// Recursive Strassen multiply.
@@ -93,12 +260,14 @@ pub fn winograd_mm(a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
 }
 
 /// Number of scalar multiplications a scheme needs at a given size and
-/// cutoff — the complexity model behind the paper's O(n^log2 7) claim.
-pub fn multiplication_count(num_products: usize, n: usize, cutoff: usize) -> u128 {
-    if n <= cutoff || n % 2 != 0 {
+/// crossover — the complexity model behind the paper's O(n^log2 7)
+/// claim. (Models the classic even-split recursion; the one-row/column
+/// padding's second-order term is ignored.)
+pub fn multiplication_count(num_products: usize, n: usize, crossover: usize) -> u128 {
+    if n <= crossover || n % 2 != 0 {
         return (n as u128).pow(3);
     }
-    num_products as u128 * multiplication_count(num_products, n / 2, cutoff)
+    num_products as u128 * multiplication_count(num_products, n / 2, crossover)
 }
 
 #[cfg(test)]
@@ -107,33 +276,34 @@ mod tests {
     use crate::algorithms::{naive8, strassen, winograd};
     use crate::sim::rng::Rng;
 
-    fn check(scheme: &BilinearScheme, n: usize, cutoff: usize) {
-        let mut rng = Rng::seeded(n as u64 * 31 + cutoff as u64);
+    fn check(scheme: &BilinearScheme, n: usize, crossover: usize) {
+        let mut rng = Rng::seeded(n as u64 * 31 + crossover as u64);
         let a = Matrix::random(n, n, &mut rng);
         let b = Matrix::random(n, n, &mut rng);
-        let got = scheme_mm(scheme, &a, &b, &RecursiveConfig { cutoff, max_depth: usize::MAX });
+        let cfg = RecursiveConfig { crossover, max_depth: usize::MAX, ..Default::default() };
+        let got = scheme_mm(scheme, &a, &b, &cfg);
         let want = a.matmul(&b);
         assert!(
             got.approx_eq(&want, 1e-4),
-            "{} n={} cutoff={} rel_err={}",
+            "{} n={} crossover={} rel_err={}",
             scheme.name,
             n,
-            cutoff,
+            crossover,
             got.rel_error(&want)
         );
     }
 
     #[test]
     fn strassen_recursive_matches_naive() {
-        for (n, cutoff) in [(8, 2), (16, 4), (64, 8), (128, 32)] {
-            check(&strassen(), n, cutoff);
+        for (n, crossover) in [(8, 2), (16, 4), (64, 8), (128, 32)] {
+            check(&strassen(), n, crossover);
         }
     }
 
     #[test]
     fn winograd_recursive_matches_naive() {
-        for (n, cutoff) in [(8, 2), (16, 4), (64, 8)] {
-            check(&winograd(), n, cutoff);
+        for (n, crossover) in [(8, 2), (16, 4), (64, 8)] {
+            check(&winograd(), n, crossover);
         }
     }
 
@@ -143,12 +313,50 @@ mod tests {
     }
 
     #[test]
-    fn odd_sizes_fall_back() {
+    fn odd_sizes_pad_and_keep_recursing() {
+        // 30 → 15 (odd) at depth 1: padding to 16 keeps the subtree
+        // recursive instead of falling back to a dense 15×15 leaf.
         let mut rng = Rng::seeded(77);
-        let a = Matrix::random(30, 30, &mut rng); // 30 -> 15 odd at depth 1
+        let a = Matrix::random(30, 30, &mut rng);
         let b = Matrix::random(30, 30, &mut rng);
-        let got = strassen_mm(&a, &b, &RecursiveConfig { cutoff: 4, max_depth: 8 });
+        let cfg = RecursiveConfig { crossover: 4, max_depth: 8, ..Default::default() };
+        let got = strassen_mm(&a, &b, &cfg);
         assert!(got.approx_eq(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn odd_and_nonsquare_shapes_match_the_naive_oracle() {
+        let mut rng = Rng::seeded(79);
+        for (m, k, n) in [(25, 25, 25), (30, 31, 29), (1, 9, 7), (63, 17, 41)] {
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let cfg = RecursiveConfig { crossover: 4, max_depth: 8, ..Default::default() };
+            let got = strassen_mm(&a, &b, &cfg);
+            let want = a.matmul_naive(&b);
+            assert_eq!(got.shape(), (m, n));
+            assert!(
+                got.approx_eq(&want, 1e-4),
+                "{m}x{k}x{n} rel_err={}",
+                got.rel_error(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn large_odd_size_keeps_strassen_savings() {
+        // The motivating case: an odd-reachable size well above the
+        // crossover must both recurse (padding, not fallback) and match
+        // the oracle. 250 → 125 (odd) → pad 126 → 63 ≤ 64 leaf.
+        let mut rng = Rng::seeded(80);
+        let a = Matrix::random(250, 250, &mut rng);
+        let b = Matrix::random(250, 250, &mut rng);
+        let got = strassen_mm(&a, &b, &RecursiveConfig::default());
+        let want = a.matmul(&b);
+        assert!(
+            got.approx_eq(&want, 1e-4),
+            "rel_err={}",
+            got.rel_error(&want)
+        );
     }
 
     #[test]
@@ -156,8 +364,47 @@ mod tests {
         let mut rng = Rng::seeded(78);
         let a = Matrix::random(16, 16, &mut rng);
         let b = Matrix::random(16, 16, &mut rng);
-        let got = strassen_mm(&a, &b, &RecursiveConfig { cutoff: 1, max_depth: 1 });
+        let cfg = RecursiveConfig { crossover: 1, max_depth: 1, ..Default::default() };
+        let got = strassen_mm(&a, &b, &cfg);
         assert!(got.approx_eq(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn leaf_kind_is_explicit_and_all_kinds_agree() {
+        let mut rng = Rng::seeded(81);
+        let a = Matrix::random(32, 32, &mut rng);
+        let b = Matrix::random(32, 32, &mut rng);
+        let mk = |leaf| RecursiveConfig { crossover: 8, max_depth: 8, leaf };
+        let via_naive = strassen_mm(&a, &b, &mk(KernelKind::Naive));
+        let via_packed = strassen_mm(&a, &b, &mk(KernelKind::Packed));
+        let via_simd = strassen_mm(&a, &b, &mk(KernelKind::Simd));
+        // naive and packed leaves are bit-identical; simd leaves are
+        // epsilon-close (exact here only when the CPU lacks SIMD).
+        assert_eq!(via_naive.as_slice(), via_packed.as_slice());
+        assert!(via_simd.approx_eq(&via_packed, 1e-4));
+    }
+
+    #[test]
+    fn into_variant_reuses_a_stale_buffer() {
+        let mut rng = Rng::seeded(82);
+        let a = Matrix::random(16, 16, &mut rng);
+        let b = Matrix::random(16, 16, &mut rng);
+        let cfg = RecursiveConfig { crossover: 4, max_depth: 2, ..Default::default() };
+        let want = strassen_mm(&a, &b, &cfg);
+        let mut out = Matrix::from_slice(1, 2, &[5.0, 5.0]);
+        scheme_mm_into(&crate::algorithms::strassen(), &a, &b, &mut out, &cfg);
+        assert_eq!(out.as_slice(), want.as_slice());
+        assert_eq!(out.shape(), (16, 16));
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dims")]
+    fn dim_mismatch_panics() {
+        let _ = strassen_mm(
+            &Matrix::zeros(4, 5),
+            &Matrix::zeros(4, 5),
+            &RecursiveConfig::default(),
+        );
     }
 
     #[test]
@@ -165,7 +412,7 @@ mod tests {
         // One level of Strassen on n=2m: 7 m^3 vs 8 m^3 naive.
         assert_eq!(multiplication_count(7, 4, 2), 7 * 8);
         assert_eq!(multiplication_count(8, 4, 2), 8 * 8);
-        // Full recursion to cutoff 1: 7^k for n = 2^k.
+        // Full recursion to crossover 1: 7^k for n = 2^k.
         assert_eq!(multiplication_count(7, 8, 1), 343);
     }
 }

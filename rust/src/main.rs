@@ -14,6 +14,9 @@
 //!   `--nest outer:inner` dispatches the two-level composition)
 //! * `serve`     — batched request loop with straggler injection
 //!   (`--nest` serves the nested fan-out over a fixed-size fleet)
+//! * `localmm`   — single-node recursive-vs-flat probe: times one flat
+//!   kernel multiply against recursive Strassen at the configured
+//!   crossover (`--kernel {naive,packed,simd} --cutoff --max-depth`)
 
 use std::path::Path;
 use std::time::Duration;
@@ -53,6 +56,8 @@ subcommands:
   multiply [--n N] [--scheme S] [--backend B] [--p-e P] [--nest O:I]
   serve    [--jobs J] [--n N] [--scheme S] [--backend B] [--p-straggle P]
            [--depth D] [--queue-cap Q] [--nest O:I] [--workers W]
+  localmm  [--n N] [--kernel K] [--cutoff C] [--max-depth D]
+           single-node probe: flat kernel vs recursive Strassen
 
 common options:
   --config FILE                  TOML config (CLI overrides it)
@@ -60,10 +65,14 @@ common options:
   --nest O:I                     nested two-level scheme, e.g.
                                  sw+2psmm:sw+2psmm (256 leaf tasks; n % 4 == 0)
   --backend B                    native | pjrt
-  --kernel K                     native matmul kernel: naive | packed
-                                 (default packed; small products always naive)
+  --kernel K                     native matmul kernel: naive | packed | simd
+                                 (default packed; small products always naive;
+                                 simd needs AVX2+FMA or NEON, else runs packed)
   --kernel-threads T             packed-kernel row-panel threads (default 1;
                                  keep 1 when the worker pool is the parallelism)
+  --cutoff C                     recursive split/leaf crossover for localmm
+                                 (default 64; leaves at or below C use --kernel)
+  --max-depth D                  recursion depth cap for localmm (0 = unlimited)
   --artifacts DIR                artifact directory (default: artifacts)
   --straggle-ms MS               injected straggler delay (default 50)
   --deadline-ms MS               per-job decode deadline (default 1000)
@@ -93,6 +102,7 @@ fn main() {
         Some("nested") => cmd_nested(&args),
         Some("multiply") => cmd_multiply(&args),
         Some("serve") => cmd_serve(&args),
+        Some("localmm") => cmd_localmm(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -138,6 +148,10 @@ fn load_config(args: &Args) -> Result<RunConfig, String> {
     }
     cfg.kernel_threads = args
         .get_parsed_or("kernel-threads", cfg.kernel_threads)
+        .map_err(|e| e.to_string())?;
+    cfg.crossover = args.get_parsed_or("cutoff", cfg.crossover).map_err(|e| e.to_string())?;
+    cfg.max_depth = args
+        .get_parsed_or("max-depth", cfg.max_depth)
         .map_err(|e| e.to_string())?;
     cfg.validate()?;
     // The kernel policy is process-wide: every matmul below here (worker
@@ -506,4 +520,55 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     server.shutdown();
     Ok(())
+}
+
+fn cmd_localmm(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let rc = cfg.recursive_config();
+    if cfg.kernel == KernelKind::Simd && kernel::effective_kind(cfg.kernel) != KernelKind::Simd {
+        println!("note: CPU lacks AVX2+FMA/NEON — simd runs the scalar packed kernel");
+    }
+    let mut rng = Rng::seeded(cfg.seed);
+    let a = Matrix::random(cfg.n, cfg.n, &mut rng);
+    let b = Matrix::random(cfg.n, cfg.n, &mut rng);
+    // Warm both paths once so allocator/arena growth is not timed, then
+    // time one flat kernel multiply against one recursive multiply.
+    let mut flat = Matrix::zeros(0, 0);
+    let mut rec = Matrix::zeros(0, 0);
+    kernel::matmul_into(cfg.kernel, &a, &b, &mut flat, cfg.kernel_threads);
+    strassen_mm_into(&a, &b, &mut rec, &rc);
+    let t0 = std::time::Instant::now();
+    kernel::matmul_into(cfg.kernel, &a, &b, &mut flat, cfg.kernel_threads);
+    let flat_t = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    strassen_mm_into(&a, &b, &mut rec, &rc);
+    let rec_t = t0.elapsed();
+    let depth_str = if rc.max_depth == usize::MAX {
+        "unlimited".to_string()
+    } else {
+        rc.max_depth.to_string()
+    };
+    println!(
+        "localmm n={} kernel={} (effective {}) cutoff={} max_depth={depth_str}",
+        cfg.n,
+        cfg.kernel.display_name(),
+        kernel::effective_kind(cfg.kernel).display_name(),
+        rc.crossover
+    );
+    println!(
+        "flat={flat_t:?} recursive={rec_t:?} speedup=x{:.2}",
+        flat_t.as_secs_f64() / rec_t.as_secs_f64().max(f64::MIN_POSITIVE)
+    );
+    println!("rel_error recursive vs flat = {:.3e}", rec.rel_error(&flat));
+    Ok(())
+}
+
+/// Recursive Strassen into a caller-owned buffer (localmm helper).
+fn strassen_mm_into(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut Matrix,
+    rc: &ft_strassen::linalg::recursive::RecursiveConfig,
+) {
+    ft_strassen::linalg::scheme_mm_into(&ft_strassen::algorithms::strassen(), a, b, out, rc);
 }

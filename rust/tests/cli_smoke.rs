@@ -150,6 +150,27 @@ fn config_file_is_honored_and_cli_overrides() {
 }
 
 #[test]
+fn localmm_times_flat_against_recursive() {
+    let (stdout, _, ok) = run(&[
+        "localmm", "--n", "96", "--kernel", "simd", "--cutoff", "32", "--max-depth", "2",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("localmm n=96"), "{stdout}");
+    assert!(stdout.contains("cutoff=32 max_depth=2"), "{stdout}");
+    assert!(stdout.contains("speedup=x"), "{stdout}");
+    let err_line = stdout.lines().find(|l| l.contains("rel_error")).unwrap();
+    let v: f64 = err_line.rsplit('=').next().unwrap().trim().parse().unwrap();
+    assert!(v < 1e-3, "rel error {v}");
+}
+
+#[test]
+fn localmm_rejects_zero_cutoff() {
+    let (_, stderr, ok) = run(&["localmm", "--n", "16", "--cutoff", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("cutoff"), "{stderr}");
+}
+
+#[test]
 fn bad_scheme_fails_with_message() {
     let (_, stderr, ok) = run(&["multiply", "--scheme", "bogus"]);
     assert!(!ok);

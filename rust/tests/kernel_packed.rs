@@ -162,7 +162,7 @@ fn dispatch_agrees_with_both_kernels_across_the_threshold() {
 
 #[test]
 fn kernel_kind_cli_names_round_trip() {
-    for kind in [KernelKind::Naive, KernelKind::Packed] {
+    for kind in [KernelKind::Naive, KernelKind::Packed, KernelKind::Simd] {
         assert_eq!(KernelKind::parse(kind.display_name()).unwrap(), kind);
     }
 }

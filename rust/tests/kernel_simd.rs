@@ -1,0 +1,194 @@
+//! Property tests for the SIMD microkernel against the scalar packed
+//! kernel (itself bit-identical to the naive oracle):
+//!
+//! * random shapes — elementwise agreement within the documented FMA
+//!   bound [`kernel::simd_abs_bound`]: the fused chain rounds once per
+//!   step where the scalar chain rounds twice, so low bits may differ
+//!   but never by more than the two forward-error cones;
+//! * small-integer operands — every product and partial sum is exactly
+//!   representable in `f32`, so fused and unfused rounding coincide and
+//!   the kernels must agree **bit-for-bit**;
+//! * NaN/Inf operands — propagation positions must match the oracle
+//!   (FMA changes rounding of finite intermediates only, never which
+//!   elements go non-finite);
+//! * thread-count invariance (row-panel partitioning never reorders a
+//!   per-element accumulation chain);
+//! * the `simd` CLI name and the runtime degradation report.
+//!
+//! On hardware without AVX2+FMA / NEON the SIMD entry points fall back
+//! to the scalar microkernel, so every test here still runs — the
+//! bound checks simply collapse to exact equality.
+
+use ft_strassen::linalg::kernel::{self, KernelKind};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::testkit::{check_panics, gen, PropConfig};
+
+/// Elementwise comparison under the FMA policy: non-finite positions
+/// must match exactly, finite values must land within `bound`.
+fn assert_close(got: &Matrix, want: &Matrix, bound: f32, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    for (i, (x, y)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+        let ok = if y.is_nan() {
+            x.is_nan()
+        } else if y.is_infinite() {
+            x == y
+        } else {
+            (x - y).abs() <= bound
+        };
+        assert!(ok, "{what}: element {i}: got {x}, want {y}, bound {bound}");
+    }
+}
+
+#[test]
+fn prop_simd_matches_scalar_packed_within_the_fma_bound() {
+    check_panics(
+        "simd ~ packed",
+        PropConfig { cases: 60, base_seed: 0x51d0 },
+        |rng| {
+            let m = gen::size(rng, 1, 80);
+            let k = gen::size(rng, 1, 80);
+            let n = gen::size(rng, 1, 80);
+            // `Matrix::random` draws from (-1, 1), so the documented
+            // bound applies with a_max = b_max = 1.
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let want = kernel::matmul_packed(&a, &b, 1);
+            let got = kernel::matmul_simd(&a, &b, 1);
+            let bound = kernel::simd_abs_bound(k, 1.0, 1.0);
+            assert_close(&got, &want, bound, &format!("{m}x{k}x{n}"));
+        },
+    );
+}
+
+#[test]
+fn prop_simd_is_bit_exact_on_small_integer_operands() {
+    check_panics(
+        "simd integer-exact",
+        PropConfig { cases: 40, base_seed: 0x51d1 },
+        |rng| {
+            let m = gen::size(rng, 1, 64);
+            let k = gen::size(rng, 1, 64);
+            let n = gen::size(rng, 1, 64);
+            let a = Matrix::from_fn(m, k, |_, _| (rng.below(9) as f32) - 4.0);
+            let b = Matrix::from_fn(k, n, |_, _| (rng.below(9) as f32) - 4.0);
+            // |dot| <= 64 * 16: exact in f32, so one rounding or two
+            // makes no difference and the results must be identical.
+            assert_eq!(
+                kernel::matmul_simd(&a, &b, 1).as_slice(),
+                kernel::matmul_packed(&a, &b, 1).as_slice(),
+                "{m}x{k}x{n}"
+            );
+        },
+    );
+}
+
+#[test]
+fn prop_simd_propagates_nonfinite_like_the_oracle() {
+    check_panics(
+        "simd NaN/Inf propagation",
+        PropConfig { cases: 40, base_seed: 0x51d2 },
+        |rng| {
+            let m = gen::size(rng, 1, 40);
+            let k = gen::size(rng, 2, 40);
+            let n = gen::size(rng, 1, 40);
+            let mut a = Matrix::random(m, k, rng);
+            let mut b = Matrix::random(k, n, rng);
+            for _ in 0..4 {
+                let (i, j) = (gen::size(rng, 0, m - 1), gen::size(rng, 0, k - 1));
+                a[(i, j)] = match rng.below(3) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    _ => 0.0,
+                };
+                let (p, q) = (gen::size(rng, 0, k - 1), gen::size(rng, 0, n - 1));
+                b[(p, q)] = match rng.below(3) {
+                    0 => f32::NAN,
+                    1 => f32::NEG_INFINITY,
+                    _ => 0.0,
+                };
+            }
+            // Elements whose oracle value is finite only ever saw
+            // finite terms bounded by 1, so the (k, 1, 1) bound holds.
+            let want = a.matmul_naive(&b);
+            let bound = kernel::simd_abs_bound(k, 1.0, 1.0);
+            assert_close(&kernel::matmul_simd(&a, &b, 1), &want, bound, "simd");
+            assert_close(&kernel::matmul_simd(&a, &b, 3), &want, bound, "simd mt");
+        },
+    );
+}
+
+#[test]
+fn prop_simd_is_threadcount_invariant() {
+    check_panics(
+        "simd thread invariance",
+        PropConfig { cases: 20, base_seed: 0x51d3 },
+        |rng| {
+            let m = gen::size(rng, 60, 200);
+            let k = gen::size(rng, 1, 90);
+            let n = gen::size(rng, 1, 90);
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let serial = kernel::matmul_simd(&a, &b, 1);
+            for t in [2, 5, 16] {
+                assert_eq!(
+                    kernel::matmul_simd(&a, &b, t).as_slice(),
+                    serial.as_slice(),
+                    "{m}x{k}x{n} threads={t}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn simd_into_reuses_a_stale_buffer() {
+    let mut rng = ft_strassen::sim::rng::Rng::seeded(7);
+    let a = Matrix::random(20, 33, &mut rng);
+    let b = Matrix::random(33, 11, &mut rng);
+    let want = kernel::matmul_simd(&a, &b, 1);
+    let mut out = Matrix::from_fn(50, 50, |i, j| (i + j) as f32);
+    kernel::matmul_simd_into(&a, &b, &mut out, 1);
+    assert_eq!(out.shape(), (20, 11));
+    assert_eq!(out.as_slice(), want.as_slice());
+}
+
+#[test]
+fn simd_entry_points_bump_a_call_counter() {
+    let a = Matrix::from_slice(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+    let b = Matrix::from_slice(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+    // Counters are process-global and sibling tests also bump them, so
+    // only monotone assertions are safe here (exact deltas live in the
+    // single-test binary `tests/recursive_arena.rs`).
+    let before = kernel::packed_call_count() + kernel::simd_call_count();
+    let _ = kernel::matmul_simd(&a, &b, 1);
+    let after = kernel::packed_call_count() + kernel::simd_call_count();
+    assert!(after > before, "matmul_simd must count one packed-core call");
+    if kernel::simd_available() {
+        let s0 = kernel::simd_call_count();
+        let _ = kernel::matmul_simd(&a, &b, 1);
+        assert!(kernel::simd_call_count() > s0, "SIMD hardware must use the SIMD counter");
+    }
+}
+
+#[test]
+fn simd_kind_parses_and_degrades_to_packed_without_cpu_support() {
+    assert_eq!(KernelKind::parse("simd").unwrap(), KernelKind::Simd);
+    assert_eq!(KernelKind::parse(KernelKind::Simd.display_name()).unwrap(), KernelKind::Simd);
+    let eff = kernel::effective_kind(KernelKind::Simd);
+    if kernel::simd_available() {
+        assert_eq!(eff, KernelKind::Simd);
+    } else {
+        assert_eq!(eff, KernelKind::Packed, "no CPU support: simd must degrade to packed");
+    }
+    assert_eq!(kernel::effective_kind(KernelKind::Packed), KernelKind::Packed);
+    assert_eq!(kernel::effective_kind(KernelKind::Naive), KernelKind::Naive);
+}
+
+#[test]
+fn fma_bound_scales_with_reduction_depth_and_magnitudes() {
+    assert_eq!(kernel::simd_abs_bound(0, 1.0, 1.0), 0.0);
+    let b16 = kernel::simd_abs_bound(16, 1.0, 1.0);
+    let b64 = kernel::simd_abs_bound(64, 1.0, 1.0);
+    assert!(b16 > 0.0 && b64 > b16, "bound must grow with k: {b16} vs {b64}");
+    assert!(kernel::simd_abs_bound(16, 2.0, 3.0) > b16, "bound must grow with magnitudes");
+}

@@ -36,7 +36,7 @@ fn int_matrix(n: usize, rng: &mut Rng) -> Matrix {
 /// Single-node recursive ground truth: two levels of 2×2 splitting,
 /// exactly mirroring the nested dispatch structure.
 fn ground_truth(a: &Matrix, b: &Matrix) -> Matrix {
-    strassen_mm(a, b, &RecursiveConfig { cutoff: 4, max_depth: 2 })
+    strassen_mm(a, b, &RecursiveConfig { crossover: 4, max_depth: 2, ..Default::default() })
 }
 
 fn sw2_squared_plan() -> DispatchPlan {

@@ -1,0 +1,62 @@
+//! Steady-state regression for the packed-leaf recursive multiply: at
+//! warm depth the recursion arena performs **zero matrix clones and
+//! zero fresh allocations**, and every leaf routes through the packed
+//! kernel exactly once. One test function on purpose —
+//! `Matrix::clone_count()`, `Matrix::alloc_count()` and the kernel call
+//! counters are process globals, and a single-test binary keeps the
+//! measurement window free of concurrent tests (same reasoning as
+//! `tests/decode_alloc.rs`).
+
+use ft_strassen::algorithms::strassen;
+use ft_strassen::linalg::kernel::{self, KernelKind};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::linalg::recursive::{scheme_mm_into, RecursiveConfig};
+use ft_strassen::sim::rng::Rng;
+
+#[test]
+fn warm_recursion_is_allocation_free_and_routes_leaves_through_packed() {
+    let mut rng = Rng::seeded(41);
+    let n = 128;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let scheme = strassen();
+    let cfg = RecursiveConfig {
+        crossover: 32,
+        max_depth: usize::MAX,
+        leaf: KernelKind::Packed,
+    };
+    let saved_threads = kernel::threads();
+    kernel::set_threads(1);
+
+    // Warm call: sizes the thread-local recursion arena and the output
+    // buffer; correctness against the oracle is pinned here, outside
+    // the counted window (`approx_eq`/`rel_error` clone internally).
+    let mut out = Matrix::zeros(0, 0);
+    scheme_mm_into(&scheme, &a, &b, &mut out, &cfg);
+    let want = a.matmul_naive(&b);
+    assert!(out.approx_eq(&want, 1e-4), "warm call must match the naive oracle");
+
+    // Counted window: a second, warm multiply. 128 → 64 → 32 hits the
+    // crossover after two split levels, so exactly 7² = 49 leaf
+    // multiplies route through the packed kernel — and the warm arena
+    // plus warm output buffer mean no clones and no fresh allocations.
+    let clones = Matrix::clone_count();
+    let allocs = Matrix::alloc_count();
+    let packed = kernel::packed_call_count();
+    scheme_mm_into(&scheme, &a, &b, &mut out, &cfg);
+    assert_eq!(kernel::packed_call_count() - packed, 49, "leaf routing: 7^2 packed leaves");
+    assert_eq!(Matrix::clone_count() - clones, 0, "steady-depth multiply must not clone");
+    assert_eq!(Matrix::alloc_count() - allocs, 0, "warm arena must not allocate");
+    assert!(out.approx_eq(&want, 1e-4), "warm result must match the naive oracle");
+
+    // Thread-count invariance: the arena is thread-local and the packed
+    // leaf accumulates every element in a fixed ascending-k order, so
+    // the recursion is bit-identical across kernel thread counts.
+    let serial = out.as_slice().to_vec();
+    for t in [2, 5, 16] {
+        kernel::set_threads(t);
+        scheme_mm_into(&scheme, &a, &b, &mut out, &cfg);
+        assert_eq!(out.as_slice(), &serial[..], "threads={t}");
+    }
+    kernel::set_threads(saved_threads);
+}
