@@ -12,7 +12,7 @@
 use std::path::Path;
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
-use ft_strassen::bench::trajectory;
+use ft_strassen::bench::{schema, trajectory};
 use ft_strassen::coding::nested::NestedTaskSet;
 use ft_strassen::coding::scheme::TaskSet;
 use ft_strassen::coordinator::master::MasterConfig;
@@ -216,24 +216,28 @@ fn main() {
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let depth_objs: Vec<String> = sweep
-        .iter()
-        .map(|(d, jps, mean, p95)| {
-            format!(
-                "{{\"depth\": {d}, \"jobs_per_s\": {jps:.3}, \"mean_ns\": {mean}, \"p95_ns\": {p95}}}"
-            )
-        })
-        .collect();
-    let entry = format!(
-        "{{\"unix_time\": {unix_time}, \"scheme\": \"sw+2psmm\", \"n\": {sweep_n}, \
-         \"jobs\": {sweep_jobs}, \"p_fail\": {}, \"p_straggle\": {}, \"delay_ms\": {}, \
-         \"quick\": {quick}, \"speedup_depth4_vs_1\": {speedup4:.3}, \
-         \"decode_clones_per_solve\": {decode_clones}, \"depths\": [{}]}}",
-        sweep_fault.p_fail,
-        sweep_fault.p_straggle,
-        sweep_fault.delay.as_millis(),
-        depth_objs.join(", ")
-    );
+    let entry = schema::E2eEntry {
+        unix_time,
+        scheme: "sw+2psmm".into(),
+        n: sweep_n,
+        jobs: sweep_jobs,
+        p_fail: sweep_fault.p_fail,
+        p_straggle: sweep_fault.p_straggle,
+        delay_ms: sweep_fault.delay.as_millis(),
+        quick,
+        speedup_depth4_vs_1: speedup4,
+        decode_clones_per_solve: decode_clones,
+        depths: sweep
+            .iter()
+            .map(|&(depth, jobs_per_s, mean_ns, p95_ns)| schema::DepthPoint {
+                depth,
+                jobs_per_s,
+                mean_ns,
+                p95_ns,
+            })
+            .collect(),
+    }
+    .render();
     let traj = trajectory::append_to_repo_root("BENCH_e2e.json", &entry)
         .expect("write BENCH_e2e.json");
     println!("appended depth-sweep trajectory to {}", traj.display());

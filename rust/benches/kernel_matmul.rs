@@ -17,7 +17,7 @@ use std::path::Path;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use ft_strassen::bench::harness::BenchRunner;
-use ft_strassen::bench::trajectory;
+use ft_strassen::bench::{schema, trajectory};
 use ft_strassen::linalg::blocked::{encode_operand, encode_operand_into, split_blocks};
 use ft_strassen::linalg::kernel::{self, KernelKind};
 use ft_strassen::linalg::matrix::Matrix;
@@ -26,14 +26,6 @@ use ft_strassen::linalg::recursive::{
 };
 use ft_strassen::runtime::client::Runtime;
 use ft_strassen::sim::rng::Rng;
-
-/// Per-size naive/packed comparison row.
-struct SizeRow {
-    n: usize,
-    naive_ns: u128,
-    packed_ns: u128,
-    packed_mt_ns: u128,
-}
 
 fn main() {
     let quick = std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1");
@@ -46,7 +38,7 @@ fn main() {
 
     // --- naive vs packed ---------------------------------------------------
     println!("kernel comparison (packed-mt uses {mt} threads):");
-    let mut rows: Vec<SizeRow> = Vec::new();
+    let mut rows: Vec<schema::KernelSizeRow> = Vec::new();
     for n in [128usize, 256, 512] {
         let a = Matrix::random(n, n, &mut rng);
         let b = Matrix::random(n, n, &mut rng);
@@ -77,7 +69,7 @@ fn main() {
             .stats
             .mean
             .as_nanos();
-        rows.push(SizeRow { n, naive_ns, packed_ns, packed_mt_ns });
+        rows.push(schema::KernelSizeRow { n, naive_ns, packed_ns, packed_mt_ns });
     }
     for r in &rows {
         println!(
@@ -142,7 +134,7 @@ fn main() {
         "\nrecursive-vs-flat sweep (leaf kernel: {}):",
         leaf_kind.display_name()
     );
-    let mut sweep_objs: Vec<String> = Vec::new();
+    let mut sweep_rows: Vec<schema::RecursiveSweepRow> = Vec::new();
     for &n in sweep_sizes {
         let a = Matrix::random(n, n, &mut rng);
         let b = Matrix::random(n, n, &mut rng);
@@ -157,7 +149,7 @@ fn main() {
         let mut rec = Matrix::zeros(0, 0);
         let mut best_crossover = 0usize;
         let mut best_ns = u128::MAX;
-        let mut points: Vec<String> = Vec::new();
+        let mut points: Vec<schema::CrossoverPoint> = Vec::new();
         for &crossover in crossovers.iter().filter(|&&c| c < n) {
             let cfg = RecursiveConfig { crossover, max_depth: usize::MAX, leaf: leaf_kind };
             let rec_ns = runner
@@ -178,15 +170,9 @@ fn main() {
                 best_ns = rec_ns;
                 best_crossover = crossover;
             }
-            points.push(format!(
-                "{{\"crossover\": {crossover}, \"rec_ns\": {rec_ns}, \"speedup\": {speedup:.3}}}"
-            ));
+            points.push(schema::CrossoverPoint { crossover, rec_ns, speedup });
         }
-        sweep_objs.push(format!(
-            "{{\"n\": {n}, \"flat_ns\": {flat_ns}, \"best_crossover\": {best_crossover}, \
-             \"points\": [{}]}}",
-            points.join(", ")
-        ));
+        sweep_rows.push(schema::RecursiveSweepRow { n, flat_ns, best_crossover, points });
     }
 
     // complexity model table
@@ -251,26 +237,14 @@ fn main() {
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let size_objs: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"n\": {}, \"naive_ns\": {}, \"packed_ns\": {}, \"packed_mt_ns\": {}, \
-                 \"speedup_packed\": {:.3}, \"speedup_packed_mt\": {:.3}}}",
-                r.n,
-                r.naive_ns,
-                r.packed_ns,
-                r.packed_mt_ns,
-                r.naive_ns as f64 / r.packed_ns.max(1) as f64,
-                r.naive_ns as f64 / r.packed_mt_ns.max(1) as f64,
-            )
-        })
-        .collect();
-    let entry = format!(
-        "{{\"unix_time\": {unix_time}, \"quick\": {quick}, \"threads_mt\": {mt}, \
-         \"encode_clones\": {encode_clones}, \"sizes\": [{}]}}",
-        size_objs.join(", ")
-    );
+    let entry = schema::KernelEntry {
+        unix_time,
+        quick,
+        threads_mt: mt,
+        encode_clones,
+        sizes: rows,
+    }
+    .render();
     let path = trajectory::append_to_repo_root("BENCH_kernel.json", &entry)
         .expect("write BENCH_kernel.json");
     println!("appended kernel trajectory to {}", path.display());
@@ -280,12 +254,13 @@ fn main() {
     // per run with unix_time, quick, kernel (the leaf microkernel that
     // ran) and a `sweep` array of {n, flat_ns, best_crossover,
     // points: [{crossover, rec_ns, speedup}]}.
-    let entry = format!(
-        "{{\"unix_time\": {unix_time}, \"quick\": {quick}, \"kernel\": \"{}\", \
-         \"sweep\": [{}]}}",
-        leaf_kind.display_name(),
-        sweep_objs.join(", ")
-    );
+    let entry = schema::RecursiveEntry {
+        unix_time,
+        quick,
+        kernel: leaf_kind.display_name().into(),
+        sweep: sweep_rows,
+    }
+    .render();
     let path = trajectory::append_to_repo_root("BENCH_recursive.json", &entry)
         .expect("write BENCH_recursive.json");
     println!("appended recursive trajectory to {}", path.display());

@@ -1,0 +1,271 @@
+//! Prime-field scalars `Fp<P>` with Barrett reduction — the exact
+//! backend that turns the decoder's "small dyadic rational weights"
+//! invariant into a zero-tolerance theorem (`tests/scalar_conformance.rs`),
+//! and the substrate for finite-field coded-MM workloads (straggler
+//! codes over small fields; see PAPERS.md).
+//!
+//! `P` must be an odd prime below 2³¹, so every product of canonical
+//! residues fits in `u64` (`a·b < 2⁶²`) and one Barrett step with the
+//! precomputed `⌊2⁶⁴/P⌋` brings it back under `2P`. The default
+//! instantiation [`Fp31`] uses the Mersenne prime `2³¹ − 1` — the same
+//! modulus as the rank checks in [`crate::algebra::gauss`].
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use crate::linalg::scalar::Scalar;
+
+/// An element of the prime field ℤ/Pℤ, stored as the canonical residue
+/// in `[0, P)`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fp<const P: u64>(u64);
+
+/// The default prime field: `P = 2³¹ − 1` (Mersenne), products fit
+/// comfortably in `u64` and every dyadic decode denominator is
+/// invertible (`gcd(2, P) = 1`).
+pub type Fp31 = Fp<2_147_483_647>;
+
+impl<const P: u64> Fp<P> {
+    /// Barrett constant `⌊2⁶⁴ / P⌋`, computed at compile time per
+    /// instantiation.
+    const BARRETT_M: u64 = (u64::MAX as u128 / P as u128) as u64;
+
+    /// Reduce `x < 2⁶²` modulo `P` with one Barrett multiply: the
+    /// estimated quotient `q = ⌊x·M/2⁶⁴⌋` undershoots the true quotient
+    /// by at most 1, so a single conditional subtract finishes.
+    #[inline]
+    fn reduce(x: u128) -> u64 {
+        debug_assert!(x < 1u128 << 62, "Barrett input out of range");
+        let q = ((x * Self::BARRETT_M as u128) >> 64) as u64;
+        let mut r = (x as u64).wrapping_sub(q.wrapping_mul(P));
+        while r >= P {
+            r -= P;
+        }
+        r
+    }
+
+    /// The residue of `v` (already-canonical values pass through).
+    #[inline]
+    pub fn new(v: u64) -> Self {
+        debug_assert!(P > 2 && P < (1 << 31), "Fp modulus must be an odd prime below 2^31");
+        Fp(if v < P { v } else { v % P })
+    }
+
+    /// Canonical residue in `[0, P)`.
+    #[inline]
+    pub fn value(self) -> u64 {
+        self.0
+    }
+
+    /// The field's modulus.
+    pub const fn modulus() -> u64 {
+        P
+    }
+
+    /// `self^e` by square-and-multiply.
+    pub fn pow(self, mut e: u64) -> Self {
+        let mut base = self;
+        let mut acc = Fp::<P>(1 % P);
+        while e > 0 {
+            if e & 1 == 1 {
+                acc *= base;
+            }
+            base *= base;
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat (`self^(P-2)`). Panics on zero.
+    pub fn inv(self) -> Self {
+        assert!(self.0 != 0, "inverse of zero in Fp<{P}>");
+        self.pow(P - 2)
+    }
+}
+
+impl<const P: u64> Add for Fp<P> {
+    type Output = Fp<P>;
+    #[inline]
+    fn add(self, rhs: Fp<P>) -> Fp<P> {
+        let s = self.0 + rhs.0; // < 2P < 2^32: no overflow
+        Fp(if s >= P { s - P } else { s })
+    }
+}
+
+impl<const P: u64> Sub for Fp<P> {
+    type Output = Fp<P>;
+    #[inline]
+    fn sub(self, rhs: Fp<P>) -> Fp<P> {
+        Fp(if self.0 >= rhs.0 { self.0 - rhs.0 } else { self.0 + P - rhs.0 })
+    }
+}
+
+impl<const P: u64> Neg for Fp<P> {
+    type Output = Fp<P>;
+    #[inline]
+    fn neg(self) -> Fp<P> {
+        Fp(if self.0 == 0 { 0 } else { P - self.0 })
+    }
+}
+
+impl<const P: u64> Mul for Fp<P> {
+    type Output = Fp<P>;
+    #[inline]
+    fn mul(self, rhs: Fp<P>) -> Fp<P> {
+        Fp(Self::reduce(self.0 as u128 * rhs.0 as u128))
+    }
+}
+
+impl<const P: u64> AddAssign for Fp<P> {
+    #[inline]
+    fn add_assign(&mut self, rhs: Fp<P>) {
+        *self = *self + rhs;
+    }
+}
+
+impl<const P: u64> SubAssign for Fp<P> {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Fp<P>) {
+        *self = *self - rhs;
+    }
+}
+
+impl<const P: u64> MulAssign for Fp<P> {
+    #[inline]
+    fn mul_assign(&mut self, rhs: Fp<P>) {
+        *self = *self * rhs;
+    }
+}
+
+impl<const P: u64> fmt::Display for Fp<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl<const P: u64> fmt::Debug for Fp<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (mod {P})", self.0)
+    }
+}
+
+impl<const P: u64> Scalar for Fp<P> {
+    // One name for every modulus: const generics cannot format P into
+    // a `&'static str` on stable.
+    const BACKEND_NAME: &'static str = "fp";
+    const IS_EXACT: bool = true;
+
+    fn zero() -> Self {
+        Fp(0)
+    }
+
+    fn one() -> Self {
+        Fp(1 % P)
+    }
+
+    fn from_i64(v: i64) -> Self {
+        // P < 2^31 fits i64, so rem_euclid lands in [0, P).
+        Fp(v.rem_euclid(P as i64) as u64)
+    }
+
+    fn exact_div(self, d: i64) -> Self {
+        let d = Self::from_i64(d);
+        assert!(d.0 != 0, "exact_div by a multiple of the field modulus {P}");
+        self * d.inv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+    use crate::testkit;
+
+    const P: u64 = 2_147_483_647;
+
+    #[test]
+    fn canonical_construction_and_values() {
+        assert_eq!(Fp31::new(0).value(), 0);
+        assert_eq!(Fp31::new(P).value(), 0);
+        assert_eq!(Fp31::new(P + 5).value(), 5);
+        assert_eq!(Fp31::from_i64(-1).value(), P - 1);
+        assert_eq!(Fp31::modulus(), P);
+    }
+
+    #[test]
+    fn barrett_matches_naive_remainder_on_random_products() {
+        // The property that makes the whole backend trustworthy: the
+        // Barrett multiply equals the u128 schoolbook remainder on
+        // arbitrary residue pairs.
+        testkit::check("fp_barrett_mul", &testkit::PropConfig::default(), |rng| {
+            let a = rng.next_u64() % P;
+            let b = rng.next_u64() % P;
+            let want = ((a as u128 * b as u128) % P as u128) as u64;
+            let got = (Fp31::new(a) * Fp31::new(b)).value();
+            if got != want {
+                return Err(format!("{a} * {b}: got {got}, want {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn field_axioms_hold_on_random_triples() {
+        testkit::check("fp_field_axioms", &testkit::PropConfig::default(), |rng| {
+            let x = Fp31::new(rng.next_u64() % P);
+            let y = Fp31::new(rng.next_u64() % P);
+            let z = Fp31::new(rng.next_u64() % P);
+            if (x + y) + z != x + (y + z) || (x * y) * z != x * (y * z) {
+                return Err("associativity failed".into());
+            }
+            if x * (y + z) != x * y + x * z {
+                return Err("distributivity failed".into());
+            }
+            if x + (-x) != Fp31::zero() || x - y != x + (-y) {
+                return Err("additive inverse failed".into());
+            }
+            if x != Fp31::zero() && x * x.inv() != Fp31::one() {
+                return Err(format!("inverse failed for {x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pow_matches_repeated_multiplication() {
+        let mut rng = Rng::seeded(9);
+        let x = Fp31::new(rng.next_u64() % P);
+        let mut acc = Fp31::one();
+        for e in 0..20u64 {
+            assert_eq!(x.pow(e), acc, "x^{e}");
+            acc *= x;
+        }
+    }
+
+    #[test]
+    fn exact_div_is_multiplication_by_the_inverse() {
+        for d in [1i64, 2, -2, 8, 1024, 7] {
+            let y = Fp31::from_i64(12345);
+            let x = y * Fp31::from_i64(d);
+            assert_eq!(x.exact_div(d), y, "d = {d}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inverse of zero")]
+    fn zero_has_no_inverse() {
+        let _ = Fp31::zero().inv();
+    }
+
+    #[test]
+    fn small_prime_instantiation_also_works() {
+        // A second modulus exercises the const-generic machinery (the
+        // Barrett constant is per-instantiation).
+        type F7 = Fp<7>;
+        let mut seen = [false; 7];
+        for v in 0..7u64 {
+            seen[(F7::new(v) * F7::new(3)).value() as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "x -> 3x must permute Z/7");
+    }
+}

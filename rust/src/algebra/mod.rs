@@ -10,9 +10,11 @@
 //! the FC(k) tables and the Fig. 2 curves are bit-reproducible.
 
 pub mod form;
+pub mod fp;
 pub mod frac;
 pub mod gauss;
 
 pub use form::{BilinearForm, Target};
+pub use fp::{Fp, Fp31};
 pub use frac::Frac;
 pub use gauss::{solve_in_span, span_contains, SpanBasis};

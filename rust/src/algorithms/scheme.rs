@@ -2,6 +2,9 @@
 //! the naive algorithm.
 
 use crate::algebra::form::{BilinearForm, Target};
+use crate::linalg::blocked::{encode_operand, split_blocks};
+use crate::linalg::matrix::Dense;
+use crate::linalg::scalar::Scalar;
 
 /// One rank-1 bilinear product `(Σ u[p] M_p)(Σ v[q] B_q)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +85,31 @@ impl BilinearScheme {
         Ok(())
     }
 
+    /// Apply the scheme at one level of 2×2 blocking over any scalar
+    /// backend: encode both operands per product, multiply, and combine
+    /// into the targets via the output table. Every coefficient is an
+    /// integer, so over exact backends this equals the naive product
+    /// with `==` — the single-level ground-truth route of the
+    /// cross-backend conformance suite (the distributed coordinator
+    /// performs the same computation with one worker per product).
+    pub fn apply_once<S: Scalar>(&self, a: &Dense<S>, b: &Dense<S>) -> Dense<S> {
+        assert_eq!(a.cols(), b.rows(), "matmul dims: {:?} x {:?}", a.shape(), b.shape());
+        let ablocks = split_blocks(a);
+        let bblocks = split_blocks(b);
+        let (hr, hc) = (a.rows() / 2, b.cols() / 2);
+        let mut out = Dense::zeros(a.rows(), b.cols());
+        for (i, p) in self.products.iter().enumerate() {
+            let prod = encode_operand(&p.u, &ablocks).matmul(&encode_operand(&p.v, &bblocks));
+            for (t, coeffs) in self.output.iter().enumerate() {
+                let coef = coeffs[i];
+                if coef != 0 {
+                    out.add_scaled_region((t / 2) * hr, (t % 2) * hc, S::from_i64(coef as i64), &prod);
+                }
+            }
+        }
+        out
+    }
+
     /// Total block additions/subtractions: encoder adds for every product
     /// plus output-combination adds (|supp| - 1 per target). Winograd's
     /// claim to fame is 15 here vs Strassen's 18 (Probert's lower bound).
@@ -139,6 +167,17 @@ mod tests {
         let mut s = strassen();
         s.output[2].pop();
         assert!(s.verify().is_err());
+    }
+
+    #[test]
+    fn apply_once_is_exact_over_integer_backends() {
+        use crate::linalg::matrix::Dense;
+        let a: Dense<i64> = Dense::from_i64_fn(4, 4, |i, j| (i * 4 + j) as i64 - 8);
+        let b: Dense<i64> = Dense::from_i64_fn(4, 4, |i, j| 3 - (i + 2 * j) as i64);
+        let want = a.matmul_naive(&b);
+        for s in [strassen(), winograd(), naive8()] {
+            assert_eq!(s.apply_once(&a, &b), want, "{}", s.name);
+        }
     }
 
     #[test]

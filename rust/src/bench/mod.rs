@@ -4,6 +4,7 @@
 
 pub mod harness;
 pub mod plot;
+pub mod schema;
 pub mod stats;
 pub mod trajectory;
 

@@ -1,0 +1,543 @@
+//! Trajectory-entry schemas for the `BENCH_*.json` files — builders the
+//! benches render entries with, plus a minimal JSON reader that the
+//! schema unit tests round-trip every entry through.
+//!
+//! The benches are `harness = false` binaries, so inline `format!`
+//! strings there are untestable: a typo (missing quote, trailing comma)
+//! would corrupt the repo-root trajectory arrays silently. Each entry
+//! kind therefore lives here as a struct with a `render()` method —
+//! the single source of the schema documented in README "Benchmark
+//! trajectories" — and the tests parse rendered entries back and check
+//! every required key, after appending through
+//! [`super::trajectory::append_entry`] exactly like the benches do.
+
+use std::fmt::Write as _;
+
+// ---------------------------------------------------------------------
+// Entry builders
+// ---------------------------------------------------------------------
+
+/// One depth point of the e2e throughput sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct DepthPoint {
+    pub depth: usize,
+    pub jobs_per_s: f64,
+    pub mean_ns: u128,
+    pub p95_ns: u128,
+}
+
+/// One `BENCH_e2e.json` entry: a depth sweep of the multiplexed
+/// scheduler under the given fault parameters.
+#[derive(Clone, Debug)]
+pub struct E2eEntry {
+    pub unix_time: u64,
+    pub scheme: String,
+    pub n: usize,
+    pub jobs: usize,
+    pub p_fail: f64,
+    pub p_straggle: f64,
+    pub delay_ms: u128,
+    pub quick: bool,
+    pub speedup_depth4_vs_1: f64,
+    pub decode_clones_per_solve: u64,
+    pub depths: Vec<DepthPoint>,
+}
+
+impl E2eEntry {
+    pub fn render(&self) -> String {
+        let depth_objs: Vec<String> = self
+            .depths
+            .iter()
+            .map(|d| {
+                format!(
+                    "{{\"depth\": {}, \"jobs_per_s\": {:.3}, \"mean_ns\": {}, \"p95_ns\": {}}}",
+                    d.depth, d.jobs_per_s, d.mean_ns, d.p95_ns
+                )
+            })
+            .collect();
+        format!(
+            "{{\"unix_time\": {}, \"scheme\": \"{}\", \"n\": {}, \
+             \"jobs\": {}, \"p_fail\": {}, \"p_straggle\": {}, \"delay_ms\": {}, \
+             \"quick\": {}, \"speedup_depth4_vs_1\": {:.3}, \
+             \"decode_clones_per_solve\": {}, \"depths\": [{}]}}",
+            self.unix_time,
+            self.scheme,
+            self.n,
+            self.jobs,
+            self.p_fail,
+            self.p_straggle,
+            self.delay_ms,
+            self.quick,
+            self.speedup_depth4_vs_1,
+            self.decode_clones_per_solve,
+            depth_objs.join(", ")
+        )
+    }
+}
+
+/// One size row of the kernel bench (`BENCH_kernel.json` `sizes[]`).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelSizeRow {
+    pub n: usize,
+    pub naive_ns: u128,
+    pub packed_ns: u128,
+    pub packed_mt_ns: u128,
+}
+
+/// One `BENCH_kernel.json` entry.
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub unix_time: u64,
+    pub quick: bool,
+    pub threads_mt: usize,
+    pub encode_clones: u64,
+    pub sizes: Vec<KernelSizeRow>,
+}
+
+impl KernelEntry {
+    pub fn render(&self) -> String {
+        let size_objs: Vec<String> = self
+            .sizes
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"n\": {}, \"naive_ns\": {}, \"packed_ns\": {}, \"packed_mt_ns\": {}, \
+                     \"speedup_packed\": {:.3}, \"speedup_packed_mt\": {:.3}}}",
+                    r.n,
+                    r.naive_ns,
+                    r.packed_ns,
+                    r.packed_mt_ns,
+                    r.naive_ns as f64 / r.packed_ns.max(1) as f64,
+                    r.naive_ns as f64 / r.packed_mt_ns.max(1) as f64,
+                )
+            })
+            .collect();
+        format!(
+            "{{\"unix_time\": {}, \"quick\": {}, \"threads_mt\": {}, \
+             \"encode_clones\": {}, \"sizes\": [{}]}}",
+            self.unix_time,
+            self.quick,
+            self.threads_mt,
+            self.encode_clones,
+            size_objs.join(", ")
+        )
+    }
+}
+
+/// One crossover point of the recursive sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossoverPoint {
+    pub crossover: usize,
+    pub rec_ns: u128,
+    pub speedup: f64,
+}
+
+/// One matrix-size row of the recursive sweep
+/// (`BENCH_recursive.json` `sweep[]`).
+#[derive(Clone, Debug)]
+pub struct RecursiveSweepRow {
+    pub n: usize,
+    pub flat_ns: u128,
+    pub best_crossover: usize,
+    pub points: Vec<CrossoverPoint>,
+}
+
+/// One `BENCH_recursive.json` entry.
+#[derive(Clone, Debug)]
+pub struct RecursiveEntry {
+    pub unix_time: u64,
+    pub quick: bool,
+    pub kernel: String,
+    pub sweep: Vec<RecursiveSweepRow>,
+}
+
+impl RecursiveEntry {
+    pub fn render(&self) -> String {
+        let sweep_objs: Vec<String> = self
+            .sweep
+            .iter()
+            .map(|row| {
+                let points: Vec<String> = row
+                    .points
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            "{{\"crossover\": {}, \"rec_ns\": {}, \"speedup\": {:.3}}}",
+                            p.crossover, p.rec_ns, p.speedup
+                        )
+                    })
+                    .collect();
+                format!(
+                    "{{\"n\": {}, \"flat_ns\": {}, \"best_crossover\": {}, \
+                     \"points\": [{}]}}",
+                    row.n,
+                    row.flat_ns,
+                    row.best_crossover,
+                    points.join(", ")
+                )
+            })
+            .collect();
+        format!(
+            "{{\"unix_time\": {}, \"quick\": {}, \"kernel\": \"{}\", \
+             \"sweep\": [{}]}}",
+            self.unix_time,
+            self.quick,
+            self.kernel,
+            sweep_objs.join(", ")
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader (round-trip checking; no external deps)
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value — just enough structure to verify the
+/// trajectory files (objects keep insertion order; numbers are f64).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document; trailing garbage is an error.
+pub fn parse_json(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing data at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    other => return Err(format!("object key must be a string, got {other:?}")),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}"));
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    Some(b'\\') => {
+                        // The trajectory entries never need more than
+                        // the simple escapes.
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            other => return Err(format!("unsupported escape {other:?}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(&c) => {
+                        s.push(c as char);
+                        *pos += 1;
+                    }
+                }
+            }
+        }
+        Some(b't') if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let tok = &text_slice(b, start, *pos);
+            tok.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|e| format!("bad number {tok:?} at byte {start}: {e}"))
+        }
+    }
+}
+
+fn text_slice(b: &[u8], start: usize, end: usize) -> String {
+    String::from_utf8_lossy(&b[start..end]).into_owned()
+}
+
+/// Parse a trajectory file and check that every entry is an object
+/// carrying all of `required` as top-level keys. Returns the parsed
+/// entries.
+pub fn validate_trajectory(text: &str, required: &[&str]) -> Result<Vec<Json>, String> {
+    let doc = parse_json(text)?;
+    let entries = doc.as_arr().ok_or("trajectory root must be a JSON array")?;
+    for (i, e) in entries.iter().enumerate() {
+        if !matches!(e, Json::Obj(_)) {
+            return Err(format!("entry {i} is not an object"));
+        }
+        let mut missing = String::new();
+        for k in required {
+            if e.get(k).is_none() {
+                let _ = write!(missing, " {k}");
+            }
+        }
+        if !missing.is_empty() {
+            return Err(format!("entry {i} missing keys:{missing}"));
+        }
+    }
+    Ok(entries.to_vec())
+}
+
+/// Required top-level keys of each trajectory file.
+pub const E2E_KEYS: &[&str] = &[
+    "unix_time",
+    "scheme",
+    "n",
+    "jobs",
+    "p_fail",
+    "p_straggle",
+    "delay_ms",
+    "quick",
+    "speedup_depth4_vs_1",
+    "decode_clones_per_solve",
+    "depths",
+];
+pub const KERNEL_KEYS: &[&str] =
+    &["unix_time", "quick", "threads_mt", "encode_clones", "sizes"];
+pub const RECURSIVE_KEYS: &[&str] = &["unix_time", "quick", "kernel", "sweep"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::trajectory::append_entry;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ftms_schema_{}_{name}", std::process::id()))
+    }
+
+    fn sample_e2e() -> E2eEntry {
+        E2eEntry {
+            unix_time: 1,
+            scheme: "sw+2psmm".into(),
+            n: 64,
+            jobs: 24,
+            p_fail: 0.05,
+            p_straggle: 0.2,
+            delay_ms: 3,
+            quick: true,
+            speedup_depth4_vs_1: 2.131,
+            decode_clones_per_solve: 0,
+            depths: vec![
+                DepthPoint { depth: 1, jobs_per_s: 10.0, mean_ns: 5000, p95_ns: 9000 },
+                DepthPoint { depth: 4, jobs_per_s: 21.3, mean_ns: 2300, p95_ns: 4100 },
+            ],
+        }
+    }
+
+    fn sample_kernel() -> KernelEntry {
+        KernelEntry {
+            unix_time: 2,
+            quick: false,
+            threads_mt: 4,
+            encode_clones: 0,
+            sizes: vec![KernelSizeRow {
+                n: 256,
+                naive_ns: 1_000_000,
+                packed_ns: 400_000,
+                packed_mt_ns: 150_000,
+            }],
+        }
+    }
+
+    fn sample_recursive() -> RecursiveEntry {
+        RecursiveEntry {
+            unix_time: 3,
+            quick: true,
+            kernel: "packed".into(),
+            sweep: vec![RecursiveSweepRow {
+                n: 512,
+                flat_ns: 9_000_000,
+                best_crossover: 128,
+                points: vec![
+                    CrossoverPoint { crossover: 64, rec_ns: 8_000_000, speedup: 1.125 },
+                    CrossoverPoint { crossover: 128, rec_ns: 7_000_000, speedup: 1.286 },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn every_entry_kind_round_trips_through_the_parser() {
+        let cases: Vec<(String, &[&str])> = vec![
+            (sample_e2e().render(), E2E_KEYS),
+            (sample_kernel().render(), KERNEL_KEYS),
+            (sample_recursive().render(), RECURSIVE_KEYS),
+        ];
+        for (entry, keys) in cases {
+            let doc = parse_json(&entry).unwrap_or_else(|e| panic!("{entry}: {e}"));
+            for k in keys {
+                assert!(doc.get(k).is_some(), "missing {k} in {entry}");
+            }
+        }
+    }
+
+    #[test]
+    fn appended_trajectory_files_validate_and_grow() {
+        // The full writer path the benches use: render → append (twice)
+        // → parse the file → check keys. Append must extend, not
+        // clobber.
+        let cases: Vec<(&str, String, &[&str])> = vec![
+            ("e2e", sample_e2e().render(), E2E_KEYS),
+            ("kernel", sample_kernel().render(), KERNEL_KEYS),
+            ("recursive", sample_recursive().render(), RECURSIVE_KEYS),
+        ];
+        for (name, entry, keys) in cases {
+            let path = tmp(&format!("{name}.json"));
+            let _ = std::fs::remove_file(&path);
+            append_entry(&path, &entry).unwrap();
+            append_entry(&path, &entry).unwrap();
+            let text = std::fs::read_to_string(&path).unwrap();
+            let entries = validate_trajectory(&text, keys)
+                .unwrap_or_else(|e| panic!("{name}: {e}\n{text}"));
+            assert_eq!(entries.len(), 2, "{name}: append clobbered the array");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn parsed_numbers_and_nesting_survive_the_round_trip() {
+        let doc = parse_json(&sample_e2e().render()).unwrap();
+        assert_eq!(doc.get("n").and_then(Json::as_num), Some(64.0));
+        assert_eq!(doc.get("p_fail").and_then(Json::as_num), Some(0.05));
+        assert_eq!(doc.get("quick"), Some(&Json::Bool(true)));
+        let depths = doc.get("depths").and_then(Json::as_arr).unwrap();
+        assert_eq!(depths.len(), 2);
+        assert_eq!(depths[1].get("depth").and_then(Json::as_num), Some(4.0));
+        assert_eq!(depths[1].get("jobs_per_s").and_then(Json::as_num), Some(21.3));
+    }
+
+    #[test]
+    fn writer_is_cwd_independent() {
+        // The benches write via append_to_repo_root, which resolves the
+        // path from the compile-time manifest dir — an absolute path
+        // that cannot depend on the process working directory.
+        let root = crate::bench::trajectory::repo_root();
+        assert!(root.is_absolute(), "{root:?}");
+        assert!(root.join("rust").join("Cargo.toml").exists());
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[{\"a\": 1},]",
+            "[1 2]",
+            "{\"a\" 1}",
+            "[{\"a\": 1}] trailing",
+            "{\"a\": 01x}",
+        ] {
+            assert!(parse_json(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+}

@@ -18,8 +18,10 @@
 //!   task, the paper's model) or a nested `NestedGraph` (M₁·M₂ leaf
 //!   items, grouped by outer product, ids contiguous per group).
 //! * [`scheduler`] — the job multiplexer: admits jobs up to a
-//!   configurable **in-flight depth**, samples faults at admission (in
-//!   submission order, so seeded streams are depth-invariant), routes
+//!   configurable **in-flight depth**, stamps each work item's fault at
+//!   admission as a pure function of (seed, job, item) — so seeded
+//!   streams see identical fault patterns at every depth, pool size and
+//!   thread count — routes
 //!   replies to their job by `job_id` — dropping and counting replies
 //!   for closed jobs (the cross-job leakage guard) — and **cancels**
 //!   a completed job's outstanding items so straggler-freed slots

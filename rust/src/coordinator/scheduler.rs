@@ -19,13 +19,15 @@
 //!   is debited, so a 256-leaf job stops occupying the fleet long
 //!   before every leaf has run.
 //!
-//! Determinism: faults are sampled from one scheduler-wide RNG at
-//! admission time, per job in task order, and jobs are admitted in
-//! submission order — so a seeded job stream draws the exact same fault
-//! sequence at every depth (the depth-invariance the property tests pin
-//! down; combine with [`MasterConfig::collect_all`] for bit-identical
-//! outputs). Jobs submitted with an explicit fault script
-//! ([`Scheduler::submit_with_faults`]) draw nothing from the RNG.
+//! Determinism: each work item's fault is a **pure function** of
+//! `(master seed, job_id, item index)` —
+//! [`FaultPlan::sample_at`](crate::coordinator::worker::FaultPlan::sample_at)
+//! hashes the coordinates, no shared RNG stream exists — so a seeded
+//! job stream sees the exact same fault pattern at every in-flight
+//! depth, pool size, backend, and thread count (the invariance the
+//! property tests pin down; combine with [`MasterConfig::collect_all`]
+//! for bit-identical outputs). Jobs submitted with an explicit fault
+//! script ([`Scheduler::submit_with_faults`]) sample nothing.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -40,7 +42,6 @@ use crate::coordinator::worker::{Backend, FaultAction, WorkItem, WorkerPool, Wor
 use crate::linalg::blocked::{encode_operand_into, split_blocks};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
-use crate::sim::rng::Rng;
 
 /// Scheduler configuration.
 #[derive(Clone, Debug)]
@@ -83,7 +84,6 @@ pub struct Scheduler {
     pool: WorkerPool,
     backend: Backend,
     cfg: SchedulerConfig,
-    rng: Rng,
     next_job: u64,
     pending: VecDeque<Pending>,
     inflight: HashMap<u64, JobState>,
@@ -111,14 +111,12 @@ impl Scheduler {
         let metrics = Registry::new();
         let pool_size = workers.unwrap_or_else(|| plan.default_pool_size());
         let pool = WorkerPool::spawn(pool_size, backend.clone(), metrics.clone());
-        let rng = Rng::seeded(cfg.master.seed);
         let (reply_tx, reply_rx) = channel();
         Scheduler {
             plan,
             pool,
             backend,
             cfg,
-            rng,
             next_job: 0,
             pending: VecDeque::new(),
             inflight: HashMap::new(),
@@ -254,7 +252,8 @@ impl Scheduler {
     }
 
     /// Admit pending jobs while in-flight slots are free, in submission
-    /// order (keeps the fault-sampling RNG sequence depth-invariant).
+    /// order (completion order stays reproducible; fault sampling is
+    /// admission-order independent by construction).
     fn admit_ready(&mut self) {
         while self.inflight.len() < self.cfg.depth.max(1) {
             let Some(p) = self.pending.pop_front() else { break };
@@ -266,12 +265,14 @@ impl Scheduler {
         let started = Instant::now();
         let a4 = Arc::new(split_blocks(&p.a));
         let b4 = Arc::new(split_blocks(&p.b));
-        // Sample all faults first, in item order, so the RNG stream is a
-        // pure function of the job index (scripted jobs draw nothing).
+        // Sample faults per item as a pure function of (master seed,
+        // job_id, item index) — no shared stream, so the pattern cannot
+        // shift with backend, pool size, depth, or admission history
+        // (scripted jobs sample nothing).
         let faults: Vec<FaultAction> = match p.faults {
             Some(f) => f,
             None => (0..self.plan.num_work_items())
-                .map(|_| self.cfg.master.fault.sample(&mut self.rng))
+                .map(|i| self.cfg.master.fault.sample_at(self.cfg.master.seed, p.job_id, i as u64))
                 .collect(),
         };
         let mut injected_failures = 0;
@@ -472,6 +473,7 @@ mod tests {
     use super::*;
     use crate::coding::nested::NestedTaskSet;
     use crate::coordinator::worker::FaultPlan;
+    use crate::sim::rng::Rng;
 
     fn cfg(depth: usize, fault: FaultPlan, seed: u64) -> SchedulerConfig {
         SchedulerConfig {
@@ -592,6 +594,51 @@ mod tests {
         // deadline.
         assert!(t0.elapsed() < Duration::from_secs(5));
         s.shutdown();
+    }
+
+    #[test]
+    fn fault_pattern_is_invariant_across_depth_and_pool_size() {
+        // Regression for the shared-stream sampler: the injected fault
+        // pattern of every job in a seeded stream must be identical no
+        // matter the in-flight depth or worker-pool size (it is a pure
+        // function of (seed, job_id, item) now — nothing about admission
+        // history, thread count, or backend can shift it).
+        let run = |depth: usize, workers: usize| -> Vec<(u64, usize, usize)> {
+            let mut s = Scheduler::with_plan(
+                DispatchPlan::flat(TaskSet::strassen_winograd(2)),
+                Backend::Native,
+                cfg(
+                    depth,
+                    FaultPlan {
+                        p_fail: 0.2,
+                        p_straggle: 0.2,
+                        delay: Duration::from_millis(1),
+                    },
+                    42,
+                ),
+                Some(workers),
+            );
+            for seed in 0..6 {
+                let (a, b) = rand_pair(8, seed);
+                s.submit(a, b).unwrap();
+            }
+            let mut done = s.drive(6);
+            s.shutdown();
+            done.sort_by_key(|f| f.job_id);
+            done.iter()
+                .map(|f| {
+                    let (_, r) = f.result.as_ref().unwrap();
+                    (f.job_id, r.injected_failures, r.injected_stragglers)
+                })
+                .collect()
+        };
+        let baseline = run(1, 16);
+        assert!(
+            baseline.iter().any(|&(_, f, s)| f + s > 0),
+            "no fault injected — the regression test exercises nothing"
+        );
+        assert_eq!(run(4, 16), baseline, "depth must not shift fault patterns");
+        assert_eq!(run(2, 4), baseline, "pool size must not shift fault patterns");
     }
 
     fn nested_plan() -> DispatchPlan {

@@ -89,6 +89,42 @@ impl FaultPlan {
             return FaultAction::None;
         }
         let u = rng.uniform();
+        self.partition(u)
+    }
+
+    /// Sample the fault action of work item `item` of job `job_id` under
+    /// master seed `seed` — a **pure function** of its three arguments.
+    ///
+    /// [`Self::sample`] draws from a shared stream, so a job's fault
+    /// pattern depends on how many draws every earlier job made: any
+    /// change in backend, pool size, or admission history shifts the
+    /// stream and silently re-rolls every later job's faults. Here the
+    /// coordinates are hashed (two rounds of the splitmix64 finalizer)
+    /// into a private RNG seed and exactly one uniform is drawn, so the
+    /// same `(seed, job_id, item)` yields the same action on every
+    /// backend, thread count, and in-flight depth — the invariance
+    /// `tests/multiplex.rs` and the scheduler regression tests pin.
+    pub fn sample_at(&self, seed: u64, job_id: u64, item: u64) -> FaultAction {
+        debug_assert!(
+            self.p_fail + self.p_straggle <= 1.0,
+            "fail/straggle are exclusive marginals: p_fail {} + p_straggle {} > 1 \
+             silently truncates P(Delay)",
+            self.p_fail,
+            self.p_straggle
+        );
+        if self.p_fail <= 0.0 && self.p_straggle <= 0.0 {
+            return FaultAction::None;
+        }
+        fn mix64(mut z: u64) -> u64 {
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        }
+        let mixed = mix64(seed ^ mix64(job_id ^ mix64(item)));
+        self.partition(Rng::seeded(mixed).uniform())
+    }
+
+    fn partition(&self, u: f64) -> FaultAction {
         if u < self.p_fail {
             FaultAction::Fail
         } else if u < self.p_fail + self.p_straggle {
@@ -638,5 +674,81 @@ mod tests {
             .count();
         let pd = delays as f64 / n as f64;
         assert!((pd - 0.4).abs() < 0.01, "P(delay) {pd} != 0.4");
+    }
+
+    #[test]
+    fn sample_at_is_a_pure_function_of_its_coordinates() {
+        // Regression: `sample` draws from a shared stream, so a job's
+        // pattern used to depend on how many draws earlier jobs made.
+        // `sample_at` must give the same action for the same
+        // (seed, job, item) no matter what was sampled before or since.
+        let plan = FaultPlan {
+            p_fail: 0.3,
+            p_straggle: 0.3,
+            delay: Duration::from_millis(2),
+        };
+        let snapshot: Vec<FaultAction> = (0..64)
+            .flat_map(|job| (0..16).map(move |item| (job, item)))
+            .map(|(job, item)| plan.sample_at(7, job, item))
+            .collect();
+        // Re-sample in reverse order, interleaved with unrelated draws.
+        let mut rng = Rng::seeded(1);
+        for (k, (job, item)) in (0..64)
+            .flat_map(|job| (0..16).map(move |item| (job, item)))
+            .enumerate()
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+        {
+            let _ = plan.sample(&mut rng); // unrelated history
+            assert_eq!(plan.sample_at(7, job, item), snapshot[k], "job {job} item {item}");
+        }
+    }
+
+    #[test]
+    fn sample_at_varies_across_jobs_items_and_seeds() {
+        let plan = FaultPlan {
+            p_fail: 0.5,
+            p_straggle: 0.0,
+            delay: Duration::ZERO,
+        };
+        let pattern = |seed: u64, job: u64| -> Vec<FaultAction> {
+            (0..64).map(|i| plan.sample_at(seed, job, i)).collect()
+        };
+        assert_ne!(pattern(1, 0), pattern(1, 1), "jobs must not share a pattern");
+        assert_ne!(pattern(1, 0), pattern(2, 0), "seeds must not share a pattern");
+        assert_eq!(pattern(3, 5), pattern(3, 5));
+    }
+
+    #[test]
+    fn sample_at_hits_the_exact_marginals() {
+        let plan = FaultPlan {
+            p_fail: 0.25,
+            p_straggle: 0.25,
+            delay: Duration::from_millis(1),
+        };
+        let n = 40_000u64;
+        let mut fails = 0;
+        let mut delays = 0;
+        for item in 0..n {
+            match plan.sample_at(11, 0, item) {
+                FaultAction::Fail => fails += 1,
+                FaultAction::Delay(_) => delays += 1,
+                FaultAction::None => {}
+            }
+        }
+        let pf = fails as f64 / n as f64;
+        let pd = delays as f64 / n as f64;
+        assert!((pf - 0.25).abs() < 0.01, "P(fail) {pf} != 0.25");
+        assert!((pd - 0.25).abs() < 0.01, "P(delay) {pd} != 0.25");
+    }
+
+    #[test]
+    fn sample_at_none_is_free_and_deterministic() {
+        for job in 0..4 {
+            for item in 0..4 {
+                assert_eq!(FaultPlan::NONE.sample_at(3, job, item), FaultAction::None);
+            }
+        }
     }
 }

@@ -92,8 +92,10 @@ pub mod prelude {
     pub use crate::coordinator::server::{MmServer, ServerConfig};
     pub use crate::coordinator::task::DispatchPlan;
     pub use crate::coordinator::worker::{Backend, FaultPlan};
+    pub use crate::algebra::fp::{Fp, Fp31};
     pub use crate::linalg::kernel::KernelKind;
-    pub use crate::linalg::matrix::Matrix;
+    pub use crate::linalg::matrix::{Dense, Matrix};
+    pub use crate::linalg::scalar::Scalar;
     pub use crate::search::searchlp::{search_lp, SearchResult};
     pub use crate::sim::montecarlo::MonteCarlo;
     pub use crate::sim::rng::Rng;

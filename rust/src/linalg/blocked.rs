@@ -9,16 +9,17 @@
 //! flattened helpers here pin that equivalence and back the nested
 //! coding-layer analysis.
 
-use crate::linalg::matrix::Matrix;
+use crate::linalg::matrix::Dense;
+use crate::linalg::scalar::Scalar;
 
 /// Split an even-dimensioned matrix into its four blocks
 /// `[X11, X12, X21, X22]`.
-pub fn split_blocks(x: &Matrix) -> [Matrix; 4] {
+pub fn split_blocks<S: Scalar>(x: &Dense<S>) -> [Dense<S>; 4] {
     let mut out = [
-        Matrix::zeros(0, 0),
-        Matrix::zeros(0, 0),
-        Matrix::zeros(0, 0),
-        Matrix::zeros(0, 0),
+        Dense::zeros(0, 0),
+        Dense::zeros(0, 0),
+        Dense::zeros(0, 0),
+        Dense::zeros(0, 0),
     ];
     split_blocks_into(&mut out, x);
     out
@@ -27,7 +28,7 @@ pub fn split_blocks(x: &Matrix) -> [Matrix; 4] {
 /// [`split_blocks`] into caller-owned block buffers, each reshaped in
 /// place (allocation-free once warm) — the recursion arena's per-level
 /// split path.
-pub fn split_blocks_into(out: &mut [Matrix; 4], x: &Matrix) {
+pub fn split_blocks_into<S: Scalar>(out: &mut [Dense<S>; 4], x: &Dense<S>) {
     let (r, c) = x.shape();
     assert!(r % 2 == 0 && c % 2 == 0, "odd shape {:?} cannot be 2x2-blocked", x.shape());
     let (hr, hc) = (r / 2, c / 2);
@@ -46,12 +47,12 @@ pub fn split_blocks_into(out: &mut [Matrix; 4], x: &Matrix) {
 }
 
 /// Reassemble four equally-shaped blocks into one matrix.
-pub fn join_blocks(b: &[Matrix; 4]) -> Matrix {
+pub fn join_blocks<S: Scalar>(b: &[Dense<S>; 4]) -> Dense<S> {
     let (hr, hc) = b[0].shape();
     for blk in b.iter() {
         assert_eq!(blk.shape(), (hr, hc), "ragged blocks");
     }
-    let mut out = Matrix::zeros(2 * hr, 2 * hc);
+    let mut out = Dense::zeros(2 * hr, 2 * hc);
     let c = 2 * hc;
     let dst = out.as_mut_slice();
     for (idx, blk) in b.iter().enumerate() {
@@ -69,8 +70,8 @@ pub fn join_blocks(b: &[Matrix; 4]) -> Matrix {
 /// master sends to a worker). Zero-coefficient blocks are skipped —
 /// that skip is the *definition* of the encode (the sum runs over the
 /// coefficient support), not a floating-point shortcut.
-pub fn encode_operand(coeffs: &[i32; 4], blocks: &[Matrix; 4]) -> Matrix {
-    let mut out = Matrix::zeros(0, 0);
+pub fn encode_operand<S: Scalar>(coeffs: &[i32; 4], blocks: &[Dense<S>; 4]) -> Dense<S> {
+    let mut out = Dense::zeros(0, 0);
     encode_operand_into(&mut out, coeffs, blocks);
     out
 }
@@ -78,12 +79,12 @@ pub fn encode_operand(coeffs: &[i32; 4], blocks: &[Matrix; 4]) -> Matrix {
 /// [`encode_operand`] into a caller-owned buffer, which is reshaped and
 /// zeroed in place (allocation-free once warm) — the worker threads'
 /// per-thread encode scratch path.
-pub fn encode_operand_into(out: &mut Matrix, coeffs: &[i32; 4], blocks: &[Matrix; 4]) {
+pub fn encode_operand_into<S: Scalar>(out: &mut Dense<S>, coeffs: &[i32; 4], blocks: &[Dense<S>; 4]) {
     let (r, c) = blocks[0].shape();
     out.reset(r, c);
     for (p, &s) in coeffs.iter().enumerate() {
         if s != 0 {
-            out.axpy(s as f32, &blocks[p]);
+            out.axpy(S::from_i64(s as i64), &blocks[p]);
         }
     }
 }
@@ -91,7 +92,7 @@ pub fn encode_operand_into(out: &mut Matrix, coeffs: &[i32; 4], blocks: &[Matrix
 /// Split a dimension-divisible-by-4 matrix into its 16 two-level blocks,
 /// outer-major: entry `p * 4 + r` is inner block `r` of outer block `p`
 /// (i.e. `split_blocks` applied twice).
-pub fn split_blocks16(x: &Matrix) -> [Matrix; 16] {
+pub fn split_blocks16<S: Scalar>(x: &Dense<S>) -> [Dense<S>; 16] {
     let (r, c) = x.shape();
     assert!(
         r % 4 == 0 && c % 4 == 0,
@@ -99,7 +100,7 @@ pub fn split_blocks16(x: &Matrix) -> [Matrix; 16] {
         x.shape()
     );
     let outer = split_blocks(x);
-    let mut out: Vec<Matrix> = Vec::with_capacity(16);
+    let mut out: Vec<Dense<S>> = Vec::with_capacity(16);
     for blk in &outer {
         out.extend(split_blocks(blk));
     }
@@ -111,11 +112,11 @@ pub fn split_blocks16(x: &Matrix) -> [Matrix; 16] {
 
 /// Reassemble 16 two-level blocks (outer-major order, as produced by
 /// [`split_blocks16`]) into one matrix.
-pub fn join_blocks16(b: &[Matrix; 16]) -> Matrix {
-    let quad = |p: usize| -> [Matrix; 4] {
+pub fn join_blocks16<S: Scalar>(b: &[Dense<S>; 16]) -> Dense<S> {
+    let quad = |p: usize| -> [Dense<S>; 4] {
         std::array::from_fn(|r| b[p * 4 + r].clone())
     };
-    let outer: [Matrix; 4] = std::array::from_fn(|p| join_blocks(&quad(p)));
+    let outer: [Dense<S>; 4] = std::array::from_fn(|p| join_blocks(&quad(p)));
     join_blocks(&outer)
 }
 
@@ -128,12 +129,12 @@ pub fn join_blocks16(b: &[Matrix; 16]) -> Matrix {
 /// the equivalence is pinned by the tests below and is what makes the
 /// nested analysis in `coding::nested` (flat 256-dim leaf forms) speak
 /// about the dispatched computation.
-pub fn encode_operand16(coeffs: &[i32; 16], blocks: &[Matrix; 16]) -> Matrix {
+pub fn encode_operand16<S: Scalar>(coeffs: &[i32; 16], blocks: &[Dense<S>; 16]) -> Dense<S> {
     let (r, c) = blocks[0].shape();
-    let mut out = Matrix::zeros(r, c);
+    let mut out = Dense::zeros(r, c);
     for (p, &s) in coeffs.iter().enumerate() {
         if s != 0 {
-            out.axpy(s as f32, &blocks[p]);
+            out.axpy(S::from_i64(s as i64), &blocks[p]);
         }
     }
     out
@@ -158,6 +159,7 @@ pub fn kron_coeffs(outer: &[i32; 4], inner: &[i32; 4]) -> [i32; 16] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::matrix::Matrix;
     use crate::sim::rng::Rng;
 
     #[test]

@@ -1,19 +1,27 @@
-//! Row-major dense `f32` matrix with the operations the coordinator
-//! needs on its hot path: add/sub/scale/AXPY-style combines and a
-//! matmul that dispatches between the naive reference kernel and the
-//! cache-blocked packed kernel ([`crate::linalg::kernel`]).
+//! Row-major dense matrix, generic over the [`Scalar`] backend, with
+//! the operations the coordinator needs on its hot path: add/sub/scale/
+//! AXPY-style combines and a matmul that dispatches through the
+//! backend's kernel hook ([`Scalar::matmul_alloc`] — the cache-blocked
+//! packed/SIMD kernels for `f32`, the naive reference loop for every
+//! other backend).
+//!
+//! [`Matrix`] is the historical `f32` instantiation; all pre-existing
+//! call sites keep compiling (and inferring `f32`) through that alias.
 
 use std::fmt;
 use std::ops::{Add, Index, IndexMut, Mul, Neg, Sub};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::linalg::kernel;
+use crate::linalg::scalar::Scalar;
 use crate::sim::rng::Rng;
 
-/// Deep copies of `Matrix` since process start — the observable the
+/// Deep copies of [`Dense`] since process start — the observable the
 /// alloc-regression tests/benches use to pin "zero matrix clones per
 /// decode solve" (`tests/decode_alloc.rs`). One relaxed increment per
-/// clone; negligible next to the `memcpy` it counts.
+/// clone; negligible next to the `memcpy` it counts. Shared by every
+/// backend instantiation (the tests that pin deltas run f32-only
+/// workloads in single-test binaries, so cross-backend sharing cannot
+/// skew them).
 static CLONES: AtomicU64 = AtomicU64::new(0);
 
 /// Fresh data-buffer allocations (constructors, clones, and `reset`
@@ -27,40 +35,44 @@ fn note_alloc() {
     ALLOCS.fetch_add(1, Ordering::Relaxed);
 }
 
-/// Dense row-major `f32` matrix.
+/// Dense row-major matrix over any [`Scalar`] backend.
 #[derive(PartialEq)]
-pub struct Matrix {
+pub struct Dense<S> {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: Vec<S>,
 }
 
-impl Clone for Matrix {
-    fn clone(&self) -> Matrix {
+/// Dense row-major `f32` matrix — the serving hot path's type. Alias of
+/// [`Dense<f32>`] so the whole historical API keeps inferring `f32`.
+pub type Matrix = Dense<f32>;
+
+impl<S: Clone> Clone for Dense<S> {
+    fn clone(&self) -> Dense<S> {
         CLONES.fetch_add(1, Ordering::Relaxed);
         note_alloc();
-        Matrix { rows: self.rows, cols: self.cols, data: self.data.clone() }
+        Dense { rows: self.rows, cols: self.cols, data: self.data.clone() }
     }
 }
 
-impl Matrix {
+impl<S: Scalar> Dense<S> {
     /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         note_alloc();
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Dense { rows, cols, data: vec![S::zero(); rows * cols] }
     }
 
     /// Identity (square).
     pub fn identity(n: usize) -> Self {
-        let mut m = Matrix::zeros(n, n);
+        let mut m = Dense::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = S::one();
         }
         m
     }
 
     /// Build from a function of (row, col).
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
         note_alloc();
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -68,19 +80,21 @@ impl Matrix {
                 data.push(f(i, j));
             }
         }
-        Matrix { rows, cols, data }
+        Dense { rows, cols, data }
     }
 
     /// From a row-major slice.
-    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
+    pub fn from_slice(rows: usize, cols: usize, data: &[S]) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         note_alloc();
-        Matrix { rows, cols, data: data.to_vec() }
+        Dense { rows, cols, data: data.to_vec() }
     }
 
-    /// Uniform(-1, 1) random entries.
-    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
-        Matrix::from_fn(rows, cols, |_, _| (rng.uniform() * 2.0 - 1.0) as f32)
+    /// Integer-entry matrix via [`Scalar::from_i64`] — the conformance
+    /// suite's cross-backend generator (the same `i64` seed matrix maps
+    /// to every backend, so exact `==` comparisons are meaningful).
+    pub fn from_i64_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i64) -> Self {
+        Dense::from_fn(rows, cols, |i, j| S::from_i64(f(i, j)))
     }
 
     pub fn rows(&self) -> usize {
@@ -95,49 +109,52 @@ impl Matrix {
         (self.rows, self.cols)
     }
 
-    pub fn as_slice(&self) -> &[f32] {
+    pub fn as_slice(&self) -> &[S] {
         &self.data
     }
 
-    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
         &mut self.data
     }
 
-    /// Matmul `self · rhs`, dispatched through the kernel policy: the
-    /// packed cache-blocked kernel (scalar or explicit-SIMD microkernel
-    /// per `--kernel {packed,simd}`) for large products, the naive
+    /// Matmul `self · rhs`, dispatched through the backend's kernel
+    /// policy ([`Scalar::matmul_alloc`]). For `f32` that is the packed
+    /// cache-blocked kernel (scalar or explicit-SIMD microkernel per
+    /// `--kernel {packed,simd}`) for large products and the naive
     /// reference kernel below the size break-even or when `--kernel
-    /// naive` is selected ([`kernel::set_default`]). `naive` and
-    /// `packed` accumulate each element in the same ascending-`k`
-    /// order, so those two are bit-identical; `simd` fuses each
-    /// accumulation step and is equal only up to the documented bound
-    /// ([`kernel::simd_abs_bound`]).
-    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+    /// naive` is selected ([`crate::linalg::kernel::set_default`]);
+    /// `naive` and `packed` accumulate each element in the same
+    /// ascending-`k` order, so those two are bit-identical, while
+    /// `simd` fuses each accumulation step and is equal only up to the
+    /// documented bound ([`crate::linalg::kernel::simd_abs_bound`]).
+    /// Every other backend routes to [`Dense::matmul_naive`].
+    pub fn matmul(&self, rhs: &Dense<S>) -> Dense<S> {
         assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
-        kernel::dispatch(self, rhs)
+        S::matmul_alloc(self, rhs)
     }
 
     /// Reference `(i, k, j)` kernel — the oracle the packed kernel is
-    /// property-tested against. Full IEEE semantics: zero lhs entries
-    /// are NOT skipped, so `0·NaN = NaN` and `0·∞ = NaN` propagate from
-    /// `rhs` exactly as a textbook inner product would. (An earlier
-    /// version skipped `a == 0.0` rows as a throughput hack, silently
-    /// laundering non-finite `rhs` rows into zeros.)
+    /// property-tested against. Full IEEE semantics on float backends:
+    /// zero lhs entries are NOT skipped, so `0·NaN = NaN` and `0·∞ =
+    /// NaN` propagate from `rhs` exactly as a textbook inner product
+    /// would. (An earlier version skipped `a == 0.0` rows as a
+    /// throughput hack, silently laundering non-finite `rhs` rows into
+    /// zeros.)
     ///
     /// §Perf note: a 4-row-blocked variant (reusing each B row across 4
     /// accumulator streams) was tried and measured ~10% SLOWER at n =
     /// 128/256 on this single-core box (register pressure beats the L2
     /// traffic saving); the packed kernel in [`crate::linalg::kernel`]
     /// is the fast path instead.
-    pub fn matmul_naive(&self, rhs: &Matrix) -> Matrix {
-        let mut out = Matrix::zeros(0, 0);
+    pub fn matmul_naive(&self, rhs: &Dense<S>) -> Dense<S> {
+        let mut out = Dense::zeros(0, 0);
         self.matmul_naive_into(rhs, &mut out);
         out
     }
 
-    /// [`Matrix::matmul_naive`] into a caller-owned buffer (reshaped
+    /// [`Dense::matmul_naive`] into a caller-owned buffer (reshaped
     /// and zeroed in place, allocation-free once warm).
-    pub fn matmul_naive_into(&self, rhs: &Matrix, out: &mut Matrix) {
+    pub fn matmul_naive_into(&self, rhs: &Dense<S>, out: &mut Dense<S>) {
         assert_eq!(self.cols, rhs.rows, "matmul dims: {:?} x {:?}", self.shape(), rhs.shape());
         out.reset(self.rows, rhs.cols);
         let n = rhs.cols;
@@ -147,16 +164,10 @@ impl Matrix {
                 let a = self.data[i * self.cols + k];
                 let brow = &rhs.data[k * n..(k + 1) * n];
                 for (o, b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
+                    *o = *o + a * *b;
                 }
             }
         }
-    }
-
-    /// Packed cache-blocked matmul with the configured thread count
-    /// ([`kernel::threads`]), bypassing the size heuristic.
-    pub fn matmul_packed(&self, rhs: &Matrix) -> Matrix {
-        kernel::matmul_packed(self, rhs, kernel::threads())
     }
 
     /// Reshape to `rows × cols` and zero-fill, reusing the existing
@@ -169,28 +180,14 @@ impl Matrix {
             note_alloc();
         }
         self.data.clear();
-        self.data.resize(rows * cols, 0.0);
-    }
-
-    /// Deep copies of `Matrix` since process start (alloc-regression
-    /// observability; see the `CLONES` static's doc).
-    pub fn clone_count() -> u64 {
-        CLONES.load(Ordering::Relaxed)
-    }
-
-    /// Fresh data-buffer allocations since process start: constructors,
-    /// clones, and [`Matrix::reset`] calls that had to grow. Warm
-    /// scratch reuse (reset within capacity) does NOT count — which is
-    /// exactly what the recursion-arena tests pin to zero.
-    pub fn alloc_count() -> u64 {
-        ALLOCS.load(Ordering::Relaxed)
+        self.data.resize(rows * cols, S::zero());
     }
 
     /// In-place `self[top.., left..] += s * other` over an
     /// `other`-shaped region — the decode combine writes each output
     /// quadrant straight into the final buffer with this, skipping the
     /// per-block temporaries and the `join_blocks` copy.
-    pub fn add_scaled_region(&mut self, top: usize, left: usize, s: f32, other: &Matrix) {
+    pub fn add_scaled_region(&mut self, top: usize, left: usize, s: S, other: &Dense<S>) {
         let (r, c) = other.shape();
         assert!(
             top + r <= self.rows && left + c <= self.cols,
@@ -202,29 +199,79 @@ impl Matrix {
             let dst = &mut self.data[(top + i) * self.cols + left..][..c];
             let src = &other.data[i * c..(i + 1) * c];
             for (d, x) in dst.iter_mut().zip(src.iter()) {
-                *d += s * x;
+                *d = *d + s * *x;
             }
         }
     }
 
     /// In-place `self += s * other` (the decode/assembly primitive).
-    pub fn axpy(&mut self, s: f32, other: &Matrix) {
+    pub fn axpy(&mut self, s: S, other: &Dense<S>) {
         assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
         for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += s * b;
+            *a = *a + s * *b;
         }
     }
 
     /// `Σ w[i] * mats[i]` with preallocated output — the zero-extra-copy
-    /// decode combine on the native backend.
-    pub fn weighted_sum_into(out: &mut Matrix, weights: &[f32], mats: &[&Matrix]) {
+    /// decode combine on the native backend. Matrices whose weight
+    /// compares equal to zero are skipped entirely (on `f32` that keeps
+    /// NaN-filled unfinished worker slots from poisoning the output; a
+    /// NaN *weight* still propagates because `NaN == 0.0` is false).
+    pub fn weighted_sum_into(out: &mut Dense<S>, weights: &[S], mats: &[&Dense<S>]) {
         assert_eq!(weights.len(), mats.len());
-        out.data.fill(0.0);
+        out.data.fill(S::zero());
         for (&w, m) in weights.iter().zip(mats.iter()) {
-            if w != 0.0 {
+            if w != S::zero() {
                 out.axpy(w, m);
             }
         }
+    }
+
+    /// In-place exact division of every entry by the integer `d`
+    /// ([`Scalar::exact_div`]) — the final step of the exact decode
+    /// combine, after products have been accumulated with LCM-scaled
+    /// integer weights.
+    pub fn exact_div_assign(&mut self, d: i64) {
+        for x in self.data.iter_mut() {
+            *x = x.exact_div(d);
+        }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Dense<S> {
+        Dense::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Deep copies of [`Dense`] since process start (alloc-regression
+    /// observability; see the `CLONES` static's doc). Process-global
+    /// across all backends.
+    pub fn clone_count() -> u64 {
+        CLONES.load(Ordering::Relaxed)
+    }
+
+    /// Fresh data-buffer allocations since process start: constructors,
+    /// clones, and [`Dense::reset`] calls that had to grow. Warm
+    /// scratch reuse (reset within capacity) does NOT count — which is
+    /// exactly what the recursion-arena tests pin to zero.
+    pub fn alloc_count() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+/// `f32`-only operations: RNG fill, float error metrics, and the direct
+/// packed-kernel entry point. These stay on the concrete type because
+/// they are meaningless (or lossy) over exact backends.
+impl Dense<f32> {
+    /// Uniform(-1, 1) random entries.
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Dense::from_fn(rows, cols, |_, _| (rng.uniform() * 2.0 - 1.0) as f32)
+    }
+
+    /// Packed cache-blocked matmul with the configured thread count
+    /// ([`crate::linalg::kernel::threads`]), bypassing the size
+    /// heuristic.
+    pub fn matmul_packed(&self, rhs: &Matrix) -> Matrix {
+        crate::linalg::kernel::matmul_packed(self, rhs, crate::linalg::kernel::threads())
     }
 
     /// Max absolute entry difference.
@@ -262,49 +309,44 @@ impl Matrix {
     pub fn approx_eq(&self, other: &Matrix, rtol: f32) -> bool {
         self.shape() == other.shape() && self.rel_error(other) <= rtol
     }
-
-    /// Transpose.
-    pub fn transpose(&self) -> Matrix {
-        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
-    }
 }
 
-impl Index<(usize, usize)> for Matrix {
-    type Output = f32;
+impl<S> Index<(usize, usize)> for Dense<S> {
+    type Output = S;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+    fn index(&self, (i, j): (usize, usize)) -> &S {
         &self.data[i * self.cols + j]
     }
 }
 
-impl IndexMut<(usize, usize)> for Matrix {
+impl<S> IndexMut<(usize, usize)> for Dense<S> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
         &mut self.data[i * self.cols + j]
     }
 }
 
-impl Add for &Matrix {
-    type Output = Matrix;
-    fn add(self, rhs: &Matrix) -> Matrix {
+impl<S: Scalar> Add for &Dense<S> {
+    type Output = Dense<S>;
+    fn add(self, rhs: &Dense<S>) -> Dense<S> {
         let mut out = self.clone();
-        out.axpy(1.0, rhs);
+        out.axpy(S::one(), rhs);
         out
     }
 }
 
-impl Sub for &Matrix {
-    type Output = Matrix;
-    fn sub(self, rhs: &Matrix) -> Matrix {
+impl<S: Scalar> Sub for &Dense<S> {
+    type Output = Dense<S>;
+    fn sub(self, rhs: &Dense<S>) -> Dense<S> {
         let mut out = self.clone();
-        out.axpy(-1.0, rhs);
+        out.axpy(-S::one(), rhs);
         out
     }
 }
 
-impl Neg for &Matrix {
-    type Output = Matrix;
-    fn neg(self) -> Matrix {
+impl<S: Scalar> Neg for &Dense<S> {
+    type Output = Dense<S>;
+    fn neg(self) -> Dense<S> {
         let mut out = self.clone();
         for x in out.data.iter_mut() {
             *x = -*x;
@@ -313,24 +355,24 @@ impl Neg for &Matrix {
     }
 }
 
-impl Mul<f32> for &Matrix {
-    type Output = Matrix;
-    fn mul(self, s: f32) -> Matrix {
+impl<S: Scalar> Mul<S> for &Dense<S> {
+    type Output = Dense<S>;
+    fn mul(self, s: S) -> Dense<S> {
         let mut out = self.clone();
         for x in out.data.iter_mut() {
-            *x *= s;
+            *x = *x * s;
         }
         out
     }
 }
 
-impl fmt::Debug for Matrix {
+impl<S: Scalar> fmt::Debug for Dense<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
         for i in 0..self.rows.min(8) {
             write!(f, "  ")?;
             for j in 0..self.cols.min(8) {
-                write!(f, "{:9.4} ", self[(i, j)])?;
+                write!(f, "{:>9} ", self[(i, j)])?;
             }
             writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
         }
@@ -344,6 +386,7 @@ impl fmt::Debug for Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algebra::fp::Fp31;
 
     #[test]
     fn identity_is_neutral() {
@@ -535,5 +578,38 @@ mod tests {
         a.matmul_naive_into(&b, &mut out);
         assert_eq!(out.shape(), (6, 4));
         assert_eq!(out.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn generic_matmul_is_exact_over_i64_and_fp() {
+        // Same integer seed matrices over three exact-capable backends
+        // must agree entry-for-entry once mapped through from_i64.
+        let ents_a = |i: usize, j: usize| (i * 3 + j) as i64 - 4;
+        let ents_b = |i: usize, j: usize| 2 - (i as i64) * (j as i64);
+        let ai: Dense<i64> = Dense::from_i64_fn(3, 3, ents_a);
+        let bi: Dense<i64> = Dense::from_i64_fn(3, 3, ents_b);
+        let ci = ai.matmul(&bi);
+        let af: Dense<Fp31> = Dense::from_i64_fn(3, 3, ents_a);
+        let bf: Dense<Fp31> = Dense::from_i64_fn(3, 3, ents_b);
+        let cf = af.matmul(&bf);
+        let a32: Matrix = Dense::from_i64_fn(3, 3, ents_a);
+        let b32: Matrix = Dense::from_i64_fn(3, 3, ents_b);
+        let c32 = a32.matmul_naive(&b32);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(Fp31::from_i64(ci[(i, j)]), cf[(i, j)]);
+                assert_eq!(ci[(i, j)] as f32, c32[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_div_assign_divides_entries() {
+        let mut m: Dense<i64> = Dense::from_slice(1, 3, &[6, -12, 0]);
+        m.exact_div_assign(3);
+        assert_eq!(m.as_slice(), &[2, -4, 0]);
+        let mut f = Matrix::from_slice(1, 2, &[1.0, 3.0]);
+        f.exact_div_assign(2);
+        assert_eq!(f.as_slice(), &[0.5, 1.5]);
     }
 }

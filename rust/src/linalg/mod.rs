@@ -11,8 +11,10 @@ pub mod blocked;
 pub mod kernel;
 pub mod matrix;
 pub mod recursive;
+pub mod scalar;
 
 pub use blocked::{join_blocks, split_blocks, split_blocks_into};
 pub use kernel::KernelKind;
-pub use matrix::Matrix;
+pub use matrix::{Dense, Matrix};
 pub use recursive::{scheme_mm, scheme_mm_into, strassen_mm, winograd_mm, RecursiveConfig};
+pub use scalar::Scalar;

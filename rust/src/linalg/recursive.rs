@@ -1,13 +1,19 @@
-//! Multi-level recursive Strassen-like multiplication in pure Rust.
+//! Multi-level recursive Strassen-like multiplication in pure Rust,
+//! generic over the [`Scalar`] backend.
 //!
 //! Applies any [`BilinearScheme`] recursively down to a measured
 //! crossover, where leaves route **explicitly** to a compute kernel
-//! ([`RecursiveConfig::leaf`] → [`kernel::matmul_into`]) instead of
-//! through `Matrix::matmul`'s process-wide dispatch — a recursion
-//! benchmark or test can therefore never be skewed by global kernel
-//! state. The distributed coordinator applies the scheme at the *top*
-//! level only (one worker per product); this module provides the
-//! single-node substrate and the ground truth for benchmarks.
+//! ([`RecursiveConfig::leaf`] → [`Scalar::kernel_matmul_into`], which
+//! for `f32` is [`kernel::matmul_into`]) instead of through
+//! `Matrix::matmul`'s process-wide dispatch — a recursion benchmark or
+//! test can therefore never be skewed by global kernel state. The
+//! distributed coordinator applies the scheme at the *top* level only
+//! (one worker per product); this module provides the single-node
+//! substrate and the ground truth for benchmarks. Over exact backends
+//! (`i64`, `Fp<P>`) the recursion is exact end-to-end: every encode
+//! coefficient and output coefficient is an integer, so no division
+//! ever happens (`tests/scalar_conformance.rs` pins `==` equality with
+//! the naive oracle).
 //!
 //! # Recursion arena
 //!
@@ -15,14 +21,16 @@
 //! operand, the two encoded leaf operands, the product buffer, and (for
 //! odd dimensions) zero-padded operand/result images. A naive
 //! implementation allocates all of these per level per call — 17+
-//! allocations per node of the recursion tree. This module instead
-//! keeps a **thread-local arena**: a `Vec<LevelScratch>` indexed by
-//! recursion level, pre-sized before descent, with every buffer grown
-//! in place via [`Matrix::reset`] and reused across calls on the same
-//! thread. At steady state a warm recursive multiply performs **zero**
-//! matrix allocations and zero clones (pinned by
-//! `tests/recursive_arena.rs` via [`Matrix::alloc_count`] /
-//! [`Matrix::clone_count`]).
+//! allocations per node of the recursion tree. For the `f32` hot path
+//! this module instead keeps a **thread-local arena**: a
+//! `Vec<RecScratch>` indexed by recursion level, pre-sized before
+//! descent, with every buffer grown in place via [`Dense::reset`] and
+//! reused across calls on the same thread. At steady state a warm
+//! recursive multiply performs **zero** matrix allocations and zero
+//! clones (pinned by `tests/recursive_arena.rs` via
+//! [`Dense::alloc_count`] / [`Dense::clone_count`]). Other backends
+//! take [`Scalar::with_rec_arena`]'s default — a fresh arena per call —
+//! because they are correctness/test paths, not the serving hot path.
 //!
 //! Ownership during descent is handled by slice splitting: level `d`
 //! takes the head of the remaining arena slice (`split_first_mut`) and
@@ -44,7 +52,8 @@
 use crate::algorithms::scheme::BilinearScheme;
 use crate::linalg::blocked::{encode_operand_into, split_blocks_into};
 use crate::linalg::kernel::{self, KernelKind};
-use crate::linalg::matrix::Matrix;
+use crate::linalg::matrix::Dense;
+use crate::linalg::scalar::Scalar;
 use std::cell::RefCell;
 
 /// Recursion parameters.
@@ -75,7 +84,9 @@ pub struct RecursiveConfig {
     pub max_depth: usize,
     /// Kernel the leaves route to — explicit, NOT the process-wide
     /// [`kernel::set_default`] choice. `Simd` falls back to the scalar
-    /// packed kernel on CPUs without the features.
+    /// packed kernel on CPUs without the features. Only the `f32`
+    /// backend has real kernel variants; other backends run the naive
+    /// loop regardless.
     pub leaf: KernelKind,
 }
 
@@ -85,24 +96,27 @@ impl Default for RecursiveConfig {
     }
 }
 
-/// Per-level scratch: operand blocks, encoded leaf operands, the
-/// product buffer, and the odd-dimension padding images. All buffers
-/// start empty and grow in place on first use at their level's size.
-struct LevelScratch {
-    ablocks: [Matrix; 4],
-    bblocks: [Matrix; 4],
-    left: Matrix,
-    right: Matrix,
-    prod: Matrix,
-    a_pad: Matrix,
-    b_pad: Matrix,
-    c_pad: Matrix,
+/// Per-level recursion scratch: operand blocks, encoded leaf operands,
+/// the product buffer, and the odd-dimension padding images. All
+/// buffers start empty and grow in place on first use at their level's
+/// size. Public only because it appears in the [`Scalar::with_rec_arena`]
+/// hook signature; the fields are implementation detail.
+pub struct RecScratch<S> {
+    ablocks: [Dense<S>; 4],
+    bblocks: [Dense<S>; 4],
+    left: Dense<S>,
+    right: Dense<S>,
+    prod: Dense<S>,
+    a_pad: Dense<S>,
+    b_pad: Dense<S>,
+    c_pad: Dense<S>,
 }
 
-impl LevelScratch {
-    fn empty() -> Self {
-        let z = || Matrix::zeros(0, 0);
-        LevelScratch {
+impl<S: Scalar> RecScratch<S> {
+    /// All-empty scratch (buffers grow on first use at their level).
+    pub fn empty() -> Self {
+        let z = || Dense::zeros(0, 0);
+        RecScratch {
             ablocks: [z(), z(), z(), z()],
             bblocks: [z(), z(), z(), z()],
             left: z(),
@@ -116,10 +130,26 @@ impl LevelScratch {
 }
 
 thread_local! {
-    /// The recursion arena, reused across every recursive multiply on
-    /// this thread (worker threads are persistent, so the buffers reach
-    /// steady state after the first call at a given size).
-    static ARENA: RefCell<Vec<LevelScratch>> = const { RefCell::new(Vec::new()) };
+    /// The f32 recursion arena, reused across every recursive multiply
+    /// on this thread (worker threads are persistent, so the buffers
+    /// reach steady state after the first call at a given size).
+    static ARENA: RefCell<Vec<RecScratch<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` against the thread-local f32 arena, grown to at least
+/// `depth_bound` levels — the `f32` override of
+/// [`Scalar::with_rec_arena`].
+pub(crate) fn with_thread_local_arena<R>(
+    depth_bound: usize,
+    f: impl FnOnce(&mut [RecScratch<f32>]) -> R,
+) -> R {
+    ARENA.with(|cell| {
+        let mut arena = cell.borrow_mut();
+        if arena.len() < depth_bound {
+            arena.resize_with(depth_bound, RecScratch::empty);
+        }
+        f(&mut arena[..])
+    })
 }
 
 /// Worst-case arena levels for an `n`-row multiply: each halving step
@@ -134,20 +164,25 @@ fn arena_depth_bound(n: usize) -> usize {
 /// Any shapes multiply: dimensions odd at some level are zero-padded to
 /// even for that level (see the module docs), so non-square and
 /// non-power-of-two sizes keep their recursion savings.
-pub fn scheme_mm(scheme: &BilinearScheme, a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
-    let mut out = Matrix::zeros(0, 0);
+pub fn scheme_mm<S: Scalar>(
+    scheme: &BilinearScheme,
+    a: &Dense<S>,
+    b: &Dense<S>,
+    cfg: &RecursiveConfig,
+) -> Dense<S> {
+    let mut out = Dense::zeros(0, 0);
     scheme_mm_into(scheme, a, b, &mut out, cfg);
     out
 }
 
 /// [`scheme_mm`] into a caller-owned buffer (reshaped and zeroed in
 /// place) — together with the warm arena, a steady-state recursive
-/// multiply that performs zero matrix allocations.
-pub fn scheme_mm_into(
+/// multiply that performs zero matrix allocations on the `f32` backend.
+pub fn scheme_mm_into<S: Scalar>(
     scheme: &BilinearScheme,
-    a: &Matrix,
-    b: &Matrix,
-    out: &mut Matrix,
+    a: &Dense<S>,
+    b: &Dense<S>,
+    out: &mut Dense<S>,
     cfg: &RecursiveConfig,
 ) {
     assert_eq!(
@@ -157,51 +192,47 @@ pub fn scheme_mm_into(
         a.shape(),
         b.shape()
     );
-    ARENA.with(|cell| {
-        let mut arena = cell.borrow_mut();
-        let bound = arena_depth_bound(a.rows().max(1));
-        if arena.len() < bound {
-            arena.resize_with(bound, LevelScratch::empty);
-        }
-        mm_rec(scheme, a, b, out, cfg, 0, &mut arena[..]);
+    let bound = arena_depth_bound(a.rows().max(1));
+    S::with_rec_arena(bound, |arena| {
+        mm_rec(scheme, a, b, out, cfg, 0, arena);
     });
 }
 
-fn mm_rec(
+fn mm_rec<S: Scalar>(
     scheme: &BilinearScheme,
-    a: &Matrix,
-    b: &Matrix,
-    out: &mut Matrix,
+    a: &Dense<S>,
+    b: &Dense<S>,
+    out: &mut Dense<S>,
     cfg: &RecursiveConfig,
     depth: usize,
-    arena: &mut [LevelScratch],
+    arena: &mut [RecScratch<S>],
 ) {
     let (m, k) = a.shape();
     let n = b.cols();
     // `m <= 1` is a leaf regardless of the crossover: a 1-row operand
     // would otherwise pad to 2 and split back to 1 forever.
     if m <= cfg.crossover.max(1) || depth >= cfg.max_depth {
-        kernel::matmul_into(cfg.leaf, a, b, out, kernel::threads());
+        S::kernel_matmul_into(cfg.leaf, a, b, out, kernel::threads());
         return;
     }
     let Some((lvl, rest)) = arena.split_first_mut() else {
         // Unreachable for the bound computed in `scheme_mm_into`
         // (debug-checked); degrade to a leaf rather than crash.
         debug_assert!(false, "recursion arena exhausted at depth {depth}");
-        kernel::matmul_into(cfg.leaf, a, b, out, kernel::threads());
+        S::kernel_matmul_into(cfg.leaf, a, b, out, kernel::threads());
         return;
     };
     if m % 2 != 0 || k % 2 != 0 || n % 2 != 0 {
         // One level of zero-padding to even, then recurse at the SAME
         // depth — the padded multiply does the actual splitting.
-        let LevelScratch { a_pad, b_pad, c_pad, .. } = lvl;
+        let RecScratch { a_pad, b_pad, c_pad, .. } = lvl;
         pad_to_even_into(a_pad, a);
         pad_to_even_into(b_pad, b);
         mm_rec(scheme, a_pad, b_pad, c_pad, cfg, depth, rest);
         copy_top_left_into(out, c_pad, m, n);
         return;
     }
-    let LevelScratch { ablocks, bblocks, left, right, prod, .. } = lvl;
+    let RecScratch { ablocks, bblocks, left, right, prod, .. } = lvl;
     split_blocks_into(ablocks, a);
     split_blocks_into(bblocks, b);
     let (hr, hc) = (m / 2, n / 2);
@@ -219,14 +250,14 @@ fn mm_rec(
         for (t, coeffs) in scheme.output.iter().enumerate() {
             let coef = coeffs[i];
             if coef != 0 {
-                out.add_scaled_region((t / 2) * hr, (t % 2) * hc, coef as f32, prod);
+                out.add_scaled_region((t / 2) * hr, (t % 2) * hc, S::from_i64(coef as i64), prod);
             }
         }
     }
 }
 
 /// Zero-pad `x` by one trailing row/column as needed to even dims.
-fn pad_to_even_into(out: &mut Matrix, x: &Matrix) {
+fn pad_to_even_into<S: Scalar>(out: &mut Dense<S>, x: &Dense<S>) {
     let (r, c) = x.shape();
     let (pr, pc) = (r + r % 2, c + c % 2);
     out.reset(pr, pc); // zeroed: the pad row/column stays 0
@@ -238,7 +269,7 @@ fn pad_to_even_into(out: &mut Matrix, x: &Matrix) {
 }
 
 /// Copy the top-left `r × c` window of `padded` into `out`.
-fn copy_top_left_into(out: &mut Matrix, padded: &Matrix, r: usize, c: usize) {
+fn copy_top_left_into<S: Scalar>(out: &mut Dense<S>, padded: &Dense<S>, r: usize, c: usize) {
     debug_assert!(padded.rows() >= r && padded.cols() >= c);
     out.reset(r, c);
     let pc = padded.cols();
@@ -250,12 +281,12 @@ fn copy_top_left_into(out: &mut Matrix, padded: &Matrix, r: usize, c: usize) {
 }
 
 /// Recursive Strassen multiply.
-pub fn strassen_mm(a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
+pub fn strassen_mm<S: Scalar>(a: &Dense<S>, b: &Dense<S>, cfg: &RecursiveConfig) -> Dense<S> {
     scheme_mm(&crate::algorithms::strassen(), a, b, cfg)
 }
 
 /// Recursive Winograd multiply.
-pub fn winograd_mm(a: &Matrix, b: &Matrix, cfg: &RecursiveConfig) -> Matrix {
+pub fn winograd_mm<S: Scalar>(a: &Dense<S>, b: &Dense<S>, cfg: &RecursiveConfig) -> Dense<S> {
     scheme_mm(&crate::algorithms::winograd(), a, b, cfg)
 }
 
@@ -273,7 +304,9 @@ pub fn multiplication_count(num_products: usize, n: usize, crossover: usize) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algebra::fp::Fp31;
     use crate::algorithms::{naive8, strassen, winograd};
+    use crate::linalg::matrix::Matrix;
     use crate::sim::rng::Rng;
 
     fn check(scheme: &BilinearScheme, n: usize, crossover: usize) {
@@ -310,6 +343,24 @@ mod tests {
     #[test]
     fn naive8_recursive_matches_naive() {
         check(&naive8(), 32, 4);
+    }
+
+    #[test]
+    fn exact_backends_recurse_exactly() {
+        // Over i64 and Fp the recursion involves no division at all, so
+        // the result must equal the naive oracle with `==` — the
+        // single-node version of the conformance suite's theorem.
+        let mut rng = Rng::seeded(83);
+        let ents: Vec<i64> = (0..2 * 24 * 24).map(|_| rng.below(7) as i64 - 3).collect();
+        let cfg = RecursiveConfig { crossover: 4, max_depth: 8, ..Default::default() };
+
+        let a: Dense<i64> = Dense::from_i64_fn(24, 24, |i, j| ents[i * 24 + j]);
+        let b: Dense<i64> = Dense::from_i64_fn(24, 24, |i, j| ents[24 * 24 + i * 24 + j]);
+        assert_eq!(strassen_mm(&a, &b, &cfg), a.matmul_naive(&b));
+
+        let af: Dense<Fp31> = Dense::from_i64_fn(24, 24, |i, j| ents[i * 24 + j]);
+        let bf: Dense<Fp31> = Dense::from_i64_fn(24, 24, |i, j| ents[24 * 24 + i * 24 + j]);
+        assert_eq!(winograd_mm(&af, &bf, &cfg), af.matmul_naive(&bf));
     }
 
     #[test]

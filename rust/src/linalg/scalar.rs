@@ -1,0 +1,252 @@
+//! The scalar-backend abstraction under [`Dense`]: one trait capturing
+//! exactly the arithmetic the Strassen-like stack needs — ring ops
+//! (add, mul, neg) plus **exact division by the small integers the
+//! decoder emits** (LCMs of dyadic weight denominators).
+//!
+//! Backends:
+//!
+//! | backend | arithmetic | exact? | fast kernels |
+//! |---------|-----------|--------|--------------|
+//! | `f32`   | IEEE single | dyadic-exact only | packed/SIMD + thread-local recursion arena |
+//! | `f64`   | IEEE double | dyadic-exact only | naive reference loop |
+//! | `i64`   | machine integers (overflow-checked in debug builds) | yes | naive reference loop |
+//! | [`Fp<P>`](crate::algebra::fp::Fp) | prime field, Barrett reduction | yes | naive reference loop |
+//!
+//! The `f32` impl overrides the three kernel hooks so the serving hot
+//! path is byte-for-byte the pre-refactor code: `matmul` still routes
+//! through `kernel::dispatch`, recursive leaves still hit
+//! [`kernel::matmul_into`], and the recursion scratch still lives in
+//! the thread-local arena pinned by `tests/recursive_arena.rs`. Every
+//! other backend takes the default hooks (naive loop, fresh per-call
+//! scratch) — correctness-first paths exercised by
+//! `tests/scalar_conformance.rs`.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, Mul, Neg, Sub};
+
+use crate::linalg::kernel::{self, KernelKind};
+use crate::linalg::matrix::Dense;
+use crate::linalg::recursive::{self, RecScratch};
+
+/// Element type of [`Dense`]: a commutative ring with the extra
+/// operations the coded-multiplication stack needs.
+///
+/// The contract that makes exact decoding a theorem rather than a
+/// tolerance: for any integers `n` and `d ≠ 0` representable in the
+/// backend, if a matrix entry holds a value `x` with `x = d · y` for
+/// some representable `y`, then `x.exact_div(d) == y` exactly. The
+/// decoder only ever divides by LCMs of its weight denominators (powers
+/// of two for the paper's schemes), after scaling the combination to
+/// integer weights — see `SpanDecoder::combine_exact_into`.
+pub trait Scalar:
+    Copy
+    + PartialEq
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Neg<Output = Self>
+{
+    /// Short stable name used in test/bench labels (`"f32"`, `"fp"`, …).
+    const BACKEND_NAME: &'static str;
+
+    /// True when ring arithmetic is exact (no rounding): `i64` and
+    /// [`Fp<P>`](crate::algebra::fp::Fp). Float backends are exact only on dyadic values within
+    /// mantissa range, which the conformance suite exploits but cannot
+    /// assume in general.
+    const IS_EXACT: bool;
+
+    /// Additive identity.
+    fn zero() -> Self;
+
+    /// Multiplicative identity.
+    fn one() -> Self;
+
+    /// Canonical image of an integer (ring homomorphism from ℤ; reduces
+    /// mod `P` for prime fields, lossy above 2^24/2^53 for f32/f64).
+    fn from_i64(v: i64) -> Self;
+
+    /// Exact division by a nonzero integer `d`, assuming divisibility
+    /// (see the trait docs). Panics when the quotient is not
+    /// representable: `i64` asserts divisibility, [`Fp<P>`](crate::algebra::fp::Fp) asserts
+    /// `gcd(d, P) == 1`.
+    fn exact_div(self, d: i64) -> Self;
+
+    /// Allocating matmul hook behind [`Dense::matmul`]. Default: the
+    /// naive reference loop. `f32` overrides to the process-wide kernel
+    /// dispatch (packed/SIMD above the size break-even).
+    fn matmul_alloc(lhs: &Dense<Self>, rhs: &Dense<Self>) -> Dense<Self> {
+        lhs.matmul_naive(rhs)
+    }
+
+    /// Leaf-kernel hook for the recursive multiply: compute
+    /// `lhs · rhs` into `out` with an explicitly requested kernel.
+    /// Default ignores `kind`/`threads` and runs the naive loop; `f32`
+    /// overrides to [`kernel::matmul_into`] so `--kernel
+    /// {naive,packed,simd}` keeps selecting real kernels.
+    fn kernel_matmul_into(
+        kind: KernelKind,
+        lhs: &Dense<Self>,
+        rhs: &Dense<Self>,
+        out: &mut Dense<Self>,
+        threads: usize,
+    ) {
+        let _ = (kind, threads);
+        lhs.matmul_naive_into(rhs, out);
+    }
+
+    /// Recursion-scratch hook for `scheme_mm`: hand `f` an arena of at
+    /// least `depth_bound` levels. Default allocates a fresh arena per
+    /// call (correct everywhere, cold path); `f32` overrides to the
+    /// thread-local arena that makes warm recursive multiplies
+    /// allocation-free.
+    fn with_rec_arena<R>(depth_bound: usize, f: impl FnOnce(&mut [RecScratch<Self>]) -> R) -> R {
+        let mut arena: Vec<RecScratch<Self>> = Vec::new();
+        arena.resize_with(depth_bound, RecScratch::empty);
+        f(&mut arena)
+    }
+}
+
+impl Scalar for f32 {
+    const BACKEND_NAME: &'static str = "f32";
+    const IS_EXACT: bool = false;
+
+    fn zero() -> f32 {
+        0.0
+    }
+
+    fn one() -> f32 {
+        1.0
+    }
+
+    fn from_i64(v: i64) -> f32 {
+        v as f32
+    }
+
+    fn exact_div(self, d: i64) -> f32 {
+        // Exact whenever `self = d·y` with both representable (the
+        // decoder's divisors are powers of two, where this is a pure
+        // exponent shift).
+        self / d as f32
+    }
+
+    fn matmul_alloc(lhs: &Dense<f32>, rhs: &Dense<f32>) -> Dense<f32> {
+        kernel::dispatch(lhs, rhs)
+    }
+
+    fn kernel_matmul_into(
+        kind: KernelKind,
+        lhs: &Dense<f32>,
+        rhs: &Dense<f32>,
+        out: &mut Dense<f32>,
+        threads: usize,
+    ) {
+        kernel::matmul_into(kind, lhs, rhs, out, threads);
+    }
+
+    fn with_rec_arena<R>(depth_bound: usize, f: impl FnOnce(&mut [RecScratch<f32>]) -> R) -> R {
+        recursive::with_thread_local_arena(depth_bound, f)
+    }
+}
+
+impl Scalar for f64 {
+    const BACKEND_NAME: &'static str = "f64";
+    const IS_EXACT: bool = false;
+
+    fn zero() -> f64 {
+        0.0
+    }
+
+    fn one() -> f64 {
+        1.0
+    }
+
+    fn from_i64(v: i64) -> f64 {
+        v as f64
+    }
+
+    fn exact_div(self, d: i64) -> f64 {
+        self / d as f64
+    }
+}
+
+impl Scalar for i64 {
+    const BACKEND_NAME: &'static str = "i64";
+    const IS_EXACT: bool = true;
+
+    fn zero() -> i64 {
+        0
+    }
+
+    fn one() -> i64 {
+        1
+    }
+
+    fn from_i64(v: i64) -> i64 {
+        v
+    }
+
+    fn exact_div(self, d: i64) -> i64 {
+        assert!(d != 0, "exact_div by zero");
+        assert!(self % d == 0, "exact_div: {self} is not divisible by {d}");
+        self / d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::fp::Fp31;
+
+    #[test]
+    fn integer_images_are_ring_homomorphic() {
+        for v in [-7i64, -1, 0, 1, 2, 63] {
+            assert_eq!(f32::from_i64(v), v as f32);
+            assert_eq!(f64::from_i64(v), v as f64);
+            assert_eq!(i64::from_i64(v), v);
+            for w in [-3i64, 0, 5] {
+                assert_eq!(Fp31::from_i64(v) + Fp31::from_i64(w), Fp31::from_i64(v + w));
+                assert_eq!(Fp31::from_i64(v) * Fp31::from_i64(w), Fp31::from_i64(v * w));
+                assert_eq!(-Fp31::from_i64(v), Fp31::from_i64(-v));
+            }
+        }
+    }
+
+    #[test]
+    fn exact_div_inverts_integer_scaling() {
+        for d in [1i64, 2, 4, 8, -2] {
+            for y in [-5i64, 0, 3, 17] {
+                let x = d * y;
+                assert_eq!(i64::from_i64(x).exact_div(d), y);
+                assert_eq!(f32::from_i64(x).exact_div(d), y as f32);
+                assert_eq!(f64::from_i64(x).exact_div(d), y as f64);
+                assert_eq!(Fp31::from_i64(x).exact_div(d), Fp31::from_i64(y));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn i64_exact_div_checks_divisibility() {
+        let _ = 7i64.exact_div(2);
+    }
+
+    #[test]
+    fn backend_names_are_distinct() {
+        let names = [
+            <f32 as Scalar>::BACKEND_NAME,
+            <f64 as Scalar>::BACKEND_NAME,
+            <i64 as Scalar>::BACKEND_NAME,
+            <Fp31 as Scalar>::BACKEND_NAME,
+        ];
+        for (i, a) in names.iter().enumerate() {
+            for b in names.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -179,6 +179,26 @@ mod tests {
     }
 
     #[test]
+    fn live_search_reproduces_the_golden_fixture_exactly() {
+        // The checked-in fixture is the one source of truth for the
+        // Table-II relation set: tests that only consume relations load
+        // it instead of re-running the exhaustive search, and this test
+        // pins the live search against it so neither can drift.
+        let res = search_lp(
+            &sw_forms(),
+            &SearchOptions { max_k: 8, minimal_only: true, collect_parities: false },
+        );
+        let mut live = res.relations;
+        dedup(&mut live);
+        let golden = crate::testkit::golden::sw_relations();
+        assert_eq!(
+            live, golden,
+            "search_lp output diverged from testkit/golden_sw_relations.txt — \
+             regenerate the fixture if the search changed intentionally"
+        );
+    }
+
+    #[test]
     fn summary_mentions_every_target() {
         let res = search_lp(&sw_forms(), &SearchOptions { max_k: 5, ..Default::default() });
         let s = summarize(&res, 5);

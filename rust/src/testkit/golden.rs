@@ -1,0 +1,107 @@
+//! Golden vectors for the computer-aided search (paper Table II).
+//!
+//! `golden_sw_relations.txt` is the full `search_lp` output over the 14
+//! joint Strassen+Winograd products with the default options (`max_k =
+//! 8`, minimal relations only), serialized once and checked in. Tests
+//! that only need the *relations* — the peeling decoder, the Table-II
+//! summaries — load this fixture instead of re-running the exhaustive
+//! ~3^14-node enumeration, and `search::relations` pins the live search
+//! against it so the fixture can never drift from the code.
+//!
+//! Format: one relation per line, `TARGET ±IDX ±IDX …`, targets named
+//! `C11`/`C12`/`C21`/`C22`, indices 0..6 = S1..S7 and 7..13 = W1..W7,
+//! lines sorted by `(target, terms)` — the canonical order of
+//! [`crate::search::relations::dedup`].
+
+use crate::algebra::form::Target;
+use crate::search::searchlp::LocalRelation;
+
+/// Number of products the fixture's indices range over (S1..S7, W1..W7).
+pub const SW_NUM_PRODUCTS: usize = 14;
+
+const SW_RELATIONS_TXT: &str = include_str!("golden_sw_relations.txt");
+
+/// Parse the golden Strassen+Winograd relation fixture.
+///
+/// Panics on any malformed line — a broken fixture should fail loudly in
+/// whatever test loads it, not decode incorrectly.
+pub fn sw_relations() -> Vec<LocalRelation> {
+    SW_RELATIONS_TXT
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(parse_line)
+        .collect()
+}
+
+fn parse_line(line: &str) -> LocalRelation {
+    let mut fields = line.split_whitespace();
+    let tname = fields.next().unwrap_or_else(|| panic!("empty fixture line"));
+    let target = Target::ALL
+        .into_iter()
+        .find(|t| t.name() == tname)
+        .unwrap_or_else(|| panic!("bad target {tname:?} in fixture line {line:?}"));
+    let terms: Vec<(usize, i32)> = fields
+        .map(|tok| {
+            let (sign, digits) = match tok.as_bytes()[0] {
+                b'+' => (1, &tok[1..]),
+                b'-' => (-1, &tok[1..]),
+                _ => panic!("term {tok:?} missing sign in fixture line {line:?}"),
+            };
+            let idx: usize = digits
+                .parse()
+                .unwrap_or_else(|e| panic!("bad index {digits:?} in {line:?}: {e}"));
+            assert!(idx < SW_NUM_PRODUCTS, "index {idx} out of range in {line:?}");
+            (idx, sign)
+        })
+        .collect();
+    assert!(!terms.is_empty(), "relation with no terms in {line:?}");
+    LocalRelation { target, terms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{strassen, winograd};
+    use crate::search::relations::verify_all;
+
+    #[test]
+    fn fixture_parses_and_every_relation_verifies_symbolically() {
+        let rels = sw_relations();
+        assert_eq!(rels.len(), 43);
+        let mut forms = strassen().forms();
+        forms.extend(winograd().forms());
+        verify_all(&rels, &forms).unwrap();
+    }
+
+    #[test]
+    fn fixture_contains_the_papers_numbered_equations() {
+        let rels = sw_relations();
+        // Eq. (1): C11 = S1 + S4 - S5 + S7.
+        assert!(rels.contains(&LocalRelation {
+            target: Target::C11,
+            terms: vec![(0, 1), (3, 1), (4, -1), (6, 1)],
+        }));
+        // Eq. (3): C21 = S2 + S4.
+        assert!(rels
+            .contains(&LocalRelation { target: Target::C21, terms: vec![(1, 1), (3, 1)] }));
+        // Eq. (8): C22 = S3 + S5 + W4 - W6.
+        assert!(rels.contains(&LocalRelation {
+            target: Target::C22,
+            terms: vec![(2, 1), (4, 1), (10, 1), (12, -1)],
+        }));
+    }
+
+    #[test]
+    fn fixture_is_in_canonical_dedup_order() {
+        let rels = sw_relations();
+        let mut sorted = rels.clone();
+        crate::search::relations::dedup(&mut sorted);
+        assert_eq!(rels, sorted, "fixture lines out of canonical order");
+    }
+
+    #[test]
+    #[should_panic(expected = "missing sign")]
+    fn parser_rejects_unsigned_terms() {
+        let _ = parse_line("C11 3");
+    }
+}

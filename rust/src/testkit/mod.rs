@@ -7,6 +7,8 @@
 
 use crate::sim::rng::Rng;
 
+pub mod golden;
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct PropConfig {
@@ -53,7 +55,27 @@ where
 
 /// Generators for common shapes.
 pub mod gen {
+    use crate::linalg::matrix::Dense;
+    use crate::linalg::scalar::Scalar;
     use crate::sim::rng::Rng;
+
+    /// Random small-integer matrix over any scalar backend. Each entry is
+    /// `S::from_i64(x)` with `x` uniform in `[-max_abs, max_abs]`; the
+    /// integer draws depend only on the RNG state, so the same seed
+    /// yields the *same underlying integer matrix* on every backend —
+    /// the foundation of the cross-backend conformance suite
+    /// (`tests/scalar_conformance.rs`), which compares decoded outputs
+    /// with `==` across `f32`/`f64`/`i64`/`Fp`.
+    pub fn int_matrix<S: Scalar>(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        max_abs: i64,
+    ) -> Dense<S> {
+        assert!(max_abs >= 0);
+        let span = (2 * max_abs + 1) as u64;
+        Dense::from_i64_fn(rows, cols, |_, _| rng.below(span) as i64 - max_abs)
+    }
 
     /// Random subset of 0..n as a bitmask.
     pub fn subset_mask(rng: &mut Rng, n: usize) -> u64 {
@@ -125,6 +147,23 @@ mod tests {
             let c = gen::sign_coeffs(&mut rng);
             assert!(c.iter().any(|&x| x != 0));
             assert!(c.iter().all(|&x| (-1..=1).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn int_matrix_draws_the_same_integers_on_every_backend() {
+        use crate::algebra::fp::Fp31;
+        use crate::linalg::matrix::Dense;
+        use crate::linalg::scalar::Scalar;
+        let a: Dense<i64> = gen::int_matrix(&mut Rng::seeded(9), 5, 3, 4);
+        let b: Dense<f32> = gen::int_matrix(&mut Rng::seeded(9), 5, 3, 4);
+        let c: Dense<Fp31> = gen::int_matrix(&mut Rng::seeded(9), 5, 3, 4);
+        for i in 0..5 {
+            for j in 0..3 {
+                assert!((-4..=4).contains(&a[(i, j)]));
+                assert_eq!(b[(i, j)], f32::from_i64(a[(i, j)]));
+                assert_eq!(c[(i, j)], Fp31::from_i64(a[(i, j)]));
+            }
         }
     }
 }

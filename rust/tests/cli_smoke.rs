@@ -164,6 +164,74 @@ fn localmm_times_flat_against_recursive() {
 }
 
 #[test]
+fn localmm_covers_the_kernel_by_cutoff_matrix() {
+    // Every kernel route × two cutoffs must run, echo its configuration,
+    // and agree with the flat product (simd silently falls back to the
+    // scalar packed kernel off-AVX2 — the exit code and the check hold
+    // either way).
+    for kernel in ["naive", "packed", "simd"] {
+        for cutoff in ["16", "48"] {
+            let (stdout, stderr, ok) = run(&[
+                "localmm", "--n", "64", "--kernel", kernel, "--cutoff", cutoff,
+            ]);
+            assert!(ok, "kernel={kernel} cutoff={cutoff}:\n{stdout}\n{stderr}");
+            assert!(
+                stdout.contains(&format!("kernel={kernel}")),
+                "kernel={kernel} cutoff={cutoff}:\n{stdout}"
+            );
+            assert!(
+                stdout.contains(&format!("cutoff={cutoff}")),
+                "kernel={kernel} cutoff={cutoff}:\n{stdout}"
+            );
+            let err_line = stdout.lines().find(|l| l.contains("rel_error")).unwrap();
+            let v: f64 = err_line.rsplit('=').next().unwrap().trim().parse().unwrap();
+            assert!(v < 1e-3, "kernel={kernel} cutoff={cutoff}: rel error {v}");
+        }
+    }
+}
+
+#[test]
+fn localmm_depth_zero_means_unlimited() {
+    // `--max-depth 0` is the config sentinel for "no depth cap".
+    let (stdout, _, ok) = run(&[
+        "localmm", "--n", "64", "--kernel", "packed", "--cutoff", "16", "--max-depth", "0",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("max_depth=unlimited"), "{stdout}");
+}
+
+#[test]
+fn nested_multiply_covers_the_kernel_by_cutoff_matrix() {
+    // The nested dispatch path under each kernel route (the kernel flag
+    // is process-wide, so every worker product takes it) with an
+    // explicit cutoff: 196 leaves, tiny reconstruction error each time.
+    for kernel in ["naive", "packed", "simd"] {
+        let (stdout, stderr, ok) = run(&[
+            "multiply", "--n", "16", "--nest", "sw+0psmm:sw+0psmm",
+            "--backend", "native", "--kernel", kernel, "--cutoff", "32", "--seed", "7",
+        ]);
+        assert!(ok, "kernel={kernel}:\n{stdout}\n{stderr}");
+        assert!(stdout.contains("tasks=196"), "kernel={kernel}:\n{stdout}");
+        let err_line = stdout.lines().find(|l| l.contains("rel_error")).unwrap();
+        let v: f64 = err_line.rsplit('=').next().unwrap().trim().parse().unwrap();
+        assert!(v < 1e-3, "kernel={kernel}: rel error {v}");
+    }
+}
+
+#[test]
+fn nested_curves_accept_kernel_and_cutoff_flags() {
+    // The `nested` curves subcommand is simulation-only, but the shared
+    // flag surface must stay accepted (config parsing is common to all
+    // subcommands) without changing its output shape.
+    let (stdout, _, ok) = run(&[
+        "nested", "--trials", "1000", "--points", "2", "--kernel", "packed", "--cutoff", "32",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("sw+0psmm:sw+0psmm"), "{stdout}");
+    assert!(stdout.contains("first fatal k="), "{stdout}");
+}
+
+#[test]
 fn localmm_rejects_zero_cutoff() {
     let (_, stderr, ok) = run(&["localmm", "--n", "16", "--cutoff", "0"]);
     assert!(!ok);

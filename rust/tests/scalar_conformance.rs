@@ -1,0 +1,404 @@
+//! Cross-backend conformance suite — the contract of the [`Scalar`]
+//! refactor.
+//!
+//! For every backend (`f32`, `f64`, `i64`, `Fp31`), every kernel route
+//! (naive / packed / SIMD leaves, recursive at several cutoffs), and
+//! every recoverable erasure pattern of the paper's task sets (flat and
+//! nested), the decoded output must equal the ground-truth product with
+//! `==` — no epsilon anywhere.
+//!
+//! Exactness is unconditional over `i64` and `Fp` (ring arithmetic is
+//! exact and decode divisors are units). For the float backends the
+//! suite draws small-integer matrices so every intermediate is an
+//! integer far below the 2^24 (f32) / 2^53 (f64) mantissa bound and
+//! every decode division is by a power of two — making float routes
+//! bit-exact too, which is precisely what lets one `assert_eq!` pin all
+//! four backends to the same integer matrix.
+
+use ft_strassen::algebra::fp::Fp31;
+use ft_strassen::coding::decoder::SpanDecoder;
+use ft_strassen::coding::nested::NestedTaskSet;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::linalg::blocked::{encode_operand, split_blocks};
+use ft_strassen::linalg::kernel::{self, KernelKind};
+use ft_strassen::linalg::matrix::Dense;
+use ft_strassen::linalg::recursive::{strassen_mm, winograd_mm, RecursiveConfig};
+use ft_strassen::linalg::scalar::Scalar;
+use ft_strassen::sim::rng::Rng;
+use ft_strassen::testkit::gen::int_matrix;
+
+/// Entry bound for the random integer matrices. With 8×8 operands and
+/// |entry| ≤ 3, every encoded block entry is ≤ 12, every product entry
+/// ≤ 12·12·4 = 576, and every scaled decode combination stays below
+/// ~10^5 — integers exactly representable in f32.
+const MAX_ABS: i64 = 3;
+
+fn seeds() -> [u64; 4] {
+    [0x5ca1ab1e, 2, 3, 0xdec0de]
+}
+
+// ---------------------------------------------------------------------
+// Kernel routes: every way to multiply must agree exactly.
+// ---------------------------------------------------------------------
+
+/// `Dense::matmul` (the backend's `matmul_alloc` hook) vs the naive
+/// reference loop, on every backend.
+#[test]
+fn matmul_hook_equals_naive_reference_on_every_backend() {
+    fn check<S: Scalar>() {
+        for seed in seeds() {
+            let mut rng = Rng::seeded(seed);
+            let a: Dense<S> = int_matrix(&mut rng, 24, 16, MAX_ABS);
+            let b: Dense<S> = int_matrix(&mut rng, 16, 20, MAX_ABS);
+            assert_eq!(a.matmul(&b), a.matmul_naive(&b), "backend {}", S::BACKEND_NAME);
+        }
+    }
+    check::<f32>();
+    check::<f64>();
+    check::<i64>();
+    check::<Fp31>();
+}
+
+/// The three explicit f32 leaf kernels agree exactly on integer inputs
+/// (SIMD silently falls back to packed off-AVX2 — same contract).
+#[test]
+fn f32_kernels_agree_exactly_on_integer_inputs() {
+    for seed in seeds() {
+        let mut rng = Rng::seeded(seed);
+        let a: Dense<f32> = int_matrix(&mut rng, 48, 48, MAX_ABS);
+        let b: Dense<f32> = int_matrix(&mut rng, 48, 48, MAX_ABS);
+        let want = a.matmul_naive(&b);
+        for kind in [KernelKind::Naive, KernelKind::Packed, KernelKind::Simd] {
+            let mut got = Dense::<f32>::zeros(48, 48);
+            kernel::matmul_into(kind, &a, &b, &mut got, 1);
+            assert_eq!(got, want, "kernel {kind:?}");
+            let mut got_mt = Dense::<f32>::zeros(48, 48);
+            kernel::matmul_into(kind, &a, &b, &mut got_mt, 4);
+            assert_eq!(got_mt, want, "kernel {kind:?} (4 threads)");
+        }
+    }
+}
+
+/// Recursive Strassen/Winograd at several crossover/depth settings
+/// equals the flat product exactly, on every backend; for f32 the leaf
+/// kernel is swept too.
+#[test]
+fn recursive_routes_are_exact_on_every_backend() {
+    fn check<S: Scalar>() {
+        let mut rng = Rng::seeded(0xabcd);
+        let a: Dense<S> = int_matrix(&mut rng, 40, 40, MAX_ABS);
+        let b: Dense<S> = int_matrix(&mut rng, 40, 40, MAX_ABS);
+        let want = a.matmul_naive(&b);
+        for crossover in [4, 16] {
+            for max_depth in [2, usize::MAX] {
+                let cfg = RecursiveConfig { crossover, max_depth, ..Default::default() };
+                assert_eq!(
+                    strassen_mm(&a, &b, &cfg),
+                    want,
+                    "strassen backend={} crossover={crossover} depth={max_depth}",
+                    S::BACKEND_NAME
+                );
+                assert_eq!(
+                    winograd_mm(&a, &b, &cfg),
+                    want,
+                    "winograd backend={} crossover={crossover} depth={max_depth}",
+                    S::BACKEND_NAME
+                );
+            }
+        }
+    }
+    check::<f32>();
+    check::<f64>();
+    check::<i64>();
+    check::<Fp31>();
+
+    // f32 only: the recursive leaf kernel selection must not change bits.
+    let mut rng = Rng::seeded(0xabce);
+    let a: Dense<f32> = int_matrix(&mut rng, 40, 40, MAX_ABS);
+    let b: Dense<f32> = int_matrix(&mut rng, 40, 40, MAX_ABS);
+    let want = a.matmul_naive(&b);
+    for leaf in [KernelKind::Naive, KernelKind::Packed, KernelKind::Simd] {
+        let cfg = RecursiveConfig { crossover: 8, max_depth: 8, leaf };
+        assert_eq!(strassen_mm(&a, &b, &cfg), want, "leaf {leaf:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flat coded schemes: every recoverable erasure pattern decodes exactly.
+// ---------------------------------------------------------------------
+
+/// Worker products for a task set: split, encode per task, multiply.
+fn products<S: Scalar>(ts: &TaskSet, a: &Dense<S>, b: &Dense<S>) -> Vec<Dense<S>> {
+    let a4 = split_blocks(a);
+    let b4 = split_blocks(b);
+    ts.tasks
+        .iter()
+        .map(|t| encode_operand(&t.u, &a4).matmul(&encode_operand(&t.v, &b4)))
+        .collect()
+}
+
+/// Exact decode of one failure pattern; `None` when the span decoder
+/// reports the pattern unrecoverable.
+fn decode_pattern<S: Scalar>(
+    ts: &TaskSet,
+    all: &[Dense<S>],
+    failed_mask: u64,
+    n: usize,
+) -> Option<Dense<S>> {
+    let mut d = SpanDecoder::new(ts);
+    let mut decodable = false;
+    for i in 0..ts.num_tasks() {
+        if failed_mask & (1 << i) == 0 {
+            decodable = d.on_finished(i);
+        }
+    }
+    if !decodable {
+        return None;
+    }
+    let surviving: Vec<Option<Dense<S>>> = all
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (failed_mask & (1 << i) == 0).then(|| p.clone()))
+        .collect();
+    let mut out = Dense::<S>::zeros(n, n);
+    d.combine_exact_into(&surviving, &mut out).unwrap();
+    Some(out)
+}
+
+/// Every erasure pattern with at most `max_failures` failures that the
+/// span decoder accepts must reproduce the ground truth with `==`.
+fn check_flat_exhaustive<S: Scalar>(ts: &TaskSet, max_failures: u32) {
+    let n = 8;
+    let mut rng = Rng::seeded(0xf1a7 ^ ts.num_tasks() as u64);
+    let a: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+    let b: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+    let want = a.matmul_naive(&b);
+    let all = products(ts, &a, &b);
+    let m = ts.num_tasks();
+    let mut recovered = 0usize;
+    for mask in 0u64..(1 << m) {
+        if mask.count_ones() > max_failures {
+            continue;
+        }
+        match decode_pattern(ts, &all, mask, n) {
+            Some(got) => {
+                assert_eq!(
+                    got, want,
+                    "backend {} scheme {} failed-mask {mask:#x}",
+                    S::BACKEND_NAME, ts.name
+                );
+                recovered += 1;
+            }
+            None => assert!(
+                !ts.decodable_with_failures(mask),
+                "span decoder missed recoverable mask {mask:#x} on {}",
+                ts.name
+            ),
+        }
+    }
+    assert!(recovered > 0, "no recoverable pattern exercised on {}", ts.name);
+}
+
+#[test]
+fn flat_decode_is_exact_for_all_small_erasures_i64() {
+    check_flat_exhaustive::<i64>(&TaskSet::replication(&ft_strassen::algorithms::strassen(), 1), 2);
+    check_flat_exhaustive::<i64>(&TaskSet::strassen_winograd(0), 2);
+    check_flat_exhaustive::<i64>(&TaskSet::strassen_winograd(2), 3);
+}
+
+#[test]
+fn flat_decode_is_exact_for_all_small_erasures_fp31() {
+    check_flat_exhaustive::<Fp31>(&TaskSet::strassen_winograd(0), 2);
+    check_flat_exhaustive::<Fp31>(&TaskSet::strassen_winograd(2), 3);
+}
+
+#[test]
+fn flat_decode_is_exact_for_all_small_erasures_floats() {
+    check_flat_exhaustive::<f32>(&TaskSet::strassen_winograd(2), 3);
+    check_flat_exhaustive::<f64>(&TaskSet::strassen_winograd(2), 3);
+}
+
+/// Randomized heavier masks (up to half the fleet dead): whenever the
+/// decoder accepts, the output is exact; property-checked over seeds.
+#[test]
+fn flat_decode_is_exact_on_random_heavy_erasures() {
+    fn check<S: Scalar>() {
+        let ts = TaskSet::strassen_winograd(2);
+        let n = 8;
+        let mut rng = Rng::seeded(0xbead);
+        let a: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+        let b: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+        let want = a.matmul_naive(&b);
+        let all = products(&ts, &a, &b);
+        ft_strassen::testkit::check_panics(
+            "heavy-erasure exact decode",
+            ft_strassen::testkit::PropConfig { cases: 64, ..Default::default() },
+            |case_rng| {
+                let mask = ft_strassen::testkit::gen::subset_mask(case_rng, ts.num_tasks())
+                    & ft_strassen::testkit::gen::subset_mask(case_rng, ts.num_tasks());
+                if let Some(got) = decode_pattern(&ts, &all, mask, n) {
+                    assert_eq!(got, want, "backend {} mask {mask:#x}", S::BACKEND_NAME);
+                }
+            },
+        );
+    }
+    check::<i64>();
+    check::<Fp31>();
+}
+
+// ---------------------------------------------------------------------
+// Nested two-level schemes: two-stage decode is exact end to end.
+// ---------------------------------------------------------------------
+
+/// Leaf products of a nested scheme: encode the outer operands per
+/// group, then the inner operands per leaf (the coordinator's layout:
+/// leaf (g, j) computes the inner product j of outer product g).
+fn nested_leaf_products<S: Scalar>(
+    set: &NestedTaskSet,
+    a: &Dense<S>,
+    b: &Dense<S>,
+) -> Vec<Vec<Dense<S>>> {
+    let a4 = split_blocks(a);
+    let b4 = split_blocks(b);
+    (0..set.num_groups())
+        .map(|g| {
+            let lo = encode_operand(&set.outer.tasks[g].u, &a4);
+            let ro = encode_operand(&set.outer.tasks[g].v, &b4);
+            let li = split_blocks(&lo);
+            let ri = split_blocks(&ro);
+            (0..set.group_size())
+                .map(|j| {
+                    encode_operand(&set.inner.tasks[j].u, &li)
+                        .matmul(&encode_operand(&set.inner.tasks[j].v, &ri))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Two-stage exact decode: inner combine per group (skipping failed
+/// leaves), then outer combine over the recovered group products.
+fn nested_decode<S: Scalar>(
+    set: &NestedTaskSet,
+    leaves: &[Vec<Dense<S>>],
+    group_failed: &[u64],
+    n: usize,
+) -> Option<Dense<S>> {
+    let mut outer_products: Vec<Option<Dense<S>>> = vec![None; set.num_groups()];
+    for g in 0..set.num_groups() {
+        let mut d = SpanDecoder::new(&set.inner);
+        let mut ok = false;
+        for j in 0..set.group_size() {
+            if group_failed[g] & (1 << j) == 0 {
+                ok = d.on_finished(j);
+            }
+        }
+        if !ok {
+            continue; // this outer product is lost
+        }
+        let surviving: Vec<Option<Dense<S>>> = leaves[g]
+            .iter()
+            .enumerate()
+            .map(|(j, p)| (group_failed[g] & (1 << j) == 0).then(|| p.clone()))
+            .collect();
+        let mut pg = Dense::<S>::zeros(n / 2, n / 2);
+        d.combine_exact_into(&surviving, &mut pg).unwrap();
+        outer_products[g] = Some(pg);
+    }
+    let mut d = SpanDecoder::new(&set.outer);
+    let mut ok = false;
+    for (g, p) in outer_products.iter().enumerate() {
+        if p.is_some() {
+            ok = d.on_finished(g);
+        }
+    }
+    if !ok {
+        return None;
+    }
+    let mut out = Dense::<S>::zeros(n, n);
+    d.combine_exact_into(&outer_products, &mut out).unwrap();
+    Some(out)
+}
+
+#[test]
+fn nested_two_stage_decode_is_exact_on_every_backend() {
+    fn check<S: Scalar>() {
+        let set = NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(2),
+        );
+        let n = 8;
+        let mut rng = Rng::seeded(0x2f2f);
+        let a: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+        let b: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+        let want = a.matmul_naive(&b);
+        let leaves = nested_leaf_products(&set, &a, &b);
+
+        // No failures at all.
+        let clean = vec![0u64; set.num_groups()];
+        assert_eq!(nested_decode(&set, &leaves, &clean, n).unwrap(), want);
+
+        // Group 3 entirely dead (outer tolerates one lost group) plus
+        // scattered recoverable leaf failures elsewhere.
+        let mut failed = vec![0u64; set.num_groups()];
+        failed[3] = (1 << set.group_size()) - 1;
+        failed[0] = (1 << 2) | (1 << 11); // S3+W5, covered via PSMM-1
+        failed[7] = 1 << 5;
+        assert!(set.decodable_with_failures(&failed));
+        assert_eq!(
+            nested_decode(&set, &leaves, &failed, n).unwrap(),
+            want,
+            "backend {}",
+            S::BACKEND_NAME
+        );
+
+        // Two dead groups defeat the sw(0) outer code: decode must
+        // refuse rather than fabricate output.
+        failed[5] = (1 << set.group_size()) - 1;
+        assert!(!set.decodable_with_failures(&failed));
+        assert!(nested_decode(&set, &leaves, &failed, n).is_none());
+    }
+    check::<i64>();
+    check::<Fp31>();
+    check::<f64>();
+    check::<f32>();
+}
+
+/// Cross-backend agreement: the i64 decode (exact by construction) is
+/// the reference; every other backend's decode of the same integer
+/// matrices must map to the same integers entry-for-entry.
+#[test]
+fn all_backends_decode_to_the_same_integers() {
+    let ts = TaskSet::strassen_winograd(2);
+    let n = 8;
+    let draw = |seed: u64| {
+        let mut rng = Rng::seeded(seed);
+        (
+            int_matrix::<i64>(&mut rng, n, n, MAX_ABS),
+            int_matrix::<i64>(&mut rng, n, n, MAX_ABS),
+        )
+    };
+    let (ai, bi) = draw(0x77);
+    let reference = {
+        let all = products(&ts, &ai, &bi);
+        decode_pattern(&ts, &all, (1 << 2) | (1 << 11), n).unwrap()
+    };
+    fn decode_as<S: Scalar>(ts: &TaskSet, n: usize, seed: u64) -> Dense<S> {
+        let mut rng = Rng::seeded(seed);
+        let a: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+        let b: Dense<S> = int_matrix(&mut rng, n, n, MAX_ABS);
+        let all = products(ts, &a, &b);
+        decode_pattern(ts, &all, (1 << 2) | (1 << 11), n).unwrap()
+    }
+    let as_f32 = decode_as::<f32>(&ts, n, 0x77);
+    let as_f64 = decode_as::<f64>(&ts, n, 0x77);
+    let as_fp = decode_as::<Fp31>(&ts, n, 0x77);
+    for i in 0..n {
+        for j in 0..n {
+            let x = reference[(i, j)];
+            assert_eq!(as_f32[(i, j)], x as f32);
+            assert_eq!(as_f64[(i, j)], x as f64);
+            assert_eq!(as_fp[(i, j)], Fp31::from_i64(x));
+        }
+    }
+}
