@@ -310,6 +310,133 @@ fn main() {
     std::fs::write(out.join("nested_vs_flat.csv"), nested_rows).unwrap();
     println!("wrote target/bench_results/nested_vs_flat.csv");
 
+    // --- multi-tenant serving sweep → BENCH_serve.json -------------------
+    // tenants × batch window × cache on/off over a straggler-heavy
+    // stream whose left operands repeat (4 distinct A matrices), so the
+    // encoded-operand cache has something to hit. Closed loop at the
+    // in-flight depth, like run_workload, so latencies measure service
+    // time rather than synthetic backlog wait.
+    {
+        use ft_strassen::coordinator::tier::{TenantSpec, TierConfig};
+        use ft_strassen::linalg::matrix::Matrix;
+        use ft_strassen::sim::rng::Rng;
+        use std::time::Instant;
+        let serve_jobs = if quick { 16 } else { 64 };
+        let serve_n = 64usize;
+        let serve_fault = FaultPlan {
+            p_fail: 0.0,
+            p_straggle: 0.3,
+            delay: Duration::from_millis(25),
+        };
+        println!(
+            "\nserving sweep: sw+2psmm, {serve_jobs} jobs of {serve_n}x{serve_n}, \
+             repeated left operands, p_straggle={} ({:?})",
+            serve_fault.p_straggle, serve_fault.delay
+        );
+        println!(
+            "{:<8} {:>7} {:>6} {:>9} {:>12} {:>12} {:>9} {:>9}",
+            "tenants", "window", "cache", "jobs/s", "mean", "p95", "hit-rate", "fallback"
+        );
+        let mut cells: Vec<schema::ServeCell> = Vec::new();
+        for tenants in [1usize, 2] {
+            for window in [1usize, 4] {
+                for cache_cap in [0usize, 16] {
+                    let roster = if tenants == 1 {
+                        vec![TenantSpec::unbounded("solo")]
+                    } else {
+                        vec![
+                            TenantSpec::new("heavy", 3, 8),
+                            TenantSpec::new("light", 1, 8),
+                        ]
+                    };
+                    let mut server = MmServer::with_tier_config(
+                        DispatchPlan::flat(TaskSet::strassen_winograd(2)),
+                        backend.clone(),
+                        TierConfig {
+                            master: MasterConfig {
+                                deadline: Duration::from_secs(10),
+                                fault: serve_fault,
+                                seed: 1,
+                                fallback_local: true,
+                                collect_all: false,
+                            },
+                            depth: 4,
+                            queue_cap: 4096,
+                            tenants: roster,
+                            batch_window: window,
+                            cache_cap,
+                        },
+                        None,
+                    );
+                    let names = server.tenant_names();
+                    let mut rng = Rng::seeded(9);
+                    let lefts: Vec<Matrix> = (0..4)
+                        .map(|_| Matrix::random(serve_n, serve_n, &mut rng))
+                        .collect();
+                    let t0 = Instant::now();
+                    for i in 0..serve_jobs {
+                        while server.queue_depth() >= 8 {
+                            server.drain(1).expect("serve sweep drain");
+                        }
+                        let b = Matrix::random(serve_n, serve_n, &mut rng);
+                        let tenant = names[i % names.len()].clone();
+                        server
+                            .submit_as(&tenant, lefts[i % lefts.len()].clone(), b)
+                            .expect("serve sweep submit");
+                    }
+                    while server.queue_depth() > 0 {
+                        server.drain(usize::MAX).expect("serve sweep drain");
+                    }
+                    let r = server.report(t0.elapsed());
+                    let reg = server.registry();
+                    let hits = reg.counter("cache_hits").get();
+                    let misses = reg.counter("cache_misses").get();
+                    let hit_rate = if hits + misses > 0 {
+                        hits as f64 / (hits + misses) as f64
+                    } else {
+                        0.0
+                    };
+                    println!(
+                        "{:<8} {:>7} {:>6} {:>9.2} {:>12.3?} {:>12.3?} {:>9.3} {:>9}",
+                        tenants,
+                        window,
+                        cache_cap,
+                        r.throughput_jobs_per_s,
+                        r.mean_latency,
+                        r.p95_latency,
+                        hit_rate,
+                        r.fell_back
+                    );
+                    cells.push(schema::ServeCell {
+                        tenants,
+                        batch_window: window,
+                        cache_cap,
+                        jobs_per_s: r.throughput_jobs_per_s,
+                        mean_ns: r.mean_latency.as_nanos(),
+                        p95_ns: r.p95_latency.as_nanos(),
+                        cache_hit_rate: hit_rate,
+                        fell_back: r.fell_back,
+                    });
+                    server.shutdown();
+                }
+            }
+        }
+        let entry = schema::ServeEntry {
+            unix_time,
+            scheme: "sw+2psmm".into(),
+            n: serve_n,
+            jobs: serve_jobs,
+            p_straggle: serve_fault.p_straggle,
+            delay_ms: serve_fault.delay.as_millis(),
+            quick,
+            cells,
+        }
+        .render();
+        let traj = trajectory::append_to_repo_root("BENCH_serve.json", &entry)
+            .expect("write BENCH_serve.json");
+        println!("appended serving-sweep trajectory to {}", traj.display());
+    }
+
     // --- coordinator overhead microbench (native, no faults) -------------
     // n=16 makes worker compute negligible -> isolates dispatch + online
     // decode + assembly; n=256 shows the realistic mix.

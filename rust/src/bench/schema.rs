@@ -188,6 +188,72 @@ impl RecursiveEntry {
     }
 }
 
+/// One cell of the multi-tenant serving sweep
+/// (`BENCH_serve.json` `cells[]`): a (tenant layout, batch window,
+/// cache capacity) point.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCell {
+    pub tenants: usize,
+    pub batch_window: usize,
+    pub cache_cap: usize,
+    pub jobs_per_s: f64,
+    pub mean_ns: u128,
+    pub p95_ns: u128,
+    /// cache_hits / (cache_hits + cache_misses); 0 when the cache is off.
+    pub cache_hit_rate: f64,
+    pub fell_back: usize,
+}
+
+/// One `BENCH_serve.json` entry: the serving-tier sweep
+/// (tenants × batch window × cache on/off) under stragglers.
+#[derive(Clone, Debug)]
+pub struct ServeEntry {
+    pub unix_time: u64,
+    pub scheme: String,
+    pub n: usize,
+    pub jobs: usize,
+    pub p_straggle: f64,
+    pub delay_ms: u128,
+    pub quick: bool,
+    pub cells: Vec<ServeCell>,
+}
+
+impl ServeEntry {
+    pub fn render(&self) -> String {
+        let cell_objs: Vec<String> = self
+            .cells
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"tenants\": {}, \"batch_window\": {}, \"cache_cap\": {}, \
+                     \"jobs_per_s\": {:.3}, \"mean_ns\": {}, \"p95_ns\": {}, \
+                     \"cache_hit_rate\": {:.3}, \"fell_back\": {}}}",
+                    c.tenants,
+                    c.batch_window,
+                    c.cache_cap,
+                    c.jobs_per_s,
+                    c.mean_ns,
+                    c.p95_ns,
+                    c.cache_hit_rate,
+                    c.fell_back
+                )
+            })
+            .collect();
+        format!(
+            "{{\"unix_time\": {}, \"scheme\": \"{}\", \"n\": {}, \"jobs\": {}, \
+             \"p_straggle\": {}, \"delay_ms\": {}, \"quick\": {}, \"cells\": [{}]}}",
+            self.unix_time,
+            self.scheme,
+            self.n,
+            self.jobs,
+            self.p_straggle,
+            self.delay_ms,
+            self.quick,
+            cell_objs.join(", ")
+        )
+    }
+}
+
 // ---------------------------------------------------------------------
 // Minimal JSON reader (round-trip checking; no external deps)
 // ---------------------------------------------------------------------
@@ -404,6 +470,16 @@ pub const E2E_KEYS: &[&str] = &[
 pub const KERNEL_KEYS: &[&str] =
     &["unix_time", "quick", "threads_mt", "encode_clones", "sizes"];
 pub const RECURSIVE_KEYS: &[&str] = &["unix_time", "quick", "kernel", "sweep"];
+pub const SERVE_KEYS: &[&str] = &[
+    "unix_time",
+    "scheme",
+    "n",
+    "jobs",
+    "p_straggle",
+    "delay_ms",
+    "quick",
+    "cells",
+];
 
 #[cfg(test)]
 mod tests {
@@ -466,12 +542,47 @@ mod tests {
         }
     }
 
+    fn sample_serve() -> ServeEntry {
+        ServeEntry {
+            unix_time: 4,
+            scheme: "sw+2psmm".into(),
+            n: 64,
+            jobs: 32,
+            p_straggle: 0.3,
+            delay_ms: 25,
+            quick: true,
+            cells: vec![
+                ServeCell {
+                    tenants: 1,
+                    batch_window: 1,
+                    cache_cap: 0,
+                    jobs_per_s: 40.0,
+                    mean_ns: 90_000,
+                    p95_ns: 210_000,
+                    cache_hit_rate: 0.0,
+                    fell_back: 0,
+                },
+                ServeCell {
+                    tenants: 2,
+                    batch_window: 4,
+                    cache_cap: 16,
+                    jobs_per_s: 55.5,
+                    mean_ns: 70_000,
+                    p95_ns: 160_000,
+                    cache_hit_rate: 0.875,
+                    fell_back: 1,
+                },
+            ],
+        }
+    }
+
     #[test]
     fn every_entry_kind_round_trips_through_the_parser() {
         let cases: Vec<(String, &[&str])> = vec![
             (sample_e2e().render(), E2E_KEYS),
             (sample_kernel().render(), KERNEL_KEYS),
             (sample_recursive().render(), RECURSIVE_KEYS),
+            (sample_serve().render(), SERVE_KEYS),
         ];
         for (entry, keys) in cases {
             let doc = parse_json(&entry).unwrap_or_else(|e| panic!("{entry}: {e}"));
@@ -490,6 +601,7 @@ mod tests {
             ("e2e", sample_e2e().render(), E2E_KEYS),
             ("kernel", sample_kernel().render(), KERNEL_KEYS),
             ("recursive", sample_recursive().render(), RECURSIVE_KEYS),
+            ("serve", sample_serve().render(), SERVE_KEYS),
         ];
         for (name, entry, keys) in cases {
             let path = tmp(&format!("{name}.json"));
@@ -514,6 +626,18 @@ mod tests {
         assert_eq!(depths.len(), 2);
         assert_eq!(depths[1].get("depth").and_then(Json::as_num), Some(4.0));
         assert_eq!(depths[1].get("jobs_per_s").and_then(Json::as_num), Some(21.3));
+    }
+
+    #[test]
+    fn serve_cells_survive_the_round_trip() {
+        let doc = parse_json(&sample_serve().render()).unwrap();
+        assert_eq!(doc.get("p_straggle").and_then(Json::as_num), Some(0.3));
+        let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[1].get("tenants").and_then(Json::as_num), Some(2.0));
+        assert_eq!(cells[1].get("batch_window").and_then(Json::as_num), Some(4.0));
+        assert_eq!(cells[1].get("cache_hit_rate").and_then(Json::as_num), Some(0.875));
+        assert_eq!(cells[1].get("fell_back").and_then(Json::as_num), Some(1.0));
     }
 
     #[test]

@@ -8,6 +8,7 @@ use super::toml::{parse_toml, TomlDoc, TomlError};
 use crate::algorithms::{strassen, winograd};
 use crate::coding::nested::NestedTaskSet;
 use crate::coding::scheme::TaskSet;
+use crate::coordinator::tier::TenantSpec;
 use crate::linalg::kernel::KernelKind;
 
 /// Which task-set family to run.
@@ -154,6 +155,23 @@ pub struct RunConfig {
     /// Maximum recursion depth for the single-node recursive path;
     /// 0 = unlimited (TOML `run.max_depth`, CLI `--max-depth`).
     pub max_depth: usize,
+    /// Serving tier: maximum concurrently in-flight jobs (TOML
+    /// `serve.depth`, CLI `--depth`; >= 1).
+    pub depth: usize,
+    /// Serving tier: outstanding-job cap before `submit` reports
+    /// backpressure (TOML `serve.queue_cap`, CLI `--queue-cap`; >= 1).
+    pub queue_cap: usize,
+    /// Serving tier: jobs coalesced into one dispatch round (TOML
+    /// `serve.batch_window`, CLI `--batch-window`; >= 1, 1 = no
+    /// batching).
+    pub batch_window: usize,
+    /// Serving tier: encoded-operand cache capacity in operands (TOML
+    /// `cache.cap`, CLI `--cache-cap`; 0 disables the cache).
+    pub cache_cap: usize,
+    /// Serving tier: tenant specs `name:weight:quota` (TOML
+    /// `tenants.specs` string array, CLI `--tenants` comma-separated).
+    /// Empty = one unbounded `default` tenant.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for RunConfig {
@@ -174,6 +192,11 @@ impl Default for RunConfig {
             kernel_threads: 1,
             crossover: 64,
             max_depth: 0,
+            depth: 4,
+            queue_cap: 4096,
+            batch_window: 1,
+            cache_cap: 0,
+            tenants: Vec::new(),
         }
     }
 }
@@ -231,6 +254,26 @@ impl RunConfig {
             kernel_threads: kernel_threads as usize,
             crossover: doc.uint_or("run.cutoff", d.crossover)?,
             max_depth: doc.uint_or("run.max_depth", d.max_depth)?,
+            depth: doc.uint_or("serve.depth", d.depth)?,
+            queue_cap: doc.uint_or("serve.queue_cap", d.queue_cap)?,
+            batch_window: doc.uint_or("serve.batch_window", d.batch_window)?,
+            cache_cap: doc.uint_or("cache.cap", d.cache_cap)?,
+            tenants: match doc.get("tenants.specs") {
+                Some(v) => {
+                    let arr = v
+                        .as_array()
+                        .ok_or("tenants.specs must be an array of strings")?;
+                    arr.iter()
+                        .map(|it| {
+                            let s = it
+                                .as_str()
+                                .ok_or("tenants.specs entries must be strings")?;
+                            TenantSpec::parse(s)
+                        })
+                        .collect::<Result<Vec<_>, _>>()?
+                }
+                None => d.tenants,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -287,7 +330,44 @@ impl RunConfig {
         if self.crossover == 0 {
             return Err("cutoff (recursive crossover) must be >= 1".into());
         }
+        if self.depth == 0 {
+            return Err("serve.depth must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("serve.queue_cap must be >= 1".into());
+        }
+        if self.batch_window == 0 {
+            return Err("serve.batch_window must be >= 1".into());
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.quota != usize::MAX && t.quota > self.queue_cap {
+                return Err(format!(
+                    "tenant `{}` quota {} exceeds queue_cap {} — the quota could never \
+                     bind",
+                    t.name, t.quota, self.queue_cap
+                ));
+            }
+            if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                return Err(format!("duplicate tenant name `{}`", t.name));
+            }
+        }
         Ok(())
+    }
+
+    /// Build the serving-tier configuration from the serve/tenants/cache
+    /// fields plus a per-job policy.
+    pub fn tier_config(
+        &self,
+        master: crate::coordinator::master::MasterConfig,
+    ) -> crate::coordinator::tier::TierConfig {
+        crate::coordinator::tier::TierConfig {
+            master,
+            depth: self.depth,
+            queue_cap: self.queue_cap,
+            tenants: self.tenants.clone(),
+            batch_window: self.batch_window,
+            cache_cap: self.cache_cap,
+        }
     }
 }
 
@@ -469,8 +549,82 @@ p_e = 0.2
     }
 
     #[test]
+    fn serve_sections_in_toml() {
+        let doc = parse_toml(
+            r#"
+[serve]
+depth = 8
+queue_cap = 64
+batch_window = 4
+[cache]
+cap = 32
+[tenants]
+specs = ["heavy:3:16", "light:1:4"]
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.depth, 8);
+        assert_eq!(cfg.queue_cap, 64);
+        assert_eq!(cfg.batch_window, 4);
+        assert_eq!(cfg.cache_cap, 32);
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0].name, "heavy");
+        assert_eq!(cfg.tenants[0].weight, 3);
+        assert_eq!(cfg.tenants[0].quota, 16);
+        assert_eq!(cfg.tenants[1].name, "light");
+        // Defaults when the sections are absent.
+        let d = RunConfig::default();
+        assert_eq!(d.depth, 4);
+        assert_eq!(d.queue_cap, 4096);
+        assert_eq!(d.batch_window, 1);
+        assert_eq!(d.cache_cap, 0);
+        assert!(d.tenants.is_empty());
+        let tc = cfg.tier_config(crate::coordinator::master::MasterConfig::default());
+        assert_eq!(tc.depth, 8);
+        assert_eq!(tc.tenants.len(), 2);
+    }
+
+    #[test]
+    fn serve_sections_reject_bad_values() {
+        // A malformed tenant spec is a parse error, not a silent skip.
+        let doc = parse_toml("[tenants]\nspecs = [\"heavy:0:4\"]").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err(), "weight 0 rejected");
+        let doc = parse_toml("[tenants]\nspecs = [\"oops\"]").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err(), "missing fields rejected");
+        let doc = parse_toml("[tenants]\nspecs = [3]").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err(), "non-string entry rejected");
+        // A quota no queue could ever satisfy is a config error.
+        let doc = parse_toml(
+            "[serve]\nqueue_cap = 4\n[tenants]\nspecs = [\"big:1:100\"]",
+        )
+        .unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("exceeds queue_cap"), "{err}");
+        // Duplicate tenant names are rejected.
+        let doc = parse_toml("[tenants]\nspecs = [\"a:1:1\", \"a:2:2\"]").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("duplicate tenant"), "{err}");
+        // Zero knobs are rejected.
+        let doc = parse_toml("[serve]\ndepth = 0").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = parse_toml("[serve]\nbatch_window = 0").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = parse_toml("[serve]\nqueue_cap = 0").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        // Negative values must not wrap through the usize cast.
+        let doc = parse_toml("[cache]\ncap = -1").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("cache.cap"), "{err}");
+    }
+
+    #[test]
     fn example_configs_in_repo_parse() {
-        for f in ["configs/serve_pjrt.toml", "configs/sim_fig2.toml"] {
+        for f in [
+            "configs/serve_pjrt.toml",
+            "configs/sim_fig2.toml",
+            "configs/serve_tenants.toml",
+        ] {
             let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
             let cfg = RunConfig::from_file(&p).unwrap_or_else(|e| panic!("{f}: {e}"));
             cfg.validate().unwrap();

@@ -2,11 +2,14 @@
 //! recover → assemble, exactly the master-node role of the paper's
 //! Fig. 1 (plus a deadline/fallback policy the paper leaves implicit).
 //!
-//! Since the multiplexed-scheduler refactor, `Master` is a thin
-//! sequential facade over [`crate::coordinator::scheduler::Scheduler`]
-//! at in-flight depth 1: one blocking multiply at a time, same decode
-//! state machine ([`crate::coordinator::job::JobState`]) as the
-//! concurrent server. Decode policy: an incremental `SpanDecoder` is
+//! Since the protocol-split refactor, `Master` is a thin sequential
+//! facade over [`crate::coordinator::scheduler::Scheduler`] (itself a
+//! single-tenant adapter over the message-driven
+//! [`crate::coordinator::tier::ServingTier`]) at in-flight depth 1: one
+//! blocking multiply at a time, same decode state machine
+//! ([`crate::coordinator::job::JobState`]) as the concurrent server —
+//! every dispatch travels the same `AssignLeaf`/`LeafResult` protocol
+//! as the multi-tenant tier. Decode policy: an incremental `SpanDecoder` is
 //! updated as replies arrive; the moment the four output targets are
 //! spanned the master stops waiting (stragglers' late replies are
 //! discarded by the `job_id` guard), solves the exact decode weights,

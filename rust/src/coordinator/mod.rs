@@ -1,14 +1,28 @@
-//! The distributed coordinator — the paper's system realized on a
-//! shared thread-pool fleet with fault injection, serving many multiply
-//! jobs concurrently.
+//! The distributed coordinator — the paper's system realized as a
+//! message-driven serving tier over an event-loop worker fleet, with
+//! fault injection, tenant fair queuing, dispatch batching and an
+//! encoded-operand cache.
 //!
-//! Scheduling model (the multiplexed-coordinator refactor):
+//! Architecture (the protocol-split refactor):
 //!
-//! * [`worker`] — the shared worker fleet: a fixed set of node threads
-//!   draining ONE work queue, so any idle slot executes the next item
-//!   regardless of which job produced it. Stragglers are modeled as
-//!   delayed replies (a delay line defers delivery without blocking the
-//!   slot); failed nodes never answer.
+//! * [`proto`] — the typed message protocol: [`proto::ToWorker`]
+//!   (`AssignLeaf`, `Revoke`, `Heartbeat`, `Shutdown`) and
+//!   [`proto::ToCoord`] (`Register`, `Ready`, `LeafResult`,
+//!   `RevokeAck`, `HeartbeatAck`), plus [`proto::JobDone`] for
+//!   completions. Messages own their payloads (no channel or thread
+//!   handles), and [`proto::wire`] gives them a length-prefixed binary
+//!   framing — the same protocol can run over sockets.
+//! * [`transport`] — the [`transport::Transport`] trait (the tier's
+//!   only view of the fleet) and the in-process
+//!   [`transport::ChannelTransport`]: per-worker mailboxes, one return
+//!   channel, and a delay line so stragglers reply late without
+//!   blocking a worker slot.
+//! * [`worker`] — workers as independent event-loop tasks: each drains
+//!   its mailbox, computes assigned leaves (native or PJRT), applies
+//!   its injected [`worker::FaultAction`] (failed nodes never answer;
+//!   stragglers answer through the delay line), and pulls more work by
+//!   sending `Ready`. [`worker::WorkerFleet`] owns the threads and the
+//!   transport.
 //! * [`job`] — the per-job decode state machine: an incremental
 //!   `SpanDecoder` (or, for nested two-level schemes, one inner decoder
 //!   per outer group plus the outer decoder — the two-stage path), the
@@ -17,36 +31,42 @@
 //! * [`task`] — the dispatch plans: a flat [`TaskGraph`] (one item per
 //!   task, the paper's model) or a nested `NestedGraph` (M₁·M₂ leaf
 //!   items, grouped by outer product, ids contiguous per group).
-//! * [`scheduler`] — the job multiplexer: admits jobs up to a
-//!   configurable **in-flight depth**, stamps each work item's fault at
-//!   admission as a pure function of (seed, job, item) — so seeded
-//!   streams see identical fault patterns at every depth, pool size and
-//!   thread count — routes
-//!   replies to their job by `job_id` — dropping and counting replies
-//!   for closed jobs (the cross-job leakage guard) — and **cancels**
-//!   a completed job's outstanding items so straggler-freed slots
-//!   immediately pick up the next job's work. Nested jobs additionally
-//!   cancel an entire inner group's queued leaves the moment that
-//!   group's product is recovered.
+//! * [`tier`] — the serving tier proper: per-tenant admission queues
+//!   drained by deficit round robin (weights = relative shares, quotas
+//!   = per-tenant in-flight caps), dispatch rounds coalesced up to a
+//!   batch window, an LRU cache of encoded left operands keyed by
+//!   content hash, pull-based dispatch (one assignment per worker
+//!   `Ready`), stale-reply guarding, eager group revocation, and
+//!   heartbeat liveness. Fault stamps stay a pure function of
+//!   (seed, job, item), so seeded streams are bit-reproducible across
+//!   depth, pool size, batching, tenant layout and cache state.
+//! * [`scheduler`] — the legacy single-tenant facade over the tier
+//!   (exact `submit`/`drive`/`poll` surface of the multiplexed
+//!   scheduler it replaced).
 //! * [`master`] — the sequential facade: encode → dispatch → collect
 //!   with online span decoding → recover → assemble, exactly the
 //!   master-node role of the paper's Fig. 1, implemented as a depth-1
 //!   scheduler.
 //! * [`server`] — the request loop: admission **backpressure** at an
-//!   outstanding-job cap, pipelined draining, latency/throughput
-//!   reports and a fleet-level metric registry (in-flight depth, slot
-//!   utilization, stale drops, cancelled items).
+//!   outstanding-job cap, pipelined draining, per-tenant submission,
+//!   latency/throughput reports and the tier's metric registry.
 
 pub mod job;
 pub mod master;
+pub mod proto;
 pub mod scheduler;
 pub mod server;
 pub mod task;
+pub mod tier;
+pub mod transport;
 pub mod worker;
 
 pub use job::JobState;
 pub use master::{Master, MasterConfig, MultiplyReport};
+pub use proto::JobDone;
 pub use scheduler::{FinishedJob, Scheduler, SchedulerConfig};
 pub use server::{MmServer, ServerConfig, ServerReport};
 pub use task::{DispatchPlan, NestedGraph, TaskGraph};
-pub use worker::{Backend, FaultPlan, WorkerPool};
+pub use tier::{ServingTier, TenantSpec, TierConfig};
+pub use transport::{ChannelTransport, Transport};
+pub use worker::{Backend, FaultPlan, WorkerFleet};

@@ -1,0 +1,616 @@
+//! The typed coordinator↔worker message protocol.
+//!
+//! Everything the serving tier says to a worker, and everything a worker
+//! says back, is one of the enums below — there is no shared queue, no
+//! shared decode state, no shared anything except the transported
+//! messages themselves. The types are transport-agnostic: the in-process
+//! [`crate::coordinator::transport::ChannelTransport`] moves them over
+//! mpsc channels by value, and the [`wire`] codec (de)serializes the
+//! same types to length-prefixed byte frames so a socket transport can
+//! carry them unchanged.
+//!
+//! Message flow (one leaf item, the happy path):
+//!
+//! ```text
+//! worker                          coordinator
+//!   │ ── Register{worker_id} ──────► │   worker joins the roster, idle
+//!   │ ◄── AssignLeaf(Assignment) ─── │   one leaf product to compute
+//!   │ ── LeafResult{reply} ────────► │   product (or error), timed
+//!   │ ── Ready{worker_id} ─────────► │   slot free → next assignment
+//! ```
+//!
+//! `Revoke` cancels a job's (or nested group's) still-queued tasks —
+//! workers purge their local backlog and answer `RevokeAck` with exact
+//! purge accounting; `Heartbeat`/`HeartbeatAck` prove liveness;
+//! `Shutdown` drains and stops the event loop. [`JobDone`] is the
+//! coordinator→client completion event.
+//!
+//! A straggler is a *delayed* `LeafResult` (slow link): the worker
+//! computes, hands the message to the transport's delay line, and sends
+//! `Ready` immediately — the slot is never blocked. A failed node sends
+//! no `LeafResult` at all (the paper's model) but still sends `Ready`:
+//! liveness signalling and result delivery are decoupled.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::job::MultiplyReport;
+use crate::coordinator::worker::{FaultAction, WorkerReply};
+use crate::linalg::matrix::Matrix;
+
+/// One operand of a leaf product, as shipped to a worker.
+///
+/// `Blocks` is the paper's protocol: the master sends the four 2×2
+/// blocks and the worker applies its ±1 coefficient row itself.
+/// `Encoded` is the encoded-operand-cache fast path: the coordinator
+/// already holds this task's encoded operand (content-hash hit), so the
+/// worker skips its own encode entirely. Both forms produce bit-identical
+/// products — [`crate::linalg::blocked::encode_operand_into`] is
+/// deterministic, so pre-encoding at the coordinator and encoding at the
+/// worker write the exact same floats.
+#[derive(Clone, Debug)]
+pub enum OperandPayload {
+    /// The four 2×2-split blocks; the worker encodes with its coefficients.
+    Blocks(Arc<[Matrix; 4]>),
+    /// The already-encoded operand for this task; coefficients are ignored.
+    Encoded(Arc<Matrix>),
+}
+
+impl OperandPayload {
+    pub fn is_encoded(&self) -> bool {
+        matches!(self, OperandPayload::Encoded(_))
+    }
+}
+
+/// One leaf product assignment (the body of [`ToWorker::AssignLeaf`]).
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub job_id: u64,
+    /// Task id within the job's dispatch plan (for nested plans the
+    /// group-major leaf id `g·M₂ + j`).
+    pub task_id: usize,
+    /// Left/right coefficient rows (±1 and 0 entries of the scheme).
+    pub ca: [f32; 4],
+    pub cb: [f32; 4],
+    pub left: OperandPayload,
+    pub right: OperandPayload,
+    /// Injected fault, stamped by the coordinator at admission as a pure
+    /// function of (seed, job, item) — the worker only acts it out.
+    pub fault: FaultAction,
+}
+
+/// Coordinator → worker messages.
+#[derive(Debug)]
+pub enum ToWorker {
+    /// Compute one leaf product.
+    AssignLeaf(Assignment),
+    /// Purge still-queued tasks of `job_id` with ids in `tasks` from the
+    /// worker's local backlog; answer with [`ToCoord::RevokeAck`].
+    Revoke { job_id: u64, tasks: Range<usize> },
+    /// Liveness probe; answer with [`ToCoord::HeartbeatAck`].
+    Heartbeat { seq: u64 },
+    /// Drain the local backlog, then exit the event loop.
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+#[derive(Debug)]
+pub enum ToCoord {
+    /// First message a worker sends: joins the roster, implies idle.
+    Register { worker_id: usize },
+    /// The worker finished processing an assignment (whatever its fault
+    /// outcome) and can take the next one.
+    Ready { worker_id: usize },
+    /// One computed leaf product (possibly delivered late by the
+    /// transport's delay line — the straggler model).
+    LeafResult { worker_id: usize, reply: WorkerReply },
+    /// Exact accounting for a [`ToWorker::Revoke`]: `purged` backlog
+    /// items were dropped, of which `replying` would have produced a
+    /// `LeafResult` (i.e. were not injected failures).
+    RevokeAck { worker_id: usize, job_id: u64, purged: usize, replying: usize },
+    /// Liveness answer echoing the probe's sequence number.
+    HeartbeatAck { worker_id: usize, seq: u64 },
+}
+
+/// Coordinator → client completion event for one multiply job.
+#[derive(Debug)]
+pub struct JobDone {
+    pub job_id: u64,
+    /// The tenant the job was admitted under.
+    pub tenant: String,
+    /// The product and its report, or the job-level error (only when
+    /// local fallback is disabled).
+    pub result: Result<(Matrix, MultiplyReport), String>,
+    /// Submit → completion (queue wait included).
+    pub total_latency: Duration,
+}
+
+// ---------------------------------------------------------------------
+// Wire codec: length-prefixed frames, no external dependencies.
+// ---------------------------------------------------------------------
+
+/// Byte-level codec for the protocol types — the proof that they are
+/// socket-ready. Frames are `u32 LE length ‖ tag byte ‖ payload`;
+/// matrices travel as `rows u32 ‖ cols u32 ‖ f32 LE data` (bit pattern
+/// preserved exactly — encode/decode round-trips are bit-identical, the
+/// same guarantee the in-process transport gives for free).
+pub mod wire {
+    use super::*;
+
+    // --- writers -----------------------------------------------------
+
+    fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f32(out: &mut Vec<u8>, v: f32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+        put_u64(out, b.len() as u64);
+        out.extend_from_slice(b);
+    }
+
+    fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+        put_u32(out, m.rows() as u32);
+        put_u32(out, m.cols() as u32);
+        for &x in m.as_slice() {
+            put_f32(out, x);
+        }
+    }
+
+    fn put_fault(out: &mut Vec<u8>, f: &FaultAction) {
+        match f {
+            FaultAction::None => out.push(0),
+            FaultAction::Delay(d) => {
+                out.push(1);
+                put_u64(out, d.as_nanos().min(u64::MAX as u128) as u64);
+            }
+            FaultAction::Fail => out.push(2),
+        }
+    }
+
+    fn put_payload(out: &mut Vec<u8>, p: &OperandPayload) {
+        match p {
+            OperandPayload::Blocks(b4) => {
+                out.push(0);
+                for m in b4.iter() {
+                    put_matrix(out, m);
+                }
+            }
+            OperandPayload::Encoded(m) => {
+                out.push(1);
+                put_matrix(out, m);
+            }
+        }
+    }
+
+    /// Serialize one coordinator→worker message (unframed body).
+    pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
+        let mut out = Vec::new();
+        match msg {
+            ToWorker::AssignLeaf(a) => {
+                out.push(0);
+                put_u64(&mut out, a.job_id);
+                put_u64(&mut out, a.task_id as u64);
+                for &c in &a.ca {
+                    put_f32(&mut out, c);
+                }
+                for &c in &a.cb {
+                    put_f32(&mut out, c);
+                }
+                put_fault(&mut out, &a.fault);
+                put_payload(&mut out, &a.left);
+                put_payload(&mut out, &a.right);
+            }
+            ToWorker::Revoke { job_id, tasks } => {
+                out.push(1);
+                put_u64(&mut out, *job_id);
+                put_u64(&mut out, tasks.start as u64);
+                put_u64(&mut out, tasks.end as u64);
+            }
+            ToWorker::Heartbeat { seq } => {
+                out.push(2);
+                put_u64(&mut out, *seq);
+            }
+            ToWorker::Shutdown => out.push(3),
+        }
+        out
+    }
+
+    /// Serialize one worker→coordinator message (unframed body).
+    pub fn encode_to_coord(msg: &ToCoord) -> Vec<u8> {
+        let mut out = Vec::new();
+        match msg {
+            ToCoord::Register { worker_id } => {
+                out.push(0);
+                put_u64(&mut out, *worker_id as u64);
+            }
+            ToCoord::Ready { worker_id } => {
+                out.push(1);
+                put_u64(&mut out, *worker_id as u64);
+            }
+            ToCoord::LeafResult { worker_id, reply } => {
+                out.push(2);
+                put_u64(&mut out, *worker_id as u64);
+                put_u64(&mut out, reply.job_id);
+                put_u64(&mut out, reply.task_id as u64);
+                put_u64(&mut out, reply.compute_time.as_nanos().min(u64::MAX as u128) as u64);
+                match &reply.product {
+                    Ok(m) => {
+                        out.push(0);
+                        put_matrix(&mut out, m);
+                    }
+                    Err(e) => {
+                        out.push(1);
+                        put_bytes(&mut out, e.as_bytes());
+                    }
+                }
+            }
+            ToCoord::RevokeAck { worker_id, job_id, purged, replying } => {
+                out.push(3);
+                put_u64(&mut out, *worker_id as u64);
+                put_u64(&mut out, *job_id);
+                put_u64(&mut out, *purged as u64);
+                put_u64(&mut out, *replying as u64);
+            }
+            ToCoord::HeartbeatAck { worker_id, seq } => {
+                out.push(4);
+                put_u64(&mut out, *worker_id as u64);
+                put_u64(&mut out, *seq);
+            }
+        }
+        out
+    }
+
+    /// Prefix a message body with its `u32 LE` length — the frame a
+    /// stream socket would carry.
+    pub fn frame(body: Vec<u8>) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + body.len());
+        put_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Split one frame off the front of `buf`: returns the message body
+    /// and the unconsumed rest, or `None` if the frame is incomplete.
+    pub fn unframe(buf: &[u8]) -> Option<(&[u8], &[u8])> {
+        if buf.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        if buf.len() < 4 + len {
+            return None;
+        }
+        Some((&buf[4..4 + len], &buf[4 + len..]))
+    }
+
+    // --- readers -----------------------------------------------------
+
+    struct Reader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        fn new(buf: &'a [u8]) -> Self {
+            Reader { buf, pos: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+            if self.pos + n > self.buf.len() {
+                return Err(format!(
+                    "truncated message: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                ));
+            }
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        fn u8(&mut self) -> Result<u8, String> {
+            Ok(self.take(1)?[0])
+        }
+
+        fn u32(&mut self) -> Result<u32, String> {
+            let b = self.take(4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+
+        fn u64(&mut self) -> Result<u64, String> {
+            let b = self.take(8)?;
+            Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+        }
+
+        fn f32(&mut self) -> Result<f32, String> {
+            let b = self.take(4)?;
+            Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+
+        fn matrix(&mut self) -> Result<Matrix, String> {
+            let rows = self.u32()? as usize;
+            let cols = self.u32()? as usize;
+            let mut data = Vec::with_capacity(rows * cols);
+            for _ in 0..rows * cols {
+                data.push(self.f32()?);
+            }
+            Ok(Matrix::from_slice(rows, cols, &data))
+        }
+
+        fn fault(&mut self) -> Result<FaultAction, String> {
+            match self.u8()? {
+                0 => Ok(FaultAction::None),
+                1 => Ok(FaultAction::Delay(Duration::from_nanos(self.u64()?))),
+                2 => Ok(FaultAction::Fail),
+                t => Err(format!("unknown fault tag {t}")),
+            }
+        }
+
+        fn payload(&mut self) -> Result<OperandPayload, String> {
+            match self.u8()? {
+                0 => {
+                    let b4 =
+                        [self.matrix()?, self.matrix()?, self.matrix()?, self.matrix()?];
+                    Ok(OperandPayload::Blocks(Arc::new(b4)))
+                }
+                1 => Ok(OperandPayload::Encoded(Arc::new(self.matrix()?))),
+                t => Err(format!("unknown payload tag {t}")),
+            }
+        }
+
+        fn done(&self) -> Result<(), String> {
+            if self.pos != self.buf.len() {
+                return Err(format!("{} trailing bytes after message", self.buf.len() - self.pos));
+            }
+            Ok(())
+        }
+    }
+
+    /// Deserialize one coordinator→worker message body.
+    pub fn decode_to_worker(buf: &[u8]) -> Result<ToWorker, String> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            0 => {
+                let job_id = r.u64()?;
+                let task_id = r.u64()? as usize;
+                let mut ca = [0f32; 4];
+                for c in &mut ca {
+                    *c = r.f32()?;
+                }
+                let mut cb = [0f32; 4];
+                for c in &mut cb {
+                    *c = r.f32()?;
+                }
+                let fault = r.fault()?;
+                let left = r.payload()?;
+                let right = r.payload()?;
+                ToWorker::AssignLeaf(Assignment { job_id, task_id, ca, cb, left, right, fault })
+            }
+            1 => {
+                let job_id = r.u64()?;
+                let start = r.u64()? as usize;
+                let end = r.u64()? as usize;
+                ToWorker::Revoke { job_id, tasks: start..end }
+            }
+            2 => ToWorker::Heartbeat { seq: r.u64()? },
+            3 => ToWorker::Shutdown,
+            t => return Err(format!("unknown ToWorker tag {t}")),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+
+    /// Deserialize one worker→coordinator message body.
+    pub fn decode_to_coord(buf: &[u8]) -> Result<ToCoord, String> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            0 => ToCoord::Register { worker_id: r.u64()? as usize },
+            1 => ToCoord::Ready { worker_id: r.u64()? as usize },
+            2 => {
+                let worker_id = r.u64()? as usize;
+                let job_id = r.u64()?;
+                let task_id = r.u64()? as usize;
+                let compute_time = Duration::from_nanos(r.u64()?);
+                let product = match r.u8()? {
+                    0 => Ok(r.matrix()?),
+                    1 => {
+                        let len = r.u64()? as usize;
+                        let bytes = r.take(len)?;
+                        Err(String::from_utf8_lossy(bytes).into_owned())
+                    }
+                    t => return Err(format!("unknown result tag {t}")),
+                };
+                ToCoord::LeafResult {
+                    worker_id,
+                    reply: WorkerReply { job_id, task_id, product, compute_time },
+                }
+            }
+            3 => ToCoord::RevokeAck {
+                worker_id: r.u64()? as usize,
+                job_id: r.u64()?,
+                purged: r.u64()? as usize,
+                replying: r.u64()? as usize,
+            },
+            4 => ToCoord::HeartbeatAck { worker_id: r.u64()? as usize, seq: r.u64()? },
+            t => return Err(format!("unknown ToCoord tag {t}")),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::wire::*;
+    use super::*;
+    use crate::linalg::blocked::split_blocks;
+    use crate::sim::rng::Rng;
+
+    fn blocks(seed: u64, n: usize) -> Arc<[Matrix; 4]> {
+        let mut rng = Rng::seeded(seed);
+        Arc::new(split_blocks(&Matrix::random(n, n, &mut rng)))
+    }
+
+    fn assert_matrix_eq(a: &Matrix, b: &Matrix) {
+        assert_eq!(a.shape(), b.shape());
+        // Bit-exact: the wire codec must not perturb a single float.
+        let bits = |m: &Matrix| m.as_slice().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(a), bits(b));
+    }
+
+    #[test]
+    fn assignments_round_trip_bit_exactly() {
+        let a4 = blocks(1, 8);
+        let enc = Arc::new(a4[0].matmul(&a4[1]));
+        let msg = ToWorker::AssignLeaf(Assignment {
+            job_id: 42,
+            task_id: 7,
+            ca: [1.0, -1.0, 0.0, 1.0],
+            cb: [-1.0, 0.0, 1.0, 1.0],
+            left: OperandPayload::Encoded(enc.clone()),
+            right: OperandPayload::Blocks(a4.clone()),
+            fault: FaultAction::Delay(Duration::from_millis(25)),
+        });
+        let decoded = decode_to_worker(&encode_to_worker(&msg)).unwrap();
+        let ToWorker::AssignLeaf(d) = decoded else { panic!("wrong variant") };
+        assert_eq!(d.job_id, 42);
+        assert_eq!(d.task_id, 7);
+        assert_eq!(d.ca, [1.0, -1.0, 0.0, 1.0]);
+        assert_eq!(d.cb, [-1.0, 0.0, 1.0, 1.0]);
+        assert_eq!(d.fault, FaultAction::Delay(Duration::from_millis(25)));
+        assert!(d.left.is_encoded());
+        let OperandPayload::Encoded(m) = &d.left else { panic!() };
+        assert_matrix_eq(m, &enc);
+        let OperandPayload::Blocks(b) = &d.right else { panic!() };
+        for (x, y) in b.iter().zip(a4.iter()) {
+            assert_matrix_eq(x, y);
+        }
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        for msg in [
+            ToWorker::Revoke { job_id: 9, tasks: 32..48 },
+            ToWorker::Heartbeat { seq: 17 },
+            ToWorker::Shutdown,
+        ] {
+            let d = decode_to_worker(&encode_to_worker(&msg)).unwrap();
+            match (&msg, &d) {
+                (
+                    ToWorker::Revoke { job_id: a, tasks: ta },
+                    ToWorker::Revoke { job_id: b, tasks: tb },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(ta, tb);
+                }
+                (ToWorker::Heartbeat { seq: a }, ToWorker::Heartbeat { seq: b }) => {
+                    assert_eq!(a, b)
+                }
+                (ToWorker::Shutdown, ToWorker::Shutdown) => {}
+                other => panic!("variant mismatch: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_messages_round_trip() {
+        let product = blocks(2, 8)[0].clone();
+        let msgs = [
+            ToCoord::Register { worker_id: 3 },
+            ToCoord::Ready { worker_id: 11 },
+            ToCoord::LeafResult {
+                worker_id: 1,
+                reply: WorkerReply {
+                    job_id: 5,
+                    task_id: 12,
+                    product: Ok(product.clone()),
+                    compute_time: Duration::from_micros(321),
+                },
+            },
+            ToCoord::LeafResult {
+                worker_id: 2,
+                reply: WorkerReply {
+                    job_id: 6,
+                    task_id: 0,
+                    product: Err("device lost".into()),
+                    compute_time: Duration::ZERO,
+                },
+            },
+            ToCoord::RevokeAck { worker_id: 0, job_id: 5, purged: 3, replying: 2 },
+            ToCoord::HeartbeatAck { worker_id: 7, seq: 17 },
+        ];
+        for msg in msgs {
+            let d = decode_to_coord(&encode_to_coord(&msg)).unwrap();
+            match (&msg, &d) {
+                (ToCoord::Register { worker_id: a }, ToCoord::Register { worker_id: b }) => {
+                    assert_eq!(a, b)
+                }
+                (ToCoord::Ready { worker_id: a }, ToCoord::Ready { worker_id: b }) => {
+                    assert_eq!(a, b)
+                }
+                (
+                    ToCoord::LeafResult { worker_id: wa, reply: ra },
+                    ToCoord::LeafResult { worker_id: wb, reply: rb },
+                ) => {
+                    assert_eq!(wa, wb);
+                    assert_eq!(ra.job_id, rb.job_id);
+                    assert_eq!(ra.task_id, rb.task_id);
+                    assert_eq!(ra.compute_time, rb.compute_time);
+                    match (&ra.product, &rb.product) {
+                        (Ok(x), Ok(y)) => assert_matrix_eq(x, y),
+                        (Err(x), Err(y)) => assert_eq!(x, y),
+                        other => panic!("result mismatch: {other:?}"),
+                    }
+                }
+                (
+                    ToCoord::RevokeAck { job_id: a, purged: pa, replying: ra, .. },
+                    ToCoord::RevokeAck { job_id: b, purged: pb, replying: rb, .. },
+                ) => {
+                    assert_eq!((a, pa, ra), (b, pb, rb));
+                }
+                (
+                    ToCoord::HeartbeatAck { worker_id: wa, seq: sa },
+                    ToCoord::HeartbeatAck { worker_id: wb, seq: sb },
+                ) => {
+                    assert_eq!((wa, sa), (wb, sb));
+                }
+                other => panic!("variant mismatch: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn frames_split_cleanly_from_a_stream() {
+        let m1 = frame(encode_to_worker(&ToWorker::Heartbeat { seq: 1 }));
+        let m2 = frame(encode_to_worker(&ToWorker::Shutdown));
+        let mut stream = m1.clone();
+        stream.extend_from_slice(&m2);
+        let (body1, rest) = unframe(&stream).unwrap();
+        assert!(matches!(decode_to_worker(body1).unwrap(), ToWorker::Heartbeat { seq: 1 }));
+        let (body2, rest2) = unframe(rest).unwrap();
+        assert!(matches!(decode_to_worker(body2).unwrap(), ToWorker::Shutdown));
+        assert!(rest2.is_empty());
+        // Incomplete frames are not consumed.
+        assert!(unframe(&m1[..3]).is_none());
+        assert!(unframe(&m1[..m1.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn decoder_rejects_malformed_bodies() {
+        assert!(decode_to_worker(&[]).is_err());
+        assert!(decode_to_worker(&[99]).is_err());
+        assert!(decode_to_coord(&[2, 1, 0]).is_err(), "truncated LeafResult");
+        // Trailing garbage after a complete message is an error.
+        let mut body = encode_to_coord(&ToCoord::Ready { worker_id: 1 });
+        body.push(0);
+        assert!(decode_to_coord(&body).is_err());
+    }
+}

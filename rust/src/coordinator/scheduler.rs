@@ -1,45 +1,35 @@
-//! The job-multiplexed scheduler: many in-flight multiply jobs share one
-//! [`WorkerPool`], with admission up to a configurable depth, per-job
-//! decode state machines keyed by `job_id`, early cancellation of
-//! spanned jobs' outstanding items, and a `job_id` guard that drops
-//! (and counts) late replies from closed jobs.
+//! The job-multiplexed scheduler — now a thin single-tenant adapter
+//! over the message-driven [`ServingTier`].
 //!
-//! A job is dispatched according to its [`DispatchPlan`]:
+//! Historically this module owned all multiplexing state (admission
+//! queue, per-job decode machines, reply routing, revocation). The
+//! protocol split moved that state behind the serving tier, which talks
+//! to its workers exclusively through
+//! [`crate::coordinator::proto`] messages; `Scheduler` keeps the old
+//! call surface — `submit`/`drive`/`poll` over one anonymous tenant at a
+//! fixed in-flight depth, no batching, no operand cache — so `Master`
+//! and long-standing callers are unaffected.
 //!
-//! * **Flat** — one work item per task of the scheme (the paper's
-//!   model: the master encodes each operand pair and sends one product
-//!   to each node).
-//! * **Nested** — the two-level fan-out: for every outer group `g` the
-//!   scheduler computes the outer-encoded operands `L_g = Σ u_g[p] A_p`
-//!   and `R_g = Σ v_g[q] B_q`, splits them 2×2 again, and dispatches
-//!   one leaf item per inner task — `M₁·M₂` items with contiguous ids
-//!   per group. The moment a group's inner span closes, its remaining
-//!   queued leaf items are **revoked as a group**
-//!   ([`WorkerPool::revoke_range`]) and the job's expected-reply count
-//!   is debited, so a 256-leaf job stops occupying the fleet long
-//!   before every leaf has run.
+//! The semantics pinned by this module's tests are unchanged:
 //!
-//! Determinism: each work item's fault is a **pure function** of
-//! `(master seed, job_id, item index)` —
-//! [`FaultPlan::sample_at`](crate::coordinator::worker::FaultPlan::sample_at)
-//! hashes the coordinates, no shared RNG stream exists — so a seeded
-//! job stream sees the exact same fault pattern at every in-flight
-//! depth, pool size, backend, and thread count (the invariance the
-//! property tests pin down; combine with [`MasterConfig::collect_all`]
-//! for bit-identical outputs). Jobs submitted with an explicit fault
-//! script ([`Scheduler::submit_with_faults`]) sample nothing.
+//! * jobs admit in submission order up to `depth`, and complete in
+//!   completion order;
+//! * each work item's fault is a **pure function** of `(master seed,
+//!   job_id, item index)` — seeded job streams see the exact same fault
+//!   pattern at every in-flight depth, pool size, backend, and thread
+//!   count (combine with [`MasterConfig::collect_all`] for bit-identical
+//!   outputs);
+//! * nested jobs revoke a recovered group's queued leaves eagerly, and
+//!   late replies for closed jobs are dropped and counted.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coding::scheme::TaskSet;
-use crate::coordinator::job::{JobState, MultiplyReport};
+use crate::coordinator::job::MultiplyReport;
 use crate::coordinator::master::MasterConfig;
 use crate::coordinator::task::DispatchPlan;
-use crate::coordinator::worker::{Backend, FaultAction, WorkItem, WorkerPool, WorkerReply};
-use crate::linalg::blocked::{encode_operand_into, split_blocks};
+use crate::coordinator::tier::{ServingTier, TenantSpec, TierConfig};
+use crate::coordinator::worker::{Backend, FaultAction};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
 
@@ -68,27 +58,12 @@ pub struct FinishedJob {
     pub total_latency: Duration,
 }
 
-struct Pending {
-    job_id: u64,
-    a: Matrix,
-    b: Matrix,
-    enqueued: Instant,
-    /// Explicit per-item fault script (tests / replay); `None` samples
-    /// from the scheduler RNG at admission.
-    faults: Option<Vec<FaultAction>>,
-}
+/// The single-tenant tenant name the adapter submits under.
+const TENANT: &str = "default";
 
-/// The multiplexed scheduler.
+/// The multiplexed scheduler (single-tenant serving-tier adapter).
 pub struct Scheduler {
-    plan: DispatchPlan,
-    pool: WorkerPool,
-    backend: Backend,
-    cfg: SchedulerConfig,
-    next_job: u64,
-    pending: VecDeque<Pending>,
-    inflight: HashMap<u64, JobState>,
-    reply_tx: Sender<WorkerReply>,
-    reply_rx: Receiver<WorkerReply>,
+    tier: ServingTier,
     pub metrics: Registry,
 }
 
@@ -99,7 +74,7 @@ impl Scheduler {
     }
 
     /// Build a scheduler for an arbitrary dispatch plan. `workers`
-    /// overrides the pool size (defaults to one node per task for flat
+    /// overrides the fleet size (defaults to one node per task for flat
     /// plans, a capped fleet for nested fan-outs — leaf items multiplex
     /// onto whatever fleet exists, they do not each own a thread).
     pub fn with_plan(
@@ -108,56 +83,55 @@ impl Scheduler {
         cfg: SchedulerConfig,
         workers: Option<usize>,
     ) -> Scheduler {
-        let metrics = Registry::new();
-        let pool_size = workers.unwrap_or_else(|| plan.default_pool_size());
-        let pool = WorkerPool::spawn(pool_size, backend.clone(), metrics.clone());
-        let (reply_tx, reply_rx) = channel();
-        Scheduler {
+        let tier = ServingTier::with_plan(
             plan,
-            pool,
             backend,
-            cfg,
-            next_job: 0,
-            pending: VecDeque::new(),
-            inflight: HashMap::new(),
-            reply_tx,
-            reply_rx,
-            metrics,
-        }
+            TierConfig {
+                master: cfg.master,
+                depth: cfg.depth,
+                queue_cap: usize::MAX,
+                tenants: vec![TenantSpec::unbounded(TENANT)],
+                batch_window: 1,
+                cache_cap: 0,
+            },
+            workers,
+        );
+        let metrics = tier.metrics.clone();
+        Scheduler { tier, metrics }
     }
 
     pub fn scheme_name(&self) -> &str {
-        self.plan.name()
+        self.tier.scheme_name()
     }
 
     pub fn num_workers(&self) -> usize {
-        self.pool.size()
+        self.tier.num_workers()
     }
 
     /// Work items dispatched per job (tasks, or leaves for nested plans).
     pub fn items_per_job(&self) -> usize {
-        self.plan.num_work_items()
+        self.tier.items_per_job()
     }
 
     /// Configured in-flight depth (≥ 1).
     pub fn depth(&self) -> usize {
-        self.cfg.depth.max(1)
+        self.tier.depth()
     }
 
     /// Jobs not yet completed (queued + in flight).
     pub fn outstanding(&self) -> usize {
-        self.pending.len() + self.inflight.len()
+        self.tier.outstanding()
     }
 
     pub fn in_flight(&self) -> usize {
-        self.inflight.len()
+        self.tier.in_flight()
     }
 
     /// Submit a multiply job `C = A · B` (square, dimension divisible by
     /// 2 per split level: 2 for flat plans, 4 for nested). Admits
     /// immediately if an in-flight slot is free.
     pub fn submit(&mut self, a: Matrix, b: Matrix) -> Result<u64, String> {
-        self.submit_job(a, b, None)
+        self.tier.submit(TENANT, a, b)
     }
 
     /// Submit with an explicit per-item fault script (length must equal
@@ -169,303 +143,30 @@ impl Scheduler {
         b: Matrix,
         faults: Vec<FaultAction>,
     ) -> Result<u64, String> {
-        if faults.len() != self.plan.num_work_items() {
-            return Err(format!(
-                "fault script length {} != work items per job {}",
-                faults.len(),
-                self.plan.num_work_items()
-            ));
-        }
-        self.submit_job(a, b, Some(faults))
-    }
-
-    fn submit_job(
-        &mut self,
-        a: Matrix,
-        b: Matrix,
-        faults: Option<Vec<FaultAction>>,
-    ) -> Result<u64, String> {
-        let n = a.rows();
-        if a.shape() != (n, n) || b.shape() != (n, n) {
-            return Err(format!(
-                "square matrices required, got {:?} x {:?}",
-                a.shape(),
-                b.shape()
-            ));
-        }
-        let div = self.plan.block_divisor();
-        if n == 0 || n % div != 0 {
-            return Err(format!(
-                "dimension must be a positive multiple of {div} for {}, got {n}",
-                self.plan.name()
-            ));
-        }
-        self.next_job += 1;
-        let job_id = self.next_job;
-        self.pending
-            .push_back(Pending { job_id, a, b, enqueued: Instant::now(), faults });
-        self.admit_ready();
-        self.update_gauges();
-        Ok(job_id)
+        self.tier.submit_with_faults(TENANT, a, b, faults)
     }
 
     /// Drive the scheduler until `max_jobs` complete (or nothing is
     /// outstanding). Completions are returned in completion order, which
     /// at depth > 1 may differ from submission order.
     pub fn drive(&mut self, max_jobs: usize) -> Vec<FinishedJob> {
-        let mut out = Vec::new();
-        while out.len() < max_jobs && self.outstanding() > 0 {
-            let want = max_jobs - out.len();
-            let mut got = self.poll(Duration::from_millis(200), want);
-            out.append(&mut got);
-        }
-        out
+        self.tier.drive(max_jobs).into_iter().map(finished).collect()
     }
 
     /// Process events for up to `timeout`, returning at most
     /// `max_completions` finished jobs (early-exits once reached).
     pub fn poll(&mut self, timeout: Duration, max_completions: usize) -> Vec<FinishedJob> {
-        let mut done = Vec::new();
-        let until = Instant::now() + timeout;
-        loop {
-            self.admit_ready();
-            self.reap(&mut done, max_completions);
-            if done.len() >= max_completions || self.inflight.is_empty() {
-                break;
-            }
-            let now = Instant::now();
-            if now >= until {
-                break;
-            }
-            let mut wait = until - now;
-            if let Some(d) = self.inflight.values().map(|j| j.deadline).min() {
-                wait = wait.min(d.saturating_duration_since(now));
-            }
-            match self.reply_rx.recv_timeout(wait) {
-                Ok(reply) => self.on_reply(reply, &mut done),
-                Err(RecvTimeoutError::Timeout) => {} // re-check deadlines
-                Err(RecvTimeoutError::Disconnected) => break, // unreachable: we hold reply_tx
-            }
-        }
-        self.update_gauges();
-        done
+        self.tier.poll(timeout, max_completions).into_iter().map(finished).collect()
     }
 
-    /// Admit pending jobs while in-flight slots are free, in submission
-    /// order (completion order stays reproducible; fault sampling is
-    /// admission-order independent by construction).
-    fn admit_ready(&mut self) {
-        while self.inflight.len() < self.cfg.depth.max(1) {
-            let Some(p) = self.pending.pop_front() else { break };
-            self.admit(p);
-        }
-    }
-
-    fn admit(&mut self, p: Pending) {
-        let started = Instant::now();
-        let a4 = Arc::new(split_blocks(&p.a));
-        let b4 = Arc::new(split_blocks(&p.b));
-        // Sample faults per item as a pure function of (master seed,
-        // job_id, item index) — no shared stream, so the pattern cannot
-        // shift with backend, pool size, depth, or admission history
-        // (scripted jobs sample nothing).
-        let faults: Vec<FaultAction> = match p.faults {
-            Some(f) => f,
-            None => (0..self.plan.num_work_items())
-                .map(|i| self.cfg.master.fault.sample_at(self.cfg.master.seed, p.job_id, i as u64))
-                .collect(),
-        };
-        let mut injected_failures = 0;
-        let mut injected_stragglers = 0;
-        for fault in &faults {
-            match fault {
-                FaultAction::Fail => injected_failures += 1,
-                FaultAction::Delay(_) => injected_stragglers += 1,
-                FaultAction::None => {}
-            }
-        }
-        match &self.plan {
-            DispatchPlan::Flat(graph) => {
-                for (spec, fault) in graph.specs.iter().zip(&faults) {
-                    self.pool.submit(WorkItem {
-                        job_id: p.job_id,
-                        task_id: spec.id,
-                        ca: spec.ca,
-                        cb: spec.cb,
-                        a4: a4.clone(),
-                        b4: b4.clone(),
-                        fault: *fault,
-                        reply: self.reply_tx.clone(),
-                    });
-                }
-            }
-            DispatchPlan::Nested(graph) => {
-                let m2 = graph.group_size();
-                // One encode scratch pair for the whole dispatch: the
-                // level-1 encodes write into it in place, and only the
-                // level-2 split blocks (shared by the group's leaf
-                // items) are allocated per group.
-                let mut enc_l = Matrix::zeros(0, 0);
-                let mut enc_r = Matrix::zeros(0, 0);
-                for (g, ospec) in graph.outer.specs.iter().enumerate() {
-                    // Level-1 encode at the master, level-2 split: the
-                    // group's operands are shared by its leaf items.
-                    encode_operand_into(&mut enc_l, &ospec.int_ca(), &a4);
-                    encode_operand_into(&mut enc_r, &ospec.int_cb(), &b4);
-                    let ga4 = Arc::new(split_blocks(&enc_l));
-                    let gb4 = Arc::new(split_blocks(&enc_r));
-                    for (j, ispec) in graph.inner.specs.iter().enumerate() {
-                        let task_id = g * m2 + j;
-                        self.pool.submit(WorkItem {
-                            job_id: p.job_id,
-                            task_id,
-                            ca: ispec.ca,
-                            cb: ispec.cb,
-                            a4: ga4.clone(),
-                            b4: gb4.clone(),
-                            fault: faults[task_id],
-                            reply: self.reply_tx.clone(),
-                        });
-                    }
-                }
-            }
-        }
-        let job = JobState::new(
-            &self.plan,
-            p.job_id,
-            a4,
-            b4,
-            p.enqueued,
-            started,
-            started + self.cfg.master.deadline,
-            injected_failures,
-            injected_stragglers,
-            !self.cfg.master.collect_all,
-        );
-        self.metrics.counter("jobs_dispatched").inc();
-        self.inflight.insert(p.job_id, job);
-    }
-
-    /// Route one reply to its job; replies for jobs that are no longer
-    /// open (completed, cancelled, or never existed) are dropped and
-    /// counted — the cross-job leakage guard. A reply that closes a
-    /// nested group triggers the group's queue revocation.
-    fn on_reply(&mut self, reply: WorkerReply, done: &mut Vec<FinishedJob>) {
-        let job_id = reply.job_id;
-        let revoke = {
-            let Some(job) = self.inflight.get_mut(&job_id) else {
-                self.metrics.counter("replies_stale_dropped").inc();
-                return;
-            };
-            match &reply.product {
-                Ok(_) => {
-                    self.metrics.histogram("worker_compute").observe(reply.compute_time);
-                }
-                Err(_) => {
-                    self.metrics.counter("worker_errors").inc();
-                }
-            }
-            job.on_reply(reply)
-        };
-        if let Some(range) = revoke {
-            let (removed, replying) = self.pool.revoke_range(job_id, range);
-            if removed > 0 {
-                self.metrics.counter("group_items_cancelled").add(removed as u64);
-            }
-            if let Some(job) = self.inflight.get_mut(&job_id) {
-                job.note_revoked(replying);
-            }
-            self.metrics.counter("groups_recovered").inc();
-        }
-        let Some(job) = self.inflight.get(&job_id) else { return };
-        let decodable = job.is_decodable();
-        let collect_all = self.cfg.master.collect_all;
-        let complete = if decodable {
-            !collect_all || job.all_replies_in()
-        } else {
-            // Every possible reply is in and the span is still short:
-            // no point waiting for the deadline.
-            job.all_replies_in()
-        };
-        if complete {
-            let job = self.inflight.remove(&job_id).unwrap();
-            self.finish(job, decodable, done);
-        }
-    }
-
-    /// Complete jobs that hit their deadline or exhausted their replies,
-    /// at most up to the caller's completion budget (the rest stay in
-    /// flight and are reaped by the next poll, so `poll`'s "at most
-    /// `max_completions`" contract holds even when several deadlines
-    /// expire in the same window).
-    fn reap(&mut self, done: &mut Vec<FinishedJob>, max_completions: usize) {
-        let now = Instant::now();
-        let mut ready: Vec<u64> = self
-            .inflight
-            .iter()
-            .filter(|(_, j)| now >= j.deadline || j.all_replies_in())
-            .map(|(id, _)| *id)
-            .collect();
-        ready.sort_unstable(); // oldest job first
-        for id in ready {
-            if done.len() >= max_completions {
-                break;
-            }
-            let job = self.inflight.remove(&id).unwrap();
-            // collect_all promises a decode set that depends only on the
-            // injected faults: if the deadline fires before every live
-            // reply arrived, fall back (or error) rather than silently
-            // decoding from a timing-dependent partial set.
-            let decodable = job.is_decodable()
-                && (!self.cfg.master.collect_all || job.all_replies_in());
-            self.finish(job, decodable, done);
-        }
-    }
-
-    /// Finalize one job: cancel its outstanding items, assemble or fall
-    /// back, record metrics, free the slot (admitting the next job).
-    fn finish(&mut self, mut job: JobState, decodable: bool, done: &mut Vec<FinishedJob>) {
-        self.pool.revoke(job.job_id);
-        let scheme = self.plan.name().to_string();
-        let result = if decodable {
-            match job.assemble(&self.backend) {
-                Ok(c) => Ok((c, job.report(&scheme, false))),
-                Err(e) => Err(format!("job {}: {e}", job.job_id)),
-            }
-        } else if self.cfg.master.fallback_local {
-            self.metrics.counter("jobs_fell_back").inc();
-            let c = job.fallback_product();
-            Ok((c, job.report(&scheme, true)))
-        } else {
-            Err(format!(
-                "job {}: not decodable within deadline ({} of {} replies)",
-                job.job_id, job.finished, job.dispatched
-            ))
-        };
-        if let Ok((_, report)) = &result {
-            self.metrics.histogram("job_latency").observe(report.elapsed);
-        }
-        self.metrics
-            .histogram("queue_wait")
-            .observe(job.started.duration_since(job.enqueued));
-        self.metrics.counter("jobs_completed").inc();
-        done.push(FinishedJob {
-            job_id: job.job_id,
-            result,
-            total_latency: job.enqueued.elapsed(),
-        });
-        self.admit_ready();
-    }
-
-    fn update_gauges(&self) {
-        self.metrics.gauge("inflight_jobs").set(self.inflight.len() as u64);
-        self.metrics.gauge("pending_jobs").set(self.pending.len() as u64);
-    }
-
-    /// Shut the shared pool down.
+    /// Shut the worker fleet down.
     pub fn shutdown(self) {
-        self.pool.shutdown();
+        self.tier.shutdown();
     }
+}
+
+fn finished(d: crate::coordinator::proto::JobDone) -> FinishedJob {
+    FinishedJob { job_id: d.job_id, result: d.result, total_latency: d.total_latency }
 }
 
 #[cfg(test)]
@@ -474,6 +175,7 @@ mod tests {
     use crate::coding::nested::NestedTaskSet;
     use crate::coordinator::worker::FaultPlan;
     use crate::sim::rng::Rng;
+    use std::time::Instant;
 
     fn cfg(depth: usize, fault: FaultPlan, seed: u64) -> SchedulerConfig {
         SchedulerConfig {

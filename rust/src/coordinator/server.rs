@@ -1,28 +1,32 @@
-//! The request loop: a multiplexed multiply server over one shared
-//! worker fleet.
+//! The request loop: a multiplexed multiply server over the
+//! message-driven serving tier.
 //!
 //! Jobs are accepted up to an outstanding-job cap (`queue_cap`,
-//! admission backpressure) and executed by the job-multiplexed
-//! [`Scheduler`] with up to `inflight_depth` jobs in flight at once —
-//! while one job waits on its last few replies, the fleet's idle slots
-//! run the next jobs' items. The server tracks per-job latency,
-//! throughput and fault statistics and produces the report the e2e
-//! benchmark (and `ft-strassen serve`) prints. This is the moral
-//! equivalent of the router/launcher layer of a serving system: config
-//! in, metrics out, no Python anywhere.
+//! admission backpressure) and executed by the [`ServingTier`] with up
+//! to `inflight_depth` jobs in flight at once — while one job waits on
+//! its last few replies, the fleet's idle slots run the next jobs'
+//! items. Multi-tenant deployments construct the server through
+//! [`MmServer::with_tier_config`], which exposes the tier's full knob
+//! set: per-tenant weights and quotas (deficit-round-robin fair
+//! queuing), dispatch batching, and the encoded-operand cache. The
+//! server tracks per-job latency, throughput and fault statistics and
+//! produces the report the e2e benchmark (and `ft-strassen serve`)
+//! prints. This is the moral equivalent of the router/launcher layer of
+//! a serving system: config in, metrics out, no Python anywhere.
 
 use std::time::{Duration, Instant};
 
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::master::{MasterConfig, MultiplyReport};
-use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use crate::coordinator::task::DispatchPlan;
+use crate::coordinator::tier::{ServingTier, TenantSpec, TierConfig};
 use crate::coordinator::worker::Backend;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
 use crate::sim::rng::Rng;
 
-/// Server configuration.
+/// Server configuration (single-tenant; see [`MmServer::with_tier_config`]
+/// for the multi-tenant surface).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub master: MasterConfig,
@@ -43,6 +47,9 @@ impl Default for ServerConfig {
 /// Completed job with its report.
 pub struct Completed {
     pub id: u64,
+    /// Tenant the job was submitted under ("default" unless the server
+    /// was built with explicit tenants).
+    pub tenant: String,
     pub c: Matrix,
     pub report: MultiplyReport,
     /// Queue wait + execution.
@@ -64,8 +71,11 @@ pub struct ServerReport {
 
 /// Multiplexed multiply server.
 pub struct MmServer {
-    sched: Scheduler,
+    tier: ServingTier,
     queue_cap: usize,
+    /// Tenant rotation order for [`Self::run_workload`]; `submit` always
+    /// targets the first entry.
+    tenants: Vec<String>,
     completed_latencies: Vec<Duration>,
     decoded: usize,
     fell_back: usize,
@@ -90,14 +100,36 @@ impl MmServer {
         cfg: ServerConfig,
         workers: Option<usize>,
     ) -> MmServer {
+        MmServer::with_tier_config(
+            plan,
+            backend,
+            TierConfig {
+                master: cfg.master,
+                depth: cfg.inflight_depth,
+                queue_cap: cfg.queue_cap,
+                tenants: vec![TenantSpec::unbounded("default")],
+                batch_window: 1,
+                cache_cap: 0,
+            },
+            workers,
+        )
+    }
+
+    /// Serve with the full tier configuration: tenants (DRR weights +
+    /// in-flight quotas), batch window, and encoded-operand cache.
+    pub fn with_tier_config(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: TierConfig,
+        workers: Option<usize>,
+    ) -> MmServer {
+        let queue_cap = cfg.queue_cap;
+        let tier = ServingTier::with_plan(plan, backend, cfg, workers);
+        let tenants = tier.tenant_names();
         MmServer {
-            sched: Scheduler::with_plan(
-                plan,
-                backend,
-                SchedulerConfig { master: cfg.master, depth: cfg.inflight_depth },
-                workers,
-            ),
-            queue_cap: cfg.queue_cap,
+            tier,
+            queue_cap,
+            tenants,
             completed_latencies: Vec::new(),
             decoded: 0,
             fell_back: 0,
@@ -107,23 +139,37 @@ impl MmServer {
         }
     }
 
-    /// Enqueue a job. Returns its id, or `Err` on backpressure.
+    /// Enqueue a job under the first tenant. Returns its id, or `Err` on
+    /// backpressure.
     pub fn submit(&mut self, a: Matrix, b: Matrix) -> Result<u64, String> {
-        if self.sched.outstanding() >= self.queue_cap {
+        let tenant = self.tenants[0].clone();
+        self.submit_as(&tenant, a, b)
+    }
+
+    /// Enqueue a job under `tenant`. Returns its id, or `Err` on
+    /// backpressure or unknown tenant.
+    pub fn submit_as(&mut self, tenant: &str, a: Matrix, b: Matrix) -> Result<u64, String> {
+        if self.tier.outstanding() >= self.queue_cap {
             return Err(format!("queue full ({} jobs)", self.queue_cap));
         }
-        self.sched.submit(a, b)
+        self.tier.submit(tenant, a, b)
     }
 
     /// Jobs accepted but not yet completed (queued + in flight).
     pub fn queue_depth(&self) -> usize {
-        self.sched.outstanding()
+        self.tier.outstanding()
     }
 
-    /// Shared handle to the scheduler's metric registry (in-flight
-    /// depth, slot utilization, stale-reply drops, cancelled items...).
+    /// Tenant names in admission-rotation order.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.clone()
+    }
+
+    /// Shared handle to the tier's metric registry (in-flight depth,
+    /// slot utilization, stale-reply drops, cancelled items, per-tenant
+    /// latency, cache hit rate...).
     pub fn registry(&self) -> Registry {
-        self.sched.metrics.clone()
+        self.tier.metrics.clone()
     }
 
     /// Run until up to `max_jobs` jobs complete; returns their results
@@ -135,14 +181,14 @@ impl MmServer {
     /// `Err` is returned only when the batch produced no successes at
     /// all, so completed work is never lost.
     pub fn drain(&mut self, max_jobs: usize) -> Result<Vec<Completed>, String> {
-        let finished = self.sched.drive(max_jobs);
+        let finished = self.tier.drive(max_jobs);
         let mut out = Vec::with_capacity(finished.len());
         let mut batch_first_err: Option<(u64, String)> = None;
         for f in finished {
             let (c, report) = match f.result {
                 Ok(ok) => ok,
                 Err(e) => {
-                    self.sched.metrics.counter("jobs_failed").inc();
+                    self.tier.metrics.counter("jobs_failed").inc();
                     if batch_first_err.is_none() {
                         batch_first_err = Some((f.job_id, e.clone()));
                     }
@@ -158,7 +204,13 @@ impl MmServer {
             self.finished_sum += report.finished as u64;
             self.jobs_done += 1;
             self.completed_latencies.push(f.total_latency);
-            out.push(Completed { id: f.job_id, c, report, total_latency: f.total_latency });
+            out.push(Completed {
+                id: f.job_id,
+                tenant: f.tenant,
+                c,
+                report,
+                total_latency: f.total_latency,
+            });
         }
         match batch_first_err {
             Some((_, e)) if out.is_empty() => Err(e),
@@ -175,7 +227,9 @@ impl MmServer {
     /// Convenience: run a synthetic workload of `jobs` random multiplies
     /// of size `n`, keeping the in-flight window full, and report
     /// aggregates. Operands are generated in submission order from the
-    /// seed, so the job stream is identical at every depth.
+    /// seed, so the job stream is identical at every depth. With
+    /// multiple tenants, submission round-robins across them (the tier's
+    /// DRR then decides who actually runs).
     ///
     /// Submission is windowed at the in-flight depth (closed loop), not
     /// at `queue_cap`: jobs are only submitted when an admission slot is
@@ -184,17 +238,18 @@ impl MmServer {
     /// held at once.
     pub fn run_workload(&mut self, jobs: usize, n: usize, seed: u64) -> Result<ServerReport, String> {
         let mut rng = Rng::seeded(seed);
-        let window = self.sched.depth().min(self.queue_cap.max(1));
+        let window = self.tier.depth().min(self.queue_cap.max(1));
         let t0 = Instant::now();
         let mut submitted = 0usize;
         while submitted < jobs {
             // Closed loop: complete jobs until an in-flight slot frees up.
-            while self.sched.outstanding() >= window {
+            while self.tier.outstanding() >= window {
                 self.drain(1)?;
             }
             let a = Matrix::random(n, n, &mut rng);
             let b = Matrix::random(n, n, &mut rng);
-            self.submit(a, b)?;
+            let tenant = self.tenants[submitted % self.tenants.len()].clone();
+            self.submit_as(&tenant, a, b)?;
             submitted += 1;
         }
         while self.queue_depth() > 0 {
@@ -225,13 +280,13 @@ impl MmServer {
         }
     }
 
-    /// Metrics snapshot from the underlying scheduler.
+    /// Metrics snapshot from the underlying tier.
     pub fn metrics(&self) -> String {
-        self.sched.metrics.snapshot()
+        self.tier.metrics.snapshot()
     }
 
     pub fn shutdown(self) {
-        self.sched.shutdown();
+        self.tier.shutdown();
     }
 }
 
@@ -308,6 +363,7 @@ mod tests {
         s.submit(a, b).unwrap();
         let done = s.drain(10).unwrap();
         assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tenant, "default");
         assert!(done[0].c.approx_eq(&want, 1e-4));
         s.shutdown();
     }
@@ -436,6 +492,36 @@ mod tests {
         let report = s.run_workload(3, 16, 5).unwrap();
         assert_eq!(report.jobs, 3);
         assert!(report.decoded >= 2, "196-leaf scheme should survive p=0.05");
+        s.shutdown();
+    }
+
+    #[test]
+    fn multi_tenant_server_round_robins_submissions() {
+        let mut s = MmServer::with_tier_config(
+            DispatchPlan::flat(TaskSet::strassen_winograd(0)),
+            Backend::Native,
+            TierConfig {
+                master: MasterConfig {
+                    deadline: Duration::from_secs(5),
+                    fault: FaultPlan::NONE,
+                    seed: 1,
+                    fallback_local: true,
+                    collect_all: false,
+                },
+                depth: 2,
+                queue_cap: 16,
+                tenants: vec![TenantSpec::new("alpha", 2, 8), TenantSpec::new("beta", 1, 8)],
+                batch_window: 2,
+                cache_cap: 4,
+            },
+            None,
+        );
+        assert_eq!(s.tenant_names(), vec!["alpha".to_string(), "beta".to_string()]);
+        let report = s.run_workload(6, 8, 11).unwrap();
+        assert_eq!(report.jobs, 6);
+        let reg = s.registry();
+        assert_eq!(reg.counter("tenant_jobs_alpha").get(), 3);
+        assert_eq!(reg.counter("tenant_jobs_beta").get(), 3);
         s.shutdown();
     }
 

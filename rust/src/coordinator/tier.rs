@@ -1,0 +1,1219 @@
+//! The message-driven serving tier: tenant fair queuing, dispatch-round
+//! batching, and an encoded-operand cache over a [`WorkerFleet`].
+//!
+//! This is the coordinator half of the protocol split. All scheduling
+//! state lives here — per-tenant admission queues, the central dispatch
+//! queue, per-job decode state — and the only thing shared with the
+//! workers is the message stream itself ([`crate::coordinator::proto`]).
+//! Dispatch is **pull-based**: a worker announces itself with `Register`
+//! and reports `Ready` after every processed item, and the tier hands
+//! out exactly one `AssignLeaf` per free slot. Because at most one
+//! assignment is ever at a worker, revocation accounting stays exact and
+//! synchronous at the tier (purging the central queue); the `Revoke`
+//! broadcast to workers is protocol completeness for transports that
+//! buffer more deeply, and its `RevokeAck` debits any worker-side purges.
+//!
+//! **Admission** is deficit round robin: each tenant has a weight (its
+//! quantum) and a quota (max in-flight jobs). The round-robin cursor
+//! stays on the tenant it is serving until its deficit is spent, its
+//! queue drains, or its quota blocks — so over any window the admitted
+//! job shares track the configured weights exactly, even when in-flight
+//! slots free one at a time. **Batching** coalesces the admitted jobs of
+//! one `admit_ready` pass into dispatch rounds of `batch_window` jobs,
+//! so a burst of tiny requests is encoded and enqueued as one round
+//! rather than interleaving with replies. **Caching** keys the four left
+//! operand blocks by content hash and keeps their per-task encodes in an
+//! LRU ([`EncodedCache`]); a hit ships
+//! [`OperandPayload::Encoded`] and the worker skips its own encode —
+//! bit-identically, since the encode kernel is deterministic.
+//!
+//! Determinism: job ids are assigned at submission, faults are a pure
+//! function of `(seed, job_id, item)`, and under
+//! [`MasterConfig::collect_all`] the decode set depends only on the
+//! injected faults — so seeded runs decode bit-identically across
+//! depth, pool size, tenant layout, batch window, and cache setting
+//! (pinned by `tests/serving_tier.rs` against an in-test synchronous
+//! reference).
+
+use std::collections::{HashMap, VecDeque};
+use std::ops::Range;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coding::scheme::TaskSet;
+use crate::coordinator::job::JobState;
+use crate::coordinator::master::MasterConfig;
+use crate::coordinator::proto::{Assignment, JobDone, OperandPayload, ToCoord, ToWorker};
+use crate::coordinator::task::DispatchPlan;
+use crate::coordinator::worker::{Backend, FaultAction, WorkerFleet, WorkerReply};
+use crate::linalg::blocked::{encode_operand, encode_operand_into, split_blocks};
+use crate::linalg::matrix::Matrix;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+
+/// Liveness-probe cadence while the tier is polling with jobs in flight.
+const HEARTBEAT_EVERY: Duration = Duration::from_millis(300);
+
+/// A tenant's admission-control contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// DRR quantum: relative share of admitted jobs under contention.
+    pub weight: u64,
+    /// Maximum in-flight jobs for this tenant (admission skips the
+    /// tenant while it is at quota; its queue keeps accumulating).
+    pub quota: usize,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, weight: u64, quota: usize) -> TenantSpec {
+        TenantSpec { name: name.to_string(), weight, quota }
+    }
+
+    /// Weight-1, unlimited-quota tenant (the single-tenant default).
+    pub fn unbounded(name: &str) -> TenantSpec {
+        TenantSpec::new(name, 1, usize::MAX)
+    }
+
+    /// Parse the CLI form `name:weight:quota` (e.g. `free:1:4`).
+    pub fn parse(s: &str) -> Result<TenantSpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("tenant spec {s:?}: expected name:weight:quota"));
+        }
+        let name = parts[0];
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(format!(
+                "tenant spec {s:?}: name must be non-empty [A-Za-z0-9_-]"
+            ));
+        }
+        let weight: u64 = parts[1]
+            .parse()
+            .map_err(|_| format!("tenant spec {s:?}: bad weight {:?}", parts[1]))?;
+        if weight == 0 {
+            return Err(format!("tenant spec {s:?}: weight must be >= 1"));
+        }
+        let quota: usize = parts[2]
+            .parse()
+            .map_err(|_| format!("tenant spec {s:?}: bad quota {:?}", parts[2]))?;
+        if quota == 0 {
+            return Err(format!("tenant spec {s:?}: quota must be >= 1"));
+        }
+        Ok(TenantSpec::new(name, weight, quota))
+    }
+}
+
+impl std::str::FromStr for TenantSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<TenantSpec, String> {
+        TenantSpec::parse(s)
+    }
+}
+
+/// Serving-tier configuration.
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    /// Per-job policy (deadline, fault plan, seed, fallback, decode mode).
+    pub master: MasterConfig,
+    /// Maximum concurrently in-flight jobs across all tenants (≥ 1).
+    pub depth: usize,
+    /// Maximum queued-but-not-admitted jobs across all tenants.
+    pub queue_cap: usize,
+    /// Tenant roster; empty means one unbounded `"default"` tenant.
+    pub tenants: Vec<TenantSpec>,
+    /// Jobs coalesced into one dispatch round (≥ 1). Chunks dispatch
+    /// only — it never caps admission or skews DRR shares.
+    pub batch_window: usize,
+    /// Encoded-operand cache capacity in distinct left operands
+    /// (0 disables the cache).
+    pub cache_cap: usize,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        TierConfig {
+            master: MasterConfig::default(),
+            depth: 1,
+            queue_cap: usize::MAX,
+            tenants: vec![TenantSpec::unbounded("default")],
+            batch_window: 1,
+            cache_cap: 0,
+        }
+    }
+}
+
+/// A submitted-but-not-admitted job in a tenant's queue.
+struct PendingJob {
+    job_id: u64,
+    a: Matrix,
+    b: Matrix,
+    enqueued: Instant,
+    /// Explicit per-item fault script (tests / replay); `None` samples
+    /// pure per-item faults at admission.
+    faults: Option<Vec<FaultAction>>,
+}
+
+struct TenantState {
+    spec: TenantSpec,
+    queue: VecDeque<PendingJob>,
+    /// DRR deficit in jobs; refilled by one quantum (= weight) each time
+    /// the cursor arrives at this tenant, capped at 8 quanta so a
+    /// quota-blocked tenant cannot bank an unbounded burst.
+    deficit: u64,
+    inflight: usize,
+    jobs: Arc<Counter>,
+    latency: Arc<Histogram>,
+    queued: Arc<Gauge>,
+}
+
+struct InflightJob {
+    state: JobState,
+    tenant: usize,
+}
+
+// ---------------------------------------------------------------------
+// Encoded-operand cache
+// ---------------------------------------------------------------------
+
+/// LRU cache of per-task encoded left operands, keyed by a 128-bit
+/// content hash of the four blocks (dims + exact f32 bit patterns —
+/// mutating a single element changes the key, so a stale encode can
+/// never be served). Values are `Arc`s shared with in-flight
+/// assignments; eviction only drops the cache's reference.
+struct EncodedCache {
+    cap: usize,
+    map: HashMap<u128, Vec<Arc<Matrix>>>,
+    lru: VecDeque<u128>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    entries: Arc<Gauge>,
+}
+
+impl EncodedCache {
+    fn new(cap: usize, metrics: &Registry) -> EncodedCache {
+        EncodedCache {
+            cap,
+            map: HashMap::new(),
+            lru: VecDeque::new(),
+            hits: metrics.counter("cache_hits"),
+            misses: metrics.counter("cache_misses"),
+            evictions: metrics.counter("cache_evictions"),
+            entries: metrics.gauge("cache_entries"),
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    fn get(&mut self, key: u128) -> Option<Vec<Arc<Matrix>>> {
+        match self.map.get(&key) {
+            Some(v) => {
+                self.hits.inc();
+                if let Some(pos) = self.lru.iter().position(|&k| k == key) {
+                    self.lru.remove(pos);
+                    self.lru.push_back(key);
+                }
+                Some(v.clone())
+            }
+            None => {
+                self.misses.inc();
+                None
+            }
+        }
+    }
+
+    fn put(&mut self, key: u128, v: Vec<Arc<Matrix>>) {
+        if self.cap == 0 || self.map.contains_key(&key) {
+            return;
+        }
+        while self.map.len() >= self.cap {
+            match self.lru.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                    self.evictions.inc();
+                }
+                None => break,
+            }
+        }
+        self.map.insert(key, v);
+        self.lru.push_back(key);
+        self.entries.set(self.map.len() as u64);
+    }
+}
+
+fn absorb(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+fn content_hash(seed: u64, blocks: &[Matrix; 4]) -> u64 {
+    let mut h = absorb(0xcbf2_9ce4_8422_2325, seed);
+    for m in blocks {
+        h = absorb(h, m.rows() as u64);
+        h = absorb(h, m.cols() as u64);
+        for &x in m.as_slice() {
+            h = absorb(h, x.to_bits() as u64);
+        }
+    }
+    h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// Two independently seeded 64-bit content hashes: a collision would
+/// need both to collide at once, which at cache-sized populations is
+/// vanishingly unlikely.
+fn operand_key(blocks: &[Matrix; 4]) -> u128 {
+    ((content_hash(0x9e37_79b9_7f4a_7c15, blocks) as u128) << 64)
+        | content_hash(0x27d4_eb2f_1656_67c5, blocks) as u128
+}
+
+// ---------------------------------------------------------------------
+// The serving tier
+// ---------------------------------------------------------------------
+
+/// The multi-tenant serving tier (see module docs).
+pub struct ServingTier {
+    plan: DispatchPlan,
+    backend: Backend,
+    cfg: TierConfig,
+    fleet: WorkerFleet,
+    next_job: u64,
+    tenants: Vec<TenantState>,
+    /// Tenant the DRR cursor is currently serving (deficit not yet spent).
+    current: Option<usize>,
+    rr_cursor: usize,
+    queued_total: usize,
+    inflight: HashMap<u64, InflightJob>,
+    /// Central dispatch queue: admitted-but-unassigned leaf items. The
+    /// tier hands these out one per worker `Ready`, so purging this
+    /// queue is exact revocation for everything not at a worker.
+    dispatch: VecDeque<Assignment>,
+    idle: VecDeque<usize>,
+    registered: Vec<bool>,
+    hb_seq: u64,
+    last_hb: Instant,
+    hb_acked: Vec<u64>,
+    cache: EncodedCache,
+    pub metrics: Registry,
+}
+
+impl ServingTier {
+    /// Build a tier over a flat task set with one worker per task.
+    pub fn new(set: TaskSet, backend: Backend, cfg: TierConfig) -> ServingTier {
+        ServingTier::with_plan(DispatchPlan::flat(set), backend, cfg, None)
+    }
+
+    /// Build a tier for an arbitrary dispatch plan. `workers` overrides
+    /// the fleet size (defaults to one node per task for flat plans, a
+    /// capped fleet for nested fan-outs).
+    pub fn with_plan(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: TierConfig,
+        workers: Option<usize>,
+    ) -> ServingTier {
+        let metrics = Registry::new();
+        let pool_size = workers.unwrap_or_else(|| plan.default_pool_size());
+        let fleet = WorkerFleet::spawn(pool_size, backend.clone(), metrics.clone());
+        let mut cfg = cfg;
+        if cfg.tenants.is_empty() {
+            cfg.tenants.push(TenantSpec::unbounded("default"));
+        }
+        let tenants = cfg
+            .tenants
+            .iter()
+            .map(|spec| TenantState {
+                spec: spec.clone(),
+                queue: VecDeque::new(),
+                deficit: 0,
+                inflight: 0,
+                jobs: metrics.counter(&format!("tenant_jobs_{}", spec.name)),
+                latency: metrics.histogram(&format!("tenant_latency_{}", spec.name)),
+                queued: metrics.gauge(&format!("tenant_queue_{}", spec.name)),
+            })
+            .collect();
+        let cache = EncodedCache::new(cfg.cache_cap, &metrics);
+        ServingTier {
+            plan,
+            backend,
+            cfg,
+            fleet,
+            next_job: 0,
+            tenants,
+            current: None,
+            rr_cursor: 0,
+            queued_total: 0,
+            inflight: HashMap::new(),
+            dispatch: VecDeque::new(),
+            idle: VecDeque::new(),
+            registered: vec![false; pool_size],
+            hb_seq: 0,
+            last_hb: Instant::now(),
+            hb_acked: vec![0; pool_size],
+            cache,
+            metrics,
+        }
+    }
+
+    pub fn scheme_name(&self) -> &str {
+        self.plan.name()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.fleet.size()
+    }
+
+    /// Work items dispatched per job (tasks, or leaves for nested plans).
+    pub fn items_per_job(&self) -> usize {
+        self.plan.num_work_items()
+    }
+
+    /// Configured global in-flight depth (≥ 1).
+    pub fn depth(&self) -> usize {
+        self.cfg.depth.max(1)
+    }
+
+    /// Jobs not yet completed (queued + in flight).
+    pub fn outstanding(&self) -> usize {
+        self.queued_total + self.inflight.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.spec.name.clone()).collect()
+    }
+
+    pub fn tenant_inflight(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().find(|t| t.spec.name == name).map(|t| t.inflight)
+    }
+
+    pub fn tenant_queued(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().find(|t| t.spec.name == name).map(|t| t.queue.len())
+    }
+
+    /// Submit a multiply job `C = A · B` under `tenant` (square,
+    /// dimension divisible per split level: 2 flat, 4 nested).
+    pub fn submit(&mut self, tenant: &str, a: Matrix, b: Matrix) -> Result<u64, String> {
+        self.submit_job(tenant, a, b, None)
+    }
+
+    /// Submit with an explicit per-item fault script (length must equal
+    /// [`Self::items_per_job`]) — deterministic replay for tests.
+    pub fn submit_with_faults(
+        &mut self,
+        tenant: &str,
+        a: Matrix,
+        b: Matrix,
+        faults: Vec<FaultAction>,
+    ) -> Result<u64, String> {
+        if faults.len() != self.plan.num_work_items() {
+            return Err(format!(
+                "fault script length {} != work items per job {}",
+                faults.len(),
+                self.plan.num_work_items()
+            ));
+        }
+        self.submit_job(tenant, a, b, Some(faults))
+    }
+
+    fn submit_job(
+        &mut self,
+        tenant: &str,
+        a: Matrix,
+        b: Matrix,
+        faults: Option<Vec<FaultAction>>,
+    ) -> Result<u64, String> {
+        let ti = self
+            .tenants
+            .iter()
+            .position(|t| t.spec.name == tenant)
+            .ok_or_else(|| format!("unknown tenant {tenant:?}"))?;
+        let n = a.rows();
+        if a.shape() != (n, n) || b.shape() != (n, n) {
+            return Err(format!(
+                "square matrices required, got {:?} x {:?}",
+                a.shape(),
+                b.shape()
+            ));
+        }
+        let div = self.plan.block_divisor();
+        if n == 0 || n % div != 0 {
+            return Err(format!(
+                "dimension must be a positive multiple of {div} for {}, got {n}",
+                self.plan.name()
+            ));
+        }
+        if self.queued_total >= self.cfg.queue_cap {
+            return Err(format!("queue full ({} jobs)", self.queued_total));
+        }
+        self.next_job += 1;
+        let job_id = self.next_job;
+        self.tenants[ti].queue.push_back(PendingJob {
+            job_id,
+            a,
+            b,
+            enqueued: Instant::now(),
+            faults,
+        });
+        self.queued_total += 1;
+        self.admit_ready();
+        self.update_gauges();
+        Ok(job_id)
+    }
+
+    /// Cancel a job mid-stream: a still-queued job is removed from its
+    /// tenant queue; an in-flight job has its outstanding items revoked
+    /// and its decode state dropped (no [`JobDone`] is ever emitted, and
+    /// any in-compute replies land as counted stale drops). Returns
+    /// whether the job was found.
+    pub fn cancel(&mut self, job_id: u64) -> bool {
+        for t in self.tenants.iter_mut() {
+            if let Some(pos) = t.queue.iter().position(|p| p.job_id == job_id) {
+                t.queue.remove(pos);
+                self.queued_total -= 1;
+                self.metrics.counter("jobs_cancelled").inc();
+                self.update_gauges();
+                return true;
+            }
+        }
+        if let Some(j) = self.inflight.remove(&job_id) {
+            let items = self.plan.num_work_items();
+            let (removed, _) = self.purge_dispatch(job_id, &(0..items));
+            if removed > 0 {
+                self.metrics.counter("pool_items_revoked").add(removed as u64);
+            }
+            self.broadcast_revoke(job_id, 0..items);
+            self.tenants[j.tenant].inflight -= 1;
+            self.metrics.counter("jobs_cancelled").inc();
+            self.admit_ready();
+            self.update_gauges();
+            return true;
+        }
+        false
+    }
+
+    /// Drive the tier until `max_jobs` complete (or nothing is
+    /// outstanding), in completion order.
+    pub fn drive(&mut self, max_jobs: usize) -> Vec<JobDone> {
+        let mut out = Vec::new();
+        while out.len() < max_jobs && self.outstanding() > 0 {
+            let want = max_jobs - out.len();
+            let mut got = self.poll(Duration::from_millis(200), want);
+            out.append(&mut got);
+        }
+        out
+    }
+
+    /// Process messages for up to `timeout`, returning at most
+    /// `max_completions` finished jobs.
+    pub fn poll(&mut self, timeout: Duration, max_completions: usize) -> Vec<JobDone> {
+        let mut done = Vec::new();
+        let until = Instant::now() + timeout;
+        loop {
+            self.admit_ready();
+            self.reap(&mut done, max_completions);
+            if done.len() >= max_completions || self.inflight.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            if self.last_hb.elapsed() >= HEARTBEAT_EVERY {
+                self.heartbeat();
+            }
+            let mut wait = (until - now).min(HEARTBEAT_EVERY);
+            if let Some(d) = self.inflight.values().map(|j| j.state.deadline).min() {
+                wait = wait.min(d.saturating_duration_since(now));
+            }
+            match self.fleet.recv_timeout(wait) {
+                Ok(msg) => self.on_message(msg, &mut done),
+                Err(RecvTimeoutError::Timeout) => {} // re-check deadlines
+                Err(RecvTimeoutError::Disconnected) => break, // fleet gone
+            }
+        }
+        self.update_gauges();
+        done
+    }
+
+    /// Broadcast a liveness probe to every registered worker.
+    pub fn heartbeat(&mut self) {
+        self.hb_seq += 1;
+        let seq = self.hb_seq;
+        for w in 0..self.registered.len() {
+            if self.registered[w] {
+                let _ = self.fleet.send(w, ToWorker::Heartbeat { seq });
+            }
+        }
+        self.metrics.counter("heartbeats_sent").inc();
+        self.last_hb = Instant::now();
+    }
+
+    /// Shut the fleet down (drains workers, joins event loops).
+    pub fn shutdown(self) {
+        self.fleet.shutdown();
+    }
+
+    // --- admission (DRR + batching) ----------------------------------
+
+    /// Admit queued jobs into free in-flight slots by deficit round
+    /// robin, flushing dispatch rounds of `batch_window` jobs.
+    fn admit_ready(&mut self) {
+        let depth = self.cfg.depth.max(1);
+        let window = self.cfg.batch_window.max(1);
+        let mut round: Vec<(usize, PendingJob)> = Vec::new();
+        while self.inflight.len() + round.len() < depth {
+            let Some(ti) = self.next_tenant() else { break };
+            let t = &mut self.tenants[ti];
+            t.deficit -= 1;
+            t.inflight += 1;
+            let p = t.queue.pop_front().expect("next_tenant guarantees a queued job");
+            self.queued_total -= 1;
+            round.push((ti, p));
+            if round.len() >= window {
+                self.dispatch_round(std::mem::take(&mut round));
+            }
+        }
+        if !round.is_empty() {
+            self.dispatch_round(round);
+        }
+    }
+
+    /// Pick the tenant to admit from: stay on the currently served
+    /// tenant while it has deficit, queued jobs, and quota headroom;
+    /// otherwise advance the round-robin cursor, granting one quantum
+    /// (= weight) on arrival. Returns `None` when no tenant is eligible.
+    fn next_tenant(&mut self) -> Option<usize> {
+        if let Some(c) = self.current {
+            let t = &self.tenants[c];
+            if !t.queue.is_empty() && t.deficit >= 1 && t.inflight < t.spec.quota {
+                return Some(c);
+            }
+            if t.queue.is_empty() {
+                // An idle tenant banks no deficit (classic DRR reset).
+                self.tenants[c].deficit = 0;
+            }
+            self.current = None;
+        }
+        let n = self.tenants.len();
+        for _ in 0..n {
+            let ti = self.rr_cursor % n;
+            self.rr_cursor = (self.rr_cursor + 1) % n;
+            let t = &mut self.tenants[ti];
+            if t.queue.is_empty() || t.inflight >= t.spec.quota {
+                continue;
+            }
+            let w = t.spec.weight.max(1);
+            t.deficit = (t.deficit + w).min(w.saturating_mul(8));
+            self.current = Some(ti);
+            return Some(ti);
+        }
+        None
+    }
+
+    /// Dispatch one coalesced round: encode every job's items into the
+    /// central queue, then pump assignments to idle workers once.
+    fn dispatch_round(&mut self, round: Vec<(usize, PendingJob)>) {
+        if round.is_empty() {
+            return;
+        }
+        self.metrics.counter("batch_rounds").inc();
+        self.metrics.counter("batched_jobs").add(round.len() as u64);
+        for (ti, p) in round {
+            self.admit(ti, p);
+        }
+        self.pump();
+    }
+
+    fn admit(&mut self, ti: usize, p: PendingJob) {
+        let started = Instant::now();
+        let a4 = Arc::new(split_blocks(&p.a));
+        let b4 = Arc::new(split_blocks(&p.b));
+        // Faults are a pure function of (master seed, job_id, item): the
+        // pattern cannot shift with tenants, batching, caching, depth,
+        // or admission history (scripted jobs sample nothing).
+        let faults: Vec<FaultAction> = match p.faults {
+            Some(f) => f,
+            None => (0..self.plan.num_work_items())
+                .map(|i| {
+                    self.cfg.master.fault.sample_at(self.cfg.master.seed, p.job_id, i as u64)
+                })
+                .collect(),
+        };
+        let mut injected_failures = 0;
+        let mut injected_stragglers = 0;
+        for fault in &faults {
+            match fault {
+                FaultAction::Fail => injected_failures += 1,
+                FaultAction::Delay(_) => injected_stragglers += 1,
+                FaultAction::None => {}
+            }
+        }
+        match &self.plan {
+            DispatchPlan::Flat(graph) => {
+                // Encoded-operand cache: repeated left operands (same
+                // weights, many inputs) reuse their per-task encodes.
+                // Native only — the PJRT task protocol ships blocks.
+                let cached: Option<Vec<Arc<Matrix>>> =
+                    if self.cache.enabled() && matches!(self.backend, Backend::Native) {
+                        let key = operand_key(&a4);
+                        match self.cache.get(key) {
+                            Some(v) => Some(v),
+                            None => {
+                                let v: Vec<Arc<Matrix>> = graph
+                                    .specs
+                                    .iter()
+                                    .map(|s| Arc::new(encode_operand(&s.int_ca(), &a4)))
+                                    .collect();
+                                self.cache.put(key, v.clone());
+                                Some(v)
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                for (spec, fault) in graph.specs.iter().zip(&faults) {
+                    let left = match &cached {
+                        Some(v) => OperandPayload::Encoded(v[spec.id].clone()),
+                        None => OperandPayload::Blocks(a4.clone()),
+                    };
+                    self.dispatch.push_back(Assignment {
+                        job_id: p.job_id,
+                        task_id: spec.id,
+                        ca: spec.ca,
+                        cb: spec.cb,
+                        left,
+                        right: OperandPayload::Blocks(b4.clone()),
+                        fault: *fault,
+                    });
+                }
+            }
+            DispatchPlan::Nested(graph) => {
+                let m2 = graph.group_size();
+                // One encode scratch pair for the whole dispatch; only
+                // the level-2 split blocks (shared by the group's leaf
+                // items) are allocated per group.
+                let mut enc_l = Matrix::zeros(0, 0);
+                let mut enc_r = Matrix::zeros(0, 0);
+                for (g, ospec) in graph.outer.specs.iter().enumerate() {
+                    encode_operand_into(&mut enc_l, &ospec.int_ca(), &a4);
+                    encode_operand_into(&mut enc_r, &ospec.int_cb(), &b4);
+                    let ga4 = Arc::new(split_blocks(&enc_l));
+                    let gb4 = Arc::new(split_blocks(&enc_r));
+                    for (j, ispec) in graph.inner.specs.iter().enumerate() {
+                        let task_id = g * m2 + j;
+                        self.dispatch.push_back(Assignment {
+                            job_id: p.job_id,
+                            task_id,
+                            ca: ispec.ca,
+                            cb: ispec.cb,
+                            left: OperandPayload::Blocks(ga4.clone()),
+                            right: OperandPayload::Blocks(gb4.clone()),
+                            fault: faults[task_id],
+                        });
+                    }
+                }
+            }
+        }
+        let state = JobState::new(
+            &self.plan,
+            p.job_id,
+            a4,
+            b4,
+            p.enqueued,
+            started,
+            started + self.cfg.master.deadline,
+            injected_failures,
+            injected_stragglers,
+            !self.cfg.master.collect_all,
+        );
+        self.metrics.counter("jobs_dispatched").inc();
+        self.inflight.insert(p.job_id, InflightJob { state, tenant: ti });
+    }
+
+    // --- dispatch ----------------------------------------------------
+
+    /// Hand queued assignments to idle workers, one each (pull-based:
+    /// a worker re-enters `idle` only via `Ready`).
+    fn pump(&mut self) {
+        while !self.dispatch.is_empty() && !self.idle.is_empty() {
+            let w = self.idle.pop_front().expect("checked non-empty");
+            let item = self.dispatch.pop_front().expect("checked non-empty");
+            match self.fleet.send(w, ToWorker::AssignLeaf(item)) {
+                Ok(()) => {}
+                Err(msg) => {
+                    // Endpoint gone: requeue the item, drop the worker
+                    // from the roster.
+                    if let ToWorker::AssignLeaf(item) = msg {
+                        self.dispatch.push_front(item);
+                    }
+                    self.registered[w] = false;
+                    self.update_worker_gauge();
+                }
+            }
+        }
+        self.metrics.gauge("pool_queue_depth").set(self.dispatch.len() as u64);
+    }
+
+    fn purge_dispatch(&mut self, job_id: u64, tasks: &Range<usize>) -> (usize, usize) {
+        let before = self.dispatch.len();
+        let mut replying = 0usize;
+        self.dispatch.retain(|item| {
+            let hit = item.job_id == job_id && tasks.contains(&item.task_id);
+            if hit && item.fault != FaultAction::Fail {
+                replying += 1;
+            }
+            !hit
+        });
+        self.metrics.gauge("pool_queue_depth").set(self.dispatch.len() as u64);
+        (before - self.dispatch.len(), replying)
+    }
+
+    fn broadcast_revoke(&mut self, job_id: u64, tasks: Range<usize>) {
+        for w in 0..self.registered.len() {
+            if self.registered[w] {
+                let _ = self.fleet.send(w, ToWorker::Revoke { job_id, tasks: tasks.clone() });
+            }
+        }
+    }
+
+    fn update_worker_gauge(&self) {
+        let live = self.registered.iter().filter(|&&r| r).count();
+        self.metrics.gauge("workers_live").set(live as u64);
+    }
+
+    // --- message handling --------------------------------------------
+
+    fn on_message(&mut self, msg: ToCoord, done: &mut Vec<JobDone>) {
+        match msg {
+            ToCoord::Register { worker_id } => {
+                if worker_id < self.registered.len() && !self.registered[worker_id] {
+                    self.registered[worker_id] = true;
+                    self.idle.push_back(worker_id);
+                    self.update_worker_gauge();
+                }
+                self.pump();
+            }
+            ToCoord::Ready { worker_id } => {
+                self.idle.push_back(worker_id);
+                self.pump();
+            }
+            ToCoord::LeafResult { reply, .. } => self.on_reply(reply, done),
+            ToCoord::RevokeAck { job_id, replying, purged, .. } => {
+                // Worker-side backlog purges are disjoint from the
+                // central-queue purge (an item is in exactly one place),
+                // so debiting both never double-counts.
+                if purged > 0 {
+                    if let Some(j) = self.inflight.get_mut(&job_id) {
+                        j.state.note_revoked(replying);
+                    }
+                    self.check_complete(job_id, done);
+                }
+            }
+            ToCoord::HeartbeatAck { worker_id, seq } => {
+                if worker_id < self.hb_acked.len() {
+                    self.hb_acked[worker_id] = seq;
+                }
+                self.metrics.counter("heartbeat_acks").inc();
+            }
+        }
+    }
+
+    /// Route one reply to its job; replies for jobs that are no longer
+    /// open (completed, cancelled, or never existed) are dropped and
+    /// counted — the cross-job leakage guard. A reply that closes a
+    /// nested group triggers the group's revocation.
+    fn on_reply(&mut self, reply: WorkerReply, done: &mut Vec<JobDone>) {
+        let job_id = reply.job_id;
+        let revoke = {
+            let Some(j) = self.inflight.get_mut(&job_id) else {
+                self.metrics.counter("replies_stale_dropped").inc();
+                return;
+            };
+            match &reply.product {
+                Ok(_) => {
+                    self.metrics.histogram("worker_compute").observe(reply.compute_time);
+                }
+                Err(_) => {
+                    self.metrics.counter("worker_errors").inc();
+                }
+            }
+            j.state.on_reply(reply)
+        };
+        if let Some(range) = revoke {
+            let (removed, replying) = self.purge_dispatch(job_id, &range);
+            if removed > 0 {
+                self.metrics.counter("group_items_cancelled").add(removed as u64);
+                self.metrics.counter("pool_items_revoked").add(removed as u64);
+            }
+            self.broadcast_revoke(job_id, range);
+            if let Some(j) = self.inflight.get_mut(&job_id) {
+                j.state.note_revoked(replying);
+            }
+            self.metrics.counter("groups_recovered").inc();
+        }
+        self.check_complete(job_id, done);
+    }
+
+    fn check_complete(&mut self, job_id: u64, done: &mut Vec<JobDone>) {
+        let Some(j) = self.inflight.get(&job_id) else { return };
+        let decodable = j.state.is_decodable();
+        let collect_all = self.cfg.master.collect_all;
+        let complete = if decodable {
+            !collect_all || j.state.all_replies_in()
+        } else {
+            // Every possible reply is in and the span is still short:
+            // no point waiting for the deadline.
+            j.state.all_replies_in()
+        };
+        if complete {
+            let j = self.inflight.remove(&job_id).expect("checked present");
+            self.finish(j, decodable, done);
+        }
+    }
+
+    /// Complete jobs that hit their deadline or exhausted their replies,
+    /// oldest first, up to the caller's completion budget.
+    fn reap(&mut self, done: &mut Vec<JobDone>, max_completions: usize) {
+        let now = Instant::now();
+        let mut ready: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, j)| now >= j.state.deadline || j.state.all_replies_in())
+            .map(|(id, _)| *id)
+            .collect();
+        ready.sort_unstable();
+        for id in ready {
+            if done.len() >= max_completions {
+                break;
+            }
+            let j = self.inflight.remove(&id).expect("listed as ready");
+            // collect_all promises a decode set that depends only on the
+            // injected faults: if the deadline fires before every live
+            // reply arrived, fall back (or error) rather than silently
+            // decoding from a timing-dependent partial set.
+            let decodable = j.state.is_decodable()
+                && (!self.cfg.master.collect_all || j.state.all_replies_in());
+            self.finish(j, decodable, done);
+        }
+    }
+
+    /// Finalize one job: revoke its outstanding items, assemble or fall
+    /// back, record global and per-tenant metrics, free the tenant slot.
+    fn finish(&mut self, j: InflightJob, decodable: bool, done: &mut Vec<JobDone>) {
+        let InflightJob { mut state, tenant } = j;
+        let job_id = state.job_id;
+        let items = self.plan.num_work_items();
+        let (removed, _) = self.purge_dispatch(job_id, &(0..items));
+        if removed > 0 {
+            self.metrics.counter("pool_items_revoked").add(removed as u64);
+        }
+        self.broadcast_revoke(job_id, 0..items);
+        let scheme = self.plan.name().to_string();
+        let result = if decodable {
+            match state.assemble(&self.backend) {
+                Ok(c) => Ok((c, state.report(&scheme, false))),
+                Err(e) => Err(format!("job {job_id}: {e}")),
+            }
+        } else if self.cfg.master.fallback_local {
+            self.metrics.counter("jobs_fell_back").inc();
+            let c = state.fallback_product();
+            Ok((c, state.report(&scheme, true)))
+        } else {
+            Err(format!(
+                "job {job_id}: not decodable within deadline ({} of {} replies)",
+                state.finished, state.dispatched
+            ))
+        };
+        if let Ok((_, report)) = &result {
+            self.metrics.histogram("job_latency").observe(report.elapsed);
+        }
+        self.metrics
+            .histogram("queue_wait")
+            .observe(state.started.duration_since(state.enqueued));
+        self.metrics.counter("jobs_completed").inc();
+        let total_latency = state.enqueued.elapsed();
+        let t = &mut self.tenants[tenant];
+        t.inflight -= 1;
+        t.jobs.inc();
+        t.latency.observe(total_latency);
+        done.push(JobDone { job_id, tenant: t.spec.name.clone(), result, total_latency });
+        self.admit_ready();
+    }
+
+    fn update_gauges(&self) {
+        self.metrics.gauge("inflight_jobs").set(self.inflight.len() as u64);
+        self.metrics.gauge("pending_jobs").set(self.queued_total as u64);
+        for t in &self.tenants {
+            t.queued.set(t.queue.len() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    fn cfg(depth: usize) -> TierConfig {
+        TierConfig {
+            master: MasterConfig {
+                deadline: Duration::from_secs(10),
+                ..MasterConfig::default()
+            },
+            depth,
+            ..TierConfig::default()
+        }
+    }
+
+    fn rand_pair(n: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::seeded(seed);
+        (Matrix::random(n, n, &mut rng), Matrix::random(n, n, &mut rng))
+    }
+
+    #[test]
+    fn tenant_spec_parsing_accepts_and_rejects() {
+        let t = TenantSpec::parse("team-a:3:8").unwrap();
+        assert_eq!(t, TenantSpec::new("team-a", 3, 8));
+        let t: TenantSpec = "free_1:1:4".parse().unwrap();
+        assert_eq!(t.name, "free_1");
+        for bad in [
+            "",             // empty
+            "a:1",          // missing quota
+            "a:1:2:3",      // too many fields
+            ":1:2",         // empty name
+            "a b:1:2",      // bad name chars
+            "a:0:2",        // zero weight
+            "a:1:0",        // zero quota
+            "a:x:2",        // non-numeric weight
+            "a:1:y",        // non-numeric quota
+        ] {
+            assert!(TenantSpec::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn unknown_tenant_and_full_queue_are_rejected() {
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig { queue_cap: 1, depth: 1, ..cfg(1) },
+        );
+        let err = tier.submit("nobody", Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap_err();
+        assert!(err.contains("unknown tenant"), "{err}");
+        // Depth 1: job 1 goes in flight, job 2 occupies the single
+        // queue slot, job 3 bounces.
+        tier.submit("default", Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap();
+        tier.submit("default", Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap();
+        let err = tier.submit("default", Matrix::zeros(8, 8), Matrix::zeros(8, 8)).unwrap_err();
+        assert!(err.contains("queue full"), "{err}");
+        assert_eq!(tier.drive(2).len(), 2);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn drr_shares_track_weights_exactly_at_depth_one() {
+        // Depth 1 makes completion order equal admission order, so the
+        // DRR schedule is directly observable: weights 3:1 over a
+        // 16-completion window must admit exactly 12 vs 4.
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig {
+                tenants: vec![
+                    TenantSpec::new("heavy", 3, usize::MAX),
+                    TenantSpec::new("light", 1, usize::MAX),
+                ],
+                ..cfg(1)
+            },
+        );
+        for seed in 0..16 {
+            let (a, b) = rand_pair(8, seed);
+            tier.submit("heavy", a.clone(), b.clone()).unwrap();
+            tier.submit("light", a, b).unwrap();
+        }
+        let done = tier.drive(16);
+        assert_eq!(done.len(), 16);
+        let heavy = done.iter().filter(|d| d.tenant == "heavy").count();
+        let light = done.iter().filter(|d| d.tenant == "light").count();
+        assert_eq!((heavy, light), (12, 4), "shares must track 3:1 weights exactly");
+        // Drain the rest; every job must still complete correctly.
+        let rest = tier.drive(usize::MAX);
+        assert_eq!(rest.len(), 16);
+        assert!(rest.iter().all(|d| d.result.is_ok()));
+        tier.shutdown();
+    }
+
+    #[test]
+    fn quota_caps_a_tenants_inflight_jobs() {
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig {
+                tenants: vec![
+                    TenantSpec::new("capped", 1, 2),
+                    TenantSpec::unbounded("open"),
+                ],
+                ..cfg(8)
+            },
+        );
+        for seed in 0..6 {
+            let (a, b) = rand_pair(8, seed);
+            tier.submit("capped", a, b).unwrap();
+        }
+        // Depth 8 has room for all six, but the quota holds admission
+        // at two; the rest wait in the tenant queue.
+        assert_eq!(tier.tenant_inflight("capped"), Some(2));
+        assert_eq!(tier.tenant_queued("capped"), Some(4));
+        assert_eq!(tier.outstanding(), 6);
+        let done = tier.drive(6);
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|d| d.result.is_ok()));
+        tier.shutdown();
+    }
+
+    #[test]
+    fn cancel_removes_pending_and_inflight_jobs() {
+        // Zero workers: nothing ever completes, so admission state is
+        // fully deterministic when cancel runs.
+        let mut tier = ServingTier::with_plan(
+            DispatchPlan::flat(TaskSet::strassen_winograd(0)),
+            Backend::Native,
+            cfg(1),
+            Some(0),
+        );
+        let (a, b) = rand_pair(8, 1);
+        let j1 = tier.submit("default", a.clone(), b.clone()).unwrap();
+        let j2 = tier.submit("default", a, b).unwrap();
+        assert_eq!(tier.in_flight(), 1);
+        assert_eq!(tier.outstanding(), 2);
+        assert!(tier.cancel(j2), "pending job");
+        assert_eq!(tier.outstanding(), 1);
+        assert!(tier.cancel(j1), "in-flight job");
+        assert_eq!(tier.outstanding(), 0);
+        assert!(!tier.cancel(99), "unknown job");
+        assert_eq!(tier.metrics.counter("jobs_cancelled").get(), 2);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn cache_reuses_repeated_left_operands_and_evicts_lru() {
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig { cache_cap: 2, ..cfg(2) },
+        );
+        let (a, b1) = rand_pair(8, 1);
+        let (_, b2) = rand_pair(8, 2);
+        let want1 = a.matmul(&b1);
+        let want2 = a.matmul(&b2);
+        // Same left operand three times: one miss, two hits.
+        tier.submit("default", a.clone(), b1.clone()).unwrap();
+        tier.submit("default", a.clone(), b2.clone()).unwrap();
+        tier.submit("default", a.clone(), b1.clone()).unwrap();
+        let mut done = tier.drive(3);
+        done.sort_by_key(|d| d.job_id);
+        for (d, want) in done.iter().zip([&want1, &want2, &want1]) {
+            let (c, _) = d.result.as_ref().unwrap();
+            assert!(c.approx_eq(want, 1e-4), "cached encode must decode correctly");
+        }
+        assert_eq!(tier.metrics.counter("cache_misses").get(), 1);
+        assert_eq!(tier.metrics.counter("cache_hits").get(), 2);
+        // Two more distinct left operands overflow cap=2 → eviction;
+        // the original operand then misses again.
+        let (a2, _) = rand_pair(8, 3);
+        let (a3, _) = rand_pair(8, 4);
+        tier.submit("default", a2, b1.clone()).unwrap();
+        tier.submit("default", a3, b1.clone()).unwrap();
+        tier.submit("default", a, b1).unwrap();
+        assert_eq!(tier.drive(3).len(), 3);
+        assert!(tier.metrics.counter("cache_evictions").get() >= 1);
+        assert_eq!(tier.metrics.counter("cache_misses").get(), 4);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn cache_capacity_zero_disables_the_cache_entirely() {
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig { cache_cap: 0, ..cfg(1) },
+        );
+        let (a, b) = rand_pair(8, 1);
+        tier.submit("default", a.clone(), b.clone()).unwrap();
+        tier.submit("default", a, b).unwrap();
+        assert_eq!(tier.drive(2).len(), 2);
+        assert_eq!(tier.metrics.counter("cache_hits").get(), 0);
+        assert_eq!(tier.metrics.counter("cache_misses").get(), 0);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn batch_window_chunks_dispatch_rounds() {
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig { batch_window: 3, ..cfg(8) },
+        );
+        let mut want = Vec::new();
+        for seed in 0..8 {
+            let (a, b) = rand_pair(8, seed);
+            want.push(a.matmul(&b));
+            tier.submit("default", a, b).unwrap();
+        }
+        let mut done = tier.drive(8);
+        assert_eq!(done.len(), 8);
+        done.sort_by_key(|d| d.job_id);
+        for (d, w) in done.iter().zip(&want) {
+            let (c, _) = d.result.as_ref().unwrap();
+            assert!(c.approx_eq(w, 1e-4));
+        }
+        // 8 admitted jobs in windows of 3 → 3 rounds (3 + 3 + 2).
+        assert_eq!(tier.metrics.counter("batched_jobs").get(), 8);
+        assert!(tier.metrics.counter("batch_rounds").get() <= 3);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn heartbeats_are_sent_and_acked_while_polling() {
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            cfg(1),
+        );
+        let (a, b) = rand_pair(8, 1);
+        // Every item straggles past two heartbeat periods, so the poll
+        // loop must probe (and collect acks) while waiting.
+        let faults = vec![FaultAction::Delay(Duration::from_millis(700)); 14];
+        tier.submit_with_faults("default", a, b, faults).unwrap();
+        let done = tier.drive(1);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].result.is_ok());
+        assert!(tier.metrics.counter("heartbeats_sent").get() >= 1);
+        assert!(tier.metrics.counter("heartbeat_acks").get() >= 1);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn operand_keys_separate_contents_and_shapes() {
+        let mut rng = Rng::seeded(1);
+        let a = Matrix::random(8, 8, &mut rng);
+        let k1 = operand_key(&split_blocks(&a));
+        assert_eq!(k1, operand_key(&split_blocks(&a)), "key is content-determined");
+        // Mutating one element must change the key (cache invalidation).
+        let mut data: Vec<f32> = a.as_slice().to_vec();
+        data[17] += 1.0;
+        let a2 = Matrix::from_slice(8, 8, &data);
+        assert_ne!(k1, operand_key(&split_blocks(&a2)));
+        let b = Matrix::random(16, 16, &mut rng);
+        assert_ne!(k1, operand_key(&split_blocks(&b)));
+    }
+}

@@ -1,0 +1,275 @@
+//! Message transport between the serving tier and its workers.
+//!
+//! The [`Transport`] trait is the coordinator's *only* view of the
+//! fleet: send a [`ToWorker`] to endpoint `i`, receive the next
+//! [`ToCoord`] from anyone. The protocol types carry no channel or
+//! thread handles, so a socket transport can implement the same trait
+//! over the [`crate::coordinator::proto::wire`] codec without touching
+//! the tier.
+//!
+//! [`ChannelTransport`] is the in-process, dependency-free
+//! implementation: one mpsc mailbox per worker, one shared return
+//! channel, and a **delay line** modelling slow links — a worker can ask
+//! for a message to be delivered `d` later ([`WorkerEndpoint::send_after`]),
+//! which is how stragglers reply late without ever blocking a worker
+//! slot.
+
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{channel, Receiver, RecvError, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::proto::{ToCoord, ToWorker};
+
+/// Coordinator-side view of a worker fleet's message fabric.
+pub trait Transport {
+    /// Number of worker endpoints this transport was built with.
+    fn num_workers(&self) -> usize;
+
+    /// Deliver `msg` to worker `worker`'s mailbox. On failure (endpoint
+    /// gone) the message is handed back so the caller can requeue it.
+    fn send(&self, worker: usize, msg: ToWorker) -> Result<(), ToWorker>;
+
+    /// Receive the next worker message, waiting at most `timeout`.
+    fn recv_timeout(&self, timeout: Duration) -> Result<ToCoord, RecvTimeoutError>;
+
+    /// Release transport resources (join helper threads). Called once,
+    /// after every worker endpoint has been dropped.
+    fn shutdown(&mut self) {}
+}
+
+/// In-process transport over std mpsc channels.
+pub struct ChannelTransport {
+    mailboxes: Vec<Sender<ToWorker>>,
+    coord_rx: Receiver<ToCoord>,
+    delay_handle: Option<JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Build the fabric for `n` workers: the coordinator keeps the
+    /// [`ChannelTransport`]; each [`WorkerEndpoint`] moves into its
+    /// worker's event loop.
+    pub fn new(n: usize) -> (ChannelTransport, Vec<WorkerEndpoint>) {
+        let (coord_tx, coord_rx) = channel::<ToCoord>();
+        let (delay_tx, delay_rx) = channel::<Delayed>();
+        let delay_handle = std::thread::Builder::new()
+            .name("delay-line".into())
+            .spawn(move || delay_loop(delay_rx))
+            .expect("spawn delay line");
+        let mut mailboxes = Vec::with_capacity(n);
+        let mut endpoints = Vec::with_capacity(n);
+        for worker_id in 0..n {
+            let (tx, rx) = channel::<ToWorker>();
+            mailboxes.push(tx);
+            endpoints.push(WorkerEndpoint {
+                worker_id,
+                rx,
+                tx: coord_tx.clone(),
+                delay_tx: delay_tx.clone(),
+            });
+        }
+        // `coord_tx`/`delay_tx` clones live only in the endpoints: once
+        // every worker exits, the return channel and the delay line see
+        // disconnect and wind down on their own.
+        (ChannelTransport { mailboxes, coord_rx, delay_handle: Some(delay_handle) }, endpoints)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn num_workers(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    fn send(&self, worker: usize, msg: ToWorker) -> Result<(), ToWorker> {
+        match self.mailboxes.get(worker) {
+            Some(tx) => tx.send(msg).map_err(|e| e.0),
+            None => Err(msg),
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<ToCoord, RecvTimeoutError> {
+        self.coord_rx.recv_timeout(timeout)
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(h) = self.delay_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker-side half of the fabric: a mailbox to drain and a way to
+/// answer — immediately or through the delay line (the slow-link
+/// straggler model: the reply is late, the slot is not).
+pub struct WorkerEndpoint {
+    worker_id: usize,
+    rx: Receiver<ToWorker>,
+    tx: Sender<ToCoord>,
+    delay_tx: Sender<Delayed>,
+}
+
+impl WorkerEndpoint {
+    pub fn worker_id(&self) -> usize {
+        self.worker_id
+    }
+
+    /// Block until the next coordinator message; `Err` means the
+    /// coordinator is gone and the event loop should exit.
+    pub fn recv(&self) -> Result<ToWorker, RecvError> {
+        self.rx.recv()
+    }
+
+    /// Drain one already-delivered message without blocking.
+    pub fn try_recv(&self) -> Option<ToWorker> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Send a message to the coordinator. Errors (coordinator gone
+    /// during teardown) are deliberately ignored.
+    pub fn send(&self, msg: ToCoord) {
+        let _ = self.tx.send(msg);
+    }
+
+    /// Deliver `msg` to the coordinator `delay` from now, via the
+    /// transport's delay line. Returns immediately.
+    pub fn send_after(&self, msg: ToCoord, delay: Duration) {
+        let _ = self.delay_tx.send(Delayed {
+            due: Instant::now() + delay,
+            msg,
+            out: self.tx.clone(),
+        });
+    }
+}
+
+// --- straggler delay line -----------------------------------------------
+
+struct Delayed {
+    due: Instant,
+    msg: ToCoord,
+    out: Sender<ToCoord>,
+}
+
+struct HeapEntry {
+    due: Instant,
+    seq: u64,
+    msg: ToCoord,
+    out: Sender<ToCoord>,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-due first.
+        other.due.cmp(&self.due).then(other.seq.cmp(&self.seq))
+    }
+}
+
+fn delay_loop(rx: Receiver<Delayed>) {
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+    let mut seq = 0u64;
+    loop {
+        let now = Instant::now();
+        while heap.peek().is_some_and(|e| e.due <= now) {
+            let e = heap.pop().unwrap();
+            let _ = e.out.send(e.msg);
+        }
+        let msg = match heap.peek() {
+            Some(e) => rx.recv_timeout(e.due.saturating_duration_since(Instant::now())),
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        };
+        match msg {
+            Ok(d) => {
+                seq += 1;
+                heap.push(HeapEntry { due: d.due, seq, msg: d.msg, out: d.out });
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // Every endpoint is gone: flush what is left immediately
+                // (receivers are usually gone too; send errors are fine).
+                for e in heap.into_sorted_vec() {
+                    let _ = e.out.send(e.msg);
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_flow_both_ways() {
+        let (mut t, mut eps) = ChannelTransport::new(2);
+        assert_eq!(t.num_workers(), 2);
+        t.send(1, ToWorker::Heartbeat { seq: 5 }).unwrap();
+        let got = eps[1].try_recv().unwrap();
+        assert!(matches!(got, ToWorker::Heartbeat { seq: 5 }));
+        assert!(eps[0].try_recv().is_none(), "mailboxes are per-worker");
+        eps[0].send(ToCoord::Register { worker_id: 0 });
+        match t.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToCoord::Register { worker_id } => assert_eq!(worker_id, 0),
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(eps.drain(..));
+        t.shutdown();
+    }
+
+    #[test]
+    fn send_to_dead_endpoint_returns_the_message() {
+        let (mut t, eps) = ChannelTransport::new(1);
+        drop(eps);
+        let back = t.send(0, ToWorker::Heartbeat { seq: 1 }).unwrap_err();
+        assert!(matches!(back, ToWorker::Heartbeat { seq: 1 }));
+        let back = t.send(7, ToWorker::Shutdown).unwrap_err();
+        assert!(matches!(back, ToWorker::Shutdown), "out-of-range endpoint");
+        t.shutdown();
+    }
+
+    #[test]
+    fn delay_line_defers_but_preserves_delivery() {
+        let (mut t, mut eps) = ChannelTransport::new(1);
+        let ep = eps.pop().unwrap();
+        let t0 = Instant::now();
+        ep.send_after(ToCoord::Ready { worker_id: 0 }, Duration::from_millis(40));
+        ep.send(ToCoord::Register { worker_id: 0 });
+        // The undelayed message must arrive first.
+        match t.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToCoord::Register { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match t.recv_timeout(Duration::from_secs(1)).unwrap() {
+            ToCoord::Ready { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        drop(ep);
+        t.shutdown();
+    }
+
+    #[test]
+    fn delay_line_flushes_pending_messages_on_disconnect() {
+        let (mut t, mut eps) = ChannelTransport::new(1);
+        let ep = eps.pop().unwrap();
+        ep.send_after(ToCoord::Ready { worker_id: 0 }, Duration::from_secs(30));
+        // Dropping the endpoint disconnects the delay line, which must
+        // flush the far-future message instead of sleeping it out.
+        drop(ep);
+        match t.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToCoord::Ready { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        t.shutdown();
+    }
+}

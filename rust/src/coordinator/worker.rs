@@ -1,23 +1,34 @@
-//! The worker fleet: a fixed set of OS threads draining one **shared**
-//! work queue, so any idle slot picks up the next item regardless of
-//! which job produced it. This is what lets the multiplexed scheduler
-//! keep the fleet busy while individual jobs wait on stragglers.
+//! Workers as independent message-driven event loops.
+//!
+//! Each worker owns a [`WorkerEndpoint`] and nothing else: it announces
+//! itself with `Register`, computes each `AssignLeaf` it is handed, and
+//! reports `Ready` when its slot is free — the pull-based dispatch that
+//! lets the serving tier keep exact, coordinator-side revocation
+//! accounting (an undispatched task is purged from the tier's central
+//! queue; at most one task is ever at a worker). `Revoke` purges the
+//! local backlog with exact `RevokeAck` accounting, `Heartbeat` is
+//! answered with `HeartbeatAck`, and `Shutdown` drains then exits.
 //!
 //! Fault injection happens at the node, exactly like the paper's model:
 //! a failed node simply never answers; a straggler answers late. A
 //! straggler is modeled as a *delayed response* (slow link / slow
-//! node-to-master path): the product is computed, handed to a delay
-//! line for deferred delivery, and the worker slot immediately picks up
-//! the next item. Revoking a job purges its still-queued items so
-//! cancelled work never occupies a slot.
+//! node-to-master path): the product is computed, handed to the
+//! transport's delay line for deferred delivery, and the worker
+//! immediately reports `Ready` — the slot is never blocked.
+//!
+//! [`WorkerFleet`] spawns the event loops over an in-process
+//! [`ChannelTransport`] and gives the serving tier its coordinator-side
+//! handle; any other [`Transport`] implementation can be substituted
+//! without touching the loop.
 
-use std::collections::{BinaryHeap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::proto::{Assignment, OperandPayload, ToCoord, ToWorker};
+use crate::coordinator::transport::{ChannelTransport, Transport, WorkerEndpoint};
 use crate::linalg::blocked::encode_operand_into;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{Counter, Gauge, Registry};
@@ -135,19 +146,8 @@ impl FaultPlan {
     }
 }
 
-/// One unit of work for a node.
-pub struct WorkItem {
-    pub job_id: u64,
-    pub task_id: usize,
-    pub ca: [f32; 4],
-    pub cb: [f32; 4],
-    pub a4: Arc<[Matrix; 4]>,
-    pub b4: Arc<[Matrix; 4]>,
-    pub fault: FaultAction,
-    pub reply: Sender<WorkerReply>,
-}
-
-/// A node's answer.
+/// A node's answer (the body of
+/// [`ToCoord::LeafResult`](crate::coordinator::proto::ToCoord::LeafResult)).
 #[derive(Debug)]
 pub struct WorkerReply {
     pub job_id: u64,
@@ -156,163 +156,89 @@ pub struct WorkerReply {
     pub compute_time: Duration,
 }
 
-struct PoolShared {
-    queue: Mutex<VecDeque<WorkItem>>,
-    available: Condvar,
-    shutdown: AtomicBool,
-}
-
+/// Fleet-level worker metrics, shared by every event loop.
 #[derive(Clone)]
-struct PoolCounters {
+pub struct WorkerCounters {
     executed: Arc<Counter>,
     faulted: Arc<Counter>,
     revoked: Arc<Counter>,
     busy: Arc<Gauge>,
-    queued: Arc<Gauge>,
 }
 
-/// Fixed fleet of worker nodes over one shared queue.
-pub struct WorkerPool {
-    shared: Arc<PoolShared>,
-    handles: Vec<JoinHandle<()>>,
-    delay_tx: Option<Sender<Delayed>>,
-    delay_handle: Option<JoinHandle<()>>,
-    counters: PoolCounters,
-}
-
-impl WorkerPool {
-    /// Spawn `n` nodes on the given backend, recording fleet metrics
-    /// (`pool_*` counters/gauges) into `metrics`.
-    pub fn spawn(n: usize, backend: Backend, metrics: Registry) -> WorkerPool {
-        let shared = Arc::new(PoolShared {
-            queue: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-        });
-        let counters = PoolCounters {
+impl WorkerCounters {
+    pub fn from_registry(metrics: &Registry) -> WorkerCounters {
+        WorkerCounters {
             executed: metrics.counter("pool_items_executed"),
             faulted: metrics.counter("pool_items_faulted"),
             revoked: metrics.counter("pool_items_revoked"),
             busy: metrics.gauge("pool_busy_workers"),
-            queued: metrics.gauge("pool_queue_depth"),
-        };
-        let (delay_tx, delay_rx) = channel::<Delayed>();
-        let delay_handle = std::thread::Builder::new()
-            .name("delay-line".into())
-            .spawn(move || delay_loop(delay_rx))
-            .expect("spawn delay line");
+        }
+    }
+}
+
+/// The worker fleet, from the coordinator's side: `n` independent event
+/// loops reachable only through a [`Transport`].
+pub struct WorkerFleet {
+    transport: Box<dyn Transport>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerFleet {
+    /// Spawn `n` event-loop workers on the given backend over an
+    /// in-process [`ChannelTransport`], recording fleet metrics
+    /// (`pool_*` counters/gauges) into `metrics`.
+    pub fn spawn(n: usize, backend: Backend, metrics: Registry) -> WorkerFleet {
+        let (transport, endpoints) = ChannelTransport::new(n);
+        let counters = WorkerCounters::from_registry(&metrics);
         let mut handles = Vec::with_capacity(n);
-        for node in 0..n {
-            let shared = shared.clone();
+        for ep in endpoints {
             let backend = backend.clone();
             let counters = counters.clone();
-            let delay_tx = delay_tx.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("worker-{node}"))
-                .spawn(move || node_loop(shared, backend, counters, delay_tx))
+                .name(format!("worker-{}", ep.worker_id()))
+                .spawn(move || event_loop(ep, backend, counters))
                 .expect("spawn worker");
             handles.push(handle);
         }
-        WorkerPool {
-            shared,
-            handles,
-            delay_tx: Some(delay_tx),
-            delay_handle: Some(delay_handle),
-            counters,
-        }
+        WorkerFleet { transport: Box::new(transport), handles }
+    }
+
+    /// Adopt an externally built transport whose worker tasks are
+    /// already running (`handles` may be empty for remote workers).
+    pub fn over(transport: Box<dyn Transport>, handles: Vec<JoinHandle<()>>) -> WorkerFleet {
+        WorkerFleet { transport, handles }
     }
 
     pub fn size(&self) -> usize {
-        self.handles.len()
+        self.transport.num_workers()
     }
 
-    /// Enqueue one item; any idle worker picks it up.
-    pub fn submit(&self, item: WorkItem) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(item);
-        self.counters.queued.set(q.len() as u64);
-        drop(q);
-        self.shared.available.notify_one();
+    /// Deliver `msg` to one worker; the message is handed back if the
+    /// endpoint is gone.
+    pub fn send(&self, worker: usize, msg: ToWorker) -> Result<(), ToWorker> {
+        self.transport.send(worker, msg)
     }
 
-    /// Cancel a job: purge its still-queued items so straggler-freed
-    /// slots immediately pick up other jobs' work. Items already being
-    /// computed (or sitting in the delay line) still produce replies;
-    /// the scheduler drops those by `job_id`. Returns the purge count.
-    pub fn revoke(&self, job_id: u64) -> usize {
-        let mut q = self.shared.queue.lock().unwrap();
-        let before = q.len();
-        q.retain(|item| item.job_id != job_id);
-        let removed = before - q.len();
-        self.counters.queued.set(q.len() as u64);
-        drop(q);
-        if removed > 0 {
-            self.counters.revoked.add(removed as u64);
-        }
-        removed
+    /// Receive the next worker message, waiting at most `timeout`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<ToCoord, RecvTimeoutError> {
+        self.transport.recv_timeout(timeout)
     }
 
-    /// Cancel one job's still-queued items within a task-id range — the
-    /// group-level cancellation of nested dispatch: once a group's inner
-    /// span is recovered, its remaining leaf items are dead work.
-    ///
-    /// Returns `(removed, would_have_replied)`: the total purge count
-    /// and how many of the purged items would have produced a reply
-    /// (i.e. were not injected failures) — what the job's
-    /// expected-reply accounting must be debited by. Items already
-    /// being computed (or in the delay line) still reply; the job state
-    /// ignores replies for closed groups.
-    pub fn revoke_range(
-        &self,
-        job_id: u64,
-        tasks: std::ops::Range<usize>,
-    ) -> (usize, usize) {
-        let mut q = self.shared.queue.lock().unwrap();
-        let before = q.len();
-        let mut replying = 0usize;
-        q.retain(|item| {
-            let hit = item.job_id == job_id && tasks.contains(&item.task_id);
-            if hit && item.fault != FaultAction::Fail {
-                replying += 1;
-            }
-            !hit
-        });
-        let removed = before - q.len();
-        self.counters.queued.set(q.len() as u64);
-        drop(q);
-        if removed > 0 {
-            self.counters.revoked.add(removed as u64);
-        }
-        (removed, replying)
-    }
-
-    /// Graceful shutdown: close the queue and join every thread.
+    /// Graceful shutdown: ask every worker to drain and exit, join the
+    /// event loops, then release the transport (delay-line flush).
     pub fn shutdown(mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.available.notify_all();
+        for w in 0..self.transport.num_workers() {
+            let _ = self.transport.send(w, ToWorker::Shutdown);
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        // All worker-held delay senders are gone once workers joined;
-        // dropping ours lets the delay line flush and exit.
-        drop(self.delay_tx.take());
-        if let Some(h) = self.delay_handle.take() {
-            let _ = h.join();
-        }
+        self.transport.shutdown();
     }
 }
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        // If shutdown() was not called, unblock the threads so they can
-        // exit; do not join in drop (avoids teardown hangs).
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.available.notify_all();
-    }
-}
-
-/// Per-worker-thread reusable encode scratch: the two encoded operands
-/// are written into these buffers ([`encode_operand_into`]) instead of
+/// Per-worker reusable encode scratch: the two encoded operands are
+/// written into these buffers ([`encode_operand_into`]) instead of
 /// allocating two fresh matrices per task — after the first item of a
 /// given block size the native encode path allocates nothing but the
 /// product it ships back.
@@ -327,39 +253,81 @@ impl EncodeScratch {
     }
 }
 
-fn node_loop(
-    shared: Arc<PoolShared>,
-    backend: Backend,
-    counters: PoolCounters,
-    delay_tx: Sender<Delayed>,
-) {
+/// One worker's event loop: drain the mailbox, act out control
+/// messages, compute assignments one at a time, report `Ready` after
+/// each. Public so alternative transports can host the identical loop.
+pub fn event_loop(ep: WorkerEndpoint, backend: Backend, counters: WorkerCounters) {
     let mut scratch = EncodeScratch::new();
+    let mut backlog: VecDeque<Assignment> = VecDeque::new();
+    let mut shutting_down = false;
+    ep.send(ToCoord::Register { worker_id: ep.worker_id() });
     loop {
-        let item = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(item) = q.pop_front() {
-                    counters.queued.set(q.len() as u64);
-                    break Some(item);
-                }
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    break None;
-                }
-                q = shared.available.wait(q).unwrap();
+        // Block only when there is nothing to compute and no shutdown
+        // pending; otherwise just drain what has already arrived so
+        // control messages (Revoke, Shutdown) are seen before the next
+        // compute.
+        if backlog.is_empty() && !shutting_down {
+            match ep.recv() {
+                Ok(msg) => handle(msg, &mut backlog, &ep, &counters, &mut shutting_down),
+                Err(_) => break, // coordinator gone
             }
-        };
-        let Some(item) = item else { break };
-        counters.busy.inc();
-        process(item, &backend, &counters, &delay_tx, &mut scratch);
-        counters.busy.dec();
+        }
+        while let Some(msg) = ep.try_recv() {
+            handle(msg, &mut backlog, &ep, &counters, &mut shutting_down);
+        }
+        match backlog.pop_front() {
+            Some(item) => {
+                counters.busy.inc();
+                process(item, &backend, &counters, &ep, &mut scratch);
+                counters.busy.dec();
+                ep.send(ToCoord::Ready { worker_id: ep.worker_id() });
+            }
+            None => {
+                if shutting_down {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn handle(
+    msg: ToWorker,
+    backlog: &mut VecDeque<Assignment>,
+    ep: &WorkerEndpoint,
+    counters: &WorkerCounters,
+    shutting_down: &mut bool,
+) {
+    match msg {
+        ToWorker::AssignLeaf(a) => backlog.push_back(a),
+        ToWorker::Revoke { job_id, tasks } => {
+            let before = backlog.len();
+            let mut replying = 0usize;
+            backlog.retain(|item| {
+                let hit = item.job_id == job_id && tasks.contains(&item.task_id);
+                if hit && item.fault != FaultAction::Fail {
+                    replying += 1;
+                }
+                !hit
+            });
+            let purged = before - backlog.len();
+            if purged > 0 {
+                counters.revoked.add(purged as u64);
+            }
+            ep.send(ToCoord::RevokeAck { worker_id: ep.worker_id(), job_id, purged, replying });
+        }
+        ToWorker::Heartbeat { seq } => {
+            ep.send(ToCoord::HeartbeatAck { worker_id: ep.worker_id(), seq });
+        }
+        ToWorker::Shutdown => *shutting_down = true,
     }
 }
 
 fn process(
-    item: WorkItem,
+    item: Assignment,
     backend: &Backend,
-    counters: &PoolCounters,
-    delay_tx: &Sender<Delayed>,
+    counters: &WorkerCounters,
+    ep: &WorkerEndpoint,
     scratch: &mut EncodeScratch,
 ) {
     let delay = match item.fault {
@@ -380,43 +348,53 @@ fn process(
         compute_time: t0.elapsed(),
     };
     counters.executed.inc();
+    let msg = ToCoord::LeafResult { worker_id: ep.worker_id(), reply };
     match delay {
-        None => {
-            let _ = item.reply.send(reply);
-        }
-        Some(d) => {
-            // Hand off to the delay line; this slot is free again now.
-            let _ = delay_tx.send(Delayed {
-                due: Instant::now() + d,
-                reply,
-                out: item.reply,
-            });
-        }
+        None => ep.send(msg),
+        // Hand off to the delay line; this slot is free again now.
+        Some(d) => ep.send_after(msg, d),
     }
 }
 
 fn compute(
     backend: &Backend,
-    item: &WorkItem,
+    item: &Assignment,
     scratch: &mut EncodeScratch,
 ) -> Result<Matrix, String> {
     match backend {
         Backend::Native => {
-            let ica = to_int(&item.ca);
-            let icb = to_int(&item.cb);
-            encode_operand_into(&mut scratch.left, &ica, &item.a4);
-            encode_operand_into(&mut scratch.right, &icb, &item.b4);
-            Ok(scratch.left.matmul(&scratch.right))
+            let EncodeScratch { left: sl, right: sr } = scratch;
+            // A pre-encoded payload (coordinator cache hit) is used as
+            // is; encode_operand_into is deterministic, so both routes
+            // write bit-identical operands.
+            let left: &Matrix = match &item.left {
+                OperandPayload::Encoded(m) => m,
+                OperandPayload::Blocks(a4) => {
+                    encode_operand_into(sl, &to_int(&item.ca), a4);
+                    sl
+                }
+            };
+            let right: &Matrix = match &item.right {
+                OperandPayload::Encoded(m) => m,
+                OperandPayload::Blocks(b4) => {
+                    encode_operand_into(sr, &to_int(&item.cb), b4);
+                    sr
+                }
+            };
+            Ok(left.matmul(right))
         }
-        // The Arc clones here bump refcounts; the blocks themselves are
-        // shared with the scheduler's work items, never copied.
-        Backend::Pjrt(h) => h.worker_task_tagged(
-            item.job_id,
-            item.ca,
-            item.a4.clone(),
-            item.cb,
-            item.b4.clone(),
-        ),
+        Backend::Pjrt(h) => {
+            // The PJRT task protocol ships blocks; the tier never routes
+            // cached encodes to this backend.
+            let (OperandPayload::Blocks(a4), OperandPayload::Blocks(b4)) =
+                (&item.left, &item.right)
+            else {
+                return Err("pre-encoded operands require the native backend".into());
+            };
+            // The Arc clones here bump refcounts; the blocks themselves
+            // are shared with the tier's assignments, never copied.
+            h.worker_task_tagged(item.job_id, item.ca, a4.clone(), item.cb, b4.clone())
+        }
     }
 }
 
@@ -426,70 +404,6 @@ fn to_int(c: &[f32; 4]) -> [i32; 4] {
         *o = x as i32;
     }
     out
-}
-
-// --- straggler delay line -----------------------------------------------
-
-struct Delayed {
-    due: Instant,
-    reply: WorkerReply,
-    out: Sender<WorkerReply>,
-}
-
-struct HeapEntry {
-    due: Instant,
-    seq: u64,
-    reply: WorkerReply,
-    out: Sender<WorkerReply>,
-}
-
-impl PartialEq for HeapEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.due == other.due && self.seq == other.seq
-    }
-}
-impl Eq for HeapEntry {}
-impl PartialOrd for HeapEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-due first.
-        other.due.cmp(&self.due).then(other.seq.cmp(&self.seq))
-    }
-}
-
-fn delay_loop(rx: Receiver<Delayed>) {
-    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
-    let mut seq = 0u64;
-    loop {
-        let now = Instant::now();
-        while heap.peek().is_some_and(|e| e.due <= now) {
-            let e = heap.pop().unwrap();
-            let _ = e.out.send(e.reply);
-        }
-        let msg = match heap.peek() {
-            Some(e) => rx.recv_timeout(e.due.saturating_duration_since(Instant::now())),
-            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
-        };
-        match msg {
-            Ok(d) => {
-                seq += 1;
-                heap.push(HeapEntry { due: d.due, seq, reply: d.reply, out: d.out });
-            }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => {
-                // Pool is shutting down: flush what is left immediately
-                // (receivers are usually gone; send errors are fine).
-                for e in heap.into_sorted_vec() {
-                    let _ = e.out.send(e.reply);
-                }
-                return;
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -504,120 +418,182 @@ mod tests {
         (Arc::new(split_blocks(&a)), Arc::new(split_blocks(&b)))
     }
 
-    fn item(
+    fn assignment(
         job_id: u64,
         task_id: usize,
         a4: &Arc<[Matrix; 4]>,
         b4: &Arc<[Matrix; 4]>,
         fault: FaultAction,
-        tx: &Sender<WorkerReply>,
-    ) -> WorkItem {
-        WorkItem {
+    ) -> Assignment {
+        Assignment {
             job_id,
             task_id,
             ca: [1.0, 0.0, 0.0, 0.0],
             cb: [1.0, 0.0, 0.0, 0.0],
-            a4: a4.clone(),
-            b4: b4.clone(),
+            left: OperandPayload::Blocks(a4.clone()),
+            right: OperandPayload::Blocks(b4.clone()),
             fault,
-            reply: tx.clone(),
         }
     }
 
+    /// Pump the fleet: deliver one assignment per Ready/Register until
+    /// `n_results` LeafResults arrived or the queue runs dry.
+    fn run_until(
+        fleet: &WorkerFleet,
+        queue: &mut VecDeque<Assignment>,
+        n_results: usize,
+        window: Duration,
+    ) -> Vec<WorkerReply> {
+        let mut out = Vec::new();
+        let deadline = Instant::now() + window;
+        while out.len() < n_results && Instant::now() < deadline {
+            let msg = match fleet.recv_timeout(Duration::from_millis(50)) {
+                Ok(m) => m,
+                Err(_) => continue,
+            };
+            match msg {
+                ToCoord::Register { worker_id } | ToCoord::Ready { worker_id } => {
+                    if let Some(item) = queue.pop_front() {
+                        fleet.send(worker_id, ToWorker::AssignLeaf(item)).unwrap();
+                    }
+                }
+                ToCoord::LeafResult { reply, .. } => out.push(reply),
+                _ => {}
+            }
+        }
+        out
+    }
+
     #[test]
-    fn pool_computes_products() {
-        let pool = WorkerPool::spawn(4, Backend::Native, Registry::new());
+    fn fleet_computes_products() {
+        let fleet = WorkerFleet::spawn(4, Backend::Native, Registry::new());
         let (a4, b4) = blocks(1, 16);
-        let (tx, rx) = channel();
-        for task_id in 0..4 {
-            pool.submit(item(7, task_id, &a4, &b4, FaultAction::None, &tx));
-        }
-        drop(tx);
+        let mut queue: VecDeque<Assignment> =
+            (0..4).map(|t| assignment(7, t, &a4, &b4, FaultAction::None)).collect();
+        let replies = run_until(&fleet, &mut queue, 4, Duration::from_secs(10));
+        assert_eq!(replies.len(), 4);
         let want = a4[0].matmul(&b4[0]);
-        let mut got = 0;
-        while let Ok(reply) = rx.recv() {
-            assert_eq!(reply.job_id, 7);
-            assert!(reply.product.unwrap().approx_eq(&want, 1e-5));
-            got += 1;
+        for r in replies {
+            assert_eq!(r.job_id, 7);
+            assert!(r.product.unwrap().approx_eq(&want, 1e-5));
         }
-        assert_eq!(got, 4);
-        pool.shutdown();
+        fleet.shutdown();
     }
 
     #[test]
-    fn failed_nodes_never_reply() {
-        let pool = WorkerPool::spawn(2, Backend::Native, Registry::new());
+    fn encoded_payloads_skip_the_worker_encode_bit_exactly() {
+        use crate::linalg::blocked::encode_operand;
+        let fleet = WorkerFleet::spawn(1, Backend::Native, Registry::new());
+        let (a4, b4) = blocks(8, 16);
+        let ca = [1.0f32, -1.0, 0.0, 1.0];
+        let cb = [1.0f32, 1.0, -1.0, 0.0];
+        let pre = Arc::new(encode_operand(&to_int(&ca), &a4));
+        let mut queue: VecDeque<Assignment> = VecDeque::new();
+        // Task 0 ships blocks; task 1 ships the pre-encoded left operand.
+        queue.push_back(Assignment {
+            job_id: 1,
+            task_id: 0,
+            ca,
+            cb,
+            left: OperandPayload::Blocks(a4.clone()),
+            right: OperandPayload::Blocks(b4.clone()),
+            fault: FaultAction::None,
+        });
+        queue.push_back(Assignment {
+            job_id: 1,
+            task_id: 1,
+            ca,
+            cb,
+            left: OperandPayload::Encoded(pre),
+            right: OperandPayload::Blocks(b4.clone()),
+            fault: FaultAction::None,
+        });
+        let mut replies = run_until(&fleet, &mut queue, 2, Duration::from_secs(10));
+        assert_eq!(replies.len(), 2);
+        replies.sort_by_key(|r| r.task_id);
+        let x = replies[0].product.as_ref().unwrap();
+        let y = replies[1].product.as_ref().unwrap();
+        let bits = |m: &Matrix| m.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(x), bits(y), "cached encode must be bit-identical");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn failed_nodes_never_send_results_but_still_report_ready() {
+        let metrics = Registry::new();
+        let fleet = WorkerFleet::spawn(1, Backend::Native, metrics.clone());
         let (a4, b4) = blocks(2, 8);
-        let (tx, rx) = channel();
-        pool.submit(item(1, 0, &a4, &b4, FaultAction::Fail, &tx));
-        pool.submit(item(1, 1, &a4, &b4, FaultAction::None, &tx));
-        drop(tx);
-        let replies: Vec<WorkerReply> = rx.iter().collect();
+        let mut queue: VecDeque<Assignment> = VecDeque::new();
+        queue.push_back(assignment(1, 0, &a4, &b4, FaultAction::Fail));
+        queue.push_back(assignment(1, 1, &a4, &b4, FaultAction::None));
+        // The faulted item produces no LeafResult, yet the worker's
+        // Ready keeps the dispatch loop moving to the healthy item.
+        let replies = run_until(&fleet, &mut queue, 1, Duration::from_secs(10));
         assert_eq!(replies.len(), 1);
         assert_eq!(replies[0].task_id, 1);
-        pool.shutdown();
+        assert_eq!(metrics.counter("pool_items_faulted").get(), 1);
+        assert_eq!(metrics.counter("pool_items_executed").get(), 1);
+        fleet.shutdown();
     }
 
     #[test]
     fn stragglers_reply_late_without_blocking_the_slot() {
-        let pool = WorkerPool::spawn(1, Backend::Native, Registry::new());
+        let fleet = WorkerFleet::spawn(1, Backend::Native, Registry::new());
         let (a4, b4) = blocks(3, 8);
-        let (tx, rx) = channel();
         let t0 = Instant::now();
-        pool.submit(item(1, 0, &a4, &b4, FaultAction::Delay(Duration::from_millis(40)), &tx));
-        // The single slot is NOT blocked by the straggler: a second,
+        let mut queue: VecDeque<Assignment> = VecDeque::new();
+        queue.push_back(assignment(1, 0, &a4, &b4, FaultAction::Delay(Duration::from_millis(40))));
+        queue.push_back(assignment(1, 1, &a4, &b4, FaultAction::None));
+        let replies = run_until(&fleet, &mut queue, 2, Duration::from_secs(10));
+        assert_eq!(replies.len(), 2);
+        // The single slot is NOT blocked by the straggler: the second,
         // undelayed item must come back first.
-        pool.submit(item(1, 1, &a4, &b4, FaultAction::None, &tx));
-        drop(tx);
-        let first = rx.recv().unwrap();
-        assert_eq!(first.task_id, 1, "undelayed item should arrive first");
-        let second = rx.recv().unwrap();
-        assert_eq!(second.task_id, 0);
+        assert_eq!(replies[0].task_id, 1, "undelayed item should arrive first");
+        assert_eq!(replies[1].task_id, 0);
         assert!(t0.elapsed() >= Duration::from_millis(40));
-        assert!(second.product.is_ok());
-        pool.shutdown();
+        assert!(replies[1].product.is_ok());
+        fleet.shutdown();
     }
 
     #[test]
-    fn revoke_purges_queued_items() {
-        // Zero workers: everything stays queued, so revocation is exact.
+    fn revoke_purges_the_local_backlog_and_acks_exactly() {
+        // Drive the event loop synchronously: queue three assignments, a
+        // range revoke, and a shutdown before the loop starts, so the
+        // drain order is deterministic. Tasks 1..3 are revoked; task 2
+        // is an injected failure (would never have replied anyway).
         let metrics = Registry::new();
-        let pool = WorkerPool::spawn(0, Backend::Native, metrics.clone());
+        let (mut transport, mut eps) = ChannelTransport::new(1);
+        let ep = eps.pop().unwrap();
         let (a4, b4) = blocks(4, 8);
-        let (tx, _rx) = channel();
-        for task_id in 0..3 {
-            pool.submit(item(9, task_id, &a4, &b4, FaultAction::None, &tx));
+        for t in 0..3 {
+            let fault = if t == 2 { FaultAction::Fail } else { FaultAction::None };
+            transport.send(0, ToWorker::AssignLeaf(assignment(9, t, &a4, &b4, fault))).unwrap();
         }
-        pool.submit(item(10, 0, &a4, &b4, FaultAction::None, &tx));
-        assert_eq!(pool.revoke(9), 3);
-        assert_eq!(metrics.counter("pool_items_revoked").get(), 3);
-        assert_eq!(metrics.gauge("pool_queue_depth").get(), 1);
-        assert_eq!(pool.revoke(9), 0, "idempotent");
-        pool.shutdown();
-    }
-
-    #[test]
-    fn revoke_range_purges_only_the_group_and_reports_replying() {
-        // Zero workers: everything stays queued, so revocation is exact.
-        let metrics = Registry::new();
-        let pool = WorkerPool::spawn(0, Backend::Native, metrics.clone());
-        let (a4, b4) = blocks(5, 8);
-        let (tx, _rx) = channel();
-        // Job 9: tasks 0..6; tasks 2..4 are "group 1"; task 3 is an
-        // injected failure (would never have replied anyway).
-        for task_id in 0..6 {
-            let fault = if task_id == 3 { FaultAction::Fail } else { FaultAction::None };
-            pool.submit(item(9, task_id, &a4, &b4, fault, &tx));
+        transport.send(0, ToWorker::Revoke { job_id: 9, tasks: 1..3 }).unwrap();
+        transport.send(0, ToWorker::Heartbeat { seq: 5 }).unwrap();
+        transport.send(0, ToWorker::Shutdown).unwrap();
+        event_loop(ep, Backend::Native, WorkerCounters::from_registry(&metrics));
+        let mut results = 0;
+        let mut acked = None;
+        let mut hb = None;
+        while let Ok(msg) = transport.recv_timeout(Duration::from_millis(100)) {
+            match msg {
+                ToCoord::LeafResult { reply, .. } => {
+                    assert_eq!(reply.task_id, 0, "only the unrevoked task runs");
+                    results += 1;
+                }
+                ToCoord::RevokeAck { job_id, purged, replying, .. } => {
+                    acked = Some((job_id, purged, replying));
+                }
+                ToCoord::HeartbeatAck { seq, .. } => hb = Some(seq),
+                _ => {}
+            }
         }
-        pool.submit(item(10, 2, &a4, &b4, FaultAction::None, &tx));
-        let (removed, replying) = pool.revoke_range(9, 2..4);
-        assert_eq!(removed, 2);
-        assert_eq!(replying, 1, "the injected failure does not count");
-        assert_eq!(metrics.gauge("pool_queue_depth").get(), 5);
-        assert_eq!(pool.revoke_range(9, 2..4), (0, 0), "idempotent");
-        // Other jobs' items with ids in the range are untouched.
-        assert_eq!(pool.revoke(10), 1);
-        pool.shutdown();
+        assert_eq!(results, 1);
+        assert_eq!(acked, Some((9, 2, 1)), "failure does not count as replying");
+        assert_eq!(hb, Some(5));
+        assert_eq!(metrics.counter("pool_items_revoked").get(), 2);
+        transport.shutdown();
     }
 
     #[test]

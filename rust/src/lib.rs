@@ -18,19 +18,27 @@
 //!   that executes the AOT artifacts on the request path with **no
 //!   Python anywhere at runtime**.
 //!
-//! ## Serving model (the multiplexed coordinator)
+//! ## Serving model (the message-driven serving tier)
 //!
 //! The coordinator treats the worker fleet as a **shared resource under
 //! continuous load**, not a per-job appendage:
 //!
-//! * a single shared [`coordinator::WorkerPool`] drains one work queue —
-//!   any idle node slot executes the next item from *any* job;
+//! * the tier and its [`coordinator::WorkerFleet`] communicate only
+//!   through the typed [`coordinator::proto`] protocol (`AssignLeaf`,
+//!   `LeafResult`, `Revoke`, `Heartbeat`, ...) over a
+//!   [`coordinator::Transport`] — workers are independent event-loop
+//!   tasks that pull one assignment per `Ready`, so any idle node slot
+//!   executes the next item from *any* job;
 //! * each multiply job is a per-job decode state machine
 //!   ([`coordinator::JobState`], keyed by `job_id`) fed by the
-//!   job-multiplexed [`coordinator::Scheduler`];
+//!   [`coordinator::ServingTier`] (or its single-tenant facade,
+//!   [`coordinator::Scheduler`]);
 //! * [`coordinator::MmServer`] admits jobs up to a configurable
 //!   **in-flight depth** and reports **backpressure** once the
-//!   outstanding-job cap is hit (`submit` returns queue-full);
+//!   outstanding-job cap is hit (`submit` returns queue-full); tenants
+//!   get deficit-round-robin fair shares with per-tenant in-flight
+//!   quotas, dispatch rounds batch small jobs, and an LRU cache reuses
+//!   encoded left operands by content hash;
 //! * once a job's four output targets are spanned, its outstanding
 //!   items are **cancelled** (queued items revoked; late replies
 //!   dropped — and counted — by the `job_id` guard), so straggler-freed
@@ -91,6 +99,7 @@ pub mod prelude {
     pub use crate::coordinator::scheduler::{FinishedJob, Scheduler, SchedulerConfig};
     pub use crate::coordinator::server::{MmServer, ServerConfig};
     pub use crate::coordinator::task::DispatchPlan;
+    pub use crate::coordinator::tier::{ServingTier, TenantSpec, TierConfig};
     pub use crate::coordinator::worker::{Backend, FaultPlan};
     pub use crate::algebra::fp::{Fp, Fp31};
     pub use crate::linalg::kernel::KernelKind;

@@ -31,8 +31,9 @@ use ft_strassen::coding::nested::{NestedOracle, NestedTaskSet};
 use ft_strassen::coding::theory::nested_failure_probability;
 use ft_strassen::config::{BackendKind, NestSpec, RunConfig, SchemeKind};
 use ft_strassen::coordinator::master::{Master, MasterConfig};
-use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::server::MmServer;
 use ft_strassen::coordinator::task::DispatchPlan;
+use ft_strassen::coordinator::tier::TenantSpec;
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::linalg::kernel::{self, KernelKind};
 use ft_strassen::linalg::matrix::Matrix;
@@ -56,6 +57,7 @@ subcommands:
   multiply [--n N] [--scheme S] [--backend B] [--p-e P] [--nest O:I]
   serve    [--jobs J] [--n N] [--scheme S] [--backend B] [--p-straggle P]
            [--depth D] [--queue-cap Q] [--nest O:I] [--workers W]
+           [--tenants SPECS] [--batch-window W] [--cache-cap C]
   localmm  [--n N] [--kernel K] [--cutoff C] [--max-depth D]
            single-node probe: flat kernel vs recursive Strassen
 
@@ -82,6 +84,18 @@ serve options:
                                  paper's sequential one-job-at-a-time master)
   --queue-cap Q                  outstanding-job cap before submit reports
                                  backpressure (default 4096)
+  --tenants SPECS                comma-separated name:weight:quota tenant
+                                 specs, e.g. heavy:3:8,light:1:8 (weight =
+                                 DRR share, quota = max in-flight jobs; the
+                                 workload round-robins submissions across
+                                 tenants; default: one unbounded tenant)
+  --batch-window W               jobs coalesced per dispatch round
+                                 (default 1 = no batching)
+  --cache-cap C                  encoded-operand LRU cache capacity, in
+                                 operands (default 0 = disabled; native
+                                 backend, flat schemes)
+  (TOML: [serve] depth/queue_cap/batch_window, [tenants] specs,
+   [cache] cap — CLI overrides the file)
 ";
 
 fn main() {
@@ -153,6 +167,23 @@ fn load_config(args: &Args) -> Result<RunConfig, String> {
     cfg.max_depth = args
         .get_parsed_or("max-depth", cfg.max_depth)
         .map_err(|e| e.to_string())?;
+    cfg.depth = args.get_parsed_or("depth", cfg.depth).map_err(|e| e.to_string())?;
+    cfg.queue_cap = args
+        .get_parsed_or("queue-cap", cfg.queue_cap)
+        .map_err(|e| e.to_string())?;
+    cfg.batch_window = args
+        .get_parsed_or("batch-window", cfg.batch_window)
+        .map_err(|e| e.to_string())?;
+    cfg.cache_cap = args
+        .get_parsed_or("cache-cap", cfg.cache_cap)
+        .map_err(|e| e.to_string())?;
+    if let Some(t) = args.get("tenants") {
+        cfg.tenants = t
+            .split(',')
+            .map(TenantSpec::parse)
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("--tenants: {e}"))?;
+    }
     cfg.validate()?;
     // The kernel policy is process-wide: every matmul below here (worker
     // encode products, decode fallback, reference checks) dispatches
@@ -460,20 +491,8 @@ fn cmd_multiply(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let jobs = args.get_parsed_or("jobs", 32usize).map_err(|e| e.to_string())?;
-    let depth = args.get_parsed_or("depth", 4usize).map_err(|e| e.to_string())?;
-    let queue_cap = args.get_parsed_or("queue-cap", 4096usize).map_err(|e| e.to_string())?;
-    if depth == 0 {
-        return Err("--depth must be >= 1".into());
-    }
-    if queue_cap == 0 {
-        return Err("--queue-cap must be >= 1".into());
-    }
     let (backend, _svc) = backend_for(&cfg)?;
-    let server_cfg = ServerConfig {
-        master: master_config(&cfg),
-        queue_cap,
-        inflight_depth: depth,
-    };
+    let tier_cfg = cfg.tier_config(master_config(&cfg));
     // Explicit --workers pins the fleet size for either shape; without
     // it, flat schemes keep one node per task (the paper's model) and
     // nested fan-outs use the configured fleet size.
@@ -487,15 +506,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             let plan = DispatchPlan::nested(nest.task_set());
             let workers = workers_override.unwrap_or(cfg.workers);
             (
-                MmServer::with_plan(plan, backend, server_cfg, Some(workers)),
+                MmServer::with_tier_config(plan, backend, tier_cfg, Some(workers)),
                 name,
             )
         }
         None => (
-            MmServer::with_plan(
+            MmServer::with_tier_config(
                 DispatchPlan::flat(cfg.scheme.task_set()),
                 backend,
-                server_cfg,
+                tier_cfg,
                 workers_override,
             ),
             cfg.scheme.display_name(),
@@ -503,10 +522,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let report = server.run_workload(jobs, cfg.n, cfg.seed)?;
     println!(
-        "scheme={} n={} jobs={} depth={depth}: {:.2} jobs/s, mean latency {:?}, p95 {:?}",
+        "scheme={} n={} jobs={} depth={} batch_window={} cache_cap={}: \
+         {:.2} jobs/s, mean latency {:?}, p95 {:?}",
         scheme_name,
         cfg.n,
         report.jobs,
+        cfg.depth,
+        cfg.batch_window,
+        cfg.cache_cap,
         report.throughput_jobs_per_s,
         report.mean_latency,
         report.p95_latency
@@ -515,6 +538,27 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "decoded={} fell_back={} mean workers used={:.1}",
         report.decoded, report.fell_back, report.mean_finished_workers
     );
+    let reg = server.registry();
+    let tenant_names = server.tenant_names();
+    if tenant_names.len() > 1 {
+        println!("tenants (DRR shares):");
+        for t in &tenant_names {
+            println!(
+                "  {:12} jobs={:4} mean latency {:?}",
+                t,
+                reg.counter(&format!("tenant_jobs_{t}")).get(),
+                reg.histogram(&format!("tenant_latency_{t}")).mean()
+            );
+        }
+    }
+    if cfg.cache_cap > 0 {
+        let hits = reg.counter("cache_hits").get();
+        let misses = reg.counter("cache_misses").get();
+        println!(
+            "encoded-operand cache: {hits} hits / {misses} misses ({:.0}% hit rate)",
+            100.0 * hits as f64 / (hits + misses).max(1) as f64
+        );
+    }
     if args.flag("verbose") {
         println!("\nmetrics:\n{}", server.metrics());
     }

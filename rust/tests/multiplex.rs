@@ -15,6 +15,8 @@ use std::time::Duration;
 use ft_strassen::coding::scheme::TaskSet;
 use ft_strassen::coordinator::master::{Master, MasterConfig};
 use ft_strassen::coordinator::server::{MmServer, ServerConfig};
+use ft_strassen::coordinator::task::DispatchPlan;
+use ft_strassen::coordinator::tier::{TenantSpec, TierConfig};
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::linalg::matrix::Matrix;
 use ft_strassen::sim::rng::Rng;
@@ -110,6 +112,42 @@ fn depth4_is_bit_identical_to_sequential_master_all_schemes() {
         let got = multiplexed_outputs(&set, 7, 4);
         assert_bit_identical(&set, &want, &got, "depth 4");
     }
+}
+
+#[test]
+fn tiered_serving_keeps_collect_all_depth_invariance() {
+    // Regression for the facade drift satellite: the full serving tier
+    // (tenant fair queuing + batching + encoded-operand cache) must not
+    // change any job's bits vs the sequential master — faults are
+    // (seed, job, item)-pure, job ids are assigned at submission, and
+    // `collect_all` pins the decode set to the injected faults, so DRR
+    // admission order, batch coalescing and cache reuse are all
+    // bit-invisible.
+    let set = TaskSet::strassen_winograd(2);
+    let want = sequential_outputs(&set, 42);
+    let mut s = MmServer::with_tier_config(
+        DispatchPlan::flat(set.clone()),
+        Backend::Native,
+        TierConfig {
+            master: fault_cfg(42),
+            depth: 4,
+            queue_cap: 64,
+            tenants: vec![TenantSpec::new("heavy", 3, 8), TenantSpec::new("light", 1, 8)],
+            batch_window: 3,
+            cache_cap: 8,
+        },
+        None,
+    );
+    for (i, (a, b)) in job_stream(42).into_iter().enumerate() {
+        let tenant = if i % 2 == 0 { "heavy" } else { "light" };
+        s.submit_as(tenant, a, b).unwrap();
+    }
+    let mut done = s.drain(usize::MAX).unwrap();
+    assert_eq!(done.len(), JOBS);
+    done.sort_by_key(|c| c.id);
+    let got: Vec<Matrix> = done.into_iter().map(|c| c.c).collect();
+    assert_bit_identical(&set, &want, &got, "tenants+batch+cache depth 4");
+    s.shutdown();
 }
 
 #[test]

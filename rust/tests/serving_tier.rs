@@ -1,0 +1,433 @@
+//! Serving-tier invariants, pinned against an **in-test synchronous
+//! reference**:
+//!
+//! * **Conformance** — the async message-driven [`ServingTier`] decodes
+//!   bit-identically to a synchronous scheduler that feeds every live
+//!   reply into a [`JobState`] in task order, for flat and nested
+//!   plans, across every serving knob (depth, batch window, cache,
+//!   tenant layout, fleet size). This holds because job ids are
+//!   assigned at submission, faults are a pure function of
+//!   `(seed, job_id, item)`, and `collect_all` pins the decode set to
+//!   the injected faults rather than thread timing.
+//! * **Fairness** — deficit-round-robin refills track the configured
+//!   weights exactly under contention (observed deterministically via a
+//!   zero-worker fleet).
+//! * **Batching** — coalesced dispatch rounds never change output bits.
+//! * **Cache** — a mutated operand can never be served a stale encode
+//!   (content-hash keying), and cached decodes stay exact.
+//! * **Cancellation** — a job cancelled mid-stream never completes; its
+//!   in-compute replies land as counted stale drops, not cross-job
+//!   leakage.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ft_strassen::coding::nested::NestedTaskSet;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coordinator::job::JobState;
+use ft_strassen::coordinator::master::MasterConfig;
+use ft_strassen::coordinator::task::DispatchPlan;
+use ft_strassen::coordinator::tier::{ServingTier, TenantSpec, TierConfig};
+use ft_strassen::coordinator::worker::{Backend, FaultAction, FaultPlan, WorkerReply};
+use ft_strassen::linalg::blocked::{encode_operand, split_blocks};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::sim::rng::Rng;
+
+fn master_cfg(seed: u64) -> MasterConfig {
+    MasterConfig {
+        deadline: Duration::from_secs(30),
+        fault: FaultPlan {
+            p_fail: 0.15,
+            p_straggle: 0.1,
+            delay: Duration::from_millis(5),
+        },
+        seed,
+        fallback_local: true,
+        // Deterministic decode set: wait for every live reply.
+        collect_all: true,
+    }
+}
+
+fn no_fault_cfg(seed: u64) -> MasterConfig {
+    MasterConfig {
+        deadline: Duration::from_secs(30),
+        fault: FaultPlan::NONE,
+        seed,
+        fallback_local: true,
+        collect_all: true,
+    }
+}
+
+fn job_stream(jobs: usize, n: usize, seed: u64) -> Vec<(Matrix, Matrix)> {
+    let mut rng = Rng::seeded(seed);
+    (0..jobs)
+        .map(|_| (Matrix::random(n, n, &mut rng), Matrix::random(n, n, &mut rng)))
+        .collect()
+}
+
+/// Compute work item `t` exactly as a native worker would (the encode
+/// kernel and matmul are deterministic, so this is bit-for-bit the
+/// worker's product).
+fn reference_product(
+    plan: &DispatchPlan,
+    a4: &[Matrix; 4],
+    b4: &[Matrix; 4],
+    t: usize,
+) -> Matrix {
+    match plan {
+        DispatchPlan::Flat(g) => {
+            let s = &g.specs[t];
+            encode_operand(&s.int_ca(), a4).matmul(&encode_operand(&s.int_cb(), b4))
+        }
+        DispatchPlan::Nested(g) => {
+            let (gi, j) = (t / g.group_size(), t % g.group_size());
+            let lo = encode_operand(&g.outer.specs[gi].int_ca(), a4);
+            let ro = encode_operand(&g.outer.specs[gi].int_cb(), b4);
+            let li = encode_operand(&g.inner.specs[j].int_ca(), &split_blocks(&lo));
+            let ri = encode_operand(&g.inner.specs[j].int_cb(), &split_blocks(&ro));
+            li.matmul(&ri)
+        }
+    }
+}
+
+/// The synchronous reference scheduler: one job at a time, replies fed
+/// in task order, faults sampled exactly as the tier samples them
+/// (pure in `(seed, job_id, item)`, job ids assigned in submission
+/// order starting at 1). Under `collect_all` every live reply is in
+/// the decode set, so reply *order* cannot matter — which is precisely
+/// what makes this a valid reference for the async tier.
+fn sync_reference(
+    plan: &DispatchPlan,
+    master: &MasterConfig,
+    jobs: &[(Matrix, Matrix)],
+) -> Vec<Matrix> {
+    jobs.iter()
+        .enumerate()
+        .map(|(i, (a, b))| {
+            let job_id = (i + 1) as u64;
+            let a4 = Arc::new(split_blocks(a));
+            let b4 = Arc::new(split_blocks(b));
+            let items = plan.num_work_items();
+            let faults: Vec<FaultAction> = (0..items)
+                .map(|t| master.fault.sample_at(master.seed, job_id, t as u64))
+                .collect();
+            let failures =
+                faults.iter().filter(|f| **f == FaultAction::Fail).count();
+            let stragglers = faults
+                .iter()
+                .filter(|f| matches!(f, FaultAction::Delay(_)))
+                .count();
+            let now = Instant::now();
+            let mut job = JobState::new(
+                plan,
+                job_id,
+                a4.clone(),
+                b4.clone(),
+                now,
+                now,
+                now + master.deadline,
+                failures,
+                stragglers,
+                false, // collect_all: defer assembly, no eager revocation
+            );
+            for (t, fault) in faults.iter().enumerate() {
+                if *fault == FaultAction::Fail {
+                    continue; // an injected failure never replies
+                }
+                job.on_reply(WorkerReply {
+                    job_id,
+                    task_id: t,
+                    product: Ok(reference_product(plan, &a4, &b4, t)),
+                    compute_time: Duration::ZERO,
+                });
+            }
+            if job.is_decodable() {
+                job.assemble(&Backend::Native).unwrap()
+            } else {
+                job.fallback_product()
+            }
+        })
+        .collect()
+}
+
+/// Run the same stream through the tier (tenants round-robin over the
+/// submissions) and return outputs in submission order.
+fn tier_outputs(
+    plan: &DispatchPlan,
+    cfg: TierConfig,
+    workers: Option<usize>,
+    jobs: &[(Matrix, Matrix)],
+    tenants: &[&str],
+) -> Vec<Matrix> {
+    let mut tier = ServingTier::with_plan(plan.clone(), Backend::Native, cfg, workers);
+    for (i, (a, b)) in jobs.iter().enumerate() {
+        tier.submit(tenants[i % tenants.len()], a.clone(), b.clone()).unwrap();
+    }
+    let mut done = tier.drive(usize::MAX);
+    assert_eq!(done.len(), jobs.len());
+    done.sort_by_key(|d| d.job_id);
+    let out = done.into_iter().map(|d| d.result.unwrap().0).collect();
+    tier.shutdown();
+    out
+}
+
+fn two_tenants() -> Vec<TenantSpec> {
+    vec![TenantSpec::new("heavy", 3, 8), TenantSpec::new("light", 1, 8)]
+}
+
+fn assert_bits(want: &[Matrix], got: &[Matrix], what: &str) {
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            w.as_slice(),
+            g.as_slice(),
+            "job {} diverged from the synchronous reference ({what})",
+            i + 1
+        );
+    }
+}
+
+#[test]
+fn flat_tier_matches_sync_reference_across_all_serving_knobs() {
+    let plan = DispatchPlan::flat(TaskSet::strassen_winograd(2));
+    let jobs = job_stream(6, 16, 42);
+    let want = sync_reference(&plan, &master_cfg(42), &jobs);
+    // The reference itself must be *correct*, not merely self-consistent.
+    for ((a, b), c) in jobs.iter().zip(&want) {
+        assert!(c.approx_eq(&a.matmul(b), 1e-3), "rel {}", c.rel_error(&a.matmul(b)));
+    }
+    for depth in [1, 4] {
+        for window in [1, 3] {
+            for cache in [0, 8] {
+                let cfg = TierConfig {
+                    master: master_cfg(42),
+                    depth,
+                    queue_cap: 64,
+                    tenants: two_tenants(),
+                    batch_window: window,
+                    cache_cap: cache,
+                };
+                let got = tier_outputs(&plan, cfg, None, &jobs, &["heavy", "light"]);
+                assert_bits(
+                    &want,
+                    &got,
+                    &format!("depth {depth} window {window} cache {cache}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_tier_matches_sync_reference_on_a_tiny_fleet() {
+    // Fleet size only changes *where* items run, never what they
+    // compute: 96 work items multiplexed onto 3 workers must produce
+    // the same bits as the one-node-per-task fleet and the reference.
+    let plan = DispatchPlan::flat(TaskSet::strassen_winograd(2));
+    let jobs = job_stream(6, 16, 42);
+    let want = sync_reference(&plan, &master_cfg(42), &jobs);
+    let cfg = TierConfig {
+        master: master_cfg(42),
+        depth: 4,
+        queue_cap: 64,
+        tenants: two_tenants(),
+        batch_window: 2,
+        cache_cap: 4,
+    };
+    let got = tier_outputs(&plan, cfg, Some(3), &jobs, &["heavy", "light"]);
+    assert_bits(&want, &got, "3-worker fleet");
+}
+
+#[test]
+fn nested_tier_matches_sync_reference() {
+    let plan = DispatchPlan::nested(NestedTaskSet::compose(
+        TaskSet::strassen_winograd(0),
+        TaskSet::strassen_winograd(0),
+    ));
+    let jobs = job_stream(4, 16, 7);
+    let want = sync_reference(&plan, &master_cfg(7), &jobs);
+    for (depth, window) in [(1, 1), (4, 3)] {
+        let cfg = TierConfig {
+            master: master_cfg(7),
+            depth,
+            queue_cap: 64,
+            tenants: two_tenants(),
+            batch_window: window,
+            cache_cap: 0,
+        };
+        let got = tier_outputs(&plan, cfg, Some(24), &jobs, &["heavy", "light"]);
+        assert_bits(&want, &got, &format!("nested depth {depth} window {window}"));
+    }
+}
+
+#[test]
+fn batch_window_is_bit_invisible() {
+    // The explicit pairwise form of the batching clause: the same
+    // faulty stream through window 1 and window 5 decodes to the same
+    // bits — batching chunks dispatch rounds, it never reorders the
+    // fault pattern or the decode set.
+    let plan = DispatchPlan::flat(TaskSet::strassen_winograd(2));
+    let jobs = job_stream(8, 16, 11);
+    let run = |window: usize| {
+        let cfg = TierConfig {
+            master: master_cfg(11),
+            depth: 8,
+            queue_cap: 64,
+            tenants: vec![TenantSpec::unbounded("default")],
+            batch_window: window,
+            cache_cap: 0,
+        };
+        tier_outputs(&plan, cfg, None, &jobs, &["default"])
+    };
+    let (one, five) = (run(1), run(5));
+    assert_bits(&one, &five, "window 1 vs window 5");
+}
+
+#[test]
+fn drr_refills_track_weights_exactly_under_contention() {
+    // Zero workers: nothing completes, so admission state is fully
+    // deterministic. Fill all depth-8 slots with one tenant, queue a
+    // backlog for both, then free slots one at a time (cancel) — the
+    // refills must follow the 3:1 DRR schedule exactly: the starved
+    // tenant is served first, then 6 heavy / 2 light over the window.
+    let mut tier = ServingTier::with_plan(
+        DispatchPlan::flat(TaskSet::strassen_winograd(0)),
+        Backend::Native,
+        TierConfig {
+            master: no_fault_cfg(1),
+            depth: 8,
+            queue_cap: usize::MAX,
+            tenants: vec![
+                TenantSpec::new("heavy", 3, usize::MAX),
+                TenantSpec::new("light", 1, usize::MAX),
+            ],
+            batch_window: 1,
+            cache_cap: 0,
+        },
+        Some(0),
+    );
+    let zeros = || (Matrix::zeros(8, 8), Matrix::zeros(8, 8));
+    let mut heavy_ids = Vec::new();
+    for _ in 0..16 {
+        let (a, b) = zeros();
+        heavy_ids.push(tier.submit("heavy", a, b).unwrap());
+    }
+    for _ in 0..16 {
+        let (a, b) = zeros();
+        tier.submit("light", a, b).unwrap();
+    }
+    // Eager admission filled every slot with the first tenant's jobs.
+    assert_eq!(tier.tenant_inflight("heavy"), Some(8));
+    assert_eq!(tier.tenant_inflight("light"), Some(0));
+    for id in &heavy_ids[..8] {
+        assert!(tier.cancel(*id), "in-flight job {id} must be cancellable");
+    }
+    // 8 refills under contention: 6 heavy + 2 light (weights 3:1).
+    assert_eq!(tier.tenant_inflight("heavy"), Some(6));
+    assert_eq!(tier.tenant_inflight("light"), Some(2));
+    assert_eq!(tier.tenant_queued("heavy"), Some(2));
+    assert_eq!(tier.tenant_queued("light"), Some(14));
+    tier.shutdown();
+}
+
+#[test]
+fn cache_never_serves_a_stale_encode_for_a_mutated_operand() {
+    // Small-integer operands: full-reply decode is bit-exact, so any
+    // stale cached encode would show up as a hard inequality.
+    let mut tier = ServingTier::new(
+        TaskSet::strassen_winograd(2),
+        Backend::Native,
+        TierConfig {
+            master: no_fault_cfg(1),
+            depth: 1,
+            queue_cap: 64,
+            tenants: vec![TenantSpec::unbounded("default")],
+            batch_window: 1,
+            cache_cap: 4,
+        },
+    );
+    let mut rng = Rng::seeded(5);
+    let a = Matrix::from_fn(16, 16, |_, _| (rng.below(7) as f32) - 3.0);
+    let b = Matrix::from_fn(16, 16, |_, _| (rng.below(7) as f32) - 3.0);
+    // In-place mutation of one element: the content hash must change,
+    // so the mutated operand can never alias the cached encodes.
+    let mut data: Vec<f32> = a.as_slice().to_vec();
+    data[17] += 1.0;
+    let a2 = Matrix::from_slice(16, 16, &data);
+
+    tier.submit("default", a.clone(), b.clone()).unwrap(); // miss
+    tier.submit("default", a.clone(), b.clone()).unwrap(); // hit
+    tier.submit("default", a2.clone(), b.clone()).unwrap(); // miss (mutated)
+    let mut done = tier.drive(3);
+    assert_eq!(done.len(), 3);
+    done.sort_by_key(|d| d.job_id);
+    let want = [a.matmul(&b), a.matmul(&b), a2.matmul(&b)];
+    for (d, w) in done.iter().zip(&want) {
+        let (c, _) = d.result.as_ref().unwrap();
+        assert_eq!(c.as_slice(), w.as_slice(), "integer decode must be exact");
+    }
+    assert_eq!(tier.metrics.counter("cache_hits").get(), 1);
+    assert_eq!(tier.metrics.counter("cache_misses").get(), 2);
+    tier.shutdown();
+}
+
+#[test]
+fn cancelled_job_never_completes_and_its_replies_drop_stale() {
+    let mut tier = ServingTier::new(
+        TaskSet::strassen_winograd(2),
+        Backend::Native,
+        TierConfig {
+            master: no_fault_cfg(1),
+            depth: 4,
+            queue_cap: 64,
+            tenants: vec![TenantSpec::unbounded("default")],
+            batch_window: 1,
+            cache_cap: 0,
+        },
+    );
+    let (a, b) = {
+        let mut rng = Rng::seeded(3);
+        (Matrix::random(16, 16, &mut rng), Matrix::random(16, 16, &mut rng))
+    };
+    // Job 1: every reply rides the delay line. Wait until all 16 items
+    // have been *executed* (in the delay line, slots free) so that the
+    // cancel below cannot purge anything from the central queue — all
+    // 16 replies must then arrive stale.
+    let j1 = tier
+        .submit_with_faults(
+            "default",
+            a.clone(),
+            b.clone(),
+            vec![FaultAction::Delay(Duration::from_millis(400)); 16],
+        )
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while tier.metrics.counter("pool_items_executed").get() < 16 {
+        assert!(Instant::now() < deadline, "workers never picked up the items");
+        tier.poll(Duration::from_millis(20), usize::MAX);
+    }
+    assert!(tier.cancel(j1), "in-flight job must be cancellable");
+    assert_eq!(tier.outstanding(), 0);
+
+    // Job 2 stays in flight past job 1's reply due-time, keeping the
+    // tier polling while the stale replies land.
+    let j2 = tier
+        .submit_with_faults(
+            "default",
+            a.clone(),
+            b.clone(),
+            vec![FaultAction::Delay(Duration::from_millis(800)); 16],
+        )
+        .unwrap();
+    let done = tier.drive(1);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].job_id, j2, "the cancelled job must never complete");
+    assert!(done[0].result.is_ok());
+    assert_eq!(
+        tier.metrics.counter("replies_stale_dropped").get(),
+        16,
+        "every cancelled-job reply must be dropped by the job_id guard"
+    );
+    assert_eq!(tier.metrics.counter("jobs_cancelled").get(), 1);
+    tier.shutdown();
+}
