@@ -1,0 +1,118 @@
+//! Bench: fleet-scale discrete-event campaigns — sweep p_e over a
+//! 10k-node fleet (1k under `FT_BENCH_QUICK=1`) for each scheduling
+//! policy on the nested sw+2psmm² plan (256 leaves/job), compare the
+//! measured failure rate against the paper's nested eq. (9) curve, and
+//! append one `BENCH_sim.json` entry per policy.
+//!
+//! The fleet is deliberately non-uniform (bimodal speeds, metered
+//! links, stragglers) so the policies actually differ: fastest-first
+//! should beat random on mean completion, locality-aware should move
+//! fewer bytes, speculative should trim the straggler tail.
+
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use ft_strassen::bench::schema::{SimCell, SimEntry};
+use ft_strassen::bench::trajectory::append_to_repo_root;
+use ft_strassen::coding::fc::fc_table;
+use ft_strassen::coding::nested::NestedTaskSet;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coding::theory::{log_pe_grid, nested_failure_probability};
+use ft_strassen::coordinator::worker::FaultPlan;
+use ft_strassen::sim::des::{policy_by_name, ArrivalProcess, Campaign, FleetSpec, LinkModel, SimPlan};
+use ft_strassen::sim::latency::LatencyModel;
+
+fn main() {
+    let quick = std::env::var("FT_BENCH_QUICK").as_deref() == Ok("1");
+    let (workers, jobs, points) = if quick { (1_000, 60, 3) } else { (10_000, 300, 5) };
+    let seed = 42u64;
+
+    let plan = SimPlan::Nested(NestedTaskSet::compose(
+        TaskSet::strassen_winograd(2),
+        TaskSet::strassen_winograd(2),
+    ));
+    let leaves = plan.num_leaves();
+    let outer_fc = fc_table(&TaskSet::strassen_winograd(2));
+    let inner_fc = fc_table(&TaskSet::strassen_winograd(2));
+
+    let fleet = FleetSpec {
+        workers,
+        rack_size: 32,
+        p_rack: 0.0,
+        speed: LatencyModel::Bimodal { base: 1.0, p_slow: 0.15, factor: 4.0 },
+        leaf_latency: LatencyModel::ShiftedExp { shift: 0.005, rate: 200.0 },
+        link: LinkModel { latency_s: 0.0002, bytes_per_s: 1.25e9 },
+    };
+    let arrivals = ArrivalProcess::Poisson { count: jobs, rate: 200.0 };
+    let grid = log_pe_grid(points);
+
+    let unix_time =
+        SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+
+    println!(
+        "=== fleet sim: {} | {workers} workers, {jobs} jobs, {leaves} leaves/job{} ===",
+        plan.name(),
+        if quick { " (quick)" } else { "" },
+    );
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>10} {:>10} {:>8} {:>12}",
+        "policy", "p_e", "theory_pf", "measured_pf", "mean_s", "p95_s", "backups", "net_bytes"
+    );
+
+    for name in ["random", "fastest", "locality", "speculative"] {
+        let mut cells = Vec::new();
+        for &p_e in &grid {
+            let mut policy = policy_by_name(name).unwrap();
+            let campaign = Campaign {
+                fleet,
+                arrivals: arrivals.clone(),
+                fault: FaultPlan {
+                    p_fail: p_e,
+                    p_straggle: (0.2f64).min(1.0 - p_e),
+                    delay: Duration::from_millis(40),
+                },
+                block_bytes: 16 * 16 * 8,
+                seed,
+                max_attempts: 4,
+                heap_capacity: jobs * leaves / 4,
+                record_trace: false,
+            };
+            let summary = campaign.run(&plan, policy.as_mut()).summary;
+            let theory = nested_failure_probability(&outer_fc, &inner_fc, p_e);
+            println!(
+                "{:<12} {:>8.4} {:>12.3e} {:>12.4} {:>10.4} {:>10.4} {:>8} {:>12}",
+                name,
+                p_e,
+                theory,
+                summary.measured_pf.mean,
+                summary.mean_completion_s,
+                summary.p95_completion_s,
+                summary.backups,
+                summary.network_bytes
+            );
+            cells.push(SimCell {
+                p_e,
+                theory_pf: theory,
+                measured_pf: summary.measured_pf.mean,
+                std_err: summary.measured_pf.std_err,
+                mean_completion_s: summary.mean_completion_s,
+                p95_completion_s: summary.p95_completion_s,
+                backups: summary.backups,
+                network_bytes: summary.network_bytes,
+            });
+        }
+        let entry = SimEntry {
+            unix_time,
+            plan: plan.name().to_string(),
+            policy: name.to_string(),
+            workers,
+            jobs,
+            seed,
+            quick,
+            cells,
+        };
+        match append_to_repo_root("BENCH_sim.json", &entry.render()) {
+            Ok(path) => println!("appended {name} entry to {}", path.display()),
+            Err(e) => eprintln!("warning: could not append BENCH_sim.json: {e}"),
+        }
+    }
+}

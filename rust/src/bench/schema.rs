@@ -254,6 +254,71 @@ impl ServeEntry {
     }
 }
 
+/// One sweep point of the fleet simulation (`BENCH_sim.json` `cells[]`):
+/// a (policy, p_e) cell of the discrete-event campaign.
+#[derive(Clone, Copy, Debug)]
+pub struct SimCell {
+    pub p_e: f64,
+    pub theory_pf: f64,
+    pub measured_pf: f64,
+    pub std_err: f64,
+    pub mean_completion_s: f64,
+    pub p95_completion_s: f64,
+    pub backups: u64,
+    pub network_bytes: u64,
+}
+
+/// One `BENCH_sim.json` entry: one scheduling policy swept over p_e on
+/// a fixed fleet by the discrete-event simulator (`sim::des`).
+#[derive(Clone, Debug)]
+pub struct SimEntry {
+    pub unix_time: u64,
+    pub plan: String,
+    pub policy: String,
+    pub workers: usize,
+    pub jobs: usize,
+    pub seed: u64,
+    pub quick: bool,
+    pub cells: Vec<SimCell>,
+}
+
+impl SimEntry {
+    pub fn render(&self) -> String {
+        let cell_objs: Vec<String> = self
+            .cells
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"p_e\": {}, \"theory_pf\": {:.6e}, \"measured_pf\": {:.6}, \
+                     \"std_err\": {:.6}, \"mean_completion_s\": {:.6}, \
+                     \"p95_completion_s\": {:.6}, \"backups\": {}, \"network_bytes\": {}}}",
+                    c.p_e,
+                    c.theory_pf,
+                    c.measured_pf,
+                    c.std_err,
+                    c.mean_completion_s,
+                    c.p95_completion_s,
+                    c.backups,
+                    c.network_bytes
+                )
+            })
+            .collect();
+        format!(
+            "{{\"unix_time\": {}, \"plan\": \"{}\", \"policy\": \"{}\", \
+             \"workers\": {}, \"jobs\": {}, \"seed\": {}, \"quick\": {}, \
+             \"cells\": [{}]}}",
+            self.unix_time,
+            self.plan,
+            self.policy,
+            self.workers,
+            self.jobs,
+            self.seed,
+            self.quick,
+            cell_objs.join(", ")
+        )
+    }
+}
+
 // ---------------------------------------------------------------------
 // Minimal JSON reader (round-trip checking; no external deps)
 // ---------------------------------------------------------------------
@@ -480,6 +545,16 @@ pub const SERVE_KEYS: &[&str] = &[
     "quick",
     "cells",
 ];
+pub const SIM_KEYS: &[&str] = &[
+    "unix_time",
+    "plan",
+    "policy",
+    "workers",
+    "jobs",
+    "seed",
+    "quick",
+    "cells",
+];
 
 #[cfg(test)]
 mod tests {
@@ -576,6 +651,40 @@ mod tests {
         }
     }
 
+    fn sample_sim() -> SimEntry {
+        SimEntry {
+            unix_time: 5,
+            plan: "nested(sw+2psmm^2)".into(),
+            policy: "speculative".into(),
+            workers: 10_000,
+            jobs: 300,
+            seed: 7,
+            quick: true,
+            cells: vec![
+                SimCell {
+                    p_e: 0.005,
+                    theory_pf: 1.93e-7,
+                    measured_pf: 0.0,
+                    std_err: 0.0,
+                    mean_completion_s: 0.0123,
+                    p95_completion_s: 0.031,
+                    backups: 12,
+                    network_bytes: 4_915_200,
+                },
+                SimCell {
+                    p_e: 0.5,
+                    theory_pf: 0.999987,
+                    measured_pf: 1.0,
+                    std_err: 0.0,
+                    mean_completion_s: 0.0171,
+                    p95_completion_s: 0.044,
+                    backups: 0,
+                    network_bytes: 3_276_800,
+                },
+            ],
+        }
+    }
+
     #[test]
     fn every_entry_kind_round_trips_through_the_parser() {
         let cases: Vec<(String, &[&str])> = vec![
@@ -583,6 +692,7 @@ mod tests {
             (sample_kernel().render(), KERNEL_KEYS),
             (sample_recursive().render(), RECURSIVE_KEYS),
             (sample_serve().render(), SERVE_KEYS),
+            (sample_sim().render(), SIM_KEYS),
         ];
         for (entry, keys) in cases {
             let doc = parse_json(&entry).unwrap_or_else(|e| panic!("{entry}: {e}"));
@@ -602,6 +712,7 @@ mod tests {
             ("kernel", sample_kernel().render(), KERNEL_KEYS),
             ("recursive", sample_recursive().render(), RECURSIVE_KEYS),
             ("serve", sample_serve().render(), SERVE_KEYS),
+            ("sim", sample_sim().render(), SIM_KEYS),
         ];
         for (name, entry, keys) in cases {
             let path = tmp(&format!("{name}.json"));
@@ -638,6 +749,23 @@ mod tests {
         assert_eq!(cells[1].get("batch_window").and_then(Json::as_num), Some(4.0));
         assert_eq!(cells[1].get("cache_hit_rate").and_then(Json::as_num), Some(0.875));
         assert_eq!(cells[1].get("fell_back").and_then(Json::as_num), Some(1.0));
+    }
+
+    #[test]
+    fn sim_cells_survive_the_round_trip() {
+        let doc = parse_json(&sample_sim().render()).unwrap();
+        assert_eq!(doc.get("workers").and_then(Json::as_num), Some(10_000.0));
+        assert_eq!(doc.get("seed").and_then(Json::as_num), Some(7.0));
+        let cells = doc.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        // The scientific-notation theory_pf must survive the parse.
+        let tiny = cells[0].get("theory_pf").and_then(Json::as_num).unwrap();
+        assert!((tiny - 1.93e-7).abs() < 1e-12, "{tiny}");
+        assert_eq!(cells[1].get("measured_pf").and_then(Json::as_num), Some(1.0));
+        assert_eq!(
+            cells[0].get("network_bytes").and_then(Json::as_num),
+            Some(4_915_200.0)
+        );
     }
 
     #[test]

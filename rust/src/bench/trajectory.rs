@@ -1,6 +1,6 @@
 //! Append-only JSON-array trajectory files at the repo root
 //! (`BENCH_e2e.json`, `BENCH_kernel.json`, `BENCH_recursive.json`,
-//! `BENCH_serve.json`):
+//! `BENCH_serve.json`, `BENCH_sim.json`):
 //! one entry per recorded bench run, so the perf trajectory is
 //! trackable across PRs.
 //!

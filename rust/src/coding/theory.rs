@@ -63,6 +63,23 @@ pub fn nested_failure_probability(outer: &FcTable, inner: &FcTable, p_e: f64) ->
     failure_probability(outer, failure_probability(inner, p_e))
 }
 
+/// Log-spaced p_e grid over Fig. 2's x-range [5e-3, 0.5] — the sweep
+/// used by the `theory`, `sim`, `fig2`, and `simfleet` subcommands.
+/// `points == 1` yields the single left endpoint.
+pub fn log_pe_grid(points: usize) -> Vec<f64> {
+    assert!(points >= 1, "grid needs at least one point");
+    let (lo, hi) = (5e-3f64, 0.5f64);
+    if points == 1 {
+        return vec![lo];
+    }
+    (0..points)
+        .map(|i| {
+            let f = i as f64 / (points - 1) as f64;
+            lo * (hi / lo).powf(f)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +145,19 @@ mod tests {
             let nested = nested_failure_probability(&fc, &fc, p);
             assert!(nested < flat, "p={p}: nested {nested} vs flat {flat}");
         }
+    }
+
+    #[test]
+    fn log_pe_grid_spans_fig2_range() {
+        let g = log_pe_grid(40);
+        assert_eq!(g.len(), 40);
+        assert!((g[0] - 5e-3).abs() < 1e-15);
+        assert!((g[39] - 0.5).abs() < 1e-12);
+        assert!(g.windows(2).all(|w| w[0] < w[1]), "not increasing");
+        // Log spacing: constant ratio between neighbors.
+        let r0 = g[1] / g[0];
+        assert!(g.windows(2).all(|w| (w[1] / w[0] - r0).abs() < 1e-9));
+        assert_eq!(log_pe_grid(1), vec![5e-3]);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::coding::nested::NestedTaskSet;
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::tier::TenantSpec;
 use crate::linalg::kernel::KernelKind;
+use crate::sim::latency::LatencyModel;
 
 /// Which task-set family to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -172,6 +173,22 @@ pub struct RunConfig {
     /// `tenants.specs` string array, CLI `--tenants` comma-separated).
     /// Empty = one unbounded `default` tenant.
     pub tenants: Vec<TenantSpec>,
+    /// Fleet simulator: workers per rack — the correlated failure
+    /// domain (TOML `fleet.rack_size`, CLI `--rack-size`; >= 1).
+    pub rack_size: usize,
+    /// Fleet simulator: per-(job, rack) outage probability (TOML
+    /// `fleet.p_rack`, CLI `--p-rack`; 0 disables rack faults).
+    pub p_rack: f64,
+    /// Fleet simulator: one-way link latency in ms (TOML
+    /// `fleet.link_latency_ms`, CLI `--link-latency-ms`).
+    pub link_latency_ms: f64,
+    /// Fleet simulator: link bandwidth in Gbit/s (TOML
+    /// `fleet.link_gbps`, CLI `--link-gbps`; 0 = infinite).
+    pub link_gbps: f64,
+    /// Fleet simulator: per-worker slowness-multiplier distribution
+    /// (TOML `fleet.speed`, CLI `--speed`; spellings of
+    /// [`LatencyModel::parse`], default `det:1` = homogeneous).
+    pub fleet_speed: LatencyModel,
 }
 
 impl Default for RunConfig {
@@ -197,6 +214,11 @@ impl Default for RunConfig {
             batch_window: 1,
             cache_cap: 0,
             tenants: Vec::new(),
+            rack_size: 32,
+            p_rack: 0.0,
+            link_latency_ms: 0.0,
+            link_gbps: 0.0,
+            fleet_speed: LatencyModel::Deterministic { t: 1.0 },
         }
     }
 }
@@ -274,6 +296,16 @@ impl RunConfig {
                 }
                 None => d.tenants,
             },
+            rack_size: doc.uint_or("fleet.rack_size", d.rack_size)?,
+            p_rack: doc.float_or("fleet.p_rack", d.p_rack),
+            link_latency_ms: doc.float_or("fleet.link_latency_ms", d.link_latency_ms),
+            link_gbps: doc.float_or("fleet.link_gbps", d.link_gbps),
+            fleet_speed: match doc.get("fleet.speed") {
+                Some(v) => {
+                    LatencyModel::parse(v.as_str().ok_or("fleet.speed must be a string")?)?
+                }
+                None => d.fleet_speed,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -290,11 +322,38 @@ impl RunConfig {
         }
     }
 
-    /// Load from a file path.
+    /// The simulated-fleet spec for the `simfleet` subcommand: the
+    /// `[fleet]` knobs plus an explicit worker count and per-leaf
+    /// service-time model (those two are sweep parameters, not config).
+    pub fn fleet_spec(
+        &self,
+        workers: usize,
+        leaf_latency: LatencyModel,
+    ) -> crate::sim::des::FleetSpec {
+        crate::sim::des::FleetSpec {
+            workers,
+            rack_size: self.rack_size,
+            p_rack: self.p_rack,
+            speed: self.fleet_speed,
+            leaf_latency,
+            link: crate::sim::des::LinkModel {
+                latency_s: self.link_latency_ms / 1e3,
+                // Gbit/s -> bytes/s.
+                bytes_per_s: self.link_gbps * 1.25e8,
+            },
+        }
+    }
+
+    /// Load from a file path. Inert-key warnings (present keys that
+    /// cannot take effect under the rest of the config) go to stderr —
+    /// they are advisory, never errors.
     pub fn from_file(path: &std::path::Path) -> Result<RunConfig, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("{}: {e}", path.display()))?;
         let doc = parse_toml(&text).map_err(|e: TomlError| format!("{}: {e}", path.display()))?;
+        for w in inert_key_warnings(&doc) {
+            eprintln!("warning: {}: {w}", path.display());
+        }
         RunConfig::from_toml(&doc)
     }
 
@@ -339,6 +398,18 @@ impl RunConfig {
         if self.batch_window == 0 {
             return Err("serve.batch_window must be >= 1".into());
         }
+        if self.rack_size == 0 {
+            return Err("fleet.rack_size must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.p_rack) {
+            return Err(format!("fleet.p_rack out of [0,1]: {}", self.p_rack));
+        }
+        if self.link_latency_ms < 0.0 || !self.link_latency_ms.is_finite() {
+            return Err(format!("fleet.link_latency_ms must be >= 0, got {}", self.link_latency_ms));
+        }
+        if self.link_gbps < 0.0 || !self.link_gbps.is_finite() {
+            return Err(format!("fleet.link_gbps must be >= 0, got {}", self.link_gbps));
+        }
         for (i, t) in self.tenants.iter().enumerate() {
             if t.quota != usize::MAX && t.quota > self.queue_cap {
                 return Err(format!(
@@ -369,6 +440,42 @@ impl RunConfig {
             cache_cap: self.cache_cap,
         }
     }
+}
+
+/// Keys that are *present* in the document but cannot take effect
+/// under the rest of the configuration. Each warning names the key,
+/// why it is dead, and what to change. Advisory only: an inert key is
+/// never an error (profiles legitimately share a base file), but a
+/// silent one cost us a debugging session — `configs/sim_fig2.toml`
+/// shipped `straggle_ms = 50` next to `p_straggle = 0.0` for five PRs.
+pub fn inert_key_warnings(doc: &TomlDoc) -> Vec<String> {
+    let mut out = Vec::new();
+    let p_straggle = doc.float_or("fault.p_straggle", 0.0);
+    if doc.get("fault.straggle_ms").is_some() && p_straggle <= 0.0 {
+        out.push(
+            "fault.straggle_ms is inert: fault.p_straggle is 0, so no dispatch ever \
+             straggles (set p_straggle > 0, or drop the key — see \
+             configs/sim_fig2_straggle.toml)"
+                .to_string(),
+        );
+    }
+    let d = RunConfig::default();
+    if doc.int_or("serve.batch_window", 1) > 1 && doc.int_or("serve.depth", d.depth as i64) == 1
+    {
+        out.push(
+            "serve.batch_window > 1 is inert: serve.depth = 1 admits one job at a time, \
+             so no batch ever forms"
+                .to_string(),
+        );
+    }
+    if doc.int_or("cache.cap", 0) > 0 && doc.str_or("run.backend", "native") == "pjrt" {
+        out.push(
+            "cache.cap is inert: the pjrt backend ships raw blocks, so cached encoded \
+             operands are never routed to it (use run.backend = \"native\")"
+                .to_string(),
+        );
+    }
+    out
 }
 
 #[cfg(test)]
@@ -619,15 +726,104 @@ specs = ["heavy:3:16", "light:1:4"]
     }
 
     #[test]
+    fn fleet_section_in_toml() {
+        let doc = parse_toml(
+            r#"
+[fleet]
+rack_size = 16
+p_rack = 0.05
+link_latency_ms = 0.5
+link_gbps = 10
+speed = "bimodal:1:0.1:4"
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.rack_size, 16);
+        assert!((cfg.p_rack - 0.05).abs() < 1e-12);
+        assert_eq!(
+            cfg.fleet_speed,
+            LatencyModel::Bimodal { base: 1.0, p_slow: 0.1, factor: 4.0 }
+        );
+        let spec = cfg.fleet_spec(1000, LatencyModel::Deterministic { t: 0.01 });
+        assert_eq!(spec.workers, 1000);
+        assert_eq!(spec.rack_size, 16);
+        assert!((spec.link.latency_s - 5e-4).abs() < 1e-15);
+        assert!((spec.link.bytes_per_s - 1.25e9).abs() < 1.0);
+        // Defaults: free link, homogeneous speeds, no rack faults.
+        let d = RunConfig::default();
+        assert_eq!(d.rack_size, 32);
+        assert_eq!(d.p_rack, 0.0);
+        assert_eq!(d.fleet_speed, LatencyModel::Deterministic { t: 1.0 });
+        // Bad values are rejected.
+        let doc = parse_toml("[fleet]\nrack_size = 0").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = parse_toml("[fleet]\np_rack = 1.5").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+        let doc = parse_toml("[fleet]\nspeed = \"warp:9\"").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn inert_keys_are_flagged_with_reasons() {
+        // The sim_fig2 regression: straggle_ms next to p_straggle = 0.
+        let doc = parse_toml("[fault]\np_straggle = 0.0\nstraggle_ms = 50").unwrap();
+        let w = inert_key_warnings(&doc);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("straggle_ms"), "{w:?}");
+        // straggle_ms with p_straggle unset (defaults to 0) also warns.
+        let doc = parse_toml("[fault]\nstraggle_ms = 50").unwrap();
+        assert_eq!(inert_key_warnings(&doc).len(), 1);
+        // ... but a live straggle probability silences it.
+        let doc = parse_toml("[fault]\np_straggle = 0.2\nstraggle_ms = 50").unwrap();
+        assert!(inert_key_warnings(&doc).is_empty());
+        // batch_window > 1 under depth = 1 can never form a batch.
+        let doc = parse_toml("[serve]\ndepth = 1\nbatch_window = 8").unwrap();
+        let w = inert_key_warnings(&doc);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("batch_window"), "{w:?}");
+        let doc = parse_toml("[serve]\ndepth = 4\nbatch_window = 8").unwrap();
+        assert!(inert_key_warnings(&doc).is_empty());
+        // Encoded-operand cache never reaches pjrt workers.
+        let doc = parse_toml("[run]\nbackend = \"pjrt\"\n[cache]\ncap = 64").unwrap();
+        let w = inert_key_warnings(&doc);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("cache.cap"), "{w:?}");
+        // A clean config warns about nothing.
+        let doc = parse_toml("[run]\nn = 64\n[fault]\np_e = 0.1").unwrap();
+        assert!(inert_key_warnings(&doc).is_empty());
+    }
+
+    #[test]
     fn example_configs_in_repo_parse() {
         for f in [
             "configs/serve_pjrt.toml",
             "configs/sim_fig2.toml",
+            "configs/sim_fig2_straggle.toml",
             "configs/serve_tenants.toml",
         ] {
             let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
             let cfg = RunConfig::from_file(&p).unwrap_or_else(|e| panic!("{f}: {e}"));
             cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn shipped_configs_have_no_inert_keys() {
+        for f in [
+            "configs/serve_pjrt.toml",
+            "configs/sim_fig2.toml",
+            "configs/sim_fig2_straggle.toml",
+            "configs/serve_tenants.toml",
+        ] {
+            let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
+            let text = std::fs::read_to_string(&p).unwrap();
+            let doc = parse_toml(&text).unwrap();
+            assert!(
+                inert_key_warnings(&doc).is_empty(),
+                "{f} ships an inert key: {:?}",
+                inert_key_warnings(&doc)
+            );
         }
     }
 }

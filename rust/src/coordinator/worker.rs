@@ -146,6 +146,23 @@ impl FaultPlan {
     }
 }
 
+/// Policy-facing fault source: anything that can answer "what happens
+/// to work item `item` of job `job_id` under master seed `seed`?" as a
+/// pure function of those coordinates. [`FaultPlan`] is the canonical
+/// implementation; the discrete-event simulator
+/// ([`crate::sim::des::engine`]) consumes the trait so campaigns can be
+/// driven by the exact fault process the live coordinator uses — or by
+/// a custom one — without touching the engine.
+pub trait FaultSampler {
+    fn action_at(&self, seed: u64, job_id: u64, item: u64) -> FaultAction;
+}
+
+impl FaultSampler for FaultPlan {
+    fn action_at(&self, seed: u64, job_id: u64, item: u64) -> FaultAction {
+        self.sample_at(seed, job_id, item)
+    }
+}
+
 /// A node's answer (the body of
 /// [`ToCoord::LeafResult`](crate::coordinator::proto::ToCoord::LeafResult)).
 #[derive(Debug)]

@@ -106,6 +106,11 @@ pub mod prelude {
     pub use crate::linalg::matrix::{Dense, Matrix};
     pub use crate::linalg::scalar::Scalar;
     pub use crate::search::searchlp::{search_lp, SearchResult};
-    pub use crate::sim::montecarlo::MonteCarlo;
+    pub use crate::sim::des::{
+        policy_by_name, ArrivalProcess, Calendar, Campaign, CampaignResult, CampaignSummary,
+        Fleet, FleetSpec, LinkModel, SchedPolicy, SimPlan,
+    };
+    pub use crate::sim::latency::LatencyModel;
+    pub use crate::sim::montecarlo::{Estimate, MonteCarlo};
     pub use crate::sim::rng::Rng;
 }

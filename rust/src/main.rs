@@ -17,6 +17,9 @@
 //! * `localmm`   — single-node recursive-vs-flat probe: times one flat
 //!   kernel multiply against recursive Strassen at the configured
 //!   crossover (`--kernel {naive,packed,simd} --cutoff --max-depth`)
+//! * `simfleet`  — discrete-event fleet campaign: 10k-node simulated
+//!   cluster running nested coded multiplies, measured P_f checked
+//!   against `theory::nested_failure_probability` over a p_e sweep
 
 use std::path::Path;
 use std::time::Duration;
@@ -26,7 +29,7 @@ use ft_strassen::bench::plot::{ascii_loglog, Series};
 use ft_strassen::cli::Args;
 use ft_strassen::coding::fc::fc_table;
 use ft_strassen::coding::scheme::TaskSet;
-use ft_strassen::coding::theory::failure_probability;
+use ft_strassen::coding::theory::{failure_probability, log_pe_grid};
 use ft_strassen::coding::nested::{NestedOracle, NestedTaskSet};
 use ft_strassen::coding::theory::nested_failure_probability;
 use ft_strassen::config::{BackendKind, NestSpec, RunConfig, SchemeKind};
@@ -40,6 +43,8 @@ use ft_strassen::linalg::matrix::Matrix;
 use ft_strassen::runtime::service::ComputeService;
 use ft_strassen::search::relations::summarize;
 use ft_strassen::search::searchlp::{search_lp, SearchOptions};
+use ft_strassen::sim::des::{policy_by_name, ArrivalProcess, Campaign, SimPlan};
+use ft_strassen::sim::latency::LatencyModel;
 use ft_strassen::sim::montecarlo::MonteCarlo;
 use ft_strassen::sim::rng::Rng;
 
@@ -60,6 +65,9 @@ subcommands:
            [--tenants SPECS] [--batch-window W] [--cache-cap C]
   localmm  [--n N] [--kernel K] [--cutoff C] [--max-depth D]
            single-node probe: flat kernel vs recursive Strassen
+  simfleet [--workers W] [--jobs J] [--nest O:I] [--policies P,..]
+           [--pe-sweep P,..] [--points N] [--arrival SPEC]
+           discrete-event fleet campaign: simulated P_f vs theory
 
 common options:
   --config FILE                  TOML config (CLI overrides it)
@@ -96,6 +104,30 @@ serve options:
                                  backend, flat schemes)
   (TOML: [serve] depth/queue_cap/batch_window, [tenants] specs,
    [cache] cap — CLI overrides the file)
+
+simfleet options:
+  --workers W                    simulated fleet size (default 10000)
+  --jobs J                       jobs per campaign (default 300)
+  --policies P,..                scheduling policies to run, from
+                                 random|fastest|locality|speculative
+                                 (default random)
+  --pe-sweep P,..                explicit comma-separated p_e values;
+                                 without it, --points N log-spaced
+                                 values over [5e-3, 0.5] (default 5)
+  --arrival SPEC                 uniform:DT | poisson:RATE |
+                                 diurnal:BASE:PEAK:PERIOD (jobs/s;
+                                 default uniform:0.02)
+  --leaf-latency M               per-leaf service model det:T |
+                                 sexp:SHIFT:RATE | bimodal:BASE:P:F
+                                 (default det:0.01)
+  --speed M                      per-worker slowness multiplier
+                                 distribution (same spellings;
+                                 default det:1 = homogeneous)
+  --rack-size R --p-rack P       rack topology + per-(job,rack) outage
+  --link-latency-ms L --link-gbps G  link-cost model (bytes charged
+                                 per encoded block, 0 gbps = infinite)
+  --max-attempts A               per-leaf attempt cap (default 4)
+  (TOML: [fleet] rack_size/p_rack/link_latency_ms/link_gbps/speed)
 ";
 
 fn main() {
@@ -117,6 +149,7 @@ fn main() {
         Some("multiply") => cmd_multiply(&args),
         Some("serve") => cmd_serve(&args),
         Some("localmm") => cmd_localmm(&args),
+        Some("simfleet") => cmd_simfleet(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -183,6 +216,19 @@ fn load_config(args: &Args) -> Result<RunConfig, String> {
             .map(TenantSpec::parse)
             .collect::<Result<Vec<_>, _>>()
             .map_err(|e| format!("--tenants: {e}"))?;
+    }
+    cfg.rack_size = args
+        .get_parsed_or("rack-size", cfg.rack_size)
+        .map_err(|e| e.to_string())?;
+    cfg.p_rack = args.get_parsed_or("p-rack", cfg.p_rack).map_err(|e| e.to_string())?;
+    cfg.link_latency_ms = args
+        .get_parsed_or("link-latency-ms", cfg.link_latency_ms)
+        .map_err(|e| e.to_string())?;
+    cfg.link_gbps = args
+        .get_parsed_or("link-gbps", cfg.link_gbps)
+        .map_err(|e| e.to_string())?;
+    if let Some(s) = args.get("speed") {
+        cfg.fleet_speed = LatencyModel::parse(s)?;
     }
     cfg.validate()?;
     // The kernel policy is process-wide: every matmul below here (worker
@@ -287,14 +333,6 @@ fn cmd_fc(_args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn pe_grid(points: usize) -> Vec<f64> {
-    // log-spaced from 5e-3 to 0.5, like the paper's Fig. 2 x-axis.
-    let (lo, hi) = (5e-3f64.ln(), 0.5f64.ln());
-    (0..points)
-        .map(|i| (lo + (hi - lo) * i as f64 / (points - 1) as f64).exp())
-        .collect()
-}
-
 fn cmd_theory(args: &Args) -> Result<(), String> {
     let points = args.get_parsed_or("points", 9usize).map_err(|e| e.to_string())?;
     let schemes = TaskSet::fig2_schemes();
@@ -304,7 +342,7 @@ fn cmd_theory(args: &Args) -> Result<(), String> {
         print!(" {:>14}", ts.name);
     }
     println!();
-    for p in pe_grid(points) {
+    for p in log_pe_grid(points) {
         print!("{p:>8.4} |");
         for fc in &tables {
             print!(" {:>14.6e}", failure_probability(fc, p));
@@ -338,7 +376,7 @@ fn cmd_fig2(args: &Args) -> Result<(), String> {
     let points = args.get_parsed_or("points", 9usize).map_err(|e| e.to_string())?;
     let seed = args.get_parsed_or("seed", 1u64).map_err(|e| e.to_string())?;
     let out = args.get_or("out", "target/fig2");
-    let grid = pe_grid(points);
+    let grid = log_pe_grid(points);
     let schemes = TaskSet::fig2_schemes();
     let mut theory_series = Vec::new();
     let mut mc_series = Vec::new();
@@ -374,7 +412,7 @@ fn cmd_nested(args: &Args) -> Result<(), String> {
     let points = args.get_parsed_or("points", 7usize).map_err(|e| e.to_string())?;
     let seed = args.get_parsed_or("seed", 1u64).map_err(|e| e.to_string())?;
     let out = args.get_or("out", "target/nested");
-    let grid = pe_grid(points);
+    let grid = log_pe_grid(points);
     let specs = [
         ("sw+0psmm:sw+0psmm", TaskSet::strassen_winograd(0), TaskSet::strassen_winograd(0)),
         ("sw+2psmm:sw+2psmm", TaskSet::strassen_winograd(2), TaskSet::strassen_winograd(2)),
@@ -615,4 +653,161 @@ fn strassen_mm_into(
     rc: &ft_strassen::linalg::recursive::RecursiveConfig,
 ) {
     ft_strassen::linalg::scheme_mm_into(&ft_strassen::algorithms::strassen(), a, b, out, rc);
+}
+
+/// Parse an `--arrival` spec: `uniform:DT`, `poisson:RATE`, or
+/// `diurnal:BASE:PEAK:PERIOD`.
+fn parse_arrival(s: &str, jobs: usize) -> Result<ArrivalProcess, String> {
+    let parts: Vec<&str> = s.trim().split(':').collect();
+    let num = |x: &str| -> Result<f64, String> {
+        x.parse::<f64>().map_err(|_| format!("bad number `{x}` in arrival spec `{s}`"))
+    };
+    match parts.as_slice() {
+        ["uniform", dt] => Ok(ArrivalProcess::Uniform { count: jobs, interarrival: num(dt)? }),
+        ["poisson", rate] => Ok(ArrivalProcess::Poisson { count: jobs, rate: num(rate)? }),
+        ["diurnal", base, peak, period] => Ok(ArrivalProcess::Diurnal {
+            count: jobs,
+            base_rate: num(base)?,
+            peak_rate: num(peak)?,
+            period: num(period)?,
+        }),
+        _ => Err(format!(
+            "unknown arrival spec `{s}` (uniform:DT | poisson:RATE | diurnal:BASE:PEAK:PERIOD)"
+        )),
+    }
+}
+
+fn cmd_simfleet(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let workers = args.get_parsed_or("workers", 10_000usize).map_err(|e| e.to_string())?;
+    let jobs = args.get_parsed_or("jobs", 300usize).map_err(|e| e.to_string())?;
+    if workers == 0 || jobs == 0 {
+        return Err("simfleet needs workers >= 1 and jobs >= 1".into());
+    }
+    let nest = match cfg.nest {
+        Some(n) => n,
+        None => NestSpec::parse("sw+2psmm:sw+2psmm")?,
+    };
+    let sweep: Vec<f64> = args.get_list_parsed("pe-sweep", &[]).map_err(|e| e.to_string())?;
+    let sweep = if sweep.is_empty() {
+        let points = args.get_parsed_or("points", 5usize).map_err(|e| e.to_string())?;
+        log_pe_grid(points)
+    } else {
+        sweep
+    };
+    for &p in &sweep {
+        if !(0.0..=1.0).contains(&p) || p + cfg.p_straggle > 1.0 {
+            return Err(format!(
+                "sweep point p_e = {p} invalid (needs 0 <= p_e and p_e + p_straggle <= 1)"
+            ));
+        }
+    }
+    let policies: Vec<String> = args
+        .get_list_parsed("policies", &["random".to_string()])
+        .map_err(|e| e.to_string())?;
+    let leaf_latency = match args.get("leaf-latency") {
+        Some(s) => LatencyModel::parse(s)?,
+        None => LatencyModel::Deterministic { t: 0.01 },
+    };
+    let arrivals = match args.get("arrival") {
+        Some(s) => parse_arrival(s, jobs)?,
+        None => ArrivalProcess::Uniform { count: jobs, interarrival: 0.02 },
+    };
+    let max_attempts = args.get_parsed_or("max-attempts", 4u16).map_err(|e| e.to_string())?;
+
+    let fleet = cfg.fleet_spec(workers, leaf_latency);
+    let set = nest.task_set();
+    let fc_o = fc_table(&set.outer);
+    let fc_i = fc_table(&set.inner);
+    let leaves = set.num_leaves();
+    let plan = SimPlan::Nested(set);
+    // Each leaf multiplies two (n/4)-sized encoded blocks.
+    let block_bytes = ((cfg.n / 4) * (cfg.n / 4) * 8) as u64;
+    println!(
+        "simfleet: {} ({leaves} leaves/job), {workers} workers in {} racks, \
+         {jobs} jobs, seed {}",
+        nest.display_name(),
+        workers.div_ceil(cfg.rack_size),
+        cfg.seed
+    );
+    // Rule-of-three slack: at P_f below ~3/jobs, a campaign of this
+    // size cannot resolve the theory value and zero failures is the
+    // expected observation — such points count as (unresolved).
+    let slack = 3.0 / jobs as f64;
+    let mut mismatches = 0usize;
+    for name in &policies {
+        let mut policy = policy_by_name(name)?;
+        println!("\npolicy {name}:");
+        println!(
+            "{:>8}  {:>12}  {:>12}  {:>9}  {:>10}  {:>8}  {:>7}  agree",
+            "p_e", "theory_pf", "measured_pf", "stderr", "mean_s", "p95_s", "backups"
+        );
+        for &p in &sweep {
+            let campaign = Campaign {
+                fleet,
+                arrivals: arrivals.clone(),
+                fault: FaultPlan {
+                    p_fail: p,
+                    p_straggle: cfg.p_straggle,
+                    delay: Duration::from_millis(cfg.straggle_ms),
+                },
+                block_bytes,
+                seed: cfg.seed,
+                max_attempts,
+                heap_capacity: jobs * leaves / 4,
+                record_trace: false,
+            };
+            let r = campaign.run(&plan, policy.as_mut()).summary;
+            let theory = nested_failure_probability(&fc_o, &fc_i, p);
+            // Rack outages are an extra fault process on top of the
+            // paper's model: with p_rack > 0 the theory curve is only a
+            // lower bound, so the agreement check is p_rack = 0 only.
+            let agree = if cfg.p_rack > 0.0 {
+                "(p_rack)".to_string()
+            } else if r.measured_pf.agrees_with(theory, 4.0, slack) {
+                "yes".to_string()
+            } else {
+                mismatches += 1;
+                "NO".to_string()
+            };
+            println!(
+                "{p:>8.4}  {theory:>12.4e}  {:>12.4e}  {:>9.1e}  {:>10.4}  {:>8.4}  {:>7}  {agree}",
+                r.measured_pf.mean,
+                r.measured_pf.std_err,
+                r.mean_completion_s,
+                r.p95_completion_s,
+                r.backups,
+            );
+        }
+        // The digests make `simfleet` runs comparable byte-for-byte:
+        // same seed + config => identical output, any machine.
+        let last = sweep[sweep.len() - 1];
+        let campaign = Campaign {
+            fleet,
+            arrivals: arrivals.clone(),
+            fault: FaultPlan {
+                p_fail: last,
+                p_straggle: cfg.p_straggle,
+                delay: Duration::from_millis(cfg.straggle_ms),
+            },
+            block_bytes,
+            seed: cfg.seed,
+            max_attempts,
+            heap_capacity: 0,
+            record_trace: false,
+        };
+        let s = campaign.run(&plan, policy.as_mut()).summary;
+        println!(
+            "  at p_e={last:.4}: events={} dispatches={} requeues={} network_bytes={} \
+             trace_digest={:016x} outcome_digest={:016x}",
+            s.events, s.dispatches, s.requeues, s.network_bytes, s.trace_digest, s.outcome_digest
+        );
+    }
+    if mismatches > 0 {
+        return Err(format!(
+            "{mismatches} sweep point(s) disagreed with theory beyond 4 sigma + {slack:.1e}"
+        ));
+    }
+    println!("\nall sweep points agree with nested theory (4 sigma + {slack:.1e} slack)");
+    Ok(())
 }

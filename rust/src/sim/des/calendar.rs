@@ -1,0 +1,172 @@
+//! Event calendar: a binary-heap priority queue over simulated time
+//! with a **pinned, total** tie-break rule.
+//!
+//! `BinaryHeap` alone is not deterministic enough for a regression-
+//! testable simulator: equal-time events pop in an order that depends
+//! on the heap's internal layout, which in turn depends on insertion
+//! history *and* capacity-driven sift paths. The calendar therefore
+//! orders entries by `(time, seq)` where `seq` is the global insertion
+//! number — FIFO among equal-time events — making the pop sequence a
+//! pure function of the schedule calls, independent of heap capacity,
+//! platform, or allocator. `tests` pin this rule; the determinism
+//! regression suite (`tests/fleet_sim.rs`) pins it end to end.
+
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest time
+        // (and among equal times the earliest insertion) on top.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event calendar ordered by `(time, insertion seq)`.
+pub struct Calendar<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Calendar<T> {
+    pub fn new() -> Self {
+        Calendar { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Pre-sized heap. The pop order is identical for every capacity —
+    /// the determinism suite runs the same campaign at capacities 0 and
+    /// 4096 and compares event traces byte for byte.
+    pub fn with_capacity(cap: usize) -> Self {
+        Calendar { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+
+    /// Schedule `payload` at absolute simulated time `time` (seconds).
+    pub fn schedule(&mut self, time: f64, payload: T) {
+        assert!(time.is_finite(), "non-finite event time {time}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, payload });
+    }
+
+    /// Pop the earliest event: `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.payload))
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for Calendar<T> {
+    fn default() -> Self {
+        Calendar::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut cal = Calendar::new();
+        cal.schedule(3.0, "c");
+        cal.schedule(1.0, "a");
+        cal.schedule(2.0, "b");
+        assert_eq!(cal.peek_time(), Some(1.0));
+        assert_eq!(cal.pop(), Some((1.0, "a")));
+        assert_eq!(cal.pop(), Some((2.0, "b")));
+        assert_eq!(cal.pop(), Some((3.0, "c")));
+        assert_eq!(cal.pop(), None);
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        // The pinned tie-break rule: equal-time events pop in insertion
+        // order, regardless of how many other events interleave.
+        let mut cal = Calendar::new();
+        for i in 0..32u32 {
+            cal.schedule(1.0, i);
+            cal.schedule(0.5, 1000 + i);
+        }
+        let mut early = Vec::new();
+        let mut late = Vec::new();
+        while let Some((t, v)) = cal.pop() {
+            if t == 0.5 {
+                early.push(v);
+            } else {
+                late.push(v);
+            }
+        }
+        assert_eq!(early, (0..32).map(|i| 1000 + i).collect::<Vec<_>>());
+        assert_eq!(late, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn capacity_does_not_change_pop_order() {
+        let schedule = |cal: &mut Calendar<u32>| {
+            let mut x = 0x12345u64;
+            for i in 0..200u32 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                // Coarse times force plenty of ties.
+                let t = (x >> 60) as f64;
+                cal.schedule(t, i);
+            }
+        };
+        let drain = |mut cal: Calendar<u32>| {
+            let mut out = Vec::new();
+            while let Some(e) = cal.pop() {
+                out.push(e);
+            }
+            out
+        };
+        let mut a = Calendar::new();
+        let mut b = Calendar::with_capacity(4096);
+        let mut c = Calendar::with_capacity(1);
+        schedule(&mut a);
+        schedule(&mut b);
+        schedule(&mut c);
+        let ra = drain(a);
+        assert_eq!(ra, drain(b));
+        assert_eq!(ra, drain(c));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_times() {
+        let mut cal = Calendar::new();
+        cal.schedule(f64::NAN, ());
+    }
+}

@@ -1,0 +1,843 @@
+//! The discrete-event campaign engine: jobs arrive, their coded leaf
+//! tasks are dispatched onto a simulated fleet by a [`SchedPolicy`],
+//! and each job decodes (or fails) under exactly the live
+//! coordinator's semantics — decodability via the real
+//! [`DecodeOracle`]/[`NestedOracle`] span decoders, fail-stop faults
+//! via the pure [`FaultSampler`] keyed by `(seed, job_id, leaf)`.
+//!
+//! ## Determinism
+//!
+//! Every run is a pure function of `(plan, campaign, policy)`:
+//! * the [`Calendar`] pops events in `(time, insertion-seq)` order,
+//!   independent of heap capacity;
+//! * leaf faults and per-attempt latency draws are hashed from their
+//!   coordinates, never taken from a shared stream;
+//! * the one shared RNG (policy randomness) is consumed inside the
+//!   deterministic event loop.
+//!
+//! Because fail-stop faults are keyed by `(seed, job_id, leaf)` alone
+//! — the same purity contract as the live
+//! [`crate::coordinator::worker::FaultPlan::sample_at`] — the set of
+//! dead leaves, and therefore each job's decode outcome, is **exactly
+//! invariant** across fleet sizes, policies, and arrival processes
+//! (given `p_rack = 0`). Measured P_f can be compared against
+//! [`crate::coding::theory`] directly; the determinism suite pins the
+//! invariance bit for bit.
+//!
+//! ## Decode-state machine (mirrors `coordinator/job.rs`)
+//!
+//! Per group: `good` (arrived results) and `dead` (fail-stop leaves)
+//! masks. After every leaf resolution the engine asks the span oracle
+//! twice: *recovered* when the not-yet-good set is already a decodable
+//! failure pattern (early exit — remaining leaves are revoked), and
+//! *hopeless* when the dead set alone defeats the inner decoder. The
+//! two are mutually exclusive (decodability is monotone in the failure
+//! mask), and at a group's last event exactly one fires. The outer
+//! level runs the same pair over recovered/hopeless group masks.
+
+use std::collections::VecDeque;
+
+use crate::coding::fc::DecodeOracle;
+use crate::coding::nested::{NestedOracle, NestedTaskSet};
+use crate::coding::scheme::TaskSet;
+use crate::coordinator::worker::{FaultAction, FaultPlan, FaultSampler};
+use crate::sim::des::arrival::ArrivalProcess;
+use crate::sim::des::calendar::Calendar;
+use crate::sim::des::fleet::{Fleet, FleetSpec};
+use crate::sim::des::policy::{JobView, SchedPolicy};
+use crate::sim::montecarlo::Estimate;
+use crate::sim::rng::Rng;
+
+/// What one simulated job computes: a flat coded task set (one worker
+/// per task, the paper's Fig. 2 shape) or a nested two-level
+/// composition (fan-out 196–256).
+#[derive(Clone, Debug)]
+pub enum SimPlan {
+    Flat(TaskSet),
+    Nested(NestedTaskSet),
+}
+
+impl SimPlan {
+    pub fn name(&self) -> &str {
+        match self {
+            SimPlan::Flat(ts) => &ts.name,
+            SimPlan::Nested(ns) => &ns.name,
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        match self {
+            SimPlan::Flat(ts) => ts.num_tasks(),
+            SimPlan::Nested(ns) => ns.num_leaves(),
+        }
+    }
+
+    fn oracle(&self) -> PlanOracle {
+        match self {
+            SimPlan::Flat(ts) => {
+                PlanOracle::Flat { oracle: DecodeOracle::build(ts), m: ts.num_tasks() }
+            }
+            SimPlan::Nested(ns) => PlanOracle::Nested { oracle: NestedOracle::build(ns) },
+        }
+    }
+}
+
+/// Decodability questions, uniform over flat and nested plans: a flat
+/// plan is one group whose recovery decodes the job.
+enum PlanOracle {
+    Flat { oracle: DecodeOracle, m: usize },
+    Nested { oracle: NestedOracle },
+}
+
+impl PlanOracle {
+    fn num_groups(&self) -> usize {
+        match self {
+            PlanOracle::Flat { .. } => 1,
+            PlanOracle::Nested { oracle } => oracle.num_groups(),
+        }
+    }
+
+    fn group_size(&self) -> usize {
+        match self {
+            PlanOracle::Flat { m, .. } => *m,
+            PlanOracle::Nested { oracle } => oracle.group_size(),
+        }
+    }
+
+    /// Can the group still decode despite this failed-leaf mask?
+    fn group_decodable(&self, failed: u64) -> bool {
+        match self {
+            PlanOracle::Flat { oracle, .. } => oracle.is_decodable(failed),
+            PlanOracle::Nested { oracle } => oracle.group_decodable(failed),
+        }
+    }
+
+    /// Is the job decodable given this failed/unrecovered-GROUP mask?
+    fn outer_decodable(&self, failed_groups: u64) -> bool {
+        match self {
+            PlanOracle::Flat { .. } => failed_groups == 0,
+            PlanOracle::Nested { oracle } => oracle.outer_decodable(failed_groups),
+        }
+    }
+}
+
+/// A fleet campaign: arrivals, fault model, link economics, seed.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub fleet: FleetSpec,
+    pub arrivals: ArrivalProcess,
+    /// Fail/straggle plan (`p_fail` is the paper's p_e). Faults are
+    /// sampled through [`FaultSampler`] purely per `(seed, job, leaf)`.
+    pub fault: FaultPlan,
+    /// Bytes of ONE encoded operand block; a cold dispatch ships two
+    /// (A and B) into the rack, every result ships one back.
+    pub block_bytes: u64,
+    pub seed: u64,
+    /// Attempt cap per leaf (re-dispatch after rack loss, speculative
+    /// backups). ≥ 1.
+    pub max_attempts: u16,
+    /// Initial calendar capacity — pop order is capacity-invariant;
+    /// the determinism suite varies this knob to prove it.
+    pub heap_capacity: usize,
+    /// Keep the full formatted event trace in the result (the FNV
+    /// digest over the same lines is always computed).
+    pub record_trace: bool,
+}
+
+impl Default for Campaign {
+    fn default() -> Self {
+        Campaign {
+            fleet: FleetSpec::default(),
+            arrivals: ArrivalProcess::Uniform { count: 100, interarrival: 0.05 },
+            fault: FaultPlan::NONE,
+            block_bytes: 64 * 64 * 8,
+            seed: 0,
+            max_attempts: 4,
+            heap_capacity: 0,
+            record_trace: false,
+        }
+    }
+}
+
+/// Aggregate results of one campaign run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSummary {
+    pub jobs: usize,
+    pub decoded: usize,
+    pub failed: usize,
+    /// failed / jobs with its binomial standard error — comparable to
+    /// [`crate::coding::theory`] P_f via [`Estimate::agrees_with`].
+    pub measured_pf: Estimate,
+    /// Mean arrival→decode latency over decoded jobs (0 if none).
+    pub mean_completion_s: f64,
+    pub p95_completion_s: f64,
+    /// Time of the last event.
+    pub makespan_s: f64,
+    pub events: u64,
+    pub dispatches: u64,
+    pub backups: u64,
+    /// Re-dispatches after rack-outage losses.
+    pub requeues: u64,
+    pub network_bytes: u64,
+    /// FNV-1a digest of the formatted event trace.
+    pub trace_digest: u64,
+    /// FNV-1a digest of per-job outcomes in job order — equal across
+    /// policies/fleet sizes when `p_rack = 0` (fault purity).
+    pub outcome_digest: u64,
+}
+
+pub struct CampaignResult {
+    pub summary: CampaignSummary,
+    /// Formatted event lines (empty unless `record_trace`).
+    pub trace: Vec<String>,
+}
+
+#[derive(Clone, Copy)]
+enum Event {
+    Arrival { job: u32 },
+    Complete { job: u32, leaf: u32, worker: u32, status: Status },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Status {
+    /// The leaf's product arrives.
+    Result,
+    /// Fail-stop fault: the node never answers; the leaf is dead.
+    LeafDead,
+    /// The dispatch was lost (rack outage); the leaf may retry.
+    AttemptLost,
+}
+
+#[derive(Clone, Copy)]
+struct Item {
+    job: u32,
+    leaf: u32,
+}
+
+struct GroupState {
+    good: u64,
+    dead: u64,
+    recovered: bool,
+    hopeless: bool,
+}
+
+struct JobState {
+    arrival: f64,
+    groups: Vec<GroupState>,
+    recovered_mask: u64,
+    hopeless_mask: u64,
+    attempts: Vec<u16>,
+    inflight: Vec<u16>,
+    outstanding: usize,
+    pending: usize,
+    touched: Vec<bool>,
+    /// `Some(true)` decoded, `Some(false)` reconstruction failed.
+    outcome: Option<bool>,
+    finish: f64,
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// Event-trace sink: FNV digest always, full lines on request.
+struct Trace {
+    digest: Fnv,
+    record: bool,
+    lines: Vec<String>,
+}
+
+impl Trace {
+    fn new(record: bool) -> Trace {
+        Trace { digest: Fnv::new(), record, lines: Vec::new() }
+    }
+
+    fn note(&mut self, line: String) {
+        self.digest.update(line.as_bytes());
+        self.digest.update(b"\n");
+        if self.record {
+            self.lines.push(line);
+        }
+    }
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Pure per-attempt latency stream: independent of dispatch order.
+fn latency_rng(seed: u64, job: u64, leaf: u32, attempt: u16) -> Rng {
+    let coord = (leaf as u64) | ((attempt as u64) << 32);
+    Rng::seeded(mix64(seed ^ mix64(job ^ mix64(coord ^ 0x1ea4_f11f_eed0))))
+}
+
+struct Counters {
+    events: u64,
+    dispatches: u64,
+    backups: u64,
+    requeues: u64,
+    network_bytes: u64,
+    decoded: usize,
+    failed: usize,
+}
+
+impl Campaign {
+    /// Run the campaign with the built-in [`FaultPlan`].
+    pub fn run(&self, plan: &SimPlan, policy: &mut dyn SchedPolicy) -> CampaignResult {
+        self.run_with_sampler(plan, policy, &self.fault)
+    }
+
+    /// Run with an explicit fault source — anything implementing the
+    /// coordinator's policy-facing [`FaultSampler`] trait.
+    pub fn run_with_sampler(
+        &self,
+        plan: &SimPlan,
+        policy: &mut dyn SchedPolicy,
+        sampler: &dyn FaultSampler,
+    ) -> CampaignResult {
+        assert!(self.max_attempts >= 1, "max_attempts must be >= 1");
+        let oracle = plan.oracle();
+        let (m1, m2) = (oracle.num_groups(), oracle.group_size());
+        let leaves = m1 * m2;
+        let full2: u64 = if m2 == 64 { u64::MAX } else { (1u64 << m2) - 1 };
+        let full1: u64 = (1u64 << m1) - 1;
+
+        let fleet = Fleet::build(&self.fleet, self.seed);
+        policy.init(&fleet);
+        let arrival_times = self.arrivals.times(self.seed);
+        let num_jobs = arrival_times.len();
+
+        let mut jobs: Vec<JobState> = arrival_times
+            .iter()
+            .map(|&t| JobState {
+                arrival: t,
+                groups: (0..m1)
+                    .map(|_| GroupState { good: 0, dead: 0, recovered: false, hopeless: false })
+                    .collect(),
+                recovered_mask: 0,
+                hopeless_mask: 0,
+                attempts: vec![0; leaves],
+                inflight: vec![0; leaves],
+                outstanding: 0,
+                pending: 0,
+                touched: vec![false; fleet.num_racks()],
+                outcome: None,
+                finish: 0.0,
+            })
+            .collect();
+
+        let mut cal: Calendar<Event> = Calendar::with_capacity(self.heap_capacity);
+        for (i, &t) in arrival_times.iter().enumerate() {
+            cal.schedule(t, Event::Arrival { job: i as u32 });
+        }
+
+        let mut queue: VecDeque<Item> = VecDeque::new();
+        let mut rng = Rng::seeded(self.seed ^ 0x9049_5cde_71cf);
+        let mut trace = Trace::new(self.record_trace);
+        let mut counters = Counters {
+            events: 0,
+            dispatches: 0,
+            backups: 0,
+            requeues: 0,
+            network_bytes: 0,
+            decoded: 0,
+            failed: 0,
+        };
+        let mut makespan = 0.0f64;
+
+        while let Some((t, ev)) = cal.pop() {
+            counters.events += 1;
+            makespan = t;
+            match ev {
+                Event::Arrival { job } => {
+                    trace.note(format!("{t:.9} arrive job={job}"));
+                    for leaf in 0..leaves as u32 {
+                        queue.push_back(Item { job, leaf });
+                    }
+                    jobs[job as usize].pending += leaves;
+                }
+                Event::Complete { job, leaf, worker, status } => {
+                    policy.release(worker, &fleet);
+                    let js = &mut jobs[job as usize];
+                    js.outstanding -= 1;
+                    js.inflight[leaf as usize] -= 1;
+                    let (g, j) = ((leaf as usize) / m2, (leaf as usize) % m2);
+                    if js.outcome.is_some() || js.groups[g].recovered || js.groups[g].hopeless {
+                        trace.note(format!(
+                            "{t:.9} stale job={job} leaf={g}/{j} worker={worker}"
+                        ));
+                    } else {
+                        let tag = match status {
+                            Status::Result => "result",
+                            Status::LeafDead => "dead",
+                            Status::AttemptLost => "lost",
+                        };
+                        trace.note(format!(
+                            "{t:.9} {tag} job={job} leaf={g}/{j} worker={worker}"
+                        ));
+                        let bit = 1u64 << j;
+                        match status {
+                            Status::Result => {
+                                if js.groups[g].good & bit == 0 {
+                                    js.groups[g].good |= bit;
+                                    Self::resolve(
+                                        t, js, g, job, &oracle, full1, full2, &mut counters,
+                                        &mut trace,
+                                    );
+                                }
+                            }
+                            Status::LeafDead => {
+                                js.groups[g].dead |= bit;
+                                Self::resolve(
+                                    t, js, g, job, &oracle, full1, full2, &mut counters,
+                                    &mut trace,
+                                );
+                            }
+                            Status::AttemptLost => {
+                                if js.attempts[leaf as usize] < self.max_attempts {
+                                    queue.push_back(Item { job, leaf });
+                                    js.pending += 1;
+                                    counters.requeues += 1;
+                                } else if js.inflight[leaf as usize] == 0
+                                    && js.groups[g].good & bit == 0
+                                {
+                                    // Out of retries with nothing in
+                                    // flight: the leaf is effectively
+                                    // dead.
+                                    js.groups[g].dead |= bit;
+                                    Self::resolve(
+                                        t, js, g, job, &oracle, full1, full2, &mut counters,
+                                        &mut trace,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            self.drain(
+                t, &fleet, policy, &mut rng, &mut queue, &mut jobs, &mut cal, sampler, &oracle,
+                &mut counters, &mut trace,
+            );
+        }
+
+        debug_assert!(jobs.iter().all(|j| j.outcome.is_some()), "unresolved job at drain-out");
+        let mut completions: Vec<f64> = jobs
+            .iter()
+            .filter(|j| j.outcome == Some(true))
+            .map(|j| j.finish - j.arrival)
+            .collect();
+        completions.sort_by(f64::total_cmp);
+        let mean_completion_s = if completions.is_empty() {
+            0.0
+        } else {
+            completions.iter().sum::<f64>() / completions.len() as f64
+        };
+        let p95_completion_s = if completions.is_empty() {
+            0.0
+        } else {
+            completions[((completions.len() as f64 * 0.95).ceil() as usize)
+                .clamp(1, completions.len())
+                - 1]
+        };
+        let mut outcome_digest = Fnv::new();
+        for j in &jobs {
+            outcome_digest.update(if j.outcome == Some(true) { b"1" } else { b"0" });
+        }
+        let pf = if num_jobs > 0 { counters.failed as f64 / num_jobs as f64 } else { 0.0 };
+        let summary = CampaignSummary {
+            jobs: num_jobs,
+            decoded: counters.decoded,
+            failed: counters.failed,
+            measured_pf: Estimate {
+                mean: pf,
+                std_err: (pf * (1.0 - pf) / (num_jobs.max(1) as f64)).sqrt(),
+                trials: num_jobs as u64,
+            },
+            mean_completion_s,
+            p95_completion_s,
+            makespan_s: makespan,
+            events: counters.events,
+            dispatches: counters.dispatches,
+            backups: counters.backups,
+            requeues: counters.requeues,
+            network_bytes: counters.network_bytes,
+            trace_digest: trace.digest.0,
+            outcome_digest: outcome_digest.0,
+        };
+        CampaignResult { summary, trace: trace.lines }
+    }
+
+    /// Re-evaluate group `g` (and, if it resolves, the job) after a
+    /// leaf outcome. Runs after EVERY leaf resolution so the final
+    /// group event always classifies the group: *recovered* when the
+    /// not-yet-good mask is decodable, *hopeless* when the dead mask
+    /// alone is not — mutually exclusive by monotonicity of the span
+    /// decoder in the failure mask.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve(
+        t: f64,
+        js: &mut JobState,
+        g: usize,
+        job: u32,
+        oracle: &PlanOracle,
+        full1: u64,
+        full2: u64,
+        counters: &mut Counters,
+        trace: &mut Trace,
+    ) {
+        let grp = &mut js.groups[g];
+        if oracle.group_decodable(full2 & !grp.good) {
+            grp.recovered = true;
+            js.recovered_mask |= 1 << g;
+            trace.note(format!("{t:.9} group-recovered job={job} group={g}"));
+        } else if !oracle.group_decodable(grp.dead) {
+            grp.hopeless = true;
+            js.hopeless_mask |= 1 << g;
+            trace.note(format!("{t:.9} group-hopeless job={job} group={g}"));
+        } else {
+            return; // group still in flight
+        }
+        if oracle.outer_decodable(full1 & !js.recovered_mask) {
+            js.outcome = Some(true);
+            js.finish = t;
+            counters.decoded += 1;
+            trace.note(format!("{t:.9} decoded job={job}"));
+        } else if !oracle.outer_decodable(js.hopeless_mask) {
+            js.outcome = Some(false);
+            js.finish = t;
+            counters.failed += 1;
+            trace.note(format!("{t:.9} failed job={job}"));
+        }
+    }
+
+    /// Dispatch work while the policy yields idle workers: drop stale
+    /// queue heads, dispatch live ones, and when the queue runs dry ask
+    /// the policy for speculative backups.
+    #[allow(clippy::too_many_arguments)]
+    fn drain(
+        &self,
+        t: f64,
+        fleet: &Fleet,
+        policy: &mut dyn SchedPolicy,
+        rng: &mut Rng,
+        queue: &mut VecDeque<Item>,
+        jobs: &mut [JobState],
+        cal: &mut Calendar<Event>,
+        sampler: &dyn FaultSampler,
+        oracle: &PlanOracle,
+        counters: &mut Counters,
+        trace: &mut Trace,
+    ) {
+        let m2 = oracle.group_size();
+        loop {
+            // Drop stale items at the head (job resolved, or the item's
+            // group already recovered/hopeless — the revocation path).
+            while let Some(item) = queue.front().copied() {
+                let js = &jobs[item.job as usize];
+                let g = (item.leaf as usize) / m2;
+                let stale =
+                    js.outcome.is_some() || js.groups[g].recovered || js.groups[g].hopeless;
+                if !stale {
+                    break;
+                }
+                jobs[item.job as usize].pending -= 1;
+                queue.pop_front();
+            }
+            let item = match queue.front().copied() {
+                Some(item) => item,
+                None => {
+                    // Speculative backups: first job (id order) whose
+                    // policy wants one, first backup-able leaf.
+                    match Self::pick_backup(jobs, policy, oracle, self.max_attempts) {
+                        Some(item) => {
+                            queue.push_back(item);
+                            jobs[item.job as usize].pending += 1;
+                            counters.backups += 1;
+                            continue;
+                        }
+                        None => break,
+                    }
+                }
+            };
+            let view = Self::view(&jobs[item.job as usize], item.job, oracle);
+            let worker = match policy.acquire(&view, fleet, rng) {
+                Some(w) => w,
+                None => break,
+            };
+            queue.pop_front();
+            let js = &mut jobs[item.job as usize];
+            js.pending -= 1;
+            js.attempts[item.leaf as usize] += 1;
+            let attempt = js.attempts[item.leaf as usize];
+            js.inflight[item.leaf as usize] += 1;
+            js.outstanding += 1;
+            counters.dispatches += 1;
+
+            let rack = fleet.rack_of(worker);
+            let cold = !js.touched[rack as usize];
+            js.touched[rack as usize] = true;
+            let mut service = 0.0;
+            if cold {
+                // Ship both encoded operand blocks into the rack.
+                service += fleet.spec.link.transfer_time(2 * self.block_bytes);
+                counters.network_bytes += 2 * self.block_bytes;
+            }
+            let base = fleet.spec.leaf_latency.sample(&mut latency_rng(
+                self.seed,
+                item.job as u64,
+                item.leaf,
+                attempt,
+            ));
+            service += base * fleet.speed(worker);
+            let status = if fleet.rack_down(self.seed, item.job as u64, rack) {
+                Status::AttemptLost
+            } else {
+                match sampler.action_at(self.seed, item.job as u64, item.leaf as u64) {
+                    FaultAction::Fail => Status::LeafDead,
+                    FaultAction::Delay(d) if attempt == 1 => {
+                        // Stragglers delay the first attempt only: a
+                        // backup runs on a fresh node. Fail-stop stays
+                        // leaf-pure (same verdict on every attempt).
+                        service += d.as_secs_f64();
+                        Status::Result
+                    }
+                    _ => Status::Result,
+                }
+            };
+            if status == Status::Result {
+                // The result block travels back.
+                service += fleet.spec.link.transfer_time(self.block_bytes);
+                counters.network_bytes += self.block_bytes;
+            }
+            trace.note(format!(
+                "{t:.9} dispatch job={} leaf={}/{} attempt={attempt} worker={worker}",
+                item.job,
+                (item.leaf as usize) / m2,
+                (item.leaf as usize) % m2,
+            ));
+            cal.schedule(
+                t + service,
+                Event::Complete { job: item.job, leaf: item.leaf, worker, status },
+            );
+        }
+    }
+
+    fn view<'a>(js: &'a JobState, job: u32, oracle: &PlanOracle) -> JobView<'a> {
+        let resolved = (js.recovered_mask | js.hopeless_mask).count_ones() as usize;
+        JobView {
+            job_id: job as u64,
+            touched_racks: &js.touched,
+            outstanding: js.outstanding,
+            pending: js.pending,
+            groups_needed: oracle.num_groups() - resolved,
+        }
+    }
+
+    /// Find a leaf worth duplicating: lowest job id whose policy wants
+    /// a backup, lowest in-flight unresolved leaf under the attempt
+    /// cap.
+    fn pick_backup(
+        jobs: &[JobState],
+        policy: &dyn SchedPolicy,
+        oracle: &PlanOracle,
+        max_attempts: u16,
+    ) -> Option<Item> {
+        let m2 = oracle.group_size();
+        for (id, js) in jobs.iter().enumerate() {
+            if js.outcome.is_some() || js.outstanding == 0 {
+                continue;
+            }
+            let view = Self::view(js, id as u32, oracle);
+            if !policy.wants_backup(&view) {
+                continue;
+            }
+            for leaf in 0..js.attempts.len() {
+                let g = leaf / m2;
+                if js.inflight[leaf] > 0
+                    && js.attempts[leaf] < max_attempts
+                    && !js.groups[g].recovered
+                    && !js.groups[g].hopeless
+                {
+                    return Some(Item { job: id as u32, leaf: leaf as u32 });
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::des::policy::{policy_by_name, FastestFirst, RandomPolicy, Speculative};
+    use std::time::Duration;
+
+    fn flat_plan() -> SimPlan {
+        SimPlan::Flat(TaskSet::strassen_winograd(2))
+    }
+
+    fn small_campaign(jobs: usize) -> Campaign {
+        Campaign {
+            fleet: FleetSpec { workers: 64, rack_size: 16, ..FleetSpec::default() },
+            arrivals: ArrivalProcess::Uniform { count: jobs, interarrival: 0.05 },
+            ..Campaign::default()
+        }
+    }
+
+    #[test]
+    fn fault_free_campaign_decodes_everything() {
+        let mut policy = RandomPolicy::default();
+        let r = small_campaign(10).run(&flat_plan(), &mut policy);
+        assert_eq!(r.summary.decoded, 10);
+        assert_eq!(r.summary.failed, 0);
+        assert_eq!(r.summary.measured_pf.mean, 0.0);
+        // 16 leaves per job, no retries, no backups.
+        assert_eq!(r.summary.dispatches, 160);
+        assert!(r.summary.mean_completion_s > 0.0);
+    }
+
+    #[test]
+    fn certain_failure_kills_every_job() {
+        let mut policy = RandomPolicy::default();
+        let mut c = small_campaign(10);
+        c.fault = FaultPlan { p_fail: 1.0, p_straggle: 0.0, delay: Duration::ZERO };
+        let r = c.run(&flat_plan(), &mut policy);
+        assert_eq!(r.summary.failed, 10);
+        assert_eq!(r.summary.measured_pf.mean, 1.0);
+        assert_eq!(r.summary.decoded, 0);
+    }
+
+    #[test]
+    fn homogeneous_completion_time_is_the_leaf_latency() {
+        // 64 idle workers, 16 leaves, deterministic 10 ms service, free
+        // network: the job decodes when its leaves land, at ~10 ms.
+        let mut policy = RandomPolicy::default();
+        let mut c = small_campaign(1);
+        c.arrivals = ArrivalProcess::Uniform { count: 1, interarrival: 0.0 };
+        let r = c.run(&flat_plan(), &mut policy);
+        assert!(
+            (r.summary.mean_completion_s - 0.01).abs() < 1e-9,
+            "{}",
+            r.summary.mean_completion_s
+        );
+    }
+
+    #[test]
+    fn run_is_deterministic_and_trace_matches_digest() {
+        let mut c = small_campaign(6);
+        c.fault = FaultPlan { p_fail: 0.3, p_straggle: 0.0, delay: Duration::ZERO };
+        c.record_trace = true;
+        let mut p1 = RandomPolicy::default();
+        let mut p2 = RandomPolicy::default();
+        let a = c.run(&flat_plan(), &mut p1);
+        let b = c.run(&flat_plan(), &mut p2);
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(a.trace, b.trace);
+        assert!(!a.trace.is_empty());
+        // Digest is over the trace lines: recomputing it must agree.
+        let mut f = Fnv::new();
+        for line in &a.trace {
+            f.update(line.as_bytes());
+            f.update(b"\n");
+        }
+        assert_eq!(f.0, a.summary.trace_digest);
+    }
+
+    #[test]
+    fn outcomes_are_policy_invariant_under_pure_faults() {
+        let mut c = small_campaign(20);
+        c.fault = FaultPlan { p_fail: 0.25, p_straggle: 0.0, delay: Duration::ZERO };
+        let base = c.run(&flat_plan(), &mut RandomPolicy::default()).summary;
+        assert_eq!(base.decoded + base.failed, 20);
+        for name in ["fastest", "locality", "speculative"] {
+            let mut p = policy_by_name(name).unwrap();
+            let r = c.run(&flat_plan(), p.as_mut()).summary;
+            assert_eq!(r.outcome_digest, base.outcome_digest, "policy {name}");
+            assert_eq!(r.failed, base.failed, "policy {name}");
+        }
+        // ... and fleet-size invariant.
+        let mut big = c.clone();
+        big.fleet.workers = 500;
+        let r = big.run(&flat_plan(), &mut RandomPolicy::default()).summary;
+        assert_eq!(r.outcome_digest, base.outcome_digest);
+        assert_eq!(r.failed, base.failed);
+    }
+
+    #[test]
+    fn speculative_backups_cut_straggler_tails() {
+        // Heavy stragglers, light base latency: the speculative policy
+        // must fire backups and finish far sooner than fastest-first.
+        let mut c = small_campaign(10);
+        c.fleet.workers = 128;
+        c.fault =
+            FaultPlan { p_fail: 0.0, p_straggle: 0.3, delay: Duration::from_secs(2) };
+        let slow = c.run(&flat_plan(), &mut FastestFirst::default()).summary;
+        let spec = c.run(&flat_plan(), &mut Speculative::default()).summary;
+        assert!(spec.backups > 0, "no backups fired");
+        assert!(
+            spec.mean_completion_s < slow.mean_completion_s * 0.5,
+            "speculation did not help: {} vs {}",
+            spec.mean_completion_s,
+            slow.mean_completion_s
+        );
+        assert_eq!(spec.failed, 0);
+        assert_eq!(spec.outcome_digest, slow.outcome_digest);
+    }
+
+    #[test]
+    fn nested_plan_runs_and_decodes() {
+        let plan = SimPlan::Nested(NestedTaskSet::compose(
+            TaskSet::strassen_winograd(0),
+            TaskSet::strassen_winograd(0),
+        ));
+        assert_eq!(plan.num_leaves(), 196);
+        let mut c = small_campaign(3);
+        c.fleet.workers = 256;
+        let r = c.run(&plan, &mut RandomPolicy::default());
+        assert_eq!(r.summary.decoded, 3);
+        assert_eq!(r.summary.dispatches, 3 * 196);
+    }
+
+    #[test]
+    fn rack_outages_trigger_requeues_but_most_jobs_still_decode() {
+        let mut c = small_campaign(8);
+        c.fleet.workers = 64;
+        c.fleet.rack_size = 8;
+        c.fleet.p_rack = 0.3;
+        let r = c.run(&flat_plan(), &mut RandomPolicy::default()).summary;
+        assert!(r.requeues > 0, "no rack losses at p_rack=0.3");
+        assert_eq!(r.decoded + r.failed, 8);
+        // Retries spread across racks, so most jobs still decode.
+        assert!(r.decoded >= 4, "decoded {}", r.decoded);
+    }
+
+    #[test]
+    fn link_costs_show_up_as_network_bytes_and_latency() {
+        let mut c = small_campaign(2);
+        c.fleet.link =
+            crate::sim::des::fleet::LinkModel { latency_s: 0.005, bytes_per_s: 0.0 };
+        let r = c.run(&flat_plan(), &mut RandomPolicy::default()).summary;
+        assert!(r.network_bytes > 0);
+        // Every result pays the 5 ms return latency on top of the
+        // 10 ms compute, so no job can finish before ~15 ms (cold
+        // dispatches pay a further 5 ms operand transfer; the decoder
+        // may not need those leaves, so 15 ms is the hard floor).
+        assert!(r.mean_completion_s > 0.0149, "{}", r.mean_completion_s);
+        let free = small_campaign(2).run(&flat_plan(), &mut RandomPolicy::default()).summary;
+        assert!(free.mean_completion_s < r.mean_completion_s);
+    }
+}

@@ -1,0 +1,200 @@
+//! Fleet model for the discrete-event simulator: per-worker speed
+//! heterogeneity drawn from a [`LatencyModel`], rack topology with
+//! correlated per-job outage domains, and a link-cost model charging
+//! transfer time proportional to encoded-block bytes.
+
+use crate::sim::latency::LatencyModel;
+use crate::sim::rng::Rng;
+
+/// Network link cost: a transfer of `b` bytes takes
+/// `latency_s + b / bytes_per_s` seconds (`bytes_per_s == 0` means
+/// infinite bandwidth — only the latency term is charged).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    pub latency_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl LinkModel {
+    /// Free network: transfers cost nothing.
+    pub const FREE: LinkModel = LinkModel { latency_s: 0.0, bytes_per_s: 0.0 };
+
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        let bw = if self.bytes_per_s > 0.0 { bytes as f64 / self.bytes_per_s } else { 0.0 };
+        self.latency_s + bw
+    }
+}
+
+/// Static description of a simulated fleet.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSpec {
+    /// Number of workers (10k-scale campaigns are the design point).
+    pub workers: usize,
+    /// Workers per rack (the correlated failure domain).
+    pub rack_size: usize,
+    /// Per-(job, rack) probability that the rack is unreachable for the
+    /// job — a correlated outage: every dispatch it receives is lost.
+    /// 0.0 disables rack faults (required for exact theory agreement).
+    pub p_rack: f64,
+    /// Per-worker slowness multiplier distribution, sampled once at
+    /// fleet build: a worker's service time is the leaf latency draw
+    /// times its multiplier. `Deterministic { t: 1.0 }` = homogeneous.
+    pub speed: LatencyModel,
+    /// Base per-leaf service-time distribution (compute only; network
+    /// is charged separately through `link`).
+    pub leaf_latency: LatencyModel,
+    pub link: LinkModel,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            workers: 10_000,
+            rack_size: 32,
+            p_rack: 0.0,
+            speed: LatencyModel::Deterministic { t: 1.0 },
+            leaf_latency: LatencyModel::Deterministic { t: 0.01 },
+            link: LinkModel::FREE,
+        }
+    }
+}
+
+/// A materialized fleet: per-worker speeds and rack assignment.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub spec: FleetSpec,
+    /// Slowness multiplier per worker (≥ `MIN_SPEED`).
+    speed: Vec<f64>,
+    num_racks: usize,
+}
+
+const MIN_SPEED: f64 = 1e-6;
+
+/// splitmix64 finalizer — the same mixing the coordinator's
+/// `FaultPlan::sample_at` uses, so per-(job, rack) outage draws are
+/// pure functions of their coordinates.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Fleet {
+    /// Materialize a fleet: draw every worker's slowness multiplier
+    /// from `spec.speed` with an RNG derived from `seed` (one stream,
+    /// worker-order — deterministic for a given `(spec, seed)`).
+    pub fn build(spec: &FleetSpec, seed: u64) -> Fleet {
+        assert!(spec.workers > 0, "fleet needs at least one worker");
+        assert!(spec.rack_size > 0, "rack_size must be >= 1");
+        assert!((0.0..=1.0).contains(&spec.p_rack), "p_rack out of [0,1]");
+        let mut rng = Rng::seeded(seed ^ 0x5f1e_e7a1_c0de_f1ee);
+        let speed: Vec<f64> =
+            (0..spec.workers).map(|_| spec.speed.sample(&mut rng).max(MIN_SPEED)).collect();
+        let num_racks = spec.workers.div_ceil(spec.rack_size);
+        Fleet { spec: *spec, speed, num_racks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.speed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.speed.is_empty()
+    }
+
+    pub fn num_racks(&self) -> usize {
+        self.num_racks
+    }
+
+    /// Slowness multiplier of worker `w`.
+    #[inline]
+    pub fn speed(&self, w: u32) -> f64 {
+        self.speed[w as usize]
+    }
+
+    #[inline]
+    pub fn rack_of(&self, w: u32) -> u32 {
+        (w as usize / self.spec.rack_size) as u32
+    }
+
+    /// Is `rack` down for `job_id`? A pure function of
+    /// `(seed, job_id, rack)` — the correlated failure domain: when a
+    /// rack is down for a job, every dispatch the job sends there is
+    /// lost (and retried elsewhere, up to the attempt cap).
+    pub fn rack_down(&self, seed: u64, job_id: u64, rack: u32) -> bool {
+        if self.spec.p_rack <= 0.0 {
+            return false;
+        }
+        let h = mix64(seed ^ mix64(job_id ^ mix64(0x7ac4_0000_0000_0000 ^ rack as u64)));
+        Rng::seeded(h).uniform() < self.spec.p_rack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_transfer_time() {
+        let l = LinkModel { latency_s: 0.001, bytes_per_s: 1e6 };
+        assert!((l.transfer_time(0) - 0.001).abs() < 1e-12);
+        assert!((l.transfer_time(500_000) - 0.501).abs() < 1e-12);
+        assert_eq!(LinkModel::FREE.transfer_time(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn build_is_deterministic_and_racked() {
+        let spec = FleetSpec {
+            workers: 100,
+            rack_size: 16,
+            speed: LatencyModel::Bimodal { base: 1.0, p_slow: 0.2, factor: 4.0 },
+            ..FleetSpec::default()
+        };
+        let a = Fleet::build(&spec, 7);
+        let b = Fleet::build(&spec, 7);
+        for w in 0..100u32 {
+            assert_eq!(a.speed(w).to_bits(), b.speed(w).to_bits());
+        }
+        assert_eq!(a.num_racks(), 7); // ceil(100 / 16)
+        assert_eq!(a.rack_of(0), 0);
+        assert_eq!(a.rack_of(15), 0);
+        assert_eq!(a.rack_of(16), 1);
+        assert_eq!(a.rack_of(99), 6);
+        // A different seed redraws speeds.
+        let c = Fleet::build(&spec, 8);
+        assert!((0..100u32).any(|w| a.speed(w) != c.speed(w)));
+    }
+
+    #[test]
+    fn homogeneous_speed_is_exactly_one() {
+        let fleet = Fleet::build(&FleetSpec { workers: 8, ..FleetSpec::default() }, 1);
+        for w in 0..8u32 {
+            assert_eq!(fleet.speed(w), 1.0);
+        }
+    }
+
+    #[test]
+    fn rack_outage_is_pure_and_respects_probability() {
+        let spec = FleetSpec { workers: 640, rack_size: 32, p_rack: 0.25, ..Default::default() };
+        let fleet = Fleet::build(&spec, 3);
+        // Purity: same coordinates, same answer, every time.
+        for job in 0..20u64 {
+            for rack in 0..fleet.num_racks() as u32 {
+                assert_eq!(fleet.rack_down(9, job, rack), fleet.rack_down(9, job, rack));
+            }
+        }
+        // Frequency over many (job, rack) coordinates ≈ p_rack.
+        let mut down = 0u32;
+        let total = 4000u32;
+        for i in 0..total {
+            if fleet.rack_down(9, i as u64 / 20, i % 20) {
+                down += 1;
+            }
+        }
+        let freq = down as f64 / total as f64;
+        assert!((freq - 0.25).abs() < 0.03, "outage freq {freq}");
+        // p_rack = 0 short-circuits.
+        let clean = Fleet::build(&FleetSpec { p_rack: 0.0, ..spec }, 3);
+        assert!(!clean.rack_down(9, 1, 1));
+    }
+}

@@ -1,0 +1,40 @@
+//! Fleet-scale discrete-event simulator for coded-matmul campaigns.
+//!
+//! Where [`crate::sim::montecarlo`] samples the *static* question
+//! ("given i.i.d. node faults, does this failure pattern decode?"),
+//! this subsystem simulates the *dynamics*: jobs arriving at a shared
+//! 10k-worker fleet, scheduling policies racing leaf tasks onto
+//! heterogeneous nodes, rack-correlated outages, network transfer
+//! costs, and speculative re-execution — while keeping the decode
+//! semantics bit-identical to the live coordinator (the same span
+//! oracles, the same pure per-`(seed, job, leaf)` fault hash).
+//!
+//! Layout:
+//! * [`calendar`] — the event queue: binary heap over simulated time
+//!   with a pinned `(time, insertion-seq)` tie-break.
+//! * [`fleet`] — worker speeds, rack topology, link-cost model.
+//! * [`arrival`] — uniform / Poisson / diurnal / trace-driven job
+//!   arrival processes.
+//! * [`policy`] — the [`SchedPolicy`] trait and four reference
+//!   policies (random, fastest-first, locality-aware, speculative).
+//! * [`engine`] — the campaign loop tying it all together.
+//!
+//! The headline experiment (`ft_strassen simfleet`, pinned by
+//! `tests/fleet_sim.rs`) sweeps p_e over a 10k-node fleet running
+//! nested fan-out-256 jobs and checks the simulated failure rate
+//! against [`crate::coding::theory::nested_failure_probability`]
+//! within Monte-Carlo confidence bounds.
+
+pub mod arrival;
+pub mod calendar;
+pub mod engine;
+pub mod fleet;
+pub mod policy;
+
+pub use arrival::ArrivalProcess;
+pub use calendar::Calendar;
+pub use engine::{Campaign, CampaignResult, CampaignSummary, SimPlan};
+pub use fleet::{Fleet, FleetSpec, LinkModel};
+pub use policy::{
+    policy_by_name, FastestFirst, JobView, LocalityAware, RandomPolicy, SchedPolicy, Speculative,
+};

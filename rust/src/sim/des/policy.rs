@@ -1,0 +1,330 @@
+//! Scheduling policies for the fleet simulator.
+//!
+//! A policy owns the representation of the idle-worker set — at 10k
+//! workers a per-dispatch linear scan would dominate the run, so each
+//! policy keeps a structure matched to its decision rule (swap-remove
+//! vector, speed-ordered heap, per-rack free lists). The engine calls
+//! `acquire` once per dispatch and `release` once per completion; both
+//! must be deterministic given the call sequence and the engine RNG.
+
+use crate::sim::des::fleet::Fleet;
+use crate::sim::rng::Rng;
+
+/// What a policy may observe about the job whose work item is at the
+/// head of the dispatch queue.
+pub struct JobView<'a> {
+    pub job_id: u64,
+    /// `touched_racks[r]` — has this job already shipped operands to
+    /// rack `r`? (Length = `fleet.num_racks()`.)
+    pub touched_racks: &'a [bool],
+    /// Leaf attempts currently in flight for this job.
+    pub outstanding: usize,
+    /// Work items of this job still queued.
+    pub pending: usize,
+    /// Outer groups still needed (neither recovered nor hopeless).
+    pub groups_needed: usize,
+}
+
+/// A worker-selection policy. The default implementations in this
+/// module are compared head-to-head by `benches/fleet_sim.rs`.
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+    /// Reset to "all workers idle" for the given fleet.
+    fn init(&mut self, fleet: &Fleet);
+    /// Worker `w` finished (or was freed) and is idle again.
+    fn release(&mut self, worker: u32, fleet: &Fleet);
+    /// Pick an idle worker for the job at the queue head, or `None` to
+    /// leave the item queued (no idle worker the policy will spend).
+    fn acquire(&mut self, job: &JobView, fleet: &Fleet, rng: &mut Rng) -> Option<u32>;
+    /// Should the engine duplicate one of this job's in-flight leaves
+    /// when capacity is idle? (Speculative execution; the engine caps
+    /// attempts per leaf.)
+    fn wants_backup(&self, _job: &JobView) -> bool {
+        false
+    }
+}
+
+/// Uniformly random idle worker (the baseline).
+#[derive(Default)]
+pub struct RandomPolicy {
+    idle: Vec<u32>,
+}
+
+impl SchedPolicy for RandomPolicy {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn init(&mut self, fleet: &Fleet) {
+        self.idle = (0..fleet.len() as u32).collect();
+    }
+
+    fn release(&mut self, worker: u32, _fleet: &Fleet) {
+        self.idle.push(worker);
+    }
+
+    fn acquire(&mut self, _job: &JobView, _fleet: &Fleet, rng: &mut Rng) -> Option<u32> {
+        if self.idle.is_empty() {
+            return None;
+        }
+        let i = rng.below(self.idle.len() as u64) as usize;
+        Some(self.idle.swap_remove(i))
+    }
+}
+
+/// Heap entry ordered fastest-first (smallest slowness multiplier),
+/// worker id as the deterministic tie-break.
+struct FastEntry {
+    speed: f64,
+    worker: u32,
+}
+
+impl PartialEq for FastEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.speed.total_cmp(&other.speed).is_eq() && self.worker == other.worker
+    }
+}
+
+impl Eq for FastEntry {}
+
+impl PartialOrd for FastEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FastEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap pops the max, we want the smallest
+        // multiplier (fastest worker), lowest id among equals.
+        other
+            .speed
+            .total_cmp(&self.speed)
+            .then_with(|| other.worker.cmp(&self.worker))
+    }
+}
+
+/// Always dispatch to the fastest idle worker.
+#[derive(Default)]
+pub struct FastestFirst {
+    idle: std::collections::BinaryHeap<FastEntry>,
+}
+
+impl SchedPolicy for FastestFirst {
+    fn name(&self) -> &'static str {
+        "fastest"
+    }
+
+    fn init(&mut self, fleet: &Fleet) {
+        self.idle.clear();
+        for w in 0..fleet.len() as u32 {
+            self.idle.push(FastEntry { speed: fleet.speed(w), worker: w });
+        }
+    }
+
+    fn release(&mut self, worker: u32, fleet: &Fleet) {
+        self.idle.push(FastEntry { speed: fleet.speed(worker), worker });
+    }
+
+    fn acquire(&mut self, _job: &JobView, _fleet: &Fleet, _rng: &mut Rng) -> Option<u32> {
+        self.idle.pop().map(|e| e.worker)
+    }
+}
+
+/// Prefer racks the job has already shipped operands to (warm racks
+/// skip the operand transfer), falling back to a rotating cursor over
+/// all racks so cold dispatches spread instead of piling onto rack 0.
+#[derive(Default)]
+pub struct LocalityAware {
+    idle_by_rack: Vec<Vec<u32>>,
+    cursor: usize,
+}
+
+impl SchedPolicy for LocalityAware {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn init(&mut self, fleet: &Fleet) {
+        self.idle_by_rack = vec![Vec::new(); fleet.num_racks()];
+        for w in 0..fleet.len() as u32 {
+            self.idle_by_rack[fleet.rack_of(w) as usize].push(w);
+        }
+        self.cursor = 0;
+    }
+
+    fn release(&mut self, worker: u32, fleet: &Fleet) {
+        self.idle_by_rack[fleet.rack_of(worker) as usize].push(worker);
+    }
+
+    fn acquire(&mut self, job: &JobView, _fleet: &Fleet, _rng: &mut Rng) -> Option<u32> {
+        // Warm racks first, lowest rack id as the deterministic order.
+        for (r, touched) in job.touched_racks.iter().enumerate() {
+            if *touched {
+                if let Some(w) = self.idle_by_rack[r].pop() {
+                    return Some(w);
+                }
+            }
+        }
+        // Cold fallback: rotating cursor so successive cold dispatches
+        // land on different racks.
+        let n = self.idle_by_rack.len();
+        for step in 0..n {
+            let r = (self.cursor + step) % n;
+            if let Some(w) = self.idle_by_rack[r].pop() {
+                self.cursor = (r + 1) % n;
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
+/// Fastest-first dispatch plus speculative backups: when a job has no
+/// queued work left but attempts still in flight, ask the engine to
+/// duplicate an outstanding leaf on the next idle worker. Backups beat
+/// stragglers (a delayed first attempt is overtaken by a clean rerun);
+/// they cannot beat the paper's fail-stop faults, which are pure
+/// per-(job, leaf) and re-roll identically on every attempt.
+#[derive(Default)]
+pub struct Speculative {
+    inner: FastestFirst,
+}
+
+impl SchedPolicy for Speculative {
+    fn name(&self) -> &'static str {
+        "speculative"
+    }
+
+    fn init(&mut self, fleet: &Fleet) {
+        self.inner.init(fleet);
+    }
+
+    fn release(&mut self, worker: u32, fleet: &Fleet) {
+        self.inner.release(worker, fleet);
+    }
+
+    fn acquire(&mut self, job: &JobView, fleet: &Fleet, rng: &mut Rng) -> Option<u32> {
+        self.inner.acquire(job, fleet, rng)
+    }
+
+    fn wants_backup(&self, job: &JobView) -> bool {
+        job.pending == 0 && job.outstanding > 0
+    }
+}
+
+/// Construct a policy by CLI name.
+pub fn policy_by_name(name: &str) -> Result<Box<dyn SchedPolicy>, String> {
+    match name.trim().to_lowercase().as_str() {
+        "random" => Ok(Box::<RandomPolicy>::default()),
+        "fastest" => Ok(Box::<FastestFirst>::default()),
+        "locality" => Ok(Box::<LocalityAware>::default()),
+        "speculative" => Ok(Box::<Speculative>::default()),
+        other => Err(format!(
+            "unknown policy `{other}` (random|fastest|locality|speculative)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::des::fleet::FleetSpec;
+    use crate::sim::latency::LatencyModel;
+
+    fn small_fleet() -> Fleet {
+        Fleet::build(
+            &FleetSpec {
+                workers: 8,
+                rack_size: 4,
+                speed: LatencyModel::Bimodal { base: 1.0, p_slow: 0.5, factor: 10.0 },
+                ..FleetSpec::default()
+            },
+            42,
+        )
+    }
+
+    fn view<'a>(touched: &'a [bool]) -> JobView<'a> {
+        JobView { job_id: 0, touched_racks: touched, outstanding: 0, pending: 1, groups_needed: 4 }
+    }
+
+    #[test]
+    fn random_draws_every_worker_once() {
+        let fleet = small_fleet();
+        let touched = vec![false; fleet.num_racks()];
+        let mut p = RandomPolicy::default();
+        p.init(&fleet);
+        let mut rng = Rng::seeded(1);
+        let mut got: Vec<u32> =
+            (0..8).map(|_| p.acquire(&view(&touched), &fleet, &mut rng).unwrap()).collect();
+        assert!(p.acquire(&view(&touched), &fleet, &mut rng).is_none());
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        p.release(3, &fleet);
+        assert_eq!(p.acquire(&view(&touched), &fleet, &mut rng), Some(3));
+    }
+
+    #[test]
+    fn fastest_first_pops_in_speed_order() {
+        let fleet = small_fleet();
+        let touched = vec![false; fleet.num_racks()];
+        let mut p = FastestFirst::default();
+        p.init(&fleet);
+        let mut rng = Rng::seeded(1);
+        let order: Vec<u32> =
+            (0..8).map(|_| p.acquire(&view(&touched), &fleet, &mut rng).unwrap()).collect();
+        let speeds: Vec<f64> = order.iter().map(|&w| fleet.speed(w)).collect();
+        assert!(speeds.windows(2).all(|w| w[0] <= w[1]), "not speed-sorted: {speeds:?}");
+        // Equal-speed workers pop lowest id first.
+        for w in order.windows(2) {
+            if fleet.speed(w[0]) == fleet.speed(w[1]) {
+                assert!(w[0] < w[1], "tie-break broken: {order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn locality_prefers_touched_racks() {
+        let fleet = small_fleet(); // racks: {0..3}, {4..7}
+        let mut p = LocalityAware::default();
+        p.init(&fleet);
+        let mut rng = Rng::seeded(1);
+        let touched = vec![false, true];
+        let w = p.acquire(&view(&touched), &fleet, &mut rng).unwrap();
+        assert_eq!(fleet.rack_of(w), 1, "warm rack ignored");
+        // Exhaust rack 1, then it must fall back to rack 0.
+        for _ in 0..3 {
+            let w = p.acquire(&view(&touched), &fleet, &mut rng).unwrap();
+            assert_eq!(fleet.rack_of(w), 1);
+        }
+        let w = p.acquire(&view(&touched), &fleet, &mut rng).unwrap();
+        assert_eq!(fleet.rack_of(w), 0);
+    }
+
+    #[test]
+    fn speculative_wants_backup_only_when_drained() {
+        let p = Speculative::default();
+        let touched = [false];
+        let mut v = JobView {
+            job_id: 1,
+            touched_racks: &touched,
+            outstanding: 3,
+            pending: 0,
+            groups_needed: 1,
+        };
+        assert!(p.wants_backup(&v));
+        v.pending = 2;
+        assert!(!p.wants_backup(&v));
+        v.pending = 0;
+        v.outstanding = 0;
+        assert!(!p.wants_backup(&v));
+    }
+
+    #[test]
+    fn policy_by_name_round_trip() {
+        for name in ["random", "fastest", "locality", "speculative"] {
+            assert_eq!(policy_by_name(name).unwrap().name(), name);
+        }
+        assert!(policy_by_name("bogus").is_err());
+    }
+}

@@ -34,6 +34,29 @@ impl LatencyModel {
         }
     }
 
+    /// Parse a CLI/config spelling:
+    /// `det:T`, `sexp:SHIFT:RATE`, or `bimodal:BASE:P_SLOW:FACTOR`.
+    pub fn parse(s: &str) -> Result<LatencyModel, String> {
+        let parts: Vec<&str> = s.trim().split(':').collect();
+        let num = |x: &str| -> Result<f64, String> {
+            x.parse::<f64>().map_err(|_| format!("bad number `{x}` in latency model `{s}`"))
+        };
+        match parts.as_slice() {
+            ["det", t] => Ok(LatencyModel::Deterministic { t: num(t)? }),
+            ["sexp", shift, rate] => {
+                Ok(LatencyModel::ShiftedExp { shift: num(shift)?, rate: num(rate)? })
+            }
+            ["bimodal", base, p, factor] => Ok(LatencyModel::Bimodal {
+                base: num(base)?,
+                p_slow: num(p)?,
+                factor: num(factor)?,
+            }),
+            _ => Err(format!(
+                "unknown latency model `{s}` (det:T | sexp:SHIFT:RATE | bimodal:BASE:P:FACTOR)"
+            )),
+        }
+    }
+
     /// Mean completion time.
     pub fn mean(&self) -> f64 {
         match *self {
@@ -89,6 +112,25 @@ mod tests {
     fn bimodal_mean() {
         let m = LatencyModel::Bimodal { base: 1.0, p_slow: 0.1, factor: 10.0 };
         assert!((m.mean() - 1.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_round_trips_all_three_models() {
+        assert_eq!(
+            LatencyModel::parse("det:0.25").unwrap(),
+            LatencyModel::Deterministic { t: 0.25 }
+        );
+        assert_eq!(
+            LatencyModel::parse("sexp:0.01:5").unwrap(),
+            LatencyModel::ShiftedExp { shift: 0.01, rate: 5.0 }
+        );
+        assert_eq!(
+            LatencyModel::parse("bimodal:1:0.1:8").unwrap(),
+            LatencyModel::Bimodal { base: 1.0, p_slow: 0.1, factor: 8.0 }
+        );
+        assert!(LatencyModel::parse("uniform:1:2").is_err());
+        assert!(LatencyModel::parse("det:abc").is_err());
+        assert!(LatencyModel::parse("sexp:1").is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! leaves, where the flat 2^M enumeration is impossible.
 
 pub mod bernoulli;
+pub mod des;
 pub mod latency;
 pub mod montecarlo;
 pub mod rng;

@@ -17,11 +17,26 @@ pub struct MonteCarlo {
 }
 
 /// Estimate with its standard error.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Estimate {
     pub mean: f64,
     pub std_err: f64,
     pub trials: u64,
+}
+
+impl Estimate {
+    /// Does this estimate agree with a `reference` value within `z`
+    /// standard errors plus an absolute `slack`?
+    ///
+    /// The slack term covers the regime where the estimate cannot
+    /// resolve the reference at all — e.g. a binomial proportion of 0
+    /// successes has `std_err == 0`, yet by the rule of three the true
+    /// value may be as large as ≈ 3/n; passing `slack = 3.0 / n`
+    /// makes such points pass exactly when they are statistically
+    /// uninformative rather than wrong.
+    pub fn agrees_with(&self, reference: f64, z: f64, slack: f64) -> bool {
+        (self.mean - reference).abs() <= z * self.std_err + slack
+    }
 }
 
 impl MonteCarlo {
@@ -214,6 +229,17 @@ mod tests {
         let e = MonteCarlo::new(20_000, 11).nested_mean_completion_time(&model, &oracle);
         let h49: f64 = (1..=49).map(|k| 1.0 / k as f64).sum();
         assert!((e.mean - h49).abs() < 0.1, "{e:?} want {h49}");
+    }
+
+    #[test]
+    fn agrees_with_uses_z_times_std_err_plus_slack() {
+        let e = Estimate { mean: 0.10, std_err: 0.01, trials: 1000 };
+        assert!(e.agrees_with(0.12, 2.0, 0.0));
+        assert!(!e.agrees_with(0.15, 2.0, 0.0));
+        // Zero-failure estimate: only the slack term can admit it.
+        let zero = Estimate { mean: 0.0, std_err: 0.0, trials: 1000 };
+        assert!(!zero.agrees_with(0.002, 4.0, 0.0));
+        assert!(zero.agrees_with(0.002, 4.0, 3.0 / 1000.0));
     }
 
     #[test]

@@ -239,6 +239,55 @@ fn localmm_rejects_zero_cutoff() {
 }
 
 #[test]
+fn simfleet_campaign_agrees_with_nested_theory() {
+    let (stdout, stderr, ok) = run(&[
+        "simfleet", "--workers", "300", "--jobs", "30", "--points", "3",
+        "--policies", "random,fastest",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("simfleet: "), "{stdout}");
+    assert!(stdout.contains("256 leaves/job"), "{stdout}");
+    assert!(stdout.contains("policy random:"), "{stdout}");
+    assert!(stdout.contains("policy fastest:"), "{stdout}");
+    assert!(stdout.contains("trace_digest="), "{stdout}");
+    assert!(stdout.contains("all sweep points agree"), "{stdout}");
+}
+
+#[test]
+fn simfleet_output_is_deterministic_run_to_run() {
+    // The campaign report contains only simulated time and digests —
+    // no wall clock — so the same seed + config must print the same
+    // bytes on every run, on any machine.
+    let args = [
+        "simfleet", "--workers", "200", "--jobs", "20", "--pe-sweep", "0.3",
+        "--policies", "speculative", "--arrival", "poisson:400",
+    ];
+    let (first, _, ok1) = run(&args);
+    let (second, _, ok2) = run(&args);
+    assert!(ok1 && ok2, "{first}");
+    assert_eq!(first, second, "simfleet output changed between identical runs");
+}
+
+#[test]
+fn simfleet_rejects_unknown_policy() {
+    let (_, stderr, ok) = run(&["simfleet", "--policies", "bogus", "--jobs", "4"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown policy"), "{stderr}");
+}
+
+#[test]
+fn simfleet_honors_fleet_config_overrides() {
+    let (stdout, stderr, ok) = run(&[
+        "simfleet", "--workers", "128", "--jobs", "8", "--pe-sweep", "0.4",
+        "--rack-size", "64", "--policies", "locality",
+        "--leaf-latency", "sexp:0.005:100",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("128 workers in 2 racks"), "{stdout}");
+    assert!(stdout.contains("policy locality:"), "{stdout}");
+}
+
+#[test]
 fn bad_scheme_fails_with_message() {
     let (_, stderr, ok) = run(&["multiply", "--scheme", "bogus"]);
     assert!(!ok);

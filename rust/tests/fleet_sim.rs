@@ -1,0 +1,206 @@
+//! Fleet-simulator cross-validation and determinism suite.
+//!
+//! * The discrete-event simulator (`sim::des`), run with deterministic
+//!   latency and Bernoulli faults, must reproduce the static
+//!   `sim::MonteCarlo` estimate and the `coding::theory` eq. (9) curve
+//!   on the flat schemes — the DES adds dynamics (queueing, dispatch,
+//!   backups), not a different failure law.
+//! * Identical seed + config must reproduce the event trace byte for
+//!   byte, and bookkeeping knobs (heap capacity) or fleet scaling must
+//!   never change decode outcomes when faults are pure (`p_rack = 0`).
+//! * The acceptance campaign: 10,000 workers, the nested sw+2psmm²
+//!   plan (256 leaves/job), p_e swept over the resolvable upper range —
+//!   measured P_f tracks `nested_failure_probability` within 4σ.
+
+use std::time::Duration;
+
+use ft_strassen::coding::fc::{fc_table, DecodeOracle};
+use ft_strassen::coding::nested::NestedTaskSet;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coding::theory::{failure_probability, nested_failure_probability};
+use ft_strassen::coordinator::worker::FaultPlan;
+use ft_strassen::sim::des::{
+    policy_by_name, ArrivalProcess, Campaign, FleetSpec, LinkModel, SimPlan,
+};
+use ft_strassen::sim::latency::LatencyModel;
+use ft_strassen::sim::montecarlo::MonteCarlo;
+
+/// A clean campaign: deterministic service times, free links, no rack
+/// outages — the closest DES analogue of the static Monte-Carlo model.
+fn clean_campaign(jobs: usize, workers: usize, p_e: f64, seed: u64) -> Campaign {
+    Campaign {
+        fleet: FleetSpec {
+            workers,
+            rack_size: 32,
+            p_rack: 0.0,
+            speed: LatencyModel::Deterministic { t: 1.0 },
+            leaf_latency: LatencyModel::Deterministic { t: 0.01 },
+            link: LinkModel::FREE,
+        },
+        arrivals: ArrivalProcess::Uniform { count: jobs, interarrival: 0.05 },
+        fault: FaultPlan { p_fail: p_e, p_straggle: 0.0, delay: Duration::ZERO },
+        block_bytes: 0,
+        seed,
+        max_attempts: 4,
+        heap_capacity: 0,
+        record_trace: false,
+    }
+}
+
+#[test]
+fn des_reproduces_montecarlo_and_theory_on_flat_schemes() {
+    let jobs = 400;
+    let slack = 3.0 / jobs as f64; // rule of three: tiny P_f is unresolvable
+    for (psmms, p_e) in [(0usize, 0.2), (0, 0.35), (2, 0.2), (2, 0.35)] {
+        let ts = TaskSet::strassen_winograd(psmms);
+        let m = ts.num_tasks();
+        let fc = fc_table(&ts);
+        let oracle = DecodeOracle::build(&ts);
+        let theory = failure_probability(&fc, p_e);
+        let mc = MonteCarlo::new(50_000, 7)
+            .failure_probability(p_e, m, |mask| oracle.is_decodable(mask));
+
+        let plan = SimPlan::Flat(ts);
+        let mut policy = policy_by_name("random").unwrap();
+        let des = clean_campaign(jobs, 64, p_e, 11).run(&plan, policy.as_mut()).summary;
+
+        assert_eq!(des.decoded + des.failed, jobs);
+        assert!(
+            des.measured_pf.agrees_with(theory, 4.0, slack),
+            "sw+{psmms}psmm p_e={p_e}: des {} ± {} vs theory {theory}",
+            des.measured_pf.mean,
+            des.measured_pf.std_err
+        );
+        let gap = (des.measured_pf.mean - mc.mean).abs();
+        let tol = 4.0 * (des.measured_pf.std_err + mc.std_err) + slack;
+        assert!(
+            gap <= tol,
+            "sw+{psmms}psmm p_e={p_e}: des {} vs mc {} (gap {gap} > tol {tol})",
+            des.measured_pf.mean,
+            mc.mean
+        );
+    }
+}
+
+#[test]
+fn identical_seed_and_config_reproduce_the_run_byte_for_byte() {
+    let nested = NestedTaskSet::compose(
+        TaskSet::strassen_winograd(0),
+        TaskSet::strassen_winograd(0),
+    );
+    let plan = SimPlan::Nested(nested);
+    let mut campaign = clean_campaign(12, 96, 0.25, 99);
+    campaign.record_trace = true;
+    campaign.fault.p_straggle = 0.2;
+    campaign.fault.delay = Duration::from_millis(30);
+
+    let mut a_pol = policy_by_name("speculative").unwrap();
+    let mut b_pol = policy_by_name("speculative").unwrap();
+    let a = campaign.run(&plan, a_pol.as_mut());
+    let b = campaign.run(&plan, b_pol.as_mut());
+
+    assert_eq!(a.summary, b.summary);
+    assert!(!a.trace.is_empty());
+    assert_eq!(a.trace, b.trace, "event traces diverged under identical config");
+}
+
+#[test]
+fn heap_capacity_is_pure_bookkeeping_and_fleet_size_cannot_change_outcomes() {
+    let plan = SimPlan::Flat(TaskSet::strassen_winograd(2));
+    let base = clean_campaign(60, 64, 0.3, 5);
+
+    // Pre-sizing the calendar must not reorder anything.
+    let mut sized = base.clone();
+    sized.heap_capacity = 4096;
+    let mut p1 = policy_by_name("fastest").unwrap();
+    let mut p2 = policy_by_name("fastest").unwrap();
+    let a = base.run(&plan, p1.as_mut()).summary;
+    let b = sized.run(&plan, p2.as_mut()).summary;
+    assert_eq!(a, b, "heap capacity changed the simulation");
+
+    // Fault purity: the dead-leaf set depends only on (seed, job, leaf),
+    // so growing the fleet reshuffles timing but not decode outcomes.
+    for (workers, policy) in [(64, "random"), (500, "random"), (500, "locality")] {
+        let mut big = base.clone();
+        big.fleet.workers = workers;
+        let mut pol = policy_by_name(policy).unwrap();
+        let s = big.run(&plan, pol.as_mut()).summary;
+        assert_eq!(
+            (s.outcome_digest, s.failed),
+            (a.outcome_digest, a.failed),
+            "outcomes changed at workers={workers} policy={policy}"
+        );
+    }
+}
+
+#[test]
+fn ten_thousand_worker_nested_campaign_tracks_fig2_theory() {
+    let nested = NestedTaskSet::compose(
+        TaskSet::strassen_winograd(2),
+        TaskSet::strassen_winograd(2),
+    );
+    assert_eq!(nested.num_leaves(), 256);
+    let fc_o = fc_table(&nested.outer);
+    let fc_i = fc_table(&nested.inner);
+    let plan = SimPlan::Nested(nested);
+
+    let jobs = 300;
+    let slack = 3.0 / jobs as f64;
+    let mut policy = policy_by_name("random").unwrap();
+    // The upper end of the Fig.-2 range, where a 300-job campaign can
+    // actually resolve the nested P_f (it is astronomically small at
+    // low p_e — those points are covered by the rule-of-three slack).
+    for p_e in [0.3, 0.4, 0.5] {
+        let theory = nested_failure_probability(&fc_o, &fc_i, p_e);
+        let mut campaign = clean_campaign(jobs, 10_000, p_e, 17);
+        campaign.arrivals = ArrivalProcess::Poisson { count: jobs, rate: 300.0 };
+        campaign.heap_capacity = jobs * 256 / 4;
+        let s = campaign.run(&plan, policy.as_mut()).summary;
+        assert_eq!(s.decoded + s.failed, jobs);
+        assert!(s.makespan_s > 0.0);
+        assert!(
+            s.measured_pf.agrees_with(theory, 4.0, slack),
+            "p_e={p_e}: des {} ± {} vs nested theory {theory}",
+            s.measured_pf.mean,
+            s.measured_pf.std_err
+        );
+    }
+}
+
+#[test]
+fn scheduling_policies_differ_where_they_should() {
+    let plan = SimPlan::Flat(TaskSet::strassen_winograd(2));
+
+    // Bimodal worker speeds: fastest-first must not lose to random on
+    // mean completion (generous 10% cushion — it usually wins big).
+    let mut bimodal = clean_campaign(40, 256, 0.0, 23);
+    bimodal.fleet.speed = LatencyModel::Bimodal { base: 1.0, p_slow: 0.3, factor: 8.0 };
+    let mut rand_pol = policy_by_name("random").unwrap();
+    let mut fast_pol = policy_by_name("fastest").unwrap();
+    let random = bimodal.run(&plan, rand_pol.as_mut()).summary;
+    let fastest = bimodal.run(&plan, fast_pol.as_mut()).summary;
+    assert_eq!(random.outcome_digest, fastest.outcome_digest);
+    assert!(
+        fastest.mean_completion_s <= random.mean_completion_s * 1.10,
+        "fastest {} vs random {}",
+        fastest.mean_completion_s,
+        random.mean_completion_s
+    );
+
+    // Metered links: locality-aware reuses warm racks, so it must ship
+    // strictly fewer bytes than random placement across a wide fleet.
+    let mut metered = clean_campaign(6, 512, 0.0, 29);
+    metered.block_bytes = 32 * 32 * 8;
+    metered.fleet.link = LinkModel { latency_s: 0.001, bytes_per_s: 1e9 };
+    let mut rand_pol = policy_by_name("random").unwrap();
+    let mut loc_pol = policy_by_name("locality").unwrap();
+    let spread = metered.run(&plan, rand_pol.as_mut()).summary;
+    let packed = metered.run(&plan, loc_pol.as_mut()).summary;
+    assert!(spread.network_bytes > 0);
+    assert!(
+        packed.network_bytes < spread.network_bytes,
+        "locality {} bytes vs random {} bytes",
+        packed.network_bytes,
+        spread.network_bytes
+    );
+}
