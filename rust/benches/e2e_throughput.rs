@@ -429,6 +429,7 @@ fn main() {
             p_straggle: serve_fault.p_straggle,
             delay_ms: serve_fault.delay.as_millis(),
             quick,
+            trace_digest: None,
             cells,
         }
         .render();

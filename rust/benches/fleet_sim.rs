@@ -108,6 +108,7 @@ fn main() {
             jobs,
             seed,
             quick,
+            trace_digest: None,
             cells,
         };
         match append_to_repo_root("BENCH_sim.json", &entry.render()) {

@@ -215,6 +215,11 @@ pub struct ServeEntry {
     pub p_straggle: f64,
     pub delay_ms: u128,
     pub quick: bool,
+    /// Order-independent logical-trace digest of a traced run
+    /// ([`crate::obs::logical_digest`]); omitted when the run was not
+    /// traced. Rendered as a hex string: the reader's f64 numbers
+    /// cannot carry 64 bits losslessly.
+    pub trace_digest: Option<u64>,
     pub cells: Vec<ServeCell>,
 }
 
@@ -241,7 +246,7 @@ impl ServeEntry {
             .collect();
         format!(
             "{{\"unix_time\": {}, \"scheme\": \"{}\", \"n\": {}, \"jobs\": {}, \
-             \"p_straggle\": {}, \"delay_ms\": {}, \"quick\": {}, \"cells\": [{}]}}",
+             \"p_straggle\": {}, \"delay_ms\": {}, \"quick\": {}, {}\"cells\": [{}]}}",
             self.unix_time,
             self.scheme,
             self.n,
@@ -249,8 +254,18 @@ impl ServeEntry {
             self.p_straggle,
             self.delay_ms,
             self.quick,
+            render_trace_digest(self.trace_digest),
             cell_objs.join(", ")
         )
+    }
+}
+
+/// The optional `trace_digest` field (with its trailing separator), or
+/// nothing when the run was untraced.
+fn render_trace_digest(digest: Option<u64>) -> String {
+    match digest {
+        Some(d) => format!("\"trace_digest\": \"0x{d:016x}\", "),
+        None => String::new(),
     }
 }
 
@@ -279,6 +294,9 @@ pub struct SimEntry {
     pub jobs: usize,
     pub seed: u64,
     pub quick: bool,
+    /// See [`ServeEntry::trace_digest`] — hex string, omitted when the
+    /// campaign was not traced.
+    pub trace_digest: Option<u64>,
     pub cells: Vec<SimCell>,
 }
 
@@ -306,7 +324,7 @@ impl SimEntry {
         format!(
             "{{\"unix_time\": {}, \"plan\": \"{}\", \"policy\": \"{}\", \
              \"workers\": {}, \"jobs\": {}, \"seed\": {}, \"quick\": {}, \
-             \"cells\": [{}]}}",
+             {}\"cells\": [{}]}}",
             self.unix_time,
             self.plan,
             self.policy,
@@ -314,6 +332,7 @@ impl SimEntry {
             self.jobs,
             self.seed,
             self.quick,
+            render_trace_digest(self.trace_digest),
             cell_objs.join(", ")
         )
     }
@@ -626,6 +645,7 @@ mod tests {
             p_straggle: 0.3,
             delay_ms: 25,
             quick: true,
+            trace_digest: Some(0xdead_beef_0123_4567),
             cells: vec![
                 ServeCell {
                     tenants: 1,
@@ -660,6 +680,7 @@ mod tests {
             jobs: 300,
             seed: 7,
             quick: true,
+            trace_digest: None,
             cells: vec![
                 SimCell {
                     p_e: 0.005,
@@ -737,6 +758,31 @@ mod tests {
         assert_eq!(depths.len(), 2);
         assert_eq!(depths[1].get("depth").and_then(Json::as_num), Some(4.0));
         assert_eq!(depths[1].get("jobs_per_s").and_then(Json::as_num), Some(21.3));
+    }
+
+    #[test]
+    fn trace_digest_renders_as_hex_only_when_present() {
+        // Present: round-trips losslessly through the hex string (f64
+        // numbers could not carry all 64 bits).
+        let doc = parse_json(&sample_serve().render()).unwrap();
+        match doc.get("trace_digest") {
+            Some(Json::Str(s)) => {
+                let parsed = u64::from_str_radix(s.trim_start_matches("0x"), 16).unwrap();
+                assert_eq!(parsed, 0xdead_beef_0123_4567);
+            }
+            other => panic!("expected hex string, got {other:?}"),
+        }
+        // Absent: the key is omitted entirely, and the entry still
+        // carries every required key.
+        let doc = parse_json(&sample_sim().render()).unwrap();
+        assert!(doc.get("trace_digest").is_none());
+        for k in SIM_KEYS {
+            assert!(doc.get(k).is_some(), "missing {k}");
+        }
+        let mut traced_sim = sample_sim();
+        traced_sim.trace_digest = Some(1);
+        let doc = parse_json(&traced_sim.render()).unwrap();
+        assert_eq!(doc.get("trace_digest"), Some(&Json::Str("0x0000000000000001".into())));
     }
 
     #[test]

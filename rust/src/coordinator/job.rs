@@ -37,6 +37,7 @@ use crate::coordinator::task::DispatchPlan;
 use crate::coordinator::worker::{Backend, WorkerReply};
 use crate::linalg::blocked::join_blocks;
 use crate::linalg::matrix::Matrix;
+use crate::obs::{EventKind, Tracer, NO_LEAF};
 use crate::runtime::artifact::DECODE_SLOTS;
 
 /// Outcome report for one multiply job.
@@ -115,6 +116,9 @@ pub struct JobState {
     /// mid-job (group cancellation).
     revoked: usize,
     pub time_to_decodable: Option<Duration>,
+    /// Trace sink for group-recovery events (off unless the owning
+    /// tier installed one via [`Self::set_tracer`]).
+    tracer: Tracer,
 }
 
 impl JobState {
@@ -168,7 +172,14 @@ impl JobState {
             injected_stragglers,
             revoked: 0,
             time_to_decodable: None,
+            tracer: Tracer::off(),
         }
+    }
+
+    /// Install the owning tier's tracer so group recoveries show up in
+    /// the job's span tree.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// Replies that can still arrive (injected failures never answer;
@@ -257,6 +268,7 @@ impl JobState {
                 self.finished += 1;
                 if grp.decoder.on_finished(j) && !grp.registered {
                     grp.registered = true;
+                    self.tracer.emit(EventKind::GroupRecover, self.job_id, NO_LEAF, g as u64);
                     if outer.on_finished(g) && self.time_to_decodable.is_none() {
                         self.time_to_decodable = Some(self.started.elapsed());
                     }

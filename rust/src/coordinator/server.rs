@@ -19,10 +19,11 @@ use std::time::{Duration, Instant};
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::master::{MasterConfig, MultiplyReport};
 use crate::coordinator::task::DispatchPlan;
-use crate::coordinator::tier::{ServingTier, TenantSpec, TierConfig};
+use crate::coordinator::tier::{names, ServingTier, TenantSpec, TierConfig};
 use crate::coordinator::worker::Backend;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::Registry;
+use crate::obs::Tracer;
 use crate::sim::rng::Rng;
 
 /// Server configuration (single-tenant; see [`MmServer::with_tier_config`]
@@ -123,8 +124,21 @@ impl MmServer {
         cfg: TierConfig,
         workers: Option<usize>,
     ) -> MmServer {
+        MmServer::with_tier_config_traced(plan, backend, cfg, workers, Tracer::off())
+    }
+
+    /// [`Self::with_tier_config`] plus a trace sink: the tracer is
+    /// threaded through the tier, its worker fleet and every job's
+    /// decode state, so the whole leaf lifecycle lands in one trace.
+    pub fn with_tier_config_traced(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: TierConfig,
+        workers: Option<usize>,
+        tracer: Tracer,
+    ) -> MmServer {
         let queue_cap = cfg.queue_cap;
-        let tier = ServingTier::with_plan(plan, backend, cfg, workers);
+        let tier = ServingTier::with_plan_traced(plan, backend, cfg, workers, tracer);
         let tenants = tier.tenant_names();
         MmServer {
             tier,
@@ -172,6 +186,12 @@ impl MmServer {
         self.tier.metrics.clone()
     }
 
+    /// The tracer threaded through the tier (off unless built via
+    /// [`Self::with_tier_config_traced`]).
+    pub fn tracer(&self) -> &Tracer {
+        self.tier.tracer()
+    }
+
     /// Run until up to `max_jobs` jobs complete; returns their results
     /// in completion order. Successful jobs in a batch are always
     /// recorded and returned, even when other jobs in the same batch
@@ -188,7 +208,7 @@ impl MmServer {
             let (c, report) = match f.result {
                 Ok(ok) => ok,
                 Err(e) => {
-                    self.tier.metrics.counter("jobs_failed").inc();
+                    self.tier.metrics.counter(names::JOBS_FAILED).inc();
                     if batch_first_err.is_none() {
                         batch_first_err = Some((f.job_id, e.clone()));
                     }
@@ -237,14 +257,44 @@ impl MmServer {
     /// synthetic backlog wait, and only `depth` jobs' operands are ever
     /// held at once.
     pub fn run_workload(&mut self, jobs: usize, n: usize, seed: u64) -> Result<ServerReport, String> {
+        self.run_workload_observed(jobs, n, seed, 0, &mut |_, _| {})
+    }
+
+    /// [`Self::run_workload`] plus periodic metrics: after every
+    /// `metrics_every` completed jobs (0 disables it), `on_metrics` is
+    /// called with the completed-job count and a Prometheus text
+    /// exposition of the tier registry (the `--metrics-every` flag of
+    /// `ft-strassen serve`).
+    pub fn run_workload_observed(
+        &mut self,
+        jobs: usize,
+        n: usize,
+        seed: u64,
+        metrics_every: usize,
+        on_metrics: &mut dyn FnMut(usize, &str),
+    ) -> Result<ServerReport, String> {
         let mut rng = Rng::seeded(seed);
         let window = self.tier.depth().min(self.queue_cap.max(1));
         let t0 = Instant::now();
+        let start_done = self.jobs_done;
+        let mut reported = 0usize;
+        let mut emit = |srv: &mut MmServer, reported: &mut usize| {
+            if metrics_every == 0 {
+                return;
+            }
+            let done = srv.jobs_done - start_done;
+            if done / metrics_every > *reported {
+                *reported = done / metrics_every;
+                let text = crate::obs::prometheus_text(&srv.tier.metrics);
+                on_metrics(done, &text);
+            }
+        };
         let mut submitted = 0usize;
         while submitted < jobs {
             // Closed loop: complete jobs until an in-flight slot frees up.
             while self.tier.outstanding() >= window {
                 self.drain(1)?;
+                emit(self, &mut reported);
             }
             let a = Matrix::random(n, n, &mut rng);
             let b = Matrix::random(n, n, &mut rng);
@@ -254,6 +304,7 @@ impl MmServer {
         }
         while self.queue_depth() > 0 {
             self.drain(usize::MAX)?;
+            emit(self, &mut reported);
         }
         Ok(self.report(t0.elapsed()))
     }

@@ -50,9 +50,91 @@ use crate::coordinator::worker::{Backend, FaultAction, WorkerFleet, WorkerReply}
 use crate::linalg::blocked::{encode_operand, encode_operand_into, split_blocks};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::obs::{EventKind, Tracer, NO_LEAF};
 
 /// Liveness-probe cadence while the tier is polling with jobs in flight.
 const HEARTBEAT_EVERY: Duration = Duration::from_millis(300);
+
+/// The single source of truth for every metric name the serving-tier
+/// stack records (tier, worker fleet, server facade). Recording sites
+/// use these consts — never ad-hoc string literals — and the
+/// `metric_names_all_in_table` test fails on any name that escapes the
+/// table, so a typo cannot silently fork a metric family.
+pub mod names {
+    pub const CACHE_HITS: &str = "cache_hits";
+    pub const CACHE_MISSES: &str = "cache_misses";
+    pub const CACHE_EVICTIONS: &str = "cache_evictions";
+    pub const CACHE_ENTRIES: &str = "cache_entries";
+    pub const JOBS_CANCELLED: &str = "jobs_cancelled";
+    pub const JOBS_DISPATCHED: &str = "jobs_dispatched";
+    pub const JOBS_COMPLETED: &str = "jobs_completed";
+    pub const JOBS_FELL_BACK: &str = "jobs_fell_back";
+    pub const JOBS_FAILED: &str = "jobs_failed";
+    pub const BATCH_ROUNDS: &str = "batch_rounds";
+    pub const BATCHED_JOBS: &str = "batched_jobs";
+    pub const POOL_QUEUE_DEPTH: &str = "pool_queue_depth";
+    pub const POOL_ITEMS_REVOKED: &str = "pool_items_revoked";
+    pub const POOL_ITEMS_EXECUTED: &str = "pool_items_executed";
+    pub const POOL_ITEMS_FAULTED: &str = "pool_items_faulted";
+    pub const POOL_BUSY_WORKERS: &str = "pool_busy_workers";
+    pub const WORKERS_LIVE: &str = "workers_live";
+    pub const WORKER_COMPUTE: &str = "worker_compute";
+    pub const WORKER_ERRORS: &str = "worker_errors";
+    pub const HEARTBEATS_SENT: &str = "heartbeats_sent";
+    pub const HEARTBEAT_ACKS: &str = "heartbeat_acks";
+    pub const GROUP_ITEMS_CANCELLED: &str = "group_items_cancelled";
+    pub const GROUPS_RECOVERED: &str = "groups_recovered";
+    pub const REPLIES_STALE_DROPPED: &str = "replies_stale_dropped";
+    pub const JOB_LATENCY: &str = "job_latency";
+    pub const QUEUE_WAIT: &str = "queue_wait";
+    pub const INFLIGHT_JOBS: &str = "inflight_jobs";
+    pub const PENDING_JOBS: &str = "pending_jobs";
+    /// Dynamic per-tenant families: `<prefix><tenant name>`.
+    pub const TENANT_JOBS_PREFIX: &str = "tenant_jobs_";
+    pub const TENANT_LATENCY_PREFIX: &str = "tenant_latency_";
+    pub const TENANT_QUEUE_PREFIX: &str = "tenant_queue_";
+
+    /// Every fixed metric name.
+    pub const ALL: &[&str] = &[
+        CACHE_HITS,
+        CACHE_MISSES,
+        CACHE_EVICTIONS,
+        CACHE_ENTRIES,
+        JOBS_CANCELLED,
+        JOBS_DISPATCHED,
+        JOBS_COMPLETED,
+        JOBS_FELL_BACK,
+        JOBS_FAILED,
+        BATCH_ROUNDS,
+        BATCHED_JOBS,
+        POOL_QUEUE_DEPTH,
+        POOL_ITEMS_REVOKED,
+        POOL_ITEMS_EXECUTED,
+        POOL_ITEMS_FAULTED,
+        POOL_BUSY_WORKERS,
+        WORKERS_LIVE,
+        WORKER_COMPUTE,
+        WORKER_ERRORS,
+        HEARTBEATS_SENT,
+        HEARTBEAT_ACKS,
+        GROUP_ITEMS_CANCELLED,
+        GROUPS_RECOVERED,
+        REPLIES_STALE_DROPPED,
+        JOB_LATENCY,
+        QUEUE_WAIT,
+        INFLIGHT_JOBS,
+        PENDING_JOBS,
+    ];
+
+    /// Prefixes of the dynamic (per-tenant) families.
+    pub const DYNAMIC_PREFIXES: &[&str] =
+        &[TENANT_JOBS_PREFIX, TENANT_LATENCY_PREFIX, TENANT_QUEUE_PREFIX];
+
+    /// Is `name` a registered metric name (fixed or dynamic family)?
+    pub fn is_known(name: &str) -> bool {
+        ALL.contains(&name) || DYNAMIC_PREFIXES.iter().any(|p| name.starts_with(p))
+    }
+}
 
 /// A tenant's admission-control contract.
 #[derive(Clone, Debug, PartialEq)]
@@ -199,10 +281,10 @@ impl EncodedCache {
             cap,
             map: HashMap::new(),
             lru: VecDeque::new(),
-            hits: metrics.counter("cache_hits"),
-            misses: metrics.counter("cache_misses"),
-            evictions: metrics.counter("cache_evictions"),
-            entries: metrics.gauge("cache_entries"),
+            hits: metrics.counter(names::CACHE_HITS),
+            misses: metrics.counter(names::CACHE_MISSES),
+            evictions: metrics.counter(names::CACHE_EVICTIONS),
+            entries: metrics.gauge(names::CACHE_ENTRIES),
         }
     }
 
@@ -299,6 +381,7 @@ pub struct ServingTier {
     last_hb: Instant,
     hb_acked: Vec<u64>,
     cache: EncodedCache,
+    tracer: Tracer,
     pub metrics: Registry,
 }
 
@@ -317,9 +400,24 @@ impl ServingTier {
         cfg: TierConfig,
         workers: Option<usize>,
     ) -> ServingTier {
+        ServingTier::with_plan_traced(plan, backend, cfg, workers, Tracer::off())
+    }
+
+    /// [`ServingTier::with_plan`] with a trace sink: the tier and every
+    /// worker in its fleet emit leaf-lifecycle events through `tracer`.
+    /// `Tracer::off()` (what `with_plan` passes) makes every emission
+    /// site a single branch.
+    pub fn with_plan_traced(
+        plan: DispatchPlan,
+        backend: Backend,
+        cfg: TierConfig,
+        workers: Option<usize>,
+        tracer: Tracer,
+    ) -> ServingTier {
         let metrics = Registry::new();
         let pool_size = workers.unwrap_or_else(|| plan.default_pool_size());
-        let fleet = WorkerFleet::spawn(pool_size, backend.clone(), metrics.clone());
+        let fleet =
+            WorkerFleet::spawn_traced(pool_size, backend.clone(), metrics.clone(), tracer.clone());
         let mut cfg = cfg;
         if cfg.tenants.is_empty() {
             cfg.tenants.push(TenantSpec::unbounded("default"));
@@ -332,9 +430,10 @@ impl ServingTier {
                 queue: VecDeque::new(),
                 deficit: 0,
                 inflight: 0,
-                jobs: metrics.counter(&format!("tenant_jobs_{}", spec.name)),
-                latency: metrics.histogram(&format!("tenant_latency_{}", spec.name)),
-                queued: metrics.gauge(&format!("tenant_queue_{}", spec.name)),
+                jobs: metrics.counter(&format!("{}{}", names::TENANT_JOBS_PREFIX, spec.name)),
+                latency: metrics
+                    .histogram(&format!("{}{}", names::TENANT_LATENCY_PREFIX, spec.name)),
+                queued: metrics.gauge(&format!("{}{}", names::TENANT_QUEUE_PREFIX, spec.name)),
             })
             .collect();
         let cache = EncodedCache::new(cfg.cache_cap, &metrics);
@@ -356,8 +455,14 @@ impl ServingTier {
             last_hb: Instant::now(),
             hb_acked: vec![0; pool_size],
             cache,
+            tracer,
             metrics,
         }
+    }
+
+    /// The tracer this tier (and its fleet) emits through.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     pub fn scheme_name(&self) -> &str {
@@ -456,6 +561,7 @@ impl ServingTier {
         }
         self.next_job += 1;
         let job_id = self.next_job;
+        self.tracer.emit(EventKind::JobAdmit, job_id, NO_LEAF, ti as u64);
         self.tenants[ti].queue.push_back(PendingJob {
             job_id,
             a,
@@ -479,7 +585,8 @@ impl ServingTier {
             if let Some(pos) = t.queue.iter().position(|p| p.job_id == job_id) {
                 t.queue.remove(pos);
                 self.queued_total -= 1;
-                self.metrics.counter("jobs_cancelled").inc();
+                self.metrics.counter(names::JOBS_CANCELLED).inc();
+                self.tracer.emit(EventKind::JobFail, job_id, NO_LEAF, 1);
                 self.update_gauges();
                 return true;
             }
@@ -488,11 +595,12 @@ impl ServingTier {
             let items = self.plan.num_work_items();
             let (removed, _) = self.purge_dispatch(job_id, &(0..items));
             if removed > 0 {
-                self.metrics.counter("pool_items_revoked").add(removed as u64);
+                self.metrics.counter(names::POOL_ITEMS_REVOKED).add(removed as u64);
             }
             self.broadcast_revoke(job_id, 0..items);
             self.tenants[j.tenant].inflight -= 1;
-            self.metrics.counter("jobs_cancelled").inc();
+            self.metrics.counter(names::JOBS_CANCELLED).inc();
+            self.tracer.emit(EventKind::JobFail, job_id, NO_LEAF, 1);
             self.admit_ready();
             self.update_gauges();
             return true;
@@ -553,7 +661,7 @@ impl ServingTier {
                 let _ = self.fleet.send(w, ToWorker::Heartbeat { seq });
             }
         }
-        self.metrics.counter("heartbeats_sent").inc();
+        self.metrics.counter(names::HEARTBEATS_SENT).inc();
         self.last_hb = Instant::now();
     }
 
@@ -625,8 +733,8 @@ impl ServingTier {
         if round.is_empty() {
             return;
         }
-        self.metrics.counter("batch_rounds").inc();
-        self.metrics.counter("batched_jobs").add(round.len() as u64);
+        self.metrics.counter(names::BATCH_ROUNDS).inc();
+        self.metrics.counter(names::BATCHED_JOBS).add(round.len() as u64);
         for (ti, p) in round {
             self.admit(ti, p);
         }
@@ -662,17 +770,29 @@ impl ServingTier {
                 // Encoded-operand cache: repeated left operands (same
                 // weights, many inputs) reuse their per-task encodes.
                 // Native only — the PJRT task protocol ships blocks.
+                let mut cache_hit = false;
                 let cached: Option<Vec<Arc<Matrix>>> =
                     if self.cache.enabled() && matches!(self.backend, Backend::Native) {
                         let key = operand_key(&a4);
                         match self.cache.get(key) {
-                            Some(v) => Some(v),
+                            Some(v) => {
+                                cache_hit = true;
+                                Some(v)
+                            }
                             None => {
                                 let v: Vec<Arc<Matrix>> = graph
                                     .specs
                                     .iter()
                                     .map(|s| Arc::new(encode_operand(&s.int_ca(), &a4)))
                                     .collect();
+                                // Bulk cache fill at the coordinator:
+                                // detail = number of per-task encodes.
+                                self.tracer.emit(
+                                    EventKind::Encode,
+                                    p.job_id,
+                                    NO_LEAF,
+                                    graph.specs.len() as u64,
+                                );
                                 self.cache.put(key, v.clone());
                                 Some(v)
                             }
@@ -681,6 +801,9 @@ impl ServingTier {
                         None
                     };
                 for (spec, fault) in graph.specs.iter().zip(&faults) {
+                    if cache_hit {
+                        self.tracer.emit(EventKind::CacheHit, p.job_id, spec.id as u32, 0);
+                    }
                     let left = match &cached {
                         Some(v) => OperandPayload::Encoded(v[spec.id].clone()),
                         None => OperandPayload::Blocks(a4.clone()),
@@ -706,6 +829,8 @@ impl ServingTier {
                 for (g, ospec) in graph.outer.specs.iter().enumerate() {
                     encode_operand_into(&mut enc_l, &ospec.int_ca(), &a4);
                     encode_operand_into(&mut enc_r, &ospec.int_cb(), &b4);
+                    // Level-1 group encode (both sides) at the coordinator.
+                    self.tracer.emit(EventKind::Encode, p.job_id, NO_LEAF, 2);
                     let ga4 = Arc::new(split_blocks(&enc_l));
                     let gb4 = Arc::new(split_blocks(&enc_r));
                     for (j, ispec) in graph.inner.specs.iter().enumerate() {
@@ -723,7 +848,7 @@ impl ServingTier {
                 }
             }
         }
-        let state = JobState::new(
+        let mut state = JobState::new(
             &self.plan,
             p.job_id,
             a4,
@@ -735,7 +860,8 @@ impl ServingTier {
             injected_stragglers,
             !self.cfg.master.collect_all,
         );
-        self.metrics.counter("jobs_dispatched").inc();
+        state.set_tracer(self.tracer.clone());
+        self.metrics.counter(names::JOBS_DISPATCHED).inc();
         self.inflight.insert(p.job_id, InflightJob { state, tenant: ti });
     }
 
@@ -747,8 +873,11 @@ impl ServingTier {
         while !self.dispatch.is_empty() && !self.idle.is_empty() {
             let w = self.idle.pop_front().expect("checked non-empty");
             let item = self.dispatch.pop_front().expect("checked non-empty");
+            let (job_id, task_id) = (item.job_id, item.task_id);
             match self.fleet.send(w, ToWorker::AssignLeaf(item)) {
-                Ok(()) => {}
+                Ok(()) => {
+                    self.tracer.emit(EventKind::LeafDispatch, job_id, task_id as u32, w as u64);
+                }
                 Err(msg) => {
                     // Endpoint gone: requeue the item, drop the worker
                     // from the roster.
@@ -760,20 +889,29 @@ impl ServingTier {
                 }
             }
         }
-        self.metrics.gauge("pool_queue_depth").set(self.dispatch.len() as u64);
+        self.metrics.gauge(names::POOL_QUEUE_DEPTH).set(self.dispatch.len() as u64);
     }
 
+    /// Purge a job's still-queued items. Emits exactly one `revoke`
+    /// trace event per removed item — every `pool_items_revoked`
+    /// increment site adds this function's removed count, so the
+    /// counter and the event stream agree by construction (pinned by
+    /// `tests/obs_trace.rs`).
     fn purge_dispatch(&mut self, job_id: u64, tasks: &Range<usize>) -> (usize, usize) {
         let before = self.dispatch.len();
         let mut replying = 0usize;
+        let tracer = self.tracer.clone();
         self.dispatch.retain(|item| {
             let hit = item.job_id == job_id && tasks.contains(&item.task_id);
-            if hit && item.fault != FaultAction::Fail {
-                replying += 1;
+            if hit {
+                tracer.emit(EventKind::Revoke, job_id, item.task_id as u32, 0);
+                if item.fault != FaultAction::Fail {
+                    replying += 1;
+                }
             }
             !hit
         });
-        self.metrics.gauge("pool_queue_depth").set(self.dispatch.len() as u64);
+        self.metrics.gauge(names::POOL_QUEUE_DEPTH).set(self.dispatch.len() as u64);
         (before - self.dispatch.len(), replying)
     }
 
@@ -787,7 +925,7 @@ impl ServingTier {
 
     fn update_worker_gauge(&self) {
         let live = self.registered.iter().filter(|&&r| r).count();
-        self.metrics.gauge("workers_live").set(live as u64);
+        self.metrics.gauge(names::WORKERS_LIVE).set(live as u64);
     }
 
     // --- message handling --------------------------------------------
@@ -822,7 +960,7 @@ impl ServingTier {
                 if worker_id < self.hb_acked.len() {
                     self.hb_acked[worker_id] = seq;
                 }
-                self.metrics.counter("heartbeat_acks").inc();
+                self.metrics.counter(names::HEARTBEAT_ACKS).inc();
             }
         }
     }
@@ -833,17 +971,21 @@ impl ServingTier {
     /// nested group triggers the group's revocation.
     fn on_reply(&mut self, reply: WorkerReply, done: &mut Vec<JobDone>) {
         let job_id = reply.job_id;
+        let task_id = reply.task_id;
         let revoke = {
             let Some(j) = self.inflight.get_mut(&job_id) else {
-                self.metrics.counter("replies_stale_dropped").inc();
+                self.metrics.counter(names::REPLIES_STALE_DROPPED).inc();
+                self.tracer.emit(EventKind::StaleDrop, job_id, task_id as u32, 0);
                 return;
             };
             match &reply.product {
                 Ok(_) => {
-                    self.metrics.histogram("worker_compute").observe(reply.compute_time);
+                    self.metrics.histogram(names::WORKER_COMPUTE).observe(reply.compute_time);
+                    self.tracer.emit(EventKind::Reply, job_id, task_id as u32, 0);
                 }
                 Err(_) => {
-                    self.metrics.counter("worker_errors").inc();
+                    self.metrics.counter(names::WORKER_ERRORS).inc();
+                    self.tracer.emit(EventKind::Reply, job_id, task_id as u32, 1);
                 }
             }
             j.state.on_reply(reply)
@@ -851,14 +993,14 @@ impl ServingTier {
         if let Some(range) = revoke {
             let (removed, replying) = self.purge_dispatch(job_id, &range);
             if removed > 0 {
-                self.metrics.counter("group_items_cancelled").add(removed as u64);
-                self.metrics.counter("pool_items_revoked").add(removed as u64);
+                self.metrics.counter(names::GROUP_ITEMS_CANCELLED).add(removed as u64);
+                self.metrics.counter(names::POOL_ITEMS_REVOKED).add(removed as u64);
             }
             self.broadcast_revoke(job_id, range);
             if let Some(j) = self.inflight.get_mut(&job_id) {
                 j.state.note_revoked(replying);
             }
-            self.metrics.counter("groups_recovered").inc();
+            self.metrics.counter(names::GROUPS_RECOVERED).inc();
         }
         self.check_complete(job_id, done);
     }
@@ -914,32 +1056,40 @@ impl ServingTier {
         let items = self.plan.num_work_items();
         let (removed, _) = self.purge_dispatch(job_id, &(0..items));
         if removed > 0 {
-            self.metrics.counter("pool_items_revoked").add(removed as u64);
+            self.metrics.counter(names::POOL_ITEMS_REVOKED).add(removed as u64);
         }
         self.broadcast_revoke(job_id, 0..items);
         let scheme = self.plan.name().to_string();
         let result = if decodable {
             match state.assemble(&self.backend) {
-                Ok(c) => Ok((c, state.report(&scheme, false))),
-                Err(e) => Err(format!("job {job_id}: {e}")),
+                Ok(c) => {
+                    self.tracer.emit(EventKind::JobDecode, job_id, NO_LEAF, 0);
+                    Ok((c, state.report(&scheme, false)))
+                }
+                Err(e) => {
+                    self.tracer.emit(EventKind::JobFail, job_id, NO_LEAF, 0);
+                    Err(format!("job {job_id}: {e}"))
+                }
             }
         } else if self.cfg.master.fallback_local {
-            self.metrics.counter("jobs_fell_back").inc();
+            self.metrics.counter(names::JOBS_FELL_BACK).inc();
+            self.tracer.emit(EventKind::JobFallback, job_id, NO_LEAF, 0);
             let c = state.fallback_product();
             Ok((c, state.report(&scheme, true)))
         } else {
+            self.tracer.emit(EventKind::JobFail, job_id, NO_LEAF, 0);
             Err(format!(
                 "job {job_id}: not decodable within deadline ({} of {} replies)",
                 state.finished, state.dispatched
             ))
         };
         if let Ok((_, report)) = &result {
-            self.metrics.histogram("job_latency").observe(report.elapsed);
+            self.metrics.histogram(names::JOB_LATENCY).observe(report.elapsed);
         }
         self.metrics
-            .histogram("queue_wait")
+            .histogram(names::QUEUE_WAIT)
             .observe(state.started.duration_since(state.enqueued));
-        self.metrics.counter("jobs_completed").inc();
+        self.metrics.counter(names::JOBS_COMPLETED).inc();
         let total_latency = state.enqueued.elapsed();
         let t = &mut self.tenants[tenant];
         t.inflight -= 1;
@@ -950,8 +1100,8 @@ impl ServingTier {
     }
 
     fn update_gauges(&self) {
-        self.metrics.gauge("inflight_jobs").set(self.inflight.len() as u64);
-        self.metrics.gauge("pending_jobs").set(self.queued_total as u64);
+        self.metrics.gauge(names::INFLIGHT_JOBS).set(self.inflight.len() as u64);
+        self.metrics.gauge(names::PENDING_JOBS).set(self.queued_total as u64);
         for t in &self.tenants {
             t.queued.set(t.queue.len() as u64);
         }
@@ -1199,6 +1349,43 @@ mod tests {
         assert!(done[0].result.is_ok());
         assert!(tier.metrics.counter("heartbeats_sent").get() >= 1);
         assert!(tier.metrics.counter("heartbeat_acks").get() >= 1);
+        tier.shutdown();
+    }
+
+    #[test]
+    fn metric_names_all_in_table() {
+        let mut sorted = names::ALL.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names::ALL.len(), "duplicate entries in names::ALL");
+        // Drive a real run (workers + cache + two tenants) and require
+        // every name the registry saw to come from the table.
+        let mut tier = ServingTier::new(
+            TaskSet::strassen_winograd(0),
+            Backend::Native,
+            TierConfig {
+                tenants: vec![
+                    TenantSpec::new("team-a", 1, usize::MAX),
+                    TenantSpec::unbounded("default"),
+                ],
+                cache_cap: 2,
+                ..cfg(2)
+            },
+        );
+        let (a, b) = rand_pair(8, 1);
+        tier.submit("team-a", a.clone(), b.clone()).unwrap();
+        tier.submit("default", a.clone(), b.clone()).unwrap();
+        tier.submit("team-a", a, b).unwrap();
+        assert_eq!(tier.drive(3).len(), 3);
+        tier.heartbeat();
+        let mut seen: Vec<String> =
+            tier.metrics.counters().into_iter().map(|(n, _)| n).collect();
+        seen.extend(tier.metrics.gauges().into_iter().map(|(n, _)| n));
+        seen.extend(tier.metrics.histograms().into_iter().map(|(n, _)| n));
+        assert!(seen.len() > 10, "expected a populated registry, got {seen:?}");
+        for name in &seen {
+            assert!(names::is_known(name), "metric {name:?} recorded outside names table");
+        }
         tier.shutdown();
     }
 

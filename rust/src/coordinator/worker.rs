@@ -28,10 +28,12 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::proto::{Assignment, OperandPayload, ToCoord, ToWorker};
+use crate::coordinator::tier::names;
 use crate::coordinator::transport::{ChannelTransport, Transport, WorkerEndpoint};
 use crate::linalg::blocked::encode_operand_into;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{Counter, Gauge, Registry};
+use crate::obs::{EventKind, Tracer};
 use crate::runtime::service::PjrtHandle;
 use crate::sim::rng::Rng;
 
@@ -185,10 +187,10 @@ pub struct WorkerCounters {
 impl WorkerCounters {
     pub fn from_registry(metrics: &Registry) -> WorkerCounters {
         WorkerCounters {
-            executed: metrics.counter("pool_items_executed"),
-            faulted: metrics.counter("pool_items_faulted"),
-            revoked: metrics.counter("pool_items_revoked"),
-            busy: metrics.gauge("pool_busy_workers"),
+            executed: metrics.counter(names::POOL_ITEMS_EXECUTED),
+            faulted: metrics.counter(names::POOL_ITEMS_FAULTED),
+            revoked: metrics.counter(names::POOL_ITEMS_REVOKED),
+            busy: metrics.gauge(names::POOL_BUSY_WORKERS),
         }
     }
 }
@@ -205,15 +207,28 @@ impl WorkerFleet {
     /// in-process [`ChannelTransport`], recording fleet metrics
     /// (`pool_*` counters/gauges) into `metrics`.
     pub fn spawn(n: usize, backend: Backend, metrics: Registry) -> WorkerFleet {
+        WorkerFleet::spawn_traced(n, backend, metrics, Tracer::off())
+    }
+
+    /// [`WorkerFleet::spawn`] with a trace sink: every event loop emits
+    /// `encode`/`compute`/`revoke` events through its own clone of
+    /// `tracer` (a disabled tracer costs one branch per site).
+    pub fn spawn_traced(
+        n: usize,
+        backend: Backend,
+        metrics: Registry,
+        tracer: Tracer,
+    ) -> WorkerFleet {
         let (transport, endpoints) = ChannelTransport::new(n);
         let counters = WorkerCounters::from_registry(&metrics);
         let mut handles = Vec::with_capacity(n);
         for ep in endpoints {
             let backend = backend.clone();
             let counters = counters.clone();
+            let tracer = tracer.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{}", ep.worker_id()))
-                .spawn(move || event_loop(ep, backend, counters))
+                .spawn(move || event_loop_traced(ep, backend, counters, tracer))
                 .expect("spawn worker");
             handles.push(handle);
         }
@@ -274,6 +289,16 @@ impl EncodeScratch {
 /// messages, compute assignments one at a time, report `Ready` after
 /// each. Public so alternative transports can host the identical loop.
 pub fn event_loop(ep: WorkerEndpoint, backend: Backend, counters: WorkerCounters) {
+    event_loop_traced(ep, backend, counters, Tracer::off())
+}
+
+/// [`event_loop`] with a trace sink (the traced fleet spawns this).
+pub fn event_loop_traced(
+    ep: WorkerEndpoint,
+    backend: Backend,
+    counters: WorkerCounters,
+    tracer: Tracer,
+) {
     let mut scratch = EncodeScratch::new();
     let mut backlog: VecDeque<Assignment> = VecDeque::new();
     let mut shutting_down = false;
@@ -285,17 +310,17 @@ pub fn event_loop(ep: WorkerEndpoint, backend: Backend, counters: WorkerCounters
         // compute.
         if backlog.is_empty() && !shutting_down {
             match ep.recv() {
-                Ok(msg) => handle(msg, &mut backlog, &ep, &counters, &mut shutting_down),
+                Ok(msg) => handle(msg, &mut backlog, &ep, &counters, &tracer, &mut shutting_down),
                 Err(_) => break, // coordinator gone
             }
         }
         while let Some(msg) = ep.try_recv() {
-            handle(msg, &mut backlog, &ep, &counters, &mut shutting_down);
+            handle(msg, &mut backlog, &ep, &counters, &tracer, &mut shutting_down);
         }
         match backlog.pop_front() {
             Some(item) => {
                 counters.busy.inc();
-                process(item, &backend, &counters, &ep, &mut scratch);
+                process(item, &backend, &counters, &ep, &tracer, &mut scratch);
                 counters.busy.dec();
                 ep.send(ToCoord::Ready { worker_id: ep.worker_id() });
             }
@@ -313,6 +338,7 @@ fn handle(
     backlog: &mut VecDeque<Assignment>,
     ep: &WorkerEndpoint,
     counters: &WorkerCounters,
+    tracer: &Tracer,
     shutting_down: &mut bool,
 ) {
     match msg {
@@ -322,8 +348,16 @@ fn handle(
             let mut replying = 0usize;
             backlog.retain(|item| {
                 let hit = item.job_id == job_id && tasks.contains(&item.task_id);
-                if hit && item.fault != FaultAction::Fail {
-                    replying += 1;
+                if hit {
+                    // Backlog purges count into `pool_items_revoked`
+                    // exactly like the tier's central-queue purges, so
+                    // they emit the same `revoke` event (the
+                    // counter-vs-events equality in tests/obs_trace.rs
+                    // covers both sites).
+                    tracer.emit(EventKind::Revoke, job_id, item.task_id as u32, 0);
+                    if item.fault != FaultAction::Fail {
+                        replying += 1;
+                    }
                 }
                 !hit
             });
@@ -345,6 +379,7 @@ fn process(
     backend: &Backend,
     counters: &WorkerCounters,
     ep: &WorkerEndpoint,
+    tracer: &Tracer,
     scratch: &mut EncodeScratch,
 ) {
     let delay = match item.fault {
@@ -356,8 +391,16 @@ fn process(
         FaultAction::Delay(d) => Some(d),
         FaultAction::None => None,
     };
+    // Worker-side encode span: detail = how many operands this worker
+    // encodes itself (a cache-hit left arrives pre-encoded, so a leaf
+    // whose job hit the cache records detail ≤ 1 — the invariant the
+    // span-tree checker enforces).
+    let encodes =
+        u64::from(!item.left.is_encoded()) + u64::from(!item.right.is_encoded());
+    tracer.emit(EventKind::Encode, item.job_id, item.task_id as u32, encodes);
     let t0 = Instant::now();
     let product = compute(backend, &item, scratch);
+    tracer.emit(EventKind::Compute, item.job_id, item.task_id as u32, ep.worker_id() as u64);
     let reply = WorkerReply {
         job_id: item.job_id,
         task_id: item.task_id,

@@ -80,6 +80,7 @@ pub mod config;
 pub mod coordinator;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod search;
 pub mod sim;
@@ -105,6 +106,10 @@ pub mod prelude {
     pub use crate::linalg::kernel::KernelKind;
     pub use crate::linalg::matrix::{Dense, Matrix};
     pub use crate::linalg::scalar::Scalar;
+    pub use crate::obs::{
+        check_span_tree, chrome_trace_json, logical_digest, prometheus_text, EventKind,
+        RingRecorder, SpanSummary, TraceEvent, TraceSink, Tracer, NO_LEAF,
+    };
     pub use crate::search::searchlp::{search_lp, SearchResult};
     pub use crate::sim::des::{
         policy_by_name, ArrivalProcess, Calendar, Campaign, CampaignResult, CampaignSummary,

@@ -242,13 +242,29 @@ pub fn simd_abs_bound(k: usize, a_max: f32, b_max: f32) -> f32 {
     2.0 * kf * f32::EPSILON * kf * a_max * b_max
 }
 
+/// Profiling tap for a naive-kernel call (one relaxed-load branch when
+/// `obs::prof` is disabled). Packed/SIMD calls record inside
+/// [`packed_into`], where the effective microkernel is known.
+#[inline]
+fn profile_naive(m: usize, k: usize, n: usize) {
+    if crate::obs::prof::profiling_enabled() {
+        crate::obs::prof::record_kernel(0, 2 * (m as u64) * (k as u64) * (n as u64), 0);
+    }
+}
+
 /// Kernel dispatch for [`Matrix::matmul`]: the configured default kind,
 /// with small products routed to the naive kernel by the size heuristic.
 pub(crate) fn dispatch(lhs: &Matrix, rhs: &Matrix) -> Matrix {
     let flops = lhs.rows() * lhs.cols() * rhs.cols();
     match default_kind() {
-        KernelKind::Naive => lhs.matmul_naive(rhs),
-        _ if flops < PACKED_MIN_FLOPS => lhs.matmul_naive(rhs),
+        KernelKind::Naive => {
+            profile_naive(lhs.rows(), lhs.cols(), rhs.cols());
+            lhs.matmul_naive(rhs)
+        }
+        _ if flops < PACKED_MIN_FLOPS => {
+            profile_naive(lhs.rows(), lhs.cols(), rhs.cols());
+            lhs.matmul_naive(rhs)
+        }
         KernelKind::Packed => matmul_packed(lhs, rhs, threads()),
         KernelKind::Simd => matmul_simd(lhs, rhs, threads()),
     }
@@ -266,7 +282,10 @@ pub fn matmul_into(
     threads: usize,
 ) {
     match kind {
-        KernelKind::Naive => lhs.matmul_naive_into(rhs, out),
+        KernelKind::Naive => {
+            profile_naive(lhs.rows(), lhs.cols(), rhs.cols());
+            lhs.matmul_naive_into(rhs, out)
+        }
         KernelKind::Packed => matmul_packed_into(lhs, rhs, out, threads),
         KernelKind::Simd => matmul_simd_into(lhs, rhs, out, threads),
     }
@@ -320,6 +339,20 @@ fn packed_into(lhs: &Matrix, rhs: &Matrix, out: &mut Matrix, threads: usize, mic
     };
     let (m, k) = lhs.shape();
     let n = rhs.cols();
+    if crate::obs::prof::profiling_enabled() {
+        let kind = match micro {
+            Micro::Scalar => 1,
+            Micro::Simd => 2,
+        };
+        // Per-call work and pack traffic: one A panel copy (m·k floats)
+        // plus one B panel copy (k·n floats) per call in the serial
+        // path; threaded calls duplicate B panels, not counted here.
+        crate::obs::prof::record_kernel(
+            kind,
+            2 * (m as u64) * (k as u64) * (n as u64),
+            4 * ((m as u64) * (k as u64) + (k as u64) * (n as u64)),
+        );
+    }
     out.reset(m, n);
     if m == 0 || n == 0 || k == 0 {
         return;

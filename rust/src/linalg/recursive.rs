@@ -146,6 +146,12 @@ pub(crate) fn with_thread_local_arena<R>(
     ARENA.with(|cell| {
         let mut arena = cell.borrow_mut();
         if arena.len() < depth_bound {
+            if crate::obs::prof::profiling_enabled() {
+                crate::obs::prof::ARENA_GROWS.fetch_add(
+                    (depth_bound - arena.len()) as u64,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+            }
             arena.resize_with(depth_bound, RecScratch::empty);
         }
         f(&mut arena[..])
@@ -193,6 +199,9 @@ pub fn scheme_mm_into<S: Scalar>(
         b.shape()
     );
     let bound = arena_depth_bound(a.rows().max(1));
+    if crate::obs::prof::profiling_enabled() {
+        crate::obs::prof::record_arena(bound as u64, 0);
+    }
     S::with_rec_arena(bound, |arena| {
         mm_rec(scheme, a, b, out, cfg, 0, arena);
     });

@@ -13,7 +13,11 @@
 //! * `multiply`  — one fault-tolerant multiply (native or PJRT backend;
 //!   `--nest outer:inner` dispatches the two-level composition)
 //! * `serve`     — batched request loop with straggler injection
-//!   (`--nest` serves the nested fan-out over a fixed-size fleet)
+//!   (`--nest` serves the nested fan-out over a fixed-size fleet;
+//!   `--trace-out` records the run, `--metrics-every` prints
+//!   Prometheus text every N completed jobs)
+//! * `trace`     — replay a seeded serve workload with tracing on and
+//!   dump the Chrome trace + logical digest + span-tree check
 //! * `localmm`   — single-node recursive-vs-flat probe: times one flat
 //!   kernel multiply against recursive Strassen at the configured
 //!   crossover (`--kernel {naive,packed,simd} --cutoff --max-depth`)
@@ -22,6 +26,7 @@
 //!   against `theory::nested_failure_probability` over a p_e sweep
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use ft_strassen::algebra::form::{BilinearForm, Target};
@@ -36,10 +41,13 @@ use ft_strassen::config::{BackendKind, NestSpec, RunConfig, SchemeKind};
 use ft_strassen::coordinator::master::{Master, MasterConfig};
 use ft_strassen::coordinator::server::MmServer;
 use ft_strassen::coordinator::task::DispatchPlan;
-use ft_strassen::coordinator::tier::TenantSpec;
+use ft_strassen::coordinator::tier::{names, TenantSpec};
 use ft_strassen::coordinator::worker::{Backend, FaultPlan};
 use ft_strassen::linalg::kernel::{self, KernelKind};
 use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::obs::{
+    self, check_span_tree, chrome_trace_json, logical_digest, RingRecorder, Tracer,
+};
 use ft_strassen::runtime::service::ComputeService;
 use ft_strassen::search::relations::summarize;
 use ft_strassen::search::searchlp::{search_lp, SearchOptions};
@@ -63,6 +71,10 @@ subcommands:
   serve    [--jobs J] [--n N] [--scheme S] [--backend B] [--p-straggle P]
            [--depth D] [--queue-cap Q] [--nest O:I] [--workers W]
            [--tenants SPECS] [--batch-window W] [--cache-cap C]
+           [--trace-out PATH] [--metrics-every N]
+  trace    [serve options] [--trace-out PATH]
+           replay a seeded serve workload with tracing on; dump the
+           Chrome trace, span-tree check and logical digest
   localmm  [--n N] [--kernel K] [--cutoff C] [--max-depth D]
            single-node probe: flat kernel vs recursive Strassen
   simfleet [--workers W] [--jobs J] [--nest O:I] [--policies P,..]
@@ -102,6 +114,14 @@ serve options:
   --cache-cap C                  encoded-operand LRU cache capacity, in
                                  operands (default 0 = disabled; native
                                  backend, flat schemes)
+  --trace-out PATH               record the run's span events and write
+                                 a chrome://tracing-loadable JSON file;
+                                 also prints the logical-trace digest
+                                 (seeded runs reproduce it bit-for-bit)
+  --metrics-every N              print a Prometheus text exposition of
+                                 the tier registry (plus kernel/arena
+                                 profiling histograms) after every N
+                                 completed jobs (default 0 = off)
   (TOML: [serve] depth/queue_cap/batch_window, [tenants] specs,
    [cache] cap — CLI overrides the file)
 
@@ -127,6 +147,9 @@ simfleet options:
   --link-latency-ms L --link-gbps G  link-cost model (bytes charged
                                  per encoded block, 0 gbps = infinite)
   --max-attempts A               per-leaf attempt cap (default 4)
+  --trace-out PATH               dump the first policy's final-sweep
+                                 campaign through the shared trace
+                                 exporter (Chrome JSON + logical digest)
   (TOML: [fleet] rack_size/p_rack/link_latency_ms/link_gbps/speed)
 ";
 
@@ -148,6 +171,7 @@ fn main() {
         Some("nested") => cmd_nested(&args),
         Some("multiply") => cmd_multiply(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("localmm") => cmd_localmm(&args),
         Some("simfleet") => cmd_simfleet(&args),
         _ => {
@@ -526,11 +550,24 @@ fn cmd_multiply(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<(), String> {
-    let cfg = load_config(args)?;
-    let jobs = args.get_parsed_or("jobs", 32usize).map_err(|e| e.to_string())?;
-    let (backend, _svc) = backend_for(&cfg)?;
-    let tier_cfg = cfg.tier_config(master_config(&cfg));
+/// Ring capacity comfortably above the expected event count of a
+/// `jobs`-job workload (≈ 5 events per leaf + job-level events),
+/// bounded to keep the buffer a few tens of MB at worst.
+fn trace_capacity(jobs: usize, leaves: usize) -> usize {
+    (jobs.saturating_mul(leaves * 5 + 16)).clamp(1 << 12, 1 << 21)
+}
+
+/// Build the serve-shape `MmServer` from the shared config surface
+/// (`serve` and `trace` construct identical servers, so a seeded
+/// replay reproduces the serve run's logical trace). Returns the
+/// server, the scheme display name and the leaf fan-out per job.
+fn build_server(
+    cfg: &RunConfig,
+    args: &Args,
+    backend: Backend,
+    tracer: Tracer,
+) -> Result<(MmServer, String, usize), String> {
+    let tier_cfg = cfg.tier_config(master_config(cfg));
     // Explicit --workers pins the fleet size for either shape; without
     // it, flat schemes keep one node per task (the paper's model) and
     // nested fan-outs use the configured fleet size.
@@ -538,27 +575,90 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Some(s) => Some(s.parse().map_err(|e| format!("--workers {s}: {e}"))?),
         None => None,
     };
-    let (mut server, scheme_name) = match cfg.nest {
+    Ok(match cfg.nest {
         Some(nest) => {
             let name = nest.display_name();
-            let plan = DispatchPlan::nested(nest.task_set());
+            let set = nest.task_set();
+            let leaves = set.num_leaves();
+            let plan = DispatchPlan::nested(set);
             let workers = workers_override.unwrap_or(cfg.workers);
             (
-                MmServer::with_tier_config(plan, backend, tier_cfg, Some(workers)),
+                MmServer::with_tier_config_traced(plan, backend, tier_cfg, Some(workers), tracer),
                 name,
+                leaves,
             )
         }
-        None => (
-            MmServer::with_tier_config(
-                DispatchPlan::flat(cfg.scheme.task_set()),
-                backend,
-                tier_cfg,
-                workers_override,
-            ),
-            cfg.scheme.display_name(),
-        ),
+        None => {
+            let set = cfg.scheme.task_set();
+            let leaves = set.num_tasks();
+            (
+                MmServer::with_tier_config_traced(
+                    DispatchPlan::flat(set),
+                    backend,
+                    tier_cfg,
+                    workers_override,
+                    tracer,
+                ),
+                cfg.scheme.display_name(),
+                leaves,
+            )
+        }
+    })
+}
+
+/// Drain a trace ring, write the Chrome JSON, and report the logical
+/// digest (plus a loss warning if the ring wrapped).
+fn export_trace(ring: &RingRecorder, path: &str, process_name: &str) -> Result<u64, String> {
+    let events = ring.drain();
+    let digest = logical_digest(&events);
+    std::fs::write(path, chrome_trace_json(&events, process_name))
+        .map_err(|e| format!("write {path}: {e}"))?;
+    println!(
+        "trace: wrote {path} ({} events, logical digest 0x{digest:016x})",
+        events.len()
+    );
+    if ring.dropped() > 0 {
+        println!(
+            "trace: WARNING {} events lost to ring wrap-around (capacity {})",
+            ring.dropped(),
+            ring.capacity()
+        );
+    }
+    Ok(digest)
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let jobs = args.get_parsed_or("jobs", 32usize).map_err(|e| e.to_string())?;
+    let metrics_every =
+        args.get_parsed_or("metrics-every", 0usize).map_err(|e| e.to_string())?;
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let (backend, _svc) = backend_for(&cfg)?;
+    // Only pay for profiling when something will surface it.
+    if metrics_every > 0 {
+        obs::prof::set_profiling(true);
+    }
+    // Size the ring after the per-job leaf fan-out so seeded runs
+    // never wrap (a wrapped ring still runs, but loses early spans).
+    let probe_leaves = match &cfg.nest {
+        Some(nest) => nest.task_set().num_leaves(),
+        None => cfg.scheme.task_set().num_tasks(),
     };
-    let report = server.run_workload(jobs, cfg.n, cfg.seed)?;
+    let ring = trace_out
+        .as_ref()
+        .map(|_| Arc::new(RingRecorder::with_capacity(trace_capacity(jobs, probe_leaves))));
+    let tracer = match &ring {
+        Some(r) => Tracer::new(r.clone()),
+        None => Tracer::off(),
+    };
+    let (mut server, scheme_name, _) = build_server(&cfg, args, backend, tracer)?;
+    let mut on_metrics = |done: usize, text: &str| {
+        println!("--- metrics after {done} jobs ---");
+        print!("{text}");
+        print!("{}", obs::prof::prometheus_text());
+    };
+    let report =
+        server.run_workload_observed(jobs, cfg.n, cfg.seed, metrics_every, &mut on_metrics)?;
     println!(
         "scheme={} n={} jobs={} depth={} batch_window={} cache_cap={}: \
          {:.2} jobs/s, mean latency {:?}, p95 {:?}",
@@ -584,14 +684,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             println!(
                 "  {:12} jobs={:4} mean latency {:?}",
                 t,
-                reg.counter(&format!("tenant_jobs_{t}")).get(),
-                reg.histogram(&format!("tenant_latency_{t}")).mean()
+                reg.counter(&format!("{}{t}", names::TENANT_JOBS_PREFIX)).get(),
+                reg.histogram(&format!("{}{t}", names::TENANT_LATENCY_PREFIX)).mean()
             );
         }
     }
     if cfg.cache_cap > 0 {
-        let hits = reg.counter("cache_hits").get();
-        let misses = reg.counter("cache_misses").get();
+        let hits = reg.counter(names::CACHE_HITS).get();
+        let misses = reg.counter(names::CACHE_MISSES).get();
         println!(
             "encoded-operand cache: {hits} hits / {misses} misses ({:.0}% hit rate)",
             100.0 * hits as f64 / (hits + misses).max(1) as f64
@@ -601,6 +701,71 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         println!("\nmetrics:\n{}", server.metrics());
     }
     server.shutdown();
+    if let (Some(ring), Some(path)) = (&ring, &trace_out) {
+        export_trace(ring, path, &format!("serve {scheme_name}"))?;
+    }
+    Ok(())
+}
+
+/// `trace` — replay a seeded serve workload with tracing always on.
+///
+/// Builds the server through the same `build_server` path as `serve`,
+/// so for a given `(--config, --seed, --scheme/--nest, --jobs, ...)`
+/// the logical-trace digest matches the one `serve --trace-out`
+/// printed for the same configuration (in race-free configs: no
+/// injected faults, stragglers, or deadline pressure — worker timing
+/// still races otherwise and can reorder terminal outcomes).
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let jobs = args.get_parsed_or("jobs", 32usize).map_err(|e| e.to_string())?;
+    let path = args.get_or("trace-out", "trace.json");
+    let (backend, _svc) = backend_for(&cfg)?;
+    let probe_leaves = match &cfg.nest {
+        Some(nest) => nest.task_set().num_leaves(),
+        None => cfg.scheme.task_set().num_tasks(),
+    };
+    let ring = Arc::new(RingRecorder::with_capacity(trace_capacity(jobs, probe_leaves)));
+    let tracer = Tracer::new(ring.clone());
+    let (mut server, scheme_name, _) = build_server(&cfg, args, backend, tracer)?;
+    let report = server.run_workload(jobs, cfg.n, cfg.seed)?;
+    server.shutdown();
+
+    let events = ring.drain();
+    println!(
+        "trace: scheme={} n={} jobs={} seed={}: {} events recorded",
+        scheme_name,
+        cfg.n,
+        report.jobs,
+        cfg.seed,
+        events.len()
+    );
+    match check_span_tree(&events, false) {
+        Ok(s) => println!(
+            "span tree OK: {} jobs ({} decoded, {} fell back, {} failed), \
+             {} leaf dispatches, {} replies, {} revokes, {} stale drops, {} cache hits",
+            s.jobs,
+            s.decoded,
+            s.fell_back,
+            s.failed,
+            s.dispatched_leaves,
+            s.replies,
+            s.revokes,
+            s.stale_drops,
+            s.cache_hits
+        ),
+        Err(e) => println!("span tree VIOLATION: {e}"),
+    }
+    let digest = logical_digest(&events);
+    std::fs::write(&path, chrome_trace_json(&events, &format!("trace {scheme_name}")))
+        .map_err(|e| format!("write {path}: {e}"))?;
+    println!("wrote {path}; logical digest 0x{digest:016x}");
+    if ring.dropped() > 0 {
+        println!(
+            "WARNING: {} events lost to ring wrap-around (capacity {})",
+            ring.dropped(),
+            ring.capacity()
+        );
+    }
     Ok(())
 }
 
@@ -714,6 +879,8 @@ fn cmd_simfleet(args: &Args) -> Result<(), String> {
         None => ArrivalProcess::Uniform { count: jobs, interarrival: 0.02 },
     };
     let max_attempts = args.get_parsed_or("max-attempts", 4u16).map_err(|e| e.to_string())?;
+    // `take()`n by the first policy's digest campaign below.
+    let mut trace_out = args.get("trace-out").map(str::to_string);
 
     let fleet = cfg.fleet_spec(workers, leaf_latency);
     let set = nest.task_set();
@@ -796,7 +963,19 @@ fn cmd_simfleet(args: &Args) -> Result<(), String> {
             heap_capacity: 0,
             record_trace: false,
         };
-        let s = campaign.run(&plan, policy.as_mut()).summary;
+        // The first policy's digest campaign doubles as the traced run
+        // when --trace-out is given: the DES calendar streams through
+        // the same exporter and schema as a live `serve --trace-out`.
+        let s = if let Some(path) = trace_out.take() {
+            let ring =
+                Arc::new(RingRecorder::with_capacity(trace_capacity(jobs, leaves)));
+            let tracer = Tracer::new(ring.clone());
+            let s = campaign.run_traced(&plan, policy.as_mut(), &tracer).summary;
+            export_trace(&ring, &path, &format!("simfleet {name}"))?;
+            s
+        } else {
+            campaign.run(&plan, policy.as_mut()).summary
+        };
         println!(
             "  at p_e={last:.4}: events={} dispatches={} requeues={} network_bytes={} \
              trace_digest={:016x} outcome_digest={:016x}",

@@ -110,6 +110,32 @@ impl Histogram {
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
     }
 
+    /// Sum of all observed samples.
+    pub fn sum(&self) -> Duration {
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative (`le`-style) bucket counts: `(upper_us, count ≤ upper)`
+    /// pairs for every bucket up to the last non-empty one. The final
+    /// pair's count equals [`Histogram::count`], so exporters only need
+    /// to append a `+Inf` bucket. Empty histogram → empty vec.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        let mut last_nonzero = 0usize;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                last_nonzero = i + 1;
+            }
+            cum += n;
+            // bucket i covers [2^i, 2^(i+1)) µs -> upper bound 2^(i+1)
+            out.push((1u64.checked_shl(i as u32 + 1).unwrap_or(u64::MAX), cum));
+        }
+        out.truncate(last_nonzero);
+        out
+    }
+
     /// Upper bound of the bucket containing quantile `q` (0..1) — a
     /// conservative estimate good to a factor of 2.
     pub fn quantile(&self, q: f64) -> Duration {
@@ -177,7 +203,27 @@ impl Registry {
             .clone()
     }
 
+    /// Sorted `(name, value)` snapshot of every counter.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner.counters.iter().map(|(n, c)| (n.clone(), c.get())).collect()
+    }
+
+    /// Sorted `(name, value)` snapshot of every gauge.
+    pub fn gauges(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect()
+    }
+
+    /// Sorted `(name, handle)` snapshot of every histogram.
+    pub fn histograms(&self) -> Vec<(String, Arc<Histogram>)> {
+        let inner = self.inner.lock().unwrap();
+        inner.histograms.iter().map(|(n, h)| (n.clone(), h.clone())).collect()
+    }
+
     /// Text snapshot (stable order) for logs / the `serve` endpoint.
+    /// Histogram lines carry cumulative `le`-bucket counts so the
+    /// log-bucket boundaries are interpretable from the export alone.
     pub fn snapshot(&self) -> String {
         let inner = self.inner.lock().unwrap();
         let mut out = String::new();
@@ -189,13 +235,20 @@ impl Registry {
         }
         for (name, h) in &inner.histograms {
             out.push_str(&format!(
-                "histogram {name} count={} mean={:?} p50={:?} p95={:?} p99={:?}\n",
+                "histogram {name} count={} mean={:?} p50={:?} p95={:?} p99={:?} buckets=",
                 h.count(),
                 h.mean(),
                 h.quantile(0.50),
                 h.quantile(0.95),
                 h.quantile(0.99),
             ));
+            for (i, (upper_us, cum)) in h.cumulative_buckets().into_iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("le{upper_us}:{cum}"));
+            }
+            out.push('\n');
         }
         out
     }
@@ -264,6 +317,52 @@ mod tests {
         assert!(s.contains("counter a 1"));
         assert!(s.contains("gauge b 2"));
         assert!(s.contains("histogram c count=1"));
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_complete() {
+        let h = Histogram::new();
+        assert!(h.cumulative_buckets().is_empty());
+        let samples = [1u64, 3, 3, 7, 100, 5000];
+        for us in samples {
+            h.observe(Duration::from_micros(us));
+        }
+        let buckets = h.cumulative_buckets();
+        assert!(!buckets.is_empty());
+        // Monotone uppers and counts; final count == total count.
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(buckets.last().unwrap().1, h.count());
+        // Each cumulative count matches the samples ≤ that bound
+        // (bucket upper bounds are exclusive: [2^i, 2^(i+1))).
+        for &(upper, cum) in &buckets {
+            let expect = samples.iter().filter(|&&s| s < upper).count() as u64;
+            assert_eq!(cum, expect, "le{upper}");
+        }
+    }
+
+    #[test]
+    fn snapshot_buckets_round_trip() {
+        let r = Registry::new();
+        let h = r.histogram("lat");
+        for us in [2u64, 9, 9, 33] {
+            h.observe(Duration::from_micros(us));
+        }
+        let snap = r.snapshot();
+        let line = snap.lines().find(|l| l.starts_with("histogram lat ")).unwrap();
+        let rendered = line.split("buckets=").nth(1).unwrap();
+        // Parse the `leUPPER:CUM` pairs back out of the text export.
+        let parsed: Vec<(u64, u64)> = rendered
+            .split(',')
+            .map(|p| {
+                let (le, cum) = p.split_once(':').unwrap();
+                (le.strip_prefix("le").unwrap().parse().unwrap(), cum.parse().unwrap())
+            })
+            .collect();
+        assert_eq!(parsed, h.cumulative_buckets());
+        assert_eq!(parsed.last().unwrap().1, 4);
     }
 
     #[test]

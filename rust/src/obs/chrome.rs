@@ -1,0 +1,172 @@
+//! Chrome trace-event JSON exporter.
+//!
+//! Renders a drained trace as a `chrome://tracing` / Perfetto-loadable
+//! JSON object (`{"traceEvents": [...]}`). Each job becomes a complete
+//! (`"X"`) span on its own track (`tid` = job id, `pid` = 0) running
+//! from `job-admit` to its terminal event; each dispatched leaf becomes
+//! a complete span on the *same* track from `leaf-dispatch` to its
+//! leaf-terminal, so Chrome's containment rule nests every leaf span
+//! under its job span. All remaining events (encode, cache-hit,
+//! compute, group-recover, …) render as instant (`"i"`) events on the
+//! job's track.
+
+use super::trace::{EventKind, TraceEvent, NO_LEAF};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Per-job span bookkeeping gathered in one pass over the events.
+#[derive(Default)]
+struct JobSpan {
+    admit: Option<u64>,
+    end: Option<u64>,
+    max_wall: u64,
+    // leaf -> (dispatch wall, terminal wall)
+    leaves: BTreeMap<u32, (Option<u64>, Option<u64>)>,
+    instants: Vec<(EventKind, u32, u64, u64)>, // kind, leaf, detail, wall
+}
+
+/// Render events as Chrome trace-event JSON. `process_name` labels the
+/// single process track (e.g. `"serve"` or `"simfleet"`).
+pub fn chrome_trace_json(events: &[TraceEvent], process_name: &str) -> String {
+    let mut jobs: BTreeMap<u64, JobSpan> = BTreeMap::new();
+    for e in events {
+        let j = jobs.entry(e.job).or_default();
+        j.max_wall = j.max_wall.max(e.wall_us);
+        match e.kind {
+            EventKind::JobAdmit => j.admit = Some(e.wall_us),
+            k if k.is_job_terminal() => {
+                j.end = Some(j.end.unwrap_or(0).max(e.wall_us));
+                j.instants.push((k, e.leaf, e.detail, e.wall_us));
+            }
+            EventKind::LeafDispatch => {
+                let slot = j.leaves.entry(e.leaf).or_default();
+                slot.0 = Some(slot.0.unwrap_or(u64::MAX).min(e.wall_us));
+            }
+            k if k.is_leaf_terminal() => {
+                let slot = j.leaves.entry(e.leaf).or_default();
+                slot.1 = Some(slot.1.unwrap_or(0).max(e.wall_us));
+            }
+            k => j.instants.push((k, e.leaf, e.detail, e.wall_us)),
+        }
+    }
+
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |s: &str, out: &mut String| {
+        if !std::mem::take(&mut first) {
+            out.push(',');
+        }
+        out.push_str(s);
+    };
+
+    let meta = format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        escape(process_name)
+    );
+    push(&meta, &mut out);
+
+    let mut buf = String::new();
+    for (&job, span) in &jobs {
+        let start = span.admit.unwrap_or(0);
+        let end = span.end.unwrap_or(span.max_wall).max(start);
+        buf.clear();
+        let _ = write!(
+            buf,
+            "{{\"name\":\"job {job}\",\"cat\":\"job\",\"ph\":\"X\",\
+             \"ts\":{start},\"dur\":{},\"pid\":0,\"tid\":{job}}}",
+            end - start
+        );
+        push(&buf, &mut out);
+        for (&leaf, &(dispatch, terminal)) in &span.leaves {
+            let Some(d) = dispatch else {
+                continue; // revoked-in-queue leaves have no span to draw
+            };
+            let t = terminal.unwrap_or(end).max(d);
+            buf.clear();
+            let _ = write!(
+                buf,
+                "{{\"name\":\"leaf {leaf}\",\"cat\":\"leaf\",\"ph\":\"X\",\
+                 \"ts\":{d},\"dur\":{},\"pid\":0,\"tid\":{job},\
+                 \"args\":{{\"job\":{job},\"leaf\":{leaf}}}}}",
+                t - d
+            );
+            push(&buf, &mut out);
+        }
+        for &(kind, leaf, detail, wall) in &span.instants {
+            buf.clear();
+            let _ = write!(
+                buf,
+                "{{\"name\":\"{}\",\"cat\":\"event\",\"ph\":\"i\",\"s\":\"t\",\
+                 \"ts\":{wall},\"pid\":0,\"tid\":{job},\
+                 \"args\":{{\"leaf\":{},\"detail\":{detail}}}}}",
+                kind.name(),
+                if leaf == NO_LEAF { -1i64 } else { leaf as i64 },
+            );
+            push(&buf, &mut out);
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, job: u64, leaf: u32, detail: u64, wall_us: u64) -> TraceEvent {
+        TraceEvent { kind, job, leaf, detail, wall_us }
+    }
+
+    #[test]
+    fn leaf_spans_sit_inside_their_job_span() {
+        let events = vec![
+            ev(EventKind::JobAdmit, 1, NO_LEAF, 0, 10),
+            ev(EventKind::LeafDispatch, 1, 0, 0, 20),
+            ev(EventKind::Compute, 1, 0, 0, 30),
+            ev(EventKind::Reply, 1, 0, 0, 40),
+            ev(EventKind::JobDecode, 1, NO_LEAF, 0, 50),
+        ];
+        let json = chrome_trace_json(&events, "test");
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"name\":\"job 1\""));
+        assert!(json.contains("\"name\":\"leaf 0\""));
+        assert!(json.contains("\"name\":\"job-decode\""));
+        // Leaf span [20, 40] inside job span [10, 50], same tid.
+        assert!(json.contains("\"ts\":10,\"dur\":40,\"pid\":0,\"tid\":1"));
+        assert!(json.contains("\"ts\":20,\"dur\":20,\"pid\":0,\"tid\":1"));
+    }
+
+    #[test]
+    fn queue_revoked_leaves_draw_no_span() {
+        let events = vec![
+            ev(EventKind::JobAdmit, 3, NO_LEAF, 0, 0),
+            ev(EventKind::Revoke, 3, 7, 0, 5),
+            ev(EventKind::JobFail, 3, NO_LEAF, 1, 9),
+        ];
+        let json = chrome_trace_json(&events, "test");
+        assert!(!json.contains("\"name\":\"leaf 7\""));
+        assert!(json.contains("\"name\":\"job 3\""));
+    }
+
+    #[test]
+    fn escapes_process_name() {
+        let json = chrome_trace_json(&[], "a\"b\\c");
+        assert!(json.contains("a\\\"b\\\\c"));
+    }
+}

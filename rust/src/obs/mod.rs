@@ -1,0 +1,31 @@
+//! Unified observability: tracing, exporters and profiling hooks.
+//!
+//! This layer sits on top of `metrics::Registry` and gives every
+//! execution surface — the live [`crate::coordinator::ServingTier`],
+//! its worker pool, and the `sim::des` fleet simulator — one shared
+//! trace schema:
+//!
+//! - [`trace`] — the [`TraceEvent`] schema, [`TraceSink`] trait, the
+//!   lock-free [`RingRecorder`], the cheap [`Tracer`] handle, the
+//!   order-independent [`logical_digest`], and the span-tree checker
+//!   that turns traces into assertable test artifacts.
+//! - [`chrome`] — `chrome://tracing`-loadable trace-event JSON.
+//! - [`prom`] — Prometheus text exposition of a `Registry`.
+//! - [`prof`] — global kernel/arena profiling hooks for the linalg
+//!   hot paths, off by default.
+//!
+//! Design rule: instrumented code never pays for disabled tracing. A
+//! [`Tracer::off`] handle is one branch per emission site — no clock
+//! read, no allocation, no virtual call.
+
+pub mod chrome;
+pub mod prof;
+pub mod prom;
+pub mod trace;
+
+pub use chrome::chrome_trace_json;
+pub use prom::prometheus_text;
+pub use trace::{
+    check_span_tree, logical_digest, EventKind, NoopSink, RingRecorder, SpanSummary, TraceEvent,
+    TraceSink, Tracer, NO_LEAF,
+};

@@ -1,0 +1,109 @@
+//! Prometheus text-exposition exporter for [`crate::metrics::Registry`].
+//!
+//! Renders the standard format: `# TYPE` headers, plain samples for
+//! counters and gauges, and `_bucket{le="…"}` cumulative counts plus
+//! `_sum`/`_count` for histograms. Histogram bounds and sums are in
+//! **seconds** (the Prometheus convention); metric names get an `ftms_`
+//! namespace prefix and are sanitized to the legal charset (tenant
+//! names may contain `-`).
+
+use crate::metrics::Registry;
+use std::fmt::Write as _;
+
+const NAMESPACE: &str = "ftms_";
+
+/// A metric name is `[a-zA-Z_:][a-zA-Z0-9_:]*`; map anything else to `_`.
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(NAMESPACE.len() + name.len());
+    out.push_str(NAMESPACE);
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic()
+            || c == '_'
+            || c == ':'
+            || (i > 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    out
+}
+
+fn secs(us: u64) -> f64 {
+    us as f64 / 1e6
+}
+
+/// Render the whole registry as Prometheus text exposition.
+pub fn prometheus_text(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in reg.counters() {
+        let n = sanitize(&name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, v) in reg.gauges() {
+        let n = sanitize(&name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, h) in reg.histograms() {
+        let n = sanitize(&name);
+        let _ = writeln!(out, "# TYPE {n} histogram");
+        let mut total = 0;
+        for (upper_us, cum) in h.cumulative_buckets() {
+            let _ = writeln!(out, "{n}_bucket{{le=\"{}\"}} {cum}", secs(upper_us));
+            total = cum;
+        }
+        let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count().max(total));
+        let _ = writeln!(out, "{n}_sum {}", h.sum().as_secs_f64());
+        let _ = writeln!(out, "{n}_count {}", h.count());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn sanitizes_names_into_the_legal_charset() {
+        assert_eq!(sanitize("jobs_completed"), "ftms_jobs_completed");
+        assert_eq!(sanitize("tenant_jobs_team-a"), "ftms_tenant_jobs_team_a");
+        assert_eq!(sanitize("9lives"), "ftms__lives");
+    }
+
+    #[test]
+    fn renders_all_metric_families() {
+        let r = Registry::new();
+        r.counter("jobs_completed").add(3);
+        r.gauge("inflight_jobs").set(2);
+        let h = r.histogram("job_latency");
+        h.observe(Duration::from_micros(3));
+        h.observe(Duration::from_micros(100));
+        let text = prometheus_text(&r);
+        assert!(text.contains("# TYPE ftms_jobs_completed counter\nftms_jobs_completed 3\n"));
+        assert!(text.contains("# TYPE ftms_inflight_jobs gauge\nftms_inflight_jobs 2\n"));
+        assert!(text.contains("# TYPE ftms_job_latency histogram"));
+        // 3 µs falls in [2,4) µs -> le="0.000004" carries 1 sample.
+        assert!(text.contains("ftms_job_latency_bucket{le=\"0.000004\"} 1"), "{text}");
+        assert!(text.contains("ftms_job_latency_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("ftms_job_latency_count 2"));
+        let sum: f64 = text
+            .lines()
+            .find(|l| l.starts_with("ftms_job_latency_sum "))
+            .unwrap()
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!((sum - 103e-6).abs() < 1e-9, "{sum}");
+    }
+
+    #[test]
+    fn empty_histogram_still_exposes_inf_bucket() {
+        let r = Registry::new();
+        r.histogram("empty");
+        let text = prometheus_text(&r);
+        assert!(text.contains("ftms_empty_bucket{le=\"+Inf\"} 0"));
+        assert!(text.contains("ftms_empty_count 0"));
+    }
+}

@@ -1,0 +1,651 @@
+//! The span/event tracer: one flat [`TraceEvent`] schema shared by the
+//! live serving tier and the discrete-event fleet simulator, a
+//! [`TraceSink`] trait with a lock-free [`RingRecorder`], and the
+//! cheap-to-clone [`Tracer`] handle the coordinator threads through the
+//! leaf lifecycle.
+//!
+//! ## Schema
+//!
+//! Every event is four logical fields plus one wall-clock field:
+//!
+//! | field     | meaning                                                  |
+//! |-----------|----------------------------------------------------------|
+//! | `kind`    | lifecycle stage ([`EventKind`])                          |
+//! | `job`     | job id (the span id of the enclosing job span)           |
+//! | `leaf`    | work-item id within the job; [`NO_LEAF`] for job-level   |
+//! | `detail`  | kind-specific payload (worker id, encode count, group id)|
+//! | `wall_us` | µs since the tracer's epoch (sim time for DES traces)    |
+//!
+//! ## Determinism discipline
+//!
+//! `wall_us` and `detail` are **auxiliary**: timing and placement
+//! (which worker computed a leaf) race under the threaded tier, so the
+//! [`logical_digest`] covers only the canonically sorted
+//! `(job, leaf, kind)` tuples. For a seeded run whose event *multiset*
+//! is a pure function of `(seed, config)` — no stragglers, no revokes,
+//! `collect_all` decode — the digest is byte-stable across runs,
+//! thread interleavings, and the `serve`-vs-`trace` replay pair (the
+//! same discipline `sim::des` uses for its trace digests).
+//!
+//! ## Zero cost when disabled
+//!
+//! [`Tracer::off`] holds no sink: `emit` is one branch, takes no
+//! timestamp, and allocates nothing — pinned by the alloc-regression
+//! test in `tests/obs_trace.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Sentinel `leaf` id for job-level events (admit, decode, …).
+pub const NO_LEAF: u32 = u32::MAX;
+
+/// Lifecycle stage of a trace event. The leaf lifecycle is
+/// `LeafDispatch → Compute → {Reply, StaleDrop}` (or `Revoke` /
+/// `LeafDead` for items that never compute or never report); the job
+/// lifecycle is `JobAdmit → … → {JobDecode, JobFallback, JobFail}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A job entered a tenant queue (span open for the job).
+    JobAdmit = 0,
+    /// Operand(s) encoded; `detail` = number of operands encoded
+    /// (coordinator-side bulk encodes use `leaf == NO_LEAF`).
+    Encode = 1,
+    /// The encoded-operand cache served this leaf's left operand.
+    CacheHit = 2,
+    /// A leaf item was handed to a worker; `detail` = worker id.
+    LeafDispatch = 3,
+    /// A worker finished computing a leaf product; `detail` = worker id.
+    Compute = 4,
+    /// The coordinator accepted a leaf reply; `detail` = 1 for an
+    /// error reply, 0 for a product.
+    Reply = 5,
+    /// A reply arrived for a job no longer in flight and was dropped.
+    StaleDrop = 6,
+    /// A still-queued leaf item was purged (job finished/cancelled or
+    /// its nested group recovered before the item ran).
+    Revoke = 7,
+    /// The leaf's node failed / its reply was lost (DES fleet model).
+    LeafDead = 8,
+    /// A nested inner group's product was recovered; `detail` = group.
+    GroupRecover = 9,
+    /// A nested inner group can no longer span (DES); `detail` = group.
+    GroupHopeless = 10,
+    /// The job decoded from its reply span (span close, success).
+    JobDecode = 11,
+    /// The job fell back to the local product (span close).
+    JobFallback = 12,
+    /// The job failed or was cancelled; `detail` = 1 for cancellation.
+    JobFail = 13,
+}
+
+impl EventKind {
+    /// Every kind, in tag order.
+    pub const ALL: [EventKind; 14] = [
+        EventKind::JobAdmit,
+        EventKind::Encode,
+        EventKind::CacheHit,
+        EventKind::LeafDispatch,
+        EventKind::Compute,
+        EventKind::Reply,
+        EventKind::StaleDrop,
+        EventKind::Revoke,
+        EventKind::LeafDead,
+        EventKind::GroupRecover,
+        EventKind::GroupHopeless,
+        EventKind::JobDecode,
+        EventKind::JobFallback,
+        EventKind::JobFail,
+    ];
+
+    /// Stable display name (the span taxonomy in `docs/ARCHITECTURE.md`).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::JobAdmit => "job-admit",
+            EventKind::Encode => "encode",
+            EventKind::CacheHit => "cache-hit",
+            EventKind::LeafDispatch => "leaf-dispatch",
+            EventKind::Compute => "compute",
+            EventKind::Reply => "reply",
+            EventKind::StaleDrop => "stale-drop",
+            EventKind::Revoke => "revoke",
+            EventKind::LeafDead => "leaf-dead",
+            EventKind::GroupRecover => "group-recover",
+            EventKind::GroupHopeless => "group-hopeless",
+            EventKind::JobDecode => "job-decode",
+            EventKind::JobFallback => "job-fallback",
+            EventKind::JobFail => "job-fail",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` tag (recorder slots store the tag).
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        EventKind::ALL.get(v as usize).copied()
+    }
+
+    /// Terminal stages of a leaf span.
+    pub fn is_leaf_terminal(self) -> bool {
+        matches!(
+            self,
+            EventKind::Reply | EventKind::StaleDrop | EventKind::Revoke | EventKind::LeafDead
+        )
+    }
+
+    /// Terminal stages of a job span.
+    pub fn is_job_terminal(self) -> bool {
+        matches!(self, EventKind::JobDecode | EventKind::JobFallback | EventKind::JobFail)
+    }
+}
+
+/// One trace event (see module docs for the field semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub job: u64,
+    pub leaf: u32,
+    pub detail: u64,
+    pub wall_us: u64,
+}
+
+/// Where emitted events go. Implementations must be thread-safe: the
+/// tier, every worker event loop, and the DES engine all share one sink.
+pub trait TraceSink: Send + Sync {
+    fn emit(&self, ev: TraceEvent);
+}
+
+/// A sink that drops everything (useful as an explicit trait object;
+/// [`Tracer::off`] is cheaper — it skips the virtual call entirely).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn emit(&self, _ev: TraceEvent) {}
+}
+
+/// One recorder slot: a per-slot seqlock. `stamp == seq + 1` publishes
+/// the fields written for sequence `seq`; `stamp == 0` marks a write in
+/// progress. `meta` packs `kind << 32 | leaf`.
+struct Slot {
+    stamp: AtomicU64,
+    job: AtomicU64,
+    meta: AtomicU64,
+    detail: AtomicU64,
+    wall: AtomicU64,
+}
+
+/// Lock-free ring-buffer recorder: emitters claim a sequence number
+/// with one `fetch_add` and publish their slot with a release store —
+/// no locks, no allocation per event. When the ring wraps, the oldest
+/// events are overwritten (and counted in [`RingRecorder::dropped`]).
+///
+/// [`RingRecorder::drain`] is designed to run after the traced
+/// workload quiesces; a drain concurrent with emitters simply skips
+/// slots whose seqlock check fails rather than returning torn events.
+pub struct RingRecorder {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    mask: u64,
+}
+
+impl RingRecorder {
+    /// Default capacity: 2^16 events (≈ 2.6 MB).
+    pub fn new() -> RingRecorder {
+        RingRecorder::with_capacity(1 << 16)
+    }
+
+    /// Capacity is rounded up to a power of two (min 8).
+    pub fn with_capacity(cap: usize) -> RingRecorder {
+        let cap = cap.next_power_of_two().max(8);
+        let slots = (0..cap)
+            .map(|_| Slot {
+                stamp: AtomicU64::new(0),
+                job: AtomicU64::new(0),
+                meta: AtomicU64::new(0),
+                detail: AtomicU64::new(0),
+                wall: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        RingRecorder { slots, head: AtomicU64::new(0), mask: (cap - 1) as u64 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events emitted since construction (including overwritten).
+    pub fn emitted(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Events lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.emitted().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Snapshot the retained events in emission order. Slots that fail
+    /// their seqlock check (mid-write or overwritten during the drain)
+    /// are skipped.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let start = head.saturating_sub(self.slots.len() as u64);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for seq in start..head {
+            let slot = &self.slots[(seq & self.mask) as usize];
+            let s1 = slot.stamp.load(Ordering::Acquire);
+            if s1 != seq + 1 {
+                continue;
+            }
+            let job = slot.job.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let detail = slot.detail.load(Ordering::Relaxed);
+            let wall_us = slot.wall.load(Ordering::Relaxed);
+            if slot.stamp.load(Ordering::Acquire) != s1 {
+                continue; // overwritten mid-read
+            }
+            let Some(kind) = EventKind::from_u8((meta >> 32) as u8) else { continue };
+            out.push(TraceEvent { kind, job, leaf: meta as u32, detail, wall_us });
+        }
+        out
+    }
+}
+
+impl Default for RingRecorder {
+    fn default() -> Self {
+        RingRecorder::new()
+    }
+}
+
+impl TraceSink for RingRecorder {
+    fn emit(&self, ev: TraceEvent) {
+        let seq = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(seq & self.mask) as usize];
+        slot.stamp.store(0, Ordering::Release);
+        slot.job.store(ev.job, Ordering::Relaxed);
+        slot.meta.store(((ev.kind as u64) << 32) | ev.leaf as u64, Ordering::Relaxed);
+        slot.detail.store(ev.detail, Ordering::Relaxed);
+        slot.wall.store(ev.wall_us, Ordering::Relaxed);
+        slot.stamp.store(seq + 1, Ordering::Release);
+    }
+}
+
+/// The handle instrumented code holds: an optional shared sink plus the
+/// wall-clock epoch. Cloning is two pointer copies; a disabled tracer
+/// ([`Tracer::off`]) makes `emit` a single branch with no timestamp
+/// read and no allocation.
+#[derive(Clone)]
+pub struct Tracer {
+    sink: Option<Arc<dyn TraceSink>>,
+    t0: Instant,
+}
+
+impl Tracer {
+    /// A tracer writing into `sink`; `wall_us` counts from now.
+    pub fn new(sink: Arc<dyn TraceSink>) -> Tracer {
+        Tracer { sink: Some(sink), t0: Instant::now() }
+    }
+
+    /// The disabled tracer — the zero-cost default everywhere.
+    pub fn off() -> Tracer {
+        Tracer { sink: None, t0: Instant::now() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit one event stamped with the elapsed wall clock.
+    #[inline]
+    pub fn emit(&self, kind: EventKind, job: u64, leaf: u32, detail: u64) {
+        if let Some(sink) = &self.sink {
+            let wall_us = self.t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+            sink.emit(TraceEvent { kind, job, leaf, detail, wall_us });
+        }
+    }
+
+    /// Emit with an explicit clock — the DES engine passes simulated
+    /// time here so live and simulated traces share one schema.
+    #[inline]
+    pub fn emit_at(&self, kind: EventKind, job: u64, leaf: u32, detail: u64, wall_us: u64) {
+        if let Some(sink) = &self.sink {
+            sink.emit(TraceEvent { kind, job, leaf, detail, wall_us });
+        }
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::off()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tracer({})", if self.enabled() { "on" } else { "off" })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Logical digest
+// ---------------------------------------------------------------------
+
+const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a digest over the **logical** trace content: the canonically
+/// sorted `(job, leaf, kind)` tuples. Wall clock and `detail` (worker
+/// placement, counts) are excluded, so the digest is invariant to
+/// thread interleaving and byte-stable for seeded runs whose event
+/// multiset is a pure function of `(seed, config)`.
+pub fn logical_digest(events: &[TraceEvent]) -> u64 {
+    let mut keys: Vec<(u64, u32, u8)> =
+        events.iter().map(|e| (e.job, e.leaf, e.kind as u8)).collect();
+    keys.sort_unstable();
+    let mut h = FNV_BASIS;
+    for (job, leaf, kind) in keys {
+        h = fnv_bytes(h, &job.to_le_bytes());
+        h = fnv_bytes(h, &leaf.to_le_bytes());
+        h = fnv_bytes(h, &[kind]);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Span-tree checker
+// ---------------------------------------------------------------------
+
+/// Aggregate counts returned by a successful [`check_span_tree`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanSummary {
+    pub jobs: usize,
+    pub decoded: usize,
+    pub fell_back: usize,
+    pub failed: usize,
+    pub dispatched_leaves: usize,
+    pub replies: usize,
+    pub revokes: usize,
+    pub stale_drops: usize,
+    pub cache_hits: usize,
+}
+
+/// Verify the span-tree invariants of a trace and summarize it.
+///
+/// Always enforced:
+/// 1. every job that has any event has exactly one `JobAdmit`;
+/// 2. every admitted job reaches exactly one job-terminal state;
+/// 3. no leaf has both `Reply` and `Revoke` (a revoked leaf never
+///    contributes to decode);
+/// 4. a leaf with `Reply` was dispatched;
+/// 5. a leaf with `CacheHit` never carries a full 2-operand worker
+///    encode (`Encode.detail < 2` — the cache hit skipped the left).
+///
+/// With `strict` (seeded runs with no faults, no cancellation, no
+/// speculative re-dispatch): every dispatched leaf is dispatched
+/// exactly once and reaches exactly one leaf-terminal state.
+pub fn check_span_tree(events: &[TraceEvent], strict: bool) -> Result<SpanSummary, String> {
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut admits: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut terminals: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut jobs_seen: BTreeSet<u64> = BTreeSet::new();
+    let mut dispatches: BTreeMap<(u64, u32), usize> = BTreeMap::new();
+    let mut leaf_terminals: BTreeMap<(u64, u32), Vec<EventKind>> = BTreeMap::new();
+    let mut cache_hit_leaves: BTreeSet<(u64, u32)> = BTreeSet::new();
+    let mut sum = SpanSummary::default();
+
+    for e in events {
+        jobs_seen.insert(e.job);
+        match e.kind {
+            EventKind::JobAdmit => *admits.entry(e.job).or_default() += 1,
+            EventKind::JobDecode => {
+                sum.decoded += 1;
+                *terminals.entry(e.job).or_default() += 1;
+            }
+            EventKind::JobFallback => {
+                sum.fell_back += 1;
+                *terminals.entry(e.job).or_default() += 1;
+            }
+            EventKind::JobFail => {
+                sum.failed += 1;
+                *terminals.entry(e.job).or_default() += 1;
+            }
+            EventKind::LeafDispatch => {
+                *dispatches.entry((e.job, e.leaf)).or_default() += 1;
+            }
+            EventKind::CacheHit => {
+                if e.leaf != NO_LEAF {
+                    cache_hit_leaves.insert((e.job, e.leaf));
+                }
+                sum.cache_hits += 1;
+            }
+            k if k.is_leaf_terminal() => {
+                leaf_terminals.entry((e.job, e.leaf)).or_default().push(k);
+                match k {
+                    EventKind::Reply => sum.replies += 1,
+                    EventKind::Revoke => sum.revokes += 1,
+                    EventKind::StaleDrop => sum.stale_drops += 1,
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+    sum.jobs = admits.len();
+    sum.dispatched_leaves = dispatches.len();
+
+    for &job in &jobs_seen {
+        match admits.get(&job).copied().unwrap_or(0) {
+            1 => {}
+            n => return Err(format!("job {job}: {n} admit events (want exactly 1)")),
+        }
+        match terminals.get(&job).copied().unwrap_or(0) {
+            1 => {}
+            n => return Err(format!("job {job}: {n} terminal events (want exactly 1)")),
+        }
+    }
+    for (&(job, leaf), kinds) in &leaf_terminals {
+        let replied = kinds.contains(&EventKind::Reply);
+        if replied && kinds.contains(&EventKind::Revoke) {
+            return Err(format!("job {job} leaf {leaf}: both reply and revoke"));
+        }
+        if replied && !dispatches.contains_key(&(job, leaf)) {
+            return Err(format!("job {job} leaf {leaf}: reply without dispatch"));
+        }
+        if strict && kinds.len() != 1 {
+            return Err(format!(
+                "job {job} leaf {leaf}: {} terminal events under strict mode",
+                kinds.len()
+            ));
+        }
+    }
+    for e in events {
+        if e.kind == EventKind::Encode
+            && e.leaf != NO_LEAF
+            && e.detail >= 2
+            && cache_hit_leaves.contains(&(e.job, e.leaf))
+        {
+            return Err(format!(
+                "job {} leaf {}: cache hit but a full 2-operand encode ran",
+                e.job, e.leaf
+            ));
+        }
+    }
+    if strict {
+        for (&(job, leaf), &n) in &dispatches {
+            if n != 1 {
+                return Err(format!("job {job} leaf {leaf}: dispatched {n} times"));
+            }
+            match leaf_terminals.get(&(job, leaf)).map(Vec::len).unwrap_or(0) {
+                1 => {}
+                n => {
+                    return Err(format!(
+                        "job {job} leaf {leaf}: {n} terminal events (want exactly 1)"
+                    ))
+                }
+            }
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, job: u64, leaf: u32, detail: u64, wall_us: u64) -> TraceEvent {
+        TraceEvent { kind, job, leaf, detail, wall_us }
+    }
+
+    #[test]
+    fn kinds_round_trip_their_tags() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_u8(k as u8), Some(k), "{k:?}");
+        }
+        assert_eq!(EventKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn ring_records_in_emission_order() {
+        let r = RingRecorder::with_capacity(64);
+        let t = Tracer::new(Arc::new(RingRecorder::with_capacity(8)));
+        assert!(t.enabled());
+        for i in 0..10u64 {
+            r.emit(ev(EventKind::Reply, i, i as u32, 7, 100 + i));
+        }
+        let got = r.drain();
+        assert_eq!(got.len(), 10);
+        assert_eq!(r.emitted(), 10);
+        assert_eq!(r.dropped(), 0);
+        for (i, e) in got.iter().enumerate() {
+            assert_eq!(e.job, i as u64);
+            assert_eq!(e.leaf, i as u32);
+            assert_eq!(e.detail, 7);
+            assert_eq!(e.wall_us, 100 + i as u64);
+        }
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_events() {
+        let r = RingRecorder::with_capacity(8);
+        for i in 0..20u64 {
+            r.emit(ev(EventKind::Compute, i, 0, 0, i));
+        }
+        let got = r.drain();
+        assert_eq!(got.len(), 8);
+        assert_eq!(r.dropped(), 12);
+        let jobs: Vec<u64> = got.iter().map(|e| e.job).collect();
+        assert_eq!(jobs, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up() {
+        assert_eq!(RingRecorder::with_capacity(100).capacity(), 128);
+        assert_eq!(RingRecorder::with_capacity(0).capacity(), 8);
+    }
+
+    #[test]
+    fn concurrent_emitters_lose_nothing_when_capacity_suffices() {
+        let r = Arc::new(RingRecorder::with_capacity(8192));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let r = Arc::clone(&r);
+                s.spawn(move || {
+                    let tracer = Tracer::new(r);
+                    for i in 0..500u64 {
+                        tracer.emit(EventKind::Compute, t, i as u32, t, 0);
+                    }
+                });
+            }
+        });
+        let got = r.drain();
+        assert_eq!(got.len(), 4000);
+        for t in 0..8u64 {
+            assert_eq!(got.iter().filter(|e| e.job == t).count(), 500);
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_emits_nothing() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        t.emit(EventKind::Reply, 1, 2, 3);
+        t.emit_at(EventKind::Reply, 1, 2, 3, 4);
+        // Nothing to observe — the point is that the calls are inert
+        // (the alloc-regression test in tests/obs_trace.rs pins cost).
+        assert_eq!(format!("{t:?}"), "Tracer(off)");
+    }
+
+    #[test]
+    fn logical_digest_ignores_wall_detail_and_order() {
+        let a = vec![
+            ev(EventKind::JobAdmit, 1, NO_LEAF, 0, 5),
+            ev(EventKind::Reply, 1, 3, 7, 50),
+            ev(EventKind::Reply, 1, 2, 1, 60),
+        ];
+        let mut b = vec![
+            ev(EventKind::Reply, 1, 2, 9, 999),
+            ev(EventKind::JobAdmit, 1, NO_LEAF, 4, 0),
+            ev(EventKind::Reply, 1, 3, 0, 1),
+        ];
+        assert_eq!(logical_digest(&a), logical_digest(&b));
+        // ... but not the logical content itself.
+        b.push(ev(EventKind::Reply, 1, 4, 0, 1));
+        assert_ne!(logical_digest(&a), logical_digest(&b));
+        assert_ne!(logical_digest(&a), logical_digest(&a[..2]));
+    }
+
+    #[test]
+    fn span_tree_checker_accepts_a_clean_run_and_rejects_violations() {
+        let clean = vec![
+            ev(EventKind::JobAdmit, 1, NO_LEAF, 0, 0),
+            ev(EventKind::LeafDispatch, 1, 0, 2, 1),
+            ev(EventKind::Encode, 1, 0, 2, 2),
+            ev(EventKind::Compute, 1, 0, 2, 3),
+            ev(EventKind::Reply, 1, 0, 0, 4),
+            ev(EventKind::JobDecode, 1, NO_LEAF, 0, 5),
+        ];
+        let sum = check_span_tree(&clean, true).unwrap();
+        assert_eq!(sum.jobs, 1);
+        assert_eq!(sum.decoded, 1);
+        assert_eq!(sum.replies, 1);
+
+        // No terminal.
+        let e = check_span_tree(&clean[..5], false).unwrap_err();
+        assert!(e.contains("terminal"), "{e}");
+        // Reply + revoke on the same leaf.
+        let mut bad = clean.clone();
+        bad.insert(5, ev(EventKind::Revoke, 1, 0, 0, 4));
+        let e = check_span_tree(&bad, false).unwrap_err();
+        assert!(e.contains("reply and revoke"), "{e}");
+        // Reply without dispatch.
+        let mut bad = clean.clone();
+        bad.remove(1);
+        let e = check_span_tree(&bad, false).unwrap_err();
+        assert!(e.contains("without dispatch"), "{e}");
+        // Cache hit followed by a full 2-operand encode.
+        let mut bad = clean.clone();
+        bad.insert(2, ev(EventKind::CacheHit, 1, 0, 0, 1));
+        let e = check_span_tree(&bad, false).unwrap_err();
+        assert!(e.contains("cache hit"), "{e}");
+        // A revoked leaf with no reply is fine in non-strict mode.
+        let ok = vec![
+            ev(EventKind::JobAdmit, 2, NO_LEAF, 0, 0),
+            ev(EventKind::Revoke, 2, 5, 0, 1),
+            ev(EventKind::JobFail, 2, NO_LEAF, 1, 2),
+        ];
+        let sum = check_span_tree(&ok, false).unwrap();
+        assert_eq!(sum.revokes, 1);
+        // ... but strict mode requires dispatch-terminal pairing.
+        let mut dup = clean;
+        dup.insert(1, ev(EventKind::LeafDispatch, 1, 0, 3, 1));
+        assert!(check_span_tree(&dup, true).is_err());
+        assert!(check_span_tree(&dup, false).is_ok());
+    }
+}

@@ -41,6 +41,7 @@ use crate::coding::fc::DecodeOracle;
 use crate::coding::nested::{NestedOracle, NestedTaskSet};
 use crate::coding::scheme::TaskSet;
 use crate::coordinator::worker::{FaultAction, FaultPlan, FaultSampler};
+use crate::obs::{EventKind, Tracer, NO_LEAF};
 use crate::sim::des::arrival::ArrivalProcess;
 use crate::sim::des::calendar::Calendar;
 use crate::sim::des::fleet::{Fleet, FleetSpec};
@@ -251,16 +252,19 @@ impl Fnv {
     }
 }
 
-/// Event-trace sink: FNV digest always, full lines on request.
+/// Event-trace sink: FNV digest always, full lines on request, plus
+/// an optional [`Tracer`] mirroring every line as a [`crate::obs`]
+/// event so simulated and live runs share one trace schema.
 struct Trace {
     digest: Fnv,
     record: bool,
     lines: Vec<String>,
+    tracer: Tracer,
 }
 
 impl Trace {
-    fn new(record: bool) -> Trace {
-        Trace { digest: Fnv::new(), record, lines: Vec::new() }
+    fn new(record: bool, tracer: Tracer) -> Trace {
+        Trace { digest: Fnv::new(), record, lines: Vec::new(), tracer }
     }
 
     fn note(&mut self, line: String) {
@@ -269,6 +273,12 @@ impl Trace {
         if self.record {
             self.lines.push(line);
         }
+    }
+
+    /// Mirror one calendar event into the shared trace schema, with
+    /// simulated seconds carried as the µs wall-clock field.
+    fn event(&self, t: f64, kind: EventKind, job: u64, leaf: u32, detail: u64) {
+        self.tracer.emit_at(kind, job, leaf, detail, (t * 1e6).round() as u64);
     }
 }
 
@@ -300,6 +310,19 @@ impl Campaign {
         self.run_with_sampler(plan, policy, &self.fault)
     }
 
+    /// [`Self::run`] plus a trace sink: every calendar event is
+    /// mirrored as a [`crate::obs::TraceEvent`] (`emit_at` with
+    /// simulated time), so a 10k-node campaign exports through the
+    /// same Chrome/digest pipeline as a live `serve` run.
+    pub fn run_traced(
+        &self,
+        plan: &SimPlan,
+        policy: &mut dyn SchedPolicy,
+        tracer: &Tracer,
+    ) -> CampaignResult {
+        self.run_with_sampler_traced(plan, policy, &self.fault, tracer)
+    }
+
     /// Run with an explicit fault source — anything implementing the
     /// coordinator's policy-facing [`FaultSampler`] trait.
     pub fn run_with_sampler(
@@ -307,6 +330,17 @@ impl Campaign {
         plan: &SimPlan,
         policy: &mut dyn SchedPolicy,
         sampler: &dyn FaultSampler,
+    ) -> CampaignResult {
+        self.run_with_sampler_traced(plan, policy, sampler, &Tracer::off())
+    }
+
+    /// The full engine: explicit fault source and trace sink.
+    pub fn run_with_sampler_traced(
+        &self,
+        plan: &SimPlan,
+        policy: &mut dyn SchedPolicy,
+        sampler: &dyn FaultSampler,
+        tracer: &Tracer,
     ) -> CampaignResult {
         assert!(self.max_attempts >= 1, "max_attempts must be >= 1");
         let oracle = plan.oracle();
@@ -346,7 +380,7 @@ impl Campaign {
 
         let mut queue: VecDeque<Item> = VecDeque::new();
         let mut rng = Rng::seeded(self.seed ^ 0x9049_5cde_71cf);
-        let mut trace = Trace::new(self.record_trace);
+        let mut trace = Trace::new(self.record_trace, tracer.clone());
         let mut counters = Counters {
             events: 0,
             dispatches: 0,
@@ -364,6 +398,7 @@ impl Campaign {
             match ev {
                 Event::Arrival { job } => {
                     trace.note(format!("{t:.9} arrive job={job}"));
+                    trace.event(t, EventKind::JobAdmit, job as u64, NO_LEAF, 0);
                     for leaf in 0..leaves as u32 {
                         queue.push_back(Item { job, leaf });
                     }
@@ -379,6 +414,7 @@ impl Campaign {
                         trace.note(format!(
                             "{t:.9} stale job={job} leaf={g}/{j} worker={worker}"
                         ));
+                        trace.event(t, EventKind::StaleDrop, job as u64, leaf, worker as u64);
                     } else {
                         let tag = match status {
                             Status::Result => "result",
@@ -388,6 +424,21 @@ impl Campaign {
                         trace.note(format!(
                             "{t:.9} {tag} job={job} leaf={g}/{j} worker={worker}"
                         ));
+                        // Shared-schema mirror: a result is a Reply;
+                        // both fail-stop deaths and exhausted losses
+                        // surface as LeafDead (detail 1 marks a lost
+                        // attempt that may still retry).
+                        match status {
+                            Status::Result => {
+                                trace.event(t, EventKind::Reply, job as u64, leaf, 0)
+                            }
+                            Status::LeafDead => {
+                                trace.event(t, EventKind::LeafDead, job as u64, leaf, 0)
+                            }
+                            Status::AttemptLost => {
+                                trace.event(t, EventKind::LeafDead, job as u64, leaf, 1)
+                            }
+                        }
                         let bit = 1u64 << j;
                         match status {
                             Status::Result => {
@@ -504,10 +555,12 @@ impl Campaign {
             grp.recovered = true;
             js.recovered_mask |= 1 << g;
             trace.note(format!("{t:.9} group-recovered job={job} group={g}"));
+            trace.event(t, EventKind::GroupRecover, job as u64, NO_LEAF, g as u64);
         } else if !oracle.group_decodable(grp.dead) {
             grp.hopeless = true;
             js.hopeless_mask |= 1 << g;
             trace.note(format!("{t:.9} group-hopeless job={job} group={g}"));
+            trace.event(t, EventKind::GroupHopeless, job as u64, NO_LEAF, g as u64);
         } else {
             return; // group still in flight
         }
@@ -516,11 +569,13 @@ impl Campaign {
             js.finish = t;
             counters.decoded += 1;
             trace.note(format!("{t:.9} decoded job={job}"));
+            trace.event(t, EventKind::JobDecode, job as u64, NO_LEAF, 0);
         } else if !oracle.outer_decodable(js.hopeless_mask) {
             js.outcome = Some(false);
             js.finish = t;
             counters.failed += 1;
             trace.note(format!("{t:.9} failed job={job}"));
+            trace.event(t, EventKind::JobFail, job as u64, NO_LEAF, 0);
         }
     }
 
@@ -629,6 +684,7 @@ impl Campaign {
                 (item.leaf as usize) / m2,
                 (item.leaf as usize) % m2,
             ));
+            trace.event(t, EventKind::LeafDispatch, item.job as u64, item.leaf, worker as u64);
             cal.schedule(
                 t + service,
                 Event::Complete { job: item.job, leaf: item.leaf, worker, status },
@@ -796,6 +852,38 @@ mod tests {
         );
         assert_eq!(spec.failed, 0);
         assert_eq!(spec.outcome_digest, slow.outcome_digest);
+    }
+
+    #[test]
+    fn traced_run_mirrors_the_calendar_into_the_shared_schema() {
+        use crate::obs::{logical_digest, RingRecorder, Tracer};
+        use std::sync::Arc;
+        let mut c = small_campaign(4);
+        c.fault = FaultPlan { p_fail: 0.2, p_straggle: 0.0, delay: Duration::ZERO };
+        let run = |c: &Campaign| {
+            let ring = Arc::new(RingRecorder::with_capacity(1 << 14));
+            let tracer = Tracer::new(ring.clone());
+            let r = c.run_traced(&flat_plan(), &mut RandomPolicy::default(), &tracer);
+            (r.summary, ring.drain())
+        };
+        let (s1, ev1) = run(&c);
+        let (s2, ev2) = run(&c);
+        assert_eq!(s1, s2);
+        assert!(!ev1.is_empty());
+        // Every job arrives and terminates in the shared schema too.
+        let admits = ev1.iter().filter(|e| e.kind == EventKind::JobAdmit).count();
+        assert_eq!(admits, 4);
+        let terminal = ev1.iter().filter(|e| e.kind.is_job_terminal()).count();
+        assert_eq!(terminal, 4);
+        assert_eq!(
+            ev1.iter().filter(|e| e.kind == EventKind::LeafDispatch).count() as u64,
+            s1.dispatches
+        );
+        // The logical digest is reproducible run-to-run.
+        assert_eq!(logical_digest(&ev1), logical_digest(&ev2));
+        // An untraced run is unchanged by the mirroring.
+        let plain = c.run(&flat_plan(), &mut RandomPolicy::default()).summary;
+        assert_eq!(plain, s1);
     }
 
     #[test]

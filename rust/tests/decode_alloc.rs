@@ -13,6 +13,7 @@ use ft_strassen::coordinator::task::{DispatchPlan, NestedGraph, TaskGraph};
 use ft_strassen::coordinator::worker::{Backend, WorkerReply};
 use ft_strassen::linalg::blocked::{encode_operand, split_blocks};
 use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::obs::{RingRecorder, Tracer};
 use ft_strassen::sim::rng::Rng;
 
 fn reply(task_id: usize, m: Matrix) -> WorkerReply {
@@ -83,20 +84,23 @@ fn decode_path_performs_zero_matrix_clones_per_solve() {
     let mut nested = job(&nplan, a4.clone(), b4.clone(), true);
     let m2 = ngraph.group_size();
     // Precompute every leaf product exactly as a worker would.
-    let mut leaf_replies = Vec::new();
-    for (g, ospec) in ngraph.outer.specs.iter().enumerate() {
-        let lo = encode_operand(&ospec.int_ca(), &a4);
-        let ro = encode_operand(&ospec.int_cb(), &b4);
-        let lo4 = split_blocks(&lo);
-        let ro4 = split_blocks(&ro);
-        for (j, ispec) in ngraph.inner.specs.iter().enumerate() {
-            let li = encode_operand(&ispec.int_ca(), &lo4);
-            let ri = encode_operand(&ispec.int_cb(), &ro4);
-            leaf_replies.push(reply(g * m2 + j, li.matmul(&ri)));
+    let make_replies = || {
+        let mut v = Vec::new();
+        for (g, ospec) in ngraph.outer.specs.iter().enumerate() {
+            let lo = encode_operand(&ospec.int_ca(), &a4);
+            let ro = encode_operand(&ospec.int_cb(), &b4);
+            let lo4 = split_blocks(&lo);
+            let ro4 = split_blocks(&ro);
+            for (j, ispec) in ngraph.inner.specs.iter().enumerate() {
+                let li = encode_operand(&ispec.int_ca(), &lo4);
+                let ri = encode_operand(&ispec.int_cb(), &ro4);
+                v.push(reply(g * m2 + j, li.matmul(&ri)));
+            }
         }
-    }
+        v
+    };
     let before = Matrix::clone_count();
-    for r in leaf_replies {
+    for r in make_replies() {
         // Late replies for already-recovered groups still fold into the
         // accounting; the returned revocation ranges are queue-side
         // concerns with no queue here.
@@ -110,4 +114,33 @@ fn decode_path_performs_zero_matrix_clones_per_solve() {
         "nested group recovery + outer solve must clone no matrices"
     );
     assert_eq!(c.as_slice(), a.matmul(&b).as_slice(), "integer decode stays exact");
+
+    // --- tracing regression: on or off, spans cost no matrix traffic --
+    // Rerun the nested fold with the default off tracer and again with
+    // a live ring-buffer tracer installed; both runs must show the
+    // exact same clone/alloc deltas over identical work — the "tracing
+    // is zero-cost when disabled, and never costs matrix traffic when
+    // enabled" contract, pinned at its most alloc-sensitive call site
+    // (group recovery inside `on_reply`).
+    let want = a.matmul(&b);
+    let rerun = |tracer: Tracer| -> (u64, u64) {
+        let replies = make_replies();
+        let mut j = job(&nplan, a4.clone(), b4.clone(), true);
+        j.set_tracer(tracer);
+        let before_clones = Matrix::clone_count();
+        let before_allocs = Matrix::alloc_count();
+        for r in replies {
+            let _ = j.on_reply(r);
+        }
+        assert!(j.is_decodable());
+        let c = j.assemble(&Backend::Native).unwrap();
+        assert_eq!(c.as_slice(), want.as_slice());
+        (Matrix::clone_count() - before_clones, Matrix::alloc_count() - before_allocs)
+    };
+    let ring = Arc::new(RingRecorder::with_capacity(1 << 12));
+    let off = rerun(Tracer::off());
+    let on = rerun(Tracer::new(ring.clone()));
+    assert_eq!(off.0, 0, "the decode path stays clone-free with tracing off");
+    assert_eq!(on, off, "live span emission must add zero matrix clones/allocs");
+    assert!(ring.emitted() > 0, "group recoveries must land in the ring");
 }

@@ -1,0 +1,313 @@
+//! End-to-end observability invariants, pinned against live serving
+//! runs (real worker threads, real timing):
+//!
+//! * **Span tree** — every admitted job reaches exactly one terminal,
+//!   every leaf lifecycle is well-formed, and for race-free seeded
+//!   configs the strict form holds (each dispatched leaf terminates
+//!   exactly once).
+//! * **Determinism** — two independent seeded runs of the same config
+//!   produce byte-identical logical-trace digests, which is what lets
+//!   the `trace` CLI subcommand replay a `serve` run.
+//! * **Counters == events** — the tier's `replies_stale_dropped` and
+//!   `pool_items_revoked` counters equal the number of matching trace
+//!   events in the same run, at both purge sites (central dispatch
+//!   queue and executed-but-stale replies).
+//! * **Cache** — a cache-hit admission emits `cache-hit` spans and
+//!   skips the coordinator's bulk encode span.
+//! * **Chrome export** — every leaf span of a multi-tenant nested run
+//!   sits inside its job's span on the job's track (Chrome's
+//!   containment rule then nests them).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ft_strassen::bench::schema::{parse_json, Json};
+use ft_strassen::coding::nested::NestedTaskSet;
+use ft_strassen::coding::scheme::TaskSet;
+use ft_strassen::coordinator::master::MasterConfig;
+use ft_strassen::coordinator::server::MmServer;
+use ft_strassen::coordinator::task::DispatchPlan;
+use ft_strassen::coordinator::tier::{names, ServingTier, TenantSpec, TierConfig};
+use ft_strassen::coordinator::worker::{Backend, FaultAction, FaultPlan};
+use ft_strassen::linalg::matrix::Matrix;
+use ft_strassen::obs::{
+    check_span_tree, chrome_trace_json, logical_digest, EventKind, RingRecorder, TraceEvent,
+    Tracer, NO_LEAF,
+};
+use ft_strassen::sim::rng::Rng;
+
+/// Race-free policy: no injected faults, a deadline far beyond test
+/// runtime, and `collect_all` so the decode set (and therefore the
+/// logical event multiset) is a pure function of `(seed, config)`.
+fn race_free(seed: u64) -> MasterConfig {
+    MasterConfig {
+        deadline: Duration::from_secs(30),
+        fault: FaultPlan::NONE,
+        seed,
+        fallback_local: true,
+        collect_all: true,
+    }
+}
+
+fn tier_cfg(master: MasterConfig, tenants: Vec<TenantSpec>, cache_cap: usize) -> TierConfig {
+    TierConfig { master, depth: 4, queue_cap: 64, tenants, batch_window: 1, cache_cap }
+}
+
+fn traced_tier(
+    plan: DispatchPlan,
+    cfg: TierConfig,
+    workers: Option<usize>,
+) -> (ServingTier, Arc<RingRecorder>) {
+    let ring = Arc::new(RingRecorder::with_capacity(1 << 14));
+    let tracer = Tracer::new(ring.clone());
+    (ServingTier::with_plan_traced(plan, Backend::Native, cfg, workers, tracer), ring)
+}
+
+fn count(events: &[TraceEvent], kind: EventKind) -> usize {
+    events.iter().filter(|e| e.kind == kind).count()
+}
+
+#[test]
+fn nested_multi_tenant_run_yields_a_valid_span_tree() {
+    let plan = DispatchPlan::nested(NestedTaskSet::compose(
+        TaskSet::strassen_winograd(0),
+        TaskSet::strassen_winograd(0),
+    ));
+    let tenants = vec![TenantSpec::new("heavy", 3, 8), TenantSpec::new("light", 1, 8)];
+    let (mut tier, ring) = traced_tier(plan, tier_cfg(race_free(7), tenants, 0), Some(6));
+    let mut rng = Rng::seeded(7);
+    for i in 0..4 {
+        let a = Matrix::random(8, 8, &mut rng);
+        let b = Matrix::random(8, 8, &mut rng);
+        tier.submit(if i % 2 == 0 { "heavy" } else { "light" }, a, b).unwrap();
+    }
+    let done = tier.drive(4);
+    assert_eq!(done.len(), 4);
+    tier.shutdown();
+
+    let events = ring.drain();
+    assert_eq!(ring.dropped(), 0, "ring must not wrap in a 4-job run");
+    let sum = check_span_tree(&events, false).expect("span tree must validate");
+    assert_eq!(sum.jobs, 4);
+    assert_eq!(sum.decoded, 4, "race-free run must decode every job");
+    assert_eq!(sum.failed, 0);
+    assert!(sum.dispatched_leaves > 0);
+    // Every job recovers its outer groups (detail = group index), and
+    // group recoveries are tagged to the owning job's span.
+    for job in 1..=4u64 {
+        let recovered = events
+            .iter()
+            .filter(|e| e.kind == EventKind::GroupRecover && e.job == job)
+            .count();
+        assert!(recovered > 0, "job {job} recovered no groups");
+    }
+}
+
+#[test]
+fn seeded_replays_share_a_logical_digest() {
+    // The `trace` subcommand's contract: rebuilding the same seeded
+    // serve configuration and re-running it reproduces the logical
+    // trace digest byte-for-byte. Pin it at the library layer with two
+    // independent servers (fresh fleets, fresh rings).
+    let run = || {
+        let ring = Arc::new(RingRecorder::with_capacity(1 << 14));
+        let tracer = Tracer::new(ring.clone());
+        let mut server = MmServer::with_tier_config_traced(
+            DispatchPlan::flat(TaskSet::strassen_winograd(2)),
+            Backend::Native,
+            tier_cfg(race_free(42), vec![TenantSpec::unbounded("default")], 0),
+            None,
+            tracer,
+        );
+        let report = server.run_workload(6, 16, 42).unwrap();
+        assert_eq!(report.decoded, 6);
+        server.shutdown();
+        let events = ring.drain();
+        assert_eq!(ring.dropped(), 0);
+        (logical_digest(&events), check_span_tree(&events, true).unwrap())
+    };
+    let (d1, s1) = run();
+    let (d2, s2) = run();
+    assert_eq!(s1.jobs, 6, "the trace must cover every submitted job");
+    assert_eq!(d1, d2, "seeded replays must share the logical digest");
+    assert_eq!(s1, s2, "seeded replays must share the span summary");
+}
+
+#[test]
+fn drop_and_revoke_counters_match_their_trace_events() {
+    // Site 1: central-dispatch-queue purge. Zero workers, so every
+    // admitted leaf sits in the queue when the cancel lands — all of
+    // them must be revoked, and each revocation must carry an event.
+    let (mut tier, ring) = traced_tier(
+        DispatchPlan::flat(TaskSet::strassen_winograd(2)),
+        tier_cfg(race_free(1), vec![TenantSpec::unbounded("default")], 0),
+        Some(0),
+    );
+    let j = tier.submit("default", Matrix::zeros(16, 16), Matrix::zeros(16, 16)).unwrap();
+    assert!(tier.cancel(j));
+    let revoke_counter = tier.metrics.counter(names::POOL_ITEMS_REVOKED).get();
+    tier.shutdown();
+    let events = ring.drain();
+    assert_eq!(revoke_counter, 16, "all 16 queued items revoke on cancel");
+    assert_eq!(
+        revoke_counter as usize,
+        count(&events, EventKind::Revoke),
+        "every queue-purge revocation must carry a trace event"
+    );
+
+    // Site 2: stale replies. Every item of job 1 rides a delay line;
+    // once all are executed the cancel can purge nothing — each of the
+    // 16 replies must then land as a counted, traced stale drop.
+    let (mut tier, ring) = traced_tier(
+        DispatchPlan::flat(TaskSet::strassen_winograd(2)),
+        tier_cfg(race_free(1), vec![TenantSpec::unbounded("default")], 0),
+        None,
+    );
+    let (a, b) = {
+        let mut rng = Rng::seeded(3);
+        (Matrix::random(16, 16, &mut rng), Matrix::random(16, 16, &mut rng))
+    };
+    let j1 = tier
+        .submit_with_faults(
+            "default",
+            a.clone(),
+            b.clone(),
+            vec![FaultAction::Delay(Duration::from_millis(400)); 16],
+        )
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while tier.metrics.counter(names::POOL_ITEMS_EXECUTED).get() < 16 {
+        assert!(Instant::now() < deadline, "workers never picked up the items");
+        tier.poll(Duration::from_millis(20), usize::MAX);
+    }
+    assert!(tier.cancel(j1));
+    tier.submit_with_faults(
+        "default",
+        a,
+        b,
+        vec![FaultAction::Delay(Duration::from_millis(800)); 16],
+    )
+    .unwrap();
+    let done = tier.drive(1);
+    assert_eq!(done.len(), 1);
+    let stale_counter = tier.metrics.counter(names::REPLIES_STALE_DROPPED).get();
+    let revoke_counter = tier.metrics.counter(names::POOL_ITEMS_REVOKED).get();
+    tier.shutdown();
+    let events = ring.drain();
+    assert_eq!(
+        stale_counter as usize,
+        count(&events, EventKind::StaleDrop),
+        "every counted stale drop must carry a trace event"
+    );
+    assert_eq!(stale_counter, 16, "all 16 cancelled-job replies land stale");
+    assert_eq!(
+        revoke_counter as usize,
+        count(&events, EventKind::Revoke),
+        "every counted revocation must carry a trace event"
+    );
+}
+
+#[test]
+fn cache_hit_admission_skips_the_bulk_encode_span() {
+    let (mut tier, ring) = traced_tier(
+        DispatchPlan::flat(TaskSet::strassen_winograd(2)),
+        TierConfig {
+            master: race_free(5),
+            depth: 1, // serialize: job 1 fills the cache before job 2 admits
+            queue_cap: 64,
+            tenants: vec![TenantSpec::unbounded("default")],
+            batch_window: 1,
+            cache_cap: 4,
+        },
+        None,
+    );
+    let mut rng = Rng::seeded(5);
+    let a = Matrix::random(16, 16, &mut rng);
+    let b = Matrix::random(16, 16, &mut rng);
+    tier.submit("default", a.clone(), b.clone()).unwrap();
+    tier.submit("default", a, b).unwrap();
+    let done = tier.drive(2);
+    assert_eq!(done.len(), 2);
+    let hits = tier.metrics.counter(names::CACHE_HITS).get();
+    tier.shutdown();
+
+    assert_eq!(hits, 1, "identical left operand must hit the cache once");
+    let events = ring.drain();
+    // Strict span tree: flat plan, no faults, no cancellation.
+    let sum = check_span_tree(&events, true).expect("strict span tree must validate");
+    assert_eq!(sum.jobs, 2);
+    assert_eq!(sum.cache_hits, 16, "one cache-hit span per leaf of job 2");
+    let bulk_encodes = |job: u64| {
+        events
+            .iter()
+            .filter(|e| e.kind == EventKind::Encode && e.job == job && e.leaf == NO_LEAF)
+            .count()
+    };
+    assert_eq!(bulk_encodes(1), 1, "job 1 misses: one coordinator bulk encode");
+    assert_eq!(bulk_encodes(2), 0, "job 2 hits: the bulk encode span is skipped");
+    assert!(
+        !events.iter().any(|e| e.kind == EventKind::CacheHit && e.job == 1),
+        "the cold job must not record cache hits"
+    );
+}
+
+#[test]
+fn chrome_export_parents_every_leaf_span_under_its_job_span() {
+    let plan = DispatchPlan::nested(NestedTaskSet::compose(
+        TaskSet::strassen_winograd(0),
+        TaskSet::strassen_winograd(0),
+    ));
+    let tenants = vec![TenantSpec::new("heavy", 3, 8), TenantSpec::new("light", 1, 8)];
+    let (mut tier, ring) = traced_tier(plan, tier_cfg(race_free(9), tenants, 0), Some(4));
+    let mut rng = Rng::seeded(9);
+    for i in 0..3 {
+        let a = Matrix::random(8, 8, &mut rng);
+        let b = Matrix::random(8, 8, &mut rng);
+        tier.submit(if i % 2 == 0 { "heavy" } else { "light" }, a, b).unwrap();
+    }
+    let done = tier.drive(3);
+    assert_eq!(done.len(), 3);
+    tier.shutdown();
+
+    let json = chrome_trace_json(&ring.drain(), "obs-test");
+    let doc = parse_json(&json).expect("exporter must emit valid JSON");
+    let trace_events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("top-level traceEvents array");
+    // Collect job spans as tid -> [start, end], then check every leaf
+    // span lies inside its track's job span.
+    let span = |e: &Json| -> Option<(u64, f64, f64)> {
+        let tid = e.get("tid")?.as_num()? as u64;
+        let ts = e.get("ts")?.as_num()?;
+        let dur = e.get("dur")?.as_num()?;
+        Some((tid, ts, ts + dur))
+    };
+    let cat_of = |e: &Json| match e.get("cat") {
+        Some(Json::Str(s)) => s.clone(),
+        _ => String::new(),
+    };
+    let mut job_spans = std::collections::HashMap::new();
+    let mut leaves = 0usize;
+    for e in trace_events {
+        if cat_of(e) == "job" {
+            let (tid, lo, hi) = span(e).expect("job span fields");
+            job_spans.insert(tid, (lo, hi));
+        }
+    }
+    assert_eq!(job_spans.len(), 3, "one job span per submitted job");
+    for e in trace_events {
+        if cat_of(e) == "leaf" {
+            leaves += 1;
+            let (tid, lo, hi) = span(e).expect("leaf span fields");
+            let &(jlo, jhi) = job_spans
+                .get(&tid)
+                .unwrap_or_else(|| panic!("leaf span on track {tid} with no job span"));
+            assert!(
+                jlo <= lo && hi <= jhi,
+                "leaf span [{lo}, {hi}] escapes job span [{jlo}, {jhi}] on track {tid}"
+            );
+        }
+    }
+    assert!(leaves > 0, "the export must draw leaf spans");
+}
